@@ -1,0 +1,244 @@
+"""AOT lowering: JAX L2 ops -> HLO text artifacts + manifest.json.
+
+Run once at build time (``make artifacts``).  Python never runs again after
+this; the Rust coordinator loads the HLO text via
+``HloModuleProto::from_text_file`` and compiles it on the PJRT CPU client.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Every op is lowered over a grid of shape buckets; ``manifest.json`` records
+op name, bucket shape, argument order/shapes/dtypes and output layout so the
+Rust side can validate calls.  Scalars (eps, tau, lam1, lam2) are runtime
+f32[] parameters, so one artifact serves all regularization strengths.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+# Shape buckets.  Square buckets cover the synthetic benchmarks; rectangular
+# ones cover Table 23; label buckets cover OTDD (V = 20 classes total).
+SQUARE_N = (256, 512, 1024, 2048)
+SQUARE_D = (4, 16, 64)
+EXTRA_SQUARE = ((256, 128), (512, 128))  # (n, d): d-scaling measurements
+RECT = ((256, 2048, 16), (2048, 256, 16))  # (n, m, d): Table 23
+LABEL_BUCKETS = ((256, 64), (512, 64), (1024, 64))  # (n, d), V = 20
+NUM_CLASSES = 20
+K_FUSED = 10  # fused-iteration artifact (paper benchmarks use 10 iters)
+
+
+def spec(*shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _base_args(n, m, d):
+    """(x, y, fhat, ghat, a, b) -- shared prefix of almost every op."""
+    return [
+        ("x", spec(n, d)),
+        ("y", spec(m, d)),
+        ("fhat", spec(n)),
+        ("ghat", spec(m)),
+        ("a", spec(n)),
+        ("b", spec(m)),
+    ]
+
+
+def op_registry(n, m, d):
+    """All (op_name, fn, [(arg_name, spec)...]) for one (n, m, d) bucket."""
+    base = _base_args(n, m, d)
+    eps = ("eps", spec())
+    ops = [
+        ("alternating_step", model.alternating_step, base + [eps]),
+        ("symmetric_step", model.symmetric_step, base + [eps]),
+        (
+            f"k{K_FUSED}_alternating",
+            functools.partial(model.k_steps, k=K_FUSED, schedule="alternating"),
+            base + [eps],
+        ),
+        (
+            f"k{K_FUSED}_symmetric",
+            functools.partial(model.k_steps, k=K_FUSED, schedule="symmetric"),
+            base + [eps],
+        ),
+        ("apply_pv_p1", model.apply_pv, base + [("v", spec(m, 1)), eps]),
+        ("apply_pv_pd", model.apply_pv, base + [("v", spec(m, d)), eps]),
+        ("apply_ptu_p1", model.apply_ptu, base + [("u", spec(n, 1)), eps]),
+        ("apply_ptu_pd", model.apply_ptu, base + [("u", spec(n, d)), eps]),
+        (
+            "hadamard_pv",
+            model.hadamard_pv,
+            base + [("aa", spec(n, d)), ("bb", spec(m, d)), ("v", spec(m, d)), eps],
+        ),
+        ("grad_x", model.grad_x, base + [eps]),
+        ("marginals", model.marginals, base + [eps]),
+        (
+            "schur_matvec",
+            model.schur_matvec,
+            base
+            + [
+                ("ahat", spec(n)),
+                ("bhat", spec(m)),
+                ("w2", spec(m)),
+                ("tau", spec()),
+                eps,
+            ],
+        ),
+        ("dense_step", model.dense_step, base + [eps]),
+        ("dense_grad", model.dense_grad, base + [eps]),
+        ("online_step", model.online_step, base + [eps]),
+        ("online_grad", model.online_grad, base + [eps]),
+    ]
+    return ops
+
+
+ABLATION_BLOCKS = (16, 32, 64, 128)
+ABLATION_BUCKET = (1024, 1024, 64)
+
+
+def ablation_registry():
+    """f-update lowered at several Pallas tile sizes (L1 block ablation:
+    DESIGN.md section 8 / EXPERIMENTS.md section Perf)."""
+    n, m, d = ABLATION_BUCKET
+    ops = []
+    for bs in ABLATION_BLOCKS:
+        fn = functools.partial(model.f_update, bn=bs, bm=bs)
+        args = [
+            ("x", spec(n, d)),
+            ("y", spec(m, d)),
+            ("ghat", spec(m)),
+            ("b", spec(m)),
+            ("eps", spec()),
+        ]
+        ops.append((f"f_update_bs{bs}", fn, args))
+    return ops
+
+
+def label_op_registry(n, m, d, v=NUM_CLASSES):
+    base = _base_args(n, m, d)
+    tail = [
+        ("li", spec(n, dtype=I32)),
+        ("lj", spec(m, dtype=I32)),
+        ("w", spec(v, v)),
+        ("lam1", spec()),
+        ("lam2", spec()),
+        ("eps", spec()),
+    ]
+    return [
+        ("alternating_step_label", model.alternating_step_label, base + tail),
+        ("grad_x_label", model.grad_x_label, base + tail),
+    ]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_name(dt) -> str:
+    return {jnp.float32.dtype: "f32", jnp.int32.dtype: "i32"}[jnp.dtype(dt)]
+
+
+def lower_one(name, fn, args, out_dir):
+    """Lower fn at the given arg specs; return a manifest entry."""
+    arg_specs = [s for _, s in args]
+    lowered = jax.jit(fn).lower(*arg_specs)
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    out_avals = jax.eval_shape(fn, *arg_specs)
+    outs = jax.tree_util.tree_leaves(out_avals)
+    return {
+        "file": fname,
+        "inputs": [
+            {"name": nm, "shape": list(s.shape), "dtype": _dtype_name(s.dtype)}
+            for nm, s in args
+        ],
+        "outputs": [
+            {"shape": list(o.shape), "dtype": _dtype_name(o.dtype)} for o in outs
+        ],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--quick",
+        action="store_true",
+        help="only the smallest bucket per family (CI smoke)",
+    )
+    args = ap.parse_args()
+    out_dir = args.out
+    os.makedirs(out_dir, exist_ok=True)
+
+    square = [(n, n, d) for n in SQUARE_N for d in SQUARE_D]
+    square += [(n, n, d) for (n, d) in EXTRA_SQUARE]
+    rect = list(RECT)
+    label = [(n, n, d) for (n, d) in LABEL_BUCKETS]
+    if args.quick:
+        square, rect, label = [(256, 256, 16)], [rect[0]], [label[0]]
+
+    entries = {}
+    t0 = time.time()
+    count = 0
+
+    def emit(op_name, fn, op_args, n, m, d):
+        nonlocal count
+        key = f"{op_name}__n{n}_m{m}_d{d}"
+        entries[key] = {"op": op_name, "n": n, "m": m, "d": d} | lower_one(
+            key, fn, op_args, out_dir
+        )
+        count += 1
+        print(f"[{count}] {key}  ({time.time() - t0:.1f}s)", flush=True)
+
+    for n, m, d in square:
+        for op_name, fn, op_args in op_registry(n, m, d):
+            emit(op_name, fn, op_args, n, m, d)
+    for n, m, d in rect:
+        for op_name, fn, op_args in op_registry(n, m, d):
+            if op_name in ("alternating_step", "symmetric_step", "grad_x",
+                           "marginals", "online_step", "dense_step"):
+                emit(op_name, fn, op_args, n, m, d)
+    for n, m, d in label:
+        for op_name, fn, op_args in label_op_registry(n, m, d):
+            emit(op_name, fn, op_args, n, m, d)
+    if not args.quick:
+        n, m, d = ABLATION_BUCKET
+        for op_name, fn, op_args in ablation_registry():
+            emit(op_name, fn, op_args, n, m, d)
+
+    manifest = {
+        "version": 1,
+        "num_classes": NUM_CLASSES,
+        "k_fused": K_FUSED,
+        "entries": entries,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {count} artifacts + manifest to {out_dir} "
+          f"in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,400 @@
+"""FlashSinkhorn L1 Pallas kernels (paper Algorithms 1-5).
+
+Every kernel here is a *fused streaming* kernel in the paper's sense: the
+grid is (row_blocks, col_blocks) with the column axis innermost, a row block
+of Q stays resident while K/V tiles stream past, and the online-LSE
+statistics (running max ``m`` and rescaled sum-exp ``s``) live in revisited
+output blocks -- the Pallas analogue of keeping them in SRAM registers.
+Nothing of size n*m is ever materialized.
+
+Hardware adaptation (GPU -> TPU): the paper's SRAM-resident Q row block is a
+``BlockSpec`` block in VMEM; the score tile ``2 X_I Y_J^T`` is a
+``(BN,d)x(d,BM)`` ``jnp.dot`` (MXU-shaped); the online max/rescale is VPU
+element-wise work.  Kernels are lowered with ``interpret=True`` so they run
+as plain HLO on the CPU PJRT backend (see DESIGN.md section 3).
+
+All kernels are *generic biased-dot-product* reductions:
+
+    lse_i      = LSE_j ( Q_i . K_j + bias_j )                     (Alg. 1/3)
+    out_i      = softmax_j( Q_i . K_j + bias_j ) @ V              (Alg. 2/4)
+    out_i      = sum_j softmax_ij * (A_i . B_j) * V_j / s_i       (Alg. 5)
+
+plus label-augmented variants that gather the OTDD class-distance matrix
+``W[l_i, l_j]`` on the fly inside the tile (paper section 4.2).  The mapping
+from Sinkhorn quantities (eps, potentials, weights) to (Q, K, bias) happens
+in :mod:`compile.model`.
+
+Padding contract: wrappers pad n/m up to block multiples.  Padded *columns*
+get ``bias = NEG_INF`` so ``exp(NEG_INF - m) == 0`` and they contribute
+nothing to any reduction; padded *rows* produce garbage that is sliced away.
+This is exactly the zero-weight padding used by the Rust shape-bucket router,
+so the kernels never need masks.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# A finite stand-in for -inf: large enough that exp(NEG_INF - m) underflows
+# to exactly 0.0f for any realistic running max m, small enough to survive
+# f32 arithmetic without producing inf/nan on subtraction.
+NEG_INF = -1e30
+
+DEFAULT_BLOCK = 128
+
+
+def _block(dim: int, requested: int) -> int:
+    """Largest power-of-two block <= requested that is <= padded dim."""
+    b = min(requested, DEFAULT_BLOCK)
+    while b > dim and b > 8:
+        b //= 2
+    return max(b, 1)
+
+
+def _pad_to(x: jax.Array, mult: int, axis: int, value: float = 0.0) -> jax.Array:
+    n = x.shape[axis]
+    rem = (-n) % mult
+    if rem == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+# ---------------------------------------------------------------------------
+# Kernel bodies.  Shared structure: j = inner (streaming) grid axis; running
+# (m, s[, o]) statistics live in output refs revisited across j.
+# ---------------------------------------------------------------------------
+
+
+def _lse_body(q_ref, k_ref, b_ref, lse_ref, m_ref, s_ref):
+    """Online row-LSE of Q K^T + bias (Algorithm 1 / 3 inner loop)."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    s_tile = jnp.dot(q_ref[...], k_ref[...].T) + b_ref[...][None, :]
+    m_old = m_ref[...]
+    m_new = jnp.maximum(m_old, jnp.max(s_tile, axis=1))
+    s_ref[...] = jnp.exp(m_old - m_new) * s_ref[...] + jnp.sum(
+        jnp.exp(s_tile - m_new[:, None]), axis=1
+    )
+    m_ref[...] = m_new
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _fin():
+        lse_ref[...] = m_ref[...] + jnp.log(s_ref[...])
+
+
+def _softmax_v_body(q_ref, k_ref, b_ref, v_ref, o_ref, lse_ref, m_ref, s_ref):
+    """Online softmax-weighted value accumulation (Algorithm 2 / 4)."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        s_ref[...] = jnp.zeros_like(s_ref)
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    s_tile = jnp.dot(q_ref[...], k_ref[...].T) + b_ref[...][None, :]
+    m_old = m_ref[...]
+    m_new = jnp.maximum(m_old, jnp.max(s_tile, axis=1))
+    corr = jnp.exp(m_old - m_new)
+    p_tile = jnp.exp(s_tile - m_new[:, None])
+    s_ref[...] = corr * s_ref[...] + jnp.sum(p_tile, axis=1)
+    o_ref[...] = corr[:, None] * o_ref[...] + jnp.dot(p_tile, v_ref[...])
+    m_ref[...] = m_new
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _fin():
+        lse_ref[...] = m_ref[...] + jnp.log(s_ref[...])
+        o_ref[...] = o_ref[...] / s_ref[...][:, None]
+
+
+def _hadamard_v_body(
+    q_ref, k_ref, b_ref, a_ref, bb_ref, v_ref, o_ref, lse_ref, m_ref, s_ref
+):
+    """Hadamard-weighted transport (Algorithm 5): sum_j p_ij (A_i.B_j) V_j."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        s_ref[...] = jnp.zeros_like(s_ref)
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    s_tile = jnp.dot(q_ref[...], k_ref[...].T) + b_ref[...][None, :]
+    w_tile = jnp.dot(a_ref[...], bb_ref[...].T)  # W_ij = A_i . B_j
+    m_old = m_ref[...]
+    m_new = jnp.maximum(m_old, jnp.max(s_tile, axis=1))
+    corr = jnp.exp(m_old - m_new)
+    p_tile = jnp.exp(s_tile - m_new[:, None])
+    s_ref[...] = corr * s_ref[...] + jnp.sum(p_tile, axis=1)
+    o_ref[...] = corr[:, None] * o_ref[...] + jnp.dot(p_tile * w_tile, v_ref[...])
+    m_ref[...] = m_new
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _fin():
+        lse_ref[...] = m_ref[...] + jnp.log(s_ref[...])
+        o_ref[...] = o_ref[...] / s_ref[...][:, None]
+
+
+def _lse_label_body(q_ref, k_ref, b_ref, li_ref, lj_ref, w_ref, ws_ref,
+                    lse_ref, m_ref, s_ref):
+    """Row-LSE with OTDD label bias: Q K^T + bias_j - wscale * W[l_i, l_j]."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    w_tile = w_ref[...][li_ref[...][:, None], lj_ref[...][None, :]]
+    s_tile = (
+        jnp.dot(q_ref[...], k_ref[...].T)
+        + b_ref[...][None, :]
+        - ws_ref[0, 0] * w_tile
+    )
+    m_old = m_ref[...]
+    m_new = jnp.maximum(m_old, jnp.max(s_tile, axis=1))
+    s_ref[...] = jnp.exp(m_old - m_new) * s_ref[...] + jnp.sum(
+        jnp.exp(s_tile - m_new[:, None]), axis=1
+    )
+    m_ref[...] = m_new
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _fin():
+        lse_ref[...] = m_ref[...] + jnp.log(s_ref[...])
+
+
+def _softmax_v_label_body(q_ref, k_ref, b_ref, li_ref, lj_ref, w_ref, ws_ref,
+                          v_ref, o_ref, lse_ref, m_ref, s_ref):
+    """Softmax-value accumulation with the OTDD label bias (gradient flow)."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        s_ref[...] = jnp.zeros_like(s_ref)
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w_tile = w_ref[...][li_ref[...][:, None], lj_ref[...][None, :]]
+    s_tile = (
+        jnp.dot(q_ref[...], k_ref[...].T)
+        + b_ref[...][None, :]
+        - ws_ref[0, 0] * w_tile
+    )
+    m_old = m_ref[...]
+    m_new = jnp.maximum(m_old, jnp.max(s_tile, axis=1))
+    corr = jnp.exp(m_old - m_new)
+    p_tile = jnp.exp(s_tile - m_new[:, None])
+    s_ref[...] = corr * s_ref[...] + jnp.sum(p_tile, axis=1)
+    o_ref[...] = corr[:, None] * o_ref[...] + jnp.dot(p_tile, v_ref[...])
+    m_ref[...] = m_new
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _fin():
+        lse_ref[...] = m_ref[...] + jnp.log(s_ref[...])
+        o_ref[...] = o_ref[...] / s_ref[...][:, None]
+
+
+# ---------------------------------------------------------------------------
+# Public wrappers: pad -> pallas_call -> slice.
+# ---------------------------------------------------------------------------
+
+
+def biased_lse(q, k, bias, bn: int = DEFAULT_BLOCK, bm: int = DEFAULT_BLOCK):
+    """lse_i = LSE_j(Q_i . K_j + bias_j); streaming, never forms (n, m)."""
+    n, d = q.shape
+    m = k.shape[0]
+    bn = _block(n, bn)
+    bm = _block(m, bm)
+    qp = _pad_to(q, bn, 0)
+    kp = _pad_to(k, bm, 0)
+    bp = _pad_to(bias, bm, 0, NEG_INF)
+    np_, mp = qp.shape[0], kp.shape[0]
+    grid = (np_ // bn, mp // bm)
+    out = pl.pallas_call(
+        _lse_body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bm,), lambda i, j: (j,)),
+        ],
+        out_specs=[pl.BlockSpec((bn,), lambda i, j: (i,))] * 3,
+        out_shape=[jax.ShapeDtypeStruct((np_,), q.dtype)] * 3,
+        interpret=True,
+    )(qp, kp, bp)
+    return out[0][:n]
+
+
+def biased_softmax_v(q, k, bias, v, bn: int = DEFAULT_BLOCK, bm: int = DEFAULT_BLOCK):
+    """(softmax_row(QK^T + bias) @ V, lse).  Padded V rows are zero."""
+    n, d = q.shape
+    m, p = v.shape
+    bn = _block(n, bn)
+    bm = _block(m, bm)
+    qp = _pad_to(q, bn, 0)
+    kp = _pad_to(k, bm, 0)
+    bp = _pad_to(bias, bm, 0, NEG_INF)
+    vp = _pad_to(v, bm, 0)
+    np_, mp = qp.shape[0], kp.shape[0]
+    grid = (np_ // bn, mp // bm)
+    out = pl.pallas_call(
+        _softmax_v_body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bm,), lambda i, j: (j,)),
+            pl.BlockSpec((bm, p), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, p), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn,), lambda i, j: (i,)),
+            pl.BlockSpec((bn,), lambda i, j: (i,)),
+            pl.BlockSpec((bn,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((np_, p), q.dtype),
+            jax.ShapeDtypeStruct((np_,), q.dtype),
+            jax.ShapeDtypeStruct((np_,), q.dtype),
+            jax.ShapeDtypeStruct((np_,), q.dtype),
+        ],
+        interpret=True,
+    )(qp, kp, bp, vp)
+    return out[0][:n], out[1][:n]
+
+
+def hadamard_softmax_v(q, k, bias, a, b, v,
+                       bn: int = DEFAULT_BLOCK, bm: int = DEFAULT_BLOCK):
+    """(sum_j softmax_ij (A_i.B_j) V_j / normalization, lse) -- Algorithm 5."""
+    n, d = q.shape
+    m, p = v.shape
+    r = a.shape[1]
+    bn = _block(n, bn)
+    bm = _block(m, bm)
+    qp = _pad_to(q, bn, 0)
+    kp = _pad_to(k, bm, 0)
+    bp = _pad_to(bias, bm, 0, NEG_INF)
+    ap = _pad_to(a, bn, 0)
+    bbp = _pad_to(b, bm, 0)
+    vp = _pad_to(v, bm, 0)
+    np_, mp = qp.shape[0], kp.shape[0]
+    grid = (np_ // bn, mp // bm)
+    out = pl.pallas_call(
+        _hadamard_v_body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bm,), lambda i, j: (j,)),
+            pl.BlockSpec((bn, r), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, r), lambda i, j: (j, 0)),
+            pl.BlockSpec((bm, p), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, p), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn,), lambda i, j: (i,)),
+            pl.BlockSpec((bn,), lambda i, j: (i,)),
+            pl.BlockSpec((bn,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((np_, p), q.dtype),
+            jax.ShapeDtypeStruct((np_,), q.dtype),
+            jax.ShapeDtypeStruct((np_,), q.dtype),
+            jax.ShapeDtypeStruct((np_,), q.dtype),
+        ],
+        interpret=True,
+    )(qp, kp, bp, ap, bbp, vp)
+    return out[0][:n], out[1][:n]
+
+
+def biased_lse_label(q, k, bias, li, lj, w, wscale,
+                     bn: int = DEFAULT_BLOCK, bm: int = DEFAULT_BLOCK):
+    """Row-LSE of QK^T + bias_j - wscale*W[l_i,l_j] (OTDD cost, Alg. 1)."""
+    n, d = q.shape
+    m = k.shape[0]
+    nv = w.shape[0]
+    bn = _block(n, bn)
+    bm = _block(m, bm)
+    qp = _pad_to(q, bn, 0)
+    kp = _pad_to(k, bm, 0)
+    bp = _pad_to(bias, bm, 0, NEG_INF)
+    lip = _pad_to(li, bn, 0)
+    ljp = _pad_to(lj, bm, 0)
+    ws = jnp.asarray(wscale, q.dtype).reshape(1, 1)
+    np_, mp = qp.shape[0], kp.shape[0]
+    grid = (np_ // bn, mp // bm)
+    out = pl.pallas_call(
+        _lse_label_body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bm,), lambda i, j: (j,)),
+            pl.BlockSpec((bn,), lambda i, j: (i,)),
+            pl.BlockSpec((bm,), lambda i, j: (j,)),
+            pl.BlockSpec((nv, nv), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=[pl.BlockSpec((bn,), lambda i, j: (i,))] * 3,
+        out_shape=[jax.ShapeDtypeStruct((np_,), q.dtype)] * 3,
+        interpret=True,
+    )(qp, kp, bp, lip, ljp, w, ws)
+    return out[0][:n]
+
+
+def biased_softmax_v_label(q, k, bias, li, lj, w, wscale, v,
+                           bn: int = DEFAULT_BLOCK, bm: int = DEFAULT_BLOCK):
+    """(softmax_row(QK^T + bias - wscale*W[l,l]) @ V, lse) -- OTDD grad flow."""
+    n, d = q.shape
+    m, p = v.shape
+    nv = w.shape[0]
+    bn = _block(n, bn)
+    bm = _block(m, bm)
+    qp = _pad_to(q, bn, 0)
+    kp = _pad_to(k, bm, 0)
+    bp = _pad_to(bias, bm, 0, NEG_INF)
+    lip = _pad_to(li, bn, 0)
+    ljp = _pad_to(lj, bm, 0)
+    vp = _pad_to(v, bm, 0)
+    ws = jnp.asarray(wscale, q.dtype).reshape(1, 1)
+    np_, mp = qp.shape[0], kp.shape[0]
+    grid = (np_ // bn, mp // bm)
+    out = pl.pallas_call(
+        _softmax_v_label_body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bm,), lambda i, j: (j,)),
+            pl.BlockSpec((bn,), lambda i, j: (i,)),
+            pl.BlockSpec((bm,), lambda i, j: (j,)),
+            pl.BlockSpec((nv, nv), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((bm, p), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, p), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn,), lambda i, j: (i,)),
+            pl.BlockSpec((bn,), lambda i, j: (i,)),
+            pl.BlockSpec((bn,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((np_, p), q.dtype),
+            jax.ShapeDtypeStruct((np_,), q.dtype),
+            jax.ShapeDtypeStruct((np_,), q.dtype),
+            jax.ShapeDtypeStruct((np_,), q.dtype),
+        ],
+        interpret=True,
+    )(qp, kp, bp, lip, ljp, w, ws, vp)
+    return out[0][:n], out[1][:n]

@@ -1,0 +1,299 @@
+"""FlashSinkhorn L2: the paper's compute graph in JAX, calling the L1 kernels.
+
+Each public function here is an AOT unit: :mod:`compile.aot` lowers it once
+per shape bucket to HLO text and the Rust coordinator executes it via PJRT.
+``eps`` (and ``tau``/``lam1``/``lam2``) are *runtime scalars* -- traced f32[]
+parameters -- so one artifact serves every regularization strength; only
+shapes are baked.
+
+Potential convention: everything works in the *shifted* potentials of
+Prop. 1, ``fhat = f - |x|^2`` and ``ghat = g - |y|^2``; the squared-norm
+shift and the ``Q = (2/eps) X`` scaling are folded into the generic
+biased-dot-product kernels of :mod:`compile.kernels.flash`.
+
+Three execution plans implement the *same arithmetic* (paper section 4.1:
+"gains come from kernel-level specialization rather than algorithmic
+differences"):
+
+* ``*_step`` / ``grad_x`` / ``apply_*``: the **flash** plan (fused streaming
+  Pallas kernels, Algorithms 1-5);
+* ``dense_step`` / ``dense_grad``: the **tensorized** plan (GeomLoss
+  ``backend='tensorized'`` stand-in) -- materializes the (n, m) score matrix;
+* ``online_step`` / ``online_grad``: the **online unfused** plan (KeOps
+  ``backend='online'`` stand-in) -- chunked map-reduce, O(n d) memory but no
+  cross-op fusion.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from compile.kernels import flash
+from compile.kernels.ref import safe_log
+
+DEFAULT_BLOCK = flash.DEFAULT_BLOCK
+
+
+# ---------------------------------------------------------------------------
+# Flash plan: stabilized Sinkhorn updates (Prop. 1 / Algorithms 1 and 3).
+# ---------------------------------------------------------------------------
+
+
+def f_update(x, y, ghat, b, eps, bn=DEFAULT_BLOCK, bm=DEFAULT_BLOCK):
+    """Eq. (10): fhat = -eps LSE_row(S_X(ghat)) via the streaming kernel."""
+    q = (2.0 / eps) * x
+    bias = ghat / eps + safe_log(b)
+    return -eps * flash.biased_lse(q, y, bias, bn, bm)
+
+
+def g_update(x, y, fhat, a, eps, bn=DEFAULT_BLOCK, bm=DEFAULT_BLOCK):
+    """Eq. (11): roles of (X, fhat, a) and (Y, ghat, b) swapped."""
+    q = (2.0 / eps) * y
+    bias = fhat / eps + safe_log(a)
+    return -eps * flash.biased_lse(q, x, bias, bn, bm)
+
+
+def alternating_step(x, y, fhat, ghat, a, b, eps):
+    """One Gauss-Seidel iteration (eq. 2-3, OTT-style schedule).
+
+    Returns (fhat', ghat', dfmax, dgmax); the sup-norm potential deltas are
+    the Rust-side convergence signal (no extra reduction pass needed).
+    """
+    f_new = f_update(x, y, ghat, b, eps)
+    g_new = g_update(x, y, f_new, a, eps)
+    df = jnp.max(jnp.abs(f_new - fhat))
+    dg = jnp.max(jnp.abs(g_new - ghat))
+    return f_new, g_new, df, dg
+
+
+def symmetric_step(x, y, fhat, ghat, a, b, eps):
+    """One Jacobi half-step-averaged iteration (eq. 4-5, GeomLoss-style).
+
+    Both half-steps read the *old* potentials, so they are independent --
+    the schedule the paper fuses into a single kernel.
+    """
+    f_half = f_update(x, y, ghat, b, eps)
+    g_half = g_update(x, y, fhat, a, eps)
+    f_new = 0.5 * fhat + 0.5 * f_half
+    g_new = 0.5 * ghat + 0.5 * g_half
+    df = jnp.max(jnp.abs(f_new - fhat))
+    dg = jnp.max(jnp.abs(g_new - ghat))
+    return f_new, g_new, df, dg
+
+
+def k_steps(x, y, fhat, ghat, a, b, eps, k: int, schedule: str = "alternating"):
+    """k fused Sinkhorn iterations via lax.scan (amortizes dispatch)."""
+    step = alternating_step if schedule == "alternating" else symmetric_step
+
+    def body(carry, _):
+        f, g = carry
+        f2, g2, df, dg = step(x, y, f, g, a, b, eps)
+        return (f2, g2), (df, dg)
+
+    (f_out, g_out), (dfs, dgs) = lax.scan(body, (fhat, ghat), None, length=k)
+    return f_out, g_out, dfs[-1], dgs[-1]
+
+
+# ---------------------------------------------------------------------------
+# Flash plan: transport application (Prop. 3 / Algorithms 2, 4, 5).
+# ---------------------------------------------------------------------------
+
+
+def _row_bias(ghat, b, eps):
+    return ghat / eps + safe_log(b)
+
+
+def apply_pv(x, y, fhat, ghat, a, b, v, eps):
+    """PV = diag(r) softmax_row(S_X(ghat)) V (eq. 15), r = P 1 (eq. 13)."""
+    q = (2.0 / eps) * x
+    o, lse = flash.biased_softmax_v(q, y, _row_bias(ghat, b, eps), v)
+    r = a * jnp.exp(fhat / eps + lse)
+    return r[:, None] * o, r
+
+
+def apply_ptu(x, y, fhat, ghat, a, b, u, eps):
+    """P^T U = diag(c) softmax_row(S_Y(fhat)) U (eq. 16), c = P^T 1."""
+    q = (2.0 / eps) * y
+    o, lse = flash.biased_softmax_v(q, x, _row_bias(fhat, a, eps), u)
+    c = b * jnp.exp(ghat / eps + lse)
+    return c[:, None] * o, c
+
+
+def hadamard_pv(x, y, fhat, ghat, a, b, aa, bb, v, eps):
+    """(P odot (A B^T)) V (Algorithm 5), streamed."""
+    q = (2.0 / eps) * x
+    o, lse = flash.hadamard_softmax_v(q, y, _row_bias(ghat, b, eps), aa, bb, v)
+    r = a * jnp.exp(fhat / eps + lse)
+    return r[:, None] * o, r
+
+
+def grad_x(x, y, fhat, ghat, a, b, eps):
+    """Eq. (17) with induced marginals (section G.1): 2(diag(r)X - PY)."""
+    q = (2.0 / eps) * x
+    o, lse = flash.biased_softmax_v(q, y, _row_bias(ghat, b, eps), y)
+    r = a * jnp.exp(fhat / eps + lse)
+    return 2.0 * r[:, None] * (x - o), r
+
+
+def marginals(x, y, fhat, ghat, a, b, eps):
+    """(r, c) = (P 1_m, P^T 1_n) via two streaming LSE passes (eq. 13-14)."""
+    qx = (2.0 / eps) * x
+    qy = (2.0 / eps) * y
+    lse_f = flash.biased_lse(qx, y, _row_bias(ghat, b, eps))
+    lse_g = flash.biased_lse(qy, x, _row_bias(fhat, a, eps))
+    r = a * jnp.exp(fhat / eps + lse_f)
+    c = b * jnp.exp(ghat / eps + lse_g)
+    return r, c
+
+
+def schur_matvec(x, y, fhat, ghat, a, b, ahat, bhat, w2, tau, eps):
+    """Damped Schur-complement matvec (Thm. 5 / section F.2, eq. 30):
+
+        S_tau w = (diag(bhat) + tau I) w - P^T diag(ahat)^{-1} P w
+
+    using the *induced* marginals (ahat, bhat) per section G.1.  One call =
+    one CG iteration's transport work: one PV and one P^T U with p = 1.
+    """
+    pw, _ = apply_pv(x, y, fhat, ghat, a, b, w2[:, None], eps)
+    t = jnp.where(ahat > 0, pw[:, 0] / jnp.maximum(ahat, 1e-38), 0.0)
+    ptt, _ = apply_ptu(x, y, fhat, ghat, a, b, t[:, None], eps)
+    return (bhat + tau) * w2 - ptt[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Tensorized plan (GeomLoss backend='tensorized' stand-in).
+# ---------------------------------------------------------------------------
+
+
+def _dense_scores_x(x, y, ghat, b, eps):
+    return (2.0 * x @ y.T + ghat[None, :]) / eps + safe_log(b)[None, :]
+
+
+def _dense_scores_y(x, y, fhat, a, eps):
+    return (2.0 * y @ x.T + fhat[None, :]) / eps + safe_log(a)[None, :]
+
+
+def dense_step(x, y, fhat, ghat, a, b, eps):
+    """Alternating step that materializes both (n, m) score matrices."""
+    f_new = -eps * jax.scipy.special.logsumexp(
+        _dense_scores_x(x, y, ghat, b, eps), axis=1
+    )
+    g_new = -eps * jax.scipy.special.logsumexp(
+        _dense_scores_y(x, y, f_new, a, eps), axis=1
+    )
+    df = jnp.max(jnp.abs(f_new - fhat))
+    dg = jnp.max(jnp.abs(g_new - ghat))
+    return f_new, g_new, df, dg
+
+
+def dense_grad(x, y, fhat, ghat, a, b, eps):
+    """Tensorized gradient: materializes P (n, m)."""
+    logp = (
+        safe_log(a)[:, None]
+        + safe_log(b)[None, :]
+        + (fhat[:, None] + ghat[None, :] + 2.0 * x @ y.T) / eps
+    )
+    p = jnp.exp(logp)
+    r = p.sum(axis=1)
+    return 2.0 * (r[:, None] * x - p @ y), r
+
+
+# ---------------------------------------------------------------------------
+# Online unfused plan (KeOps backend='online' stand-in): chunked map-reduce,
+# O(nd) memory, but each chunk runs score-build / bias-add / LSE as separate
+# (unfused) reductions -- the generic-reduction structure the paper contrasts
+# against.
+# ---------------------------------------------------------------------------
+
+ONLINE_CHUNK = 128
+
+
+def _online_lse(q, k, bias):
+    nq = q.shape[0]
+    qc = q.reshape(nq // ONLINE_CHUNK, ONLINE_CHUNK, q.shape[1])
+
+    def chunk_lse(qi):
+        s = qi @ k.T  # map: dense chunk scores
+        s = s + bias[None, :]  # separate bias pass
+        return jax.scipy.special.logsumexp(s, axis=1)  # reduce
+
+    return lax.map(chunk_lse, qc).reshape(nq)
+
+
+def online_step(x, y, fhat, ghat, a, b, eps):
+    """Alternating step as chunked generic map-reduce (no fusion across ops).
+
+    Requires n and m to be multiples of ONLINE_CHUNK (bucket shapes are).
+    """
+    f_new = -eps * _online_lse((2.0 / eps) * x, y, ghat / eps + safe_log(b))
+    g_new = -eps * _online_lse((2.0 / eps) * y, x, f_new / eps + safe_log(a))
+    df = jnp.max(jnp.abs(f_new - fhat))
+    dg = jnp.max(jnp.abs(g_new - ghat))
+    return f_new, g_new, df, dg
+
+
+def online_grad(x, y, fhat, ghat, a, b, eps):
+    """Chunked gradient: re-evaluates the interaction per chunk (KeOps-style
+    backward that 'entails additional all-pairs reductions')."""
+    q = (2.0 / eps) * x
+    bias = ghat / eps + safe_log(b)
+    nq = q.shape[0]
+    qc = q.reshape(nq // ONLINE_CHUNK, ONLINE_CHUNK, q.shape[1])
+    fc = fhat.reshape(nq // ONLINE_CHUNK, ONLINE_CHUNK)
+    ac = a.reshape(nq // ONLINE_CHUNK, ONLINE_CHUNK)
+    xc = x.reshape(nq // ONLINE_CHUNK, ONLINE_CHUNK, x.shape[1])
+
+    def chunk_grad(args):
+        qi, fi, ai, xi = args
+        s = qi @ y.T + bias[None, :]
+        m = jnp.max(s, axis=1, keepdims=True)
+        e = jnp.exp(s - m)
+        sums = e.sum(axis=1)
+        o = (e @ y) / sums[:, None]
+        lse = m[:, 0] + jnp.log(sums)
+        r = ai * jnp.exp(fi / eps + lse)
+        return 2.0 * r[:, None] * (xi - o), r
+
+    g, r = lax.map(chunk_grad, (qc, fc, ac, xc))
+    return g.reshape(x.shape), r.reshape(nq)
+
+
+# ---------------------------------------------------------------------------
+# OTDD label-augmented variants (section 4.2 / H.3): cost
+# C = lam1 ||x-y||^2 + lam2 W[l_i, l_j], with the (V, V) class-distance
+# matrix gathered on the fly inside the streaming kernels.
+# ---------------------------------------------------------------------------
+
+
+def f_update_label(x, y, ghat, b, li, lj, w, lam1, lam2, eps):
+    q = (2.0 * lam1 / eps) * x
+    bias = ghat / eps + safe_log(b)
+    return -eps * flash.biased_lse_label(q, y, bias, li, lj, w, lam2 / eps)
+
+
+def g_update_label(x, y, fhat, a, li, lj, w, lam1, lam2, eps):
+    q = (2.0 * lam1 / eps) * y
+    bias = fhat / eps + safe_log(a)
+    # reduction over i: score (j, i) needs W[l_i, l_j] -> pass W^T.
+    return -eps * flash.biased_lse_label(q, x, bias, lj, li, w.T, lam2 / eps)
+
+
+def alternating_step_label(x, y, fhat, ghat, a, b, li, lj, w, lam1, lam2, eps):
+    f_new = f_update_label(x, y, ghat, b, li, lj, w, lam1, lam2, eps)
+    g_new = g_update_label(x, y, f_new, a, li, lj, w, lam1, lam2, eps)
+    df = jnp.max(jnp.abs(f_new - fhat))
+    dg = jnp.max(jnp.abs(g_new - ghat))
+    return f_new, g_new, df, dg
+
+
+def grad_x_label(x, y, fhat, ghat, a, b, li, lj, w, lam1, lam2, eps):
+    """2 lam1 (diag(r) X - P Y); the label term is x-independent."""
+    q = (2.0 * lam1 / eps) * x
+    bias = ghat / eps + safe_log(b)
+    o, lse = flash.biased_softmax_v_label(q, y, bias, li, lj, w, lam2 / eps, y)
+    r = a * jnp.exp(fhat / eps + lse)
+    return 2.0 * lam1 * r[:, None] * (x - o), r

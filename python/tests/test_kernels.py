@@ -1,0 +1,153 @@
+"""L1 correctness: every streaming Pallas kernel vs the dense jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import flash, ref
+
+
+def rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+def make_cloud(n, m, d, seed=0, dtype=np.float32):
+    r = rng(seed)
+    x = r.uniform(0, 1, (n, d)).astype(dtype)
+    y = r.uniform(0, 1, (m, d)).astype(dtype)
+    a = r.uniform(0.5, 1.5, n).astype(dtype)
+    a /= a.sum()
+    b = r.uniform(0.5, 1.5, m).astype(dtype)
+    b /= b.sum()
+    return jnp.array(x), jnp.array(y), jnp.array(a), jnp.array(b)
+
+
+SHAPES = [
+    (8, 8, 4),
+    (16, 24, 3),      # ragged vs block
+    (128, 128, 16),   # exactly one block
+    (130, 257, 8),    # ragged beyond one block
+    (256, 192, 32),
+    (64, 300, 1),     # d = 1 edge
+]
+
+
+@pytest.mark.parametrize("n,m,d", SHAPES)
+def test_biased_lse_matches_dense(n, m, d):
+    r = rng(n * 1000 + m)
+    q = jnp.array(r.normal(size=(n, d)).astype(np.float32))
+    k = jnp.array(r.normal(size=(m, d)).astype(np.float32))
+    bias = jnp.array(r.normal(size=m).astype(np.float32))
+    got = flash.biased_lse(q, k, bias)
+    want = jax.scipy.special.logsumexp(q @ k.T + bias[None, :], axis=1)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("n,m,d", SHAPES)
+@pytest.mark.parametrize("p", [1, 5])
+def test_biased_softmax_v_matches_dense(n, m, d, p):
+    r = rng(n + m + d + p)
+    q = jnp.array(r.normal(size=(n, d)).astype(np.float32))
+    k = jnp.array(r.normal(size=(m, d)).astype(np.float32))
+    bias = jnp.array(r.normal(size=m).astype(np.float32))
+    v = jnp.array(r.normal(size=(m, p)).astype(np.float32))
+    o, lse = flash.biased_softmax_v(q, k, bias, v)
+    s = q @ k.T + bias[None, :]
+    want_o = jax.nn.softmax(s, axis=1) @ v
+    want_lse = jax.scipy.special.logsumexp(s, axis=1)
+    np.testing.assert_allclose(o, want_o, rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(lse, want_lse, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("n,m,d", SHAPES[:4])
+@pytest.mark.parametrize("p,rr", [(1, 2), (4, 4)])
+def test_hadamard_softmax_v_matches_dense(n, m, d, p, rr):
+    r = rng(7 * n + m)
+    q = jnp.array(r.normal(size=(n, d)).astype(np.float32))
+    k = jnp.array(r.normal(size=(m, d)).astype(np.float32))
+    bias = jnp.array(r.normal(size=m).astype(np.float32))
+    aa = jnp.array(r.normal(size=(n, rr)).astype(np.float32))
+    bb = jnp.array(r.normal(size=(m, rr)).astype(np.float32))
+    v = jnp.array(r.normal(size=(m, p)).astype(np.float32))
+    o, lse = flash.hadamard_softmax_v(q, k, bias, aa, bb, v)
+    s = q @ k.T + bias[None, :]
+    want = (jax.nn.softmax(s, axis=1) * (aa @ bb.T)) @ v
+    np.testing.assert_allclose(o, want, rtol=5e-5, atol=5e-5)
+    np.testing.assert_allclose(
+        lse, jax.scipy.special.logsumexp(s, axis=1), rtol=2e-5, atol=2e-5
+    )
+
+
+@pytest.mark.parametrize("n,m,d", SHAPES[:4])
+def test_label_lse_matches_dense(n, m, d):
+    r = rng(n + 13 * m)
+    v_cls = 7
+    q = jnp.array(r.normal(size=(n, d)).astype(np.float32))
+    k = jnp.array(r.normal(size=(m, d)).astype(np.float32))
+    bias = jnp.array(r.normal(size=m).astype(np.float32))
+    li = jnp.array(r.integers(0, v_cls, n).astype(np.int32))
+    lj = jnp.array(r.integers(0, v_cls, m).astype(np.int32))
+    w = jnp.array(r.normal(size=(v_cls, v_cls)).astype(np.float32))
+    ws = 0.7
+    got = flash.biased_lse_label(q, k, bias, li, lj, w, ws)
+    s = q @ k.T + bias[None, :] - ws * w[li[:, None], lj[None, :]]
+    want = jax.scipy.special.logsumexp(s, axis=1)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("n,m,d", SHAPES[:3])
+def test_label_softmax_v_matches_dense(n, m, d):
+    r = rng(3 * n + m)
+    v_cls, p = 5, 3
+    q = jnp.array(r.normal(size=(n, d)).astype(np.float32))
+    k = jnp.array(r.normal(size=(m, d)).astype(np.float32))
+    bias = jnp.array(r.normal(size=m).astype(np.float32))
+    li = jnp.array(r.integers(0, v_cls, n).astype(np.int32))
+    lj = jnp.array(r.integers(0, v_cls, m).astype(np.int32))
+    w = jnp.array(r.normal(size=(v_cls, v_cls)).astype(np.float32))
+    v = jnp.array(r.normal(size=(m, p)).astype(np.float32))
+    ws = 1.3
+    o, lse = flash.biased_softmax_v_label(q, k, bias, li, lj, w, ws, v)
+    s = q @ k.T + bias[None, :] - ws * w[li[:, None], lj[None, :]]
+    np.testing.assert_allclose(o, jax.nn.softmax(s, axis=1) @ v,
+                               rtol=5e-5, atol=5e-5)
+    np.testing.assert_allclose(lse, jax.scipy.special.logsumexp(s, axis=1),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_neg_inf_bias_columns_are_ignored():
+    """Zero-weight padding contract: bias = NEG_INF kills a column exactly."""
+    r = rng(5)
+    q = jnp.array(r.normal(size=(12, 4)).astype(np.float32))
+    k = jnp.array(r.normal(size=(20, 4)).astype(np.float32))
+    bias = jnp.array(r.normal(size=20).astype(np.float32))
+    bias_dead = bias.at[13:].set(flash.NEG_INF)
+    got = flash.biased_lse(q, k, bias_dead)
+    want = jax.scipy.special.logsumexp(q[:, :] @ k[:13].T + bias[None, :13],
+                                       axis=1)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("bn,bm", [(8, 8), (32, 16), (128, 128)])
+def test_block_shape_invariance(bn, bm):
+    """Result must not depend on the tile decomposition."""
+    r = rng(42)
+    q = jnp.array(r.normal(size=(100, 6)).astype(np.float32))
+    k = jnp.array(r.normal(size=(77, 6)).astype(np.float32))
+    bias = jnp.array(r.normal(size=77).astype(np.float32))
+    want = jax.scipy.special.logsumexp(q @ k.T + bias[None, :], axis=1)
+    got = flash.biased_lse(q, k, bias, bn=bn, bm=bm)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_large_dynamic_range_stability():
+    """Online max-subtraction keeps large logits finite (section H.2.5)."""
+    r = rng(9)
+    q = jnp.array((r.normal(size=(16, 4)) * 50).astype(np.float32))
+    k = jnp.array((r.normal(size=(24, 4)) * 50).astype(np.float32))
+    bias = jnp.array((r.normal(size=24) * 100).astype(np.float32))
+    got = flash.biased_lse(q, k, bias)
+    assert np.all(np.isfinite(np.asarray(got)))
+    want = jax.scipy.special.logsumexp(q @ k.T + bias[None, :], axis=1)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)

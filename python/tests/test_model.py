@@ -1,0 +1,271 @@
+"""L2 correctness: flash/tensorized/online plans vs the dense oracle, plus
+the paper's mathematical identities (Prop. 1, Prop. 3, Cor. 4, section G.1).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+from tests.test_kernels import make_cloud
+
+
+EPS = 0.1
+
+
+def converged_potentials(x, y, a, b, eps=EPS, iters=200):
+    return ref.sinkhorn(x, y, a, b, eps, iters)
+
+
+# --- Prop. 1: shifted-potential updates == unshifted eq. (2) --------------
+
+
+def test_prop1_shifted_equals_unshifted():
+    x, y, a, b = make_cloud(40, 56, 6, seed=1)
+    ghat = jnp.zeros(56)
+    fhat = model.f_update(x, y, ghat, b, EPS)
+    # unshifted: f = fhat + |x|^2, with g = ghat + |y|^2
+    g = ghat + jnp.sum(y * y, axis=1)
+    f_unshifted = ref.f_update_unshifted(x, y, g, b, EPS)
+    f = fhat + jnp.sum(x * x, axis=1)
+    np.testing.assert_allclose(f, f_unshifted, rtol=1e-4, atol=1e-4)
+
+
+# --- step schedules vs dense oracle ---------------------------------------
+
+
+@pytest.mark.parametrize("n,m,d", [(32, 48, 4), (130, 100, 8), (256, 256, 16)])
+def test_alternating_step_matches_ref(n, m, d):
+    x, y, a, b = make_cloud(n, m, d, seed=n)
+    fhat = jnp.zeros(n)
+    ghat = -jnp.sum(y * y, axis=1)
+    f2, g2, df, dg = model.alternating_step(x, y, fhat, ghat, a, b, EPS)
+    f_ref = ref.f_update(x, y, ghat, b, EPS)
+    g_ref = ref.g_update(x, y, f_ref, a, EPS)
+    np.testing.assert_allclose(f2, f_ref, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(g2, g_ref, rtol=1e-4, atol=1e-4)
+    assert float(df) == pytest.approx(float(jnp.max(jnp.abs(f_ref - fhat))), rel=1e-3)
+
+
+def test_symmetric_step_matches_ref():
+    x, y, a, b = make_cloud(64, 80, 5, seed=3)
+    fhat = -jnp.sum(x * x, axis=1)
+    ghat = -jnp.sum(y * y, axis=1)
+    f2, g2, _, _ = model.symmetric_step(x, y, fhat, ghat, a, b, EPS)
+    f_want = 0.5 * fhat + 0.5 * ref.f_update(x, y, ghat, b, EPS)
+    g_want = 0.5 * ghat + 0.5 * ref.g_update(x, y, fhat, a, EPS)
+    np.testing.assert_allclose(f2, f_want, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(g2, g_want, rtol=1e-4, atol=1e-4)
+
+
+def test_k_steps_equals_k_single_steps():
+    x, y, a, b = make_cloud(48, 48, 4, seed=7)
+    f = jnp.zeros(48)
+    g = jnp.zeros(48)
+    fk, gk, _, _ = model.k_steps(x, y, f, g, a, b, EPS, k=5)
+    for _ in range(5):
+        f, g, _, _ = model.alternating_step(x, y, f, g, a, b, EPS)
+    np.testing.assert_allclose(fk, f, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(gk, g, rtol=1e-4, atol=1e-4)
+
+
+def test_symmetric_and_alternating_agree_at_fixed_point():
+    """Both schedules share the fixed point (appendix B)."""
+    x, y, a, b = make_cloud(32, 32, 3, seed=11)
+    f_alt, g_alt = ref.sinkhorn(x, y, a, b, EPS, 300, "alternating")
+    f_sym, g_sym = ref.sinkhorn(x, y, a, b, EPS, 300, "symmetric")
+    # potentials agree up to the constant gauge shift (f+c, g-c)
+    shift = float(jnp.mean(f_alt - f_sym))
+    np.testing.assert_allclose(f_alt - shift, f_sym, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(g_alt + shift, g_sym, rtol=1e-3, atol=1e-3)
+
+
+def test_dense_and_online_plans_match_flash():
+    """All three execution plans perform identical arithmetic (section 4.1)."""
+    x, y, a, b = make_cloud(256, 256, 8, seed=13)
+    f0 = jnp.zeros(256)
+    g0 = -jnp.sum(y * y, axis=1)
+    out_flash = model.alternating_step(x, y, f0, g0, a, b, EPS)
+    out_dense = model.dense_step(x, y, f0, g0, a, b, EPS)
+    out_online = model.online_step(x, y, f0, g0, a, b, EPS)
+    for i in range(2):
+        np.testing.assert_allclose(out_flash[i], out_dense[i], rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(out_flash[i], out_online[i], rtol=1e-4, atol=1e-4)
+
+
+# --- Prop. 3 / Cor. 4: transport application ------------------------------
+
+
+def test_apply_pv_matches_dense_plan_arbitrary_potentials():
+    """Prop. 3 holds for ANY potentials, not just converged ones."""
+    x, y, a, b = make_cloud(40, 52, 4, seed=17)
+    r_ = np.random.default_rng(17)
+    fhat = jnp.array(r_.normal(size=40).astype(np.float32)) * 0.1 - jnp.sum(x * x, 1)
+    ghat = jnp.array(r_.normal(size=52).astype(np.float32)) * 0.1 - jnp.sum(y * y, 1)
+    v = jnp.array(r_.normal(size=(52, 3)).astype(np.float32))
+    got, r = model.apply_pv(x, y, fhat, ghat, a, b, v, EPS)
+    want = ref.apply_pv(x, y, fhat, ghat, a, b, v, EPS)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+    r_want, _ = ref.marginals(x, y, fhat, ghat, a, b, EPS)
+    np.testing.assert_allclose(r, r_want, rtol=2e-4, atol=2e-4)
+
+
+def test_apply_ptu_matches_dense_plan():
+    x, y, a, b = make_cloud(30, 45, 5, seed=19)
+    fhat = -jnp.sum(x * x, 1)
+    ghat = -jnp.sum(y * y, 1)
+    u = jnp.array(np.random.default_rng(1).normal(size=(30, 2)).astype(np.float32))
+    got, c = model.apply_ptu(x, y, fhat, ghat, a, b, u, EPS)
+    want = ref.apply_ptu(x, y, fhat, ghat, a, b, u, EPS)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+    _, c_want = ref.marginals(x, y, fhat, ghat, a, b, EPS)
+    np.testing.assert_allclose(c, c_want, rtol=2e-4, atol=2e-4)
+
+
+def test_hadamard_pv_matches_dense():
+    x, y, a, b = make_cloud(24, 36, 4, seed=23)
+    rr = np.random.default_rng(23)
+    fhat = -jnp.sum(x * x, 1)
+    ghat = -jnp.sum(y * y, 1)
+    aa = jnp.array(rr.normal(size=(24, 4)).astype(np.float32))
+    bb = jnp.array(rr.normal(size=(36, 4)).astype(np.float32))
+    v = jnp.array(rr.normal(size=(36, 4)).astype(np.float32))
+    got, _ = model.hadamard_pv(x, y, fhat, ghat, a, b, aa, bb, v, EPS)
+    want = ref.hadamard_pv(x, y, fhat, ghat, a, b, aa, bb, v, EPS)
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+
+def test_marginals_at_convergence_equal_weights():
+    """Prop. 3: at the Sinkhorn fixed point, r = a and c = b."""
+    x, y, a, b = make_cloud(48, 48, 4, seed=29)
+    fhat, ghat = converged_potentials(x, y, a, b)
+    r, c = model.marginals(x, y, fhat, ghat, a, b, EPS)
+    np.testing.assert_allclose(r, a, rtol=5e-3, atol=1e-5)
+    np.testing.assert_allclose(c, b, rtol=5e-3, atol=1e-5)
+
+
+def test_grad_matches_dense_and_barycentric_form():
+    x, y, a, b = make_cloud(40, 40, 4, seed=31)
+    fhat, ghat = converged_potentials(x, y, a, b)
+    got, r = model.grad_x(x, y, fhat, ghat, a, b, EPS)
+    want = ref.grad_x(x, y, fhat, ghat, a, b, EPS)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-5)
+    # Cor. 4 form at optimality: 2 diag(a) (X - T_eps(X))
+    p = ref.plan(x, y, fhat, ghat, a, b, EPS)
+    t = (p @ y) / a[:, None]
+    np.testing.assert_allclose(
+        got, 2.0 * a[:, None] * (x - t), rtol=5e-3, atol=5e-4
+    )
+
+
+def test_grad_descent_direction():
+    """-grad must decrease the (debiased-free) OT cost: sanity e2e."""
+    x, y, a, b = make_cloud(32, 32, 3, seed=37)
+    fhat, ghat = converged_potentials(x, y, a, b)
+    c0 = ref.ot_cost(x, y, fhat, ghat, a, b)
+    g, _ = model.grad_x(x, y, fhat, ghat, a, b, EPS)
+    x2 = x - 0.05 * g
+    f2, g2 = converged_potentials(x2, y, a, b)
+    c1 = ref.ot_cost(x2, y, f2, g2, a, b)
+    assert float(c1) < float(c0)
+
+
+def test_dual_cost_matches_primal_at_convergence():
+    x, y, a, b = make_cloud(36, 44, 3, seed=41)
+    fhat, ghat = converged_potentials(x, y, a, b, iters=500)
+    dual = ref.ot_cost(x, y, fhat, ghat, a, b)
+    p = ref.plan(x, y, fhat, ghat, a, b, EPS)
+    primal = ref.primal_cost(x, y, p, a, b, EPS)
+    np.testing.assert_allclose(dual, primal, rtol=1e-3)
+
+
+# --- Schur matvec ----------------------------------------------------------
+
+
+def test_schur_matvec_matches_dense():
+    x, y, a, b = make_cloud(32, 40, 4, seed=43)
+    fhat, ghat = converged_potentials(x, y, a, b)
+    p = ref.plan(x, y, fhat, ghat, a, b, EPS)
+    ahat = p.sum(axis=1)
+    bhat = p.sum(axis=0)
+    w2 = jnp.array(np.random.default_rng(2).normal(size=40).astype(np.float32))
+    tau = 1e-5
+    got = model.schur_matvec(x, y, fhat, ghat, a, b, ahat, bhat, w2, tau, EPS)
+    s_dense = jnp.diag(bhat) - p.T @ jnp.diag(1.0 / ahat) @ p
+    want = s_dense @ w2 + tau * w2
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-5)
+
+
+# --- zero-weight padding invariance (router contract) ----------------------
+
+
+def test_zero_weight_padding_invariance():
+    """Padding (X, a) and (Y, b) with zero-weight points must not change
+    the updates on the real entries -- the Rust router relies on this."""
+    x, y, a, b = make_cloud(20, 28, 4, seed=47)
+    ghat = -jnp.sum(y * y, axis=1)
+    f_small = model.f_update(x, y, ghat, b, EPS)
+
+    pad_m = 12
+    y_pad = jnp.concatenate([y, jnp.ones((pad_m, 4))], axis=0)
+    b_pad = jnp.concatenate([b, jnp.zeros(pad_m)])
+    ghat_pad = jnp.concatenate([ghat, jnp.zeros(pad_m)])
+    f_padded = model.f_update(x, y_pad, ghat_pad, b_pad, EPS)
+    np.testing.assert_allclose(f_padded, f_small, rtol=1e-5, atol=1e-5)
+
+
+# --- OTDD label variants ----------------------------------------------------
+
+
+def test_label_step_matches_ref():
+    n, m, d, v = 40, 56, 6, 7
+    x, y, a, b = make_cloud(n, m, d, seed=53)
+    r = np.random.default_rng(53)
+    li = jnp.array(r.integers(0, v, n).astype(np.int32))
+    lj = jnp.array(r.integers(0, v, m).astype(np.int32))
+    w = jnp.abs(jnp.array(r.normal(size=(v, v)).astype(np.float32)))
+    lam1, lam2 = 0.5, 0.5
+    fhat = jnp.zeros(n)
+    ghat = -lam1 * jnp.sum(y * y, axis=1)
+    f2, g2, _, _ = model.alternating_step_label(
+        x, y, fhat, ghat, a, b, li, lj, w, lam1, lam2, EPS
+    )
+    f_want = ref.f_update_label(x, y, ghat, b, li, lj, w, lam1, lam2, EPS)
+    g_want = ref.g_update_label(x, y, f_want, a, li, lj, w, lam1, lam2, EPS)
+    np.testing.assert_allclose(f2, f_want, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(g2, g_want, rtol=1e-4, atol=1e-4)
+
+
+def test_label_grad_matches_ref():
+    n, m, d, v = 32, 32, 4, 5
+    x, y, a, b = make_cloud(n, m, d, seed=59)
+    r = np.random.default_rng(59)
+    li = jnp.array(r.integers(0, v, n).astype(np.int32))
+    lj = jnp.array(r.integers(0, v, m).astype(np.int32))
+    w = jnp.abs(jnp.array(r.normal(size=(v, v)).astype(np.float32)))
+    lam1, lam2 = 0.5, 0.5
+    # a few label-cost Sinkhorn iterations to land somewhere meaningful
+    fhat = jnp.zeros(n)
+    ghat = jnp.zeros(m)
+    for _ in range(20):
+        fhat = ref.f_update_label(x, y, ghat, b, li, lj, w, lam1, lam2, EPS)
+        ghat = ref.g_update_label(x, y, fhat, a, li, lj, w, lam1, lam2, EPS)
+    got, _ = model.grad_x_label(x, y, fhat, ghat, a, b, li, lj, w, lam1, lam2, EPS)
+    want = ref.grad_x_label(x, y, fhat, ghat, a, b, li, lj, w, lam1, lam2, EPS)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+def test_label_reduces_to_euclidean_when_lam2_zero():
+    n, m, d, v = 24, 24, 4, 5
+    x, y, a, b = make_cloud(n, m, d, seed=61)
+    r = np.random.default_rng(61)
+    li = jnp.array(r.integers(0, v, n).astype(np.int32))
+    lj = jnp.array(r.integers(0, v, m).astype(np.int32))
+    w = jnp.array(r.normal(size=(v, v)).astype(np.float32))
+    ghat = -jnp.sum(y * y, axis=1)
+    f_label = model.f_update_label(x, y, ghat, b, li, lj, w, 1.0, 0.0, EPS)
+    f_plain = model.f_update(x, y, ghat, b, EPS)
+    np.testing.assert_allclose(f_label, f_plain, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,147 @@
+"""Hypothesis property sweeps: kernel-vs-ref over randomized shapes/values.
+
+The mandated L1 property coverage: shapes (including ragged-vs-block and
+degenerate dims), scale of logits, weight patterns (including zeros), all
+checked against the dense jnp oracle with assert_allclose.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import flash, ref
+
+SET = settings(max_examples=25, deadline=None)
+
+
+def arr(r, shape, scale=1.0):
+    return jnp.array((r.standard_normal(shape) * scale).astype(np.float32))
+
+
+@given(
+    n=st.integers(1, 160),
+    m=st.integers(1, 160),
+    d=st.integers(1, 24),
+    scale=st.sampled_from([0.1, 1.0, 10.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@SET
+def test_lse_kernel_property(n, m, d, scale, seed):
+    r = np.random.default_rng(seed)
+    q, k = arr(r, (n, d), scale), arr(r, (m, d), scale)
+    bias = arr(r, (m,), scale)
+    got = flash.biased_lse(q, k, bias, bn=32, bm=32)
+    want = jax.scipy.special.logsumexp(q @ k.T + bias[None, :], axis=1)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@given(
+    n=st.integers(1, 128),
+    m=st.integers(1, 128),
+    d=st.integers(1, 16),
+    p=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+@SET
+def test_softmax_v_kernel_property(n, m, d, p, seed):
+    r = np.random.default_rng(seed)
+    q, k = arr(r, (n, d)), arr(r, (m, d))
+    bias, v = arr(r, (m,)), arr(r, (m, p))
+    o, lse = flash.biased_softmax_v(q, k, bias, v, bn=32, bm=32)
+    s = q @ k.T + bias[None, :]
+    np.testing.assert_allclose(o, jax.nn.softmax(s, axis=1) @ v,
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(lse, jax.scipy.special.logsumexp(s, axis=1),
+                               rtol=1e-4, atol=1e-4)
+
+
+@given(
+    n=st.integers(2, 96),
+    m=st.integers(2, 96),
+    d=st.integers(1, 12),
+    eps=st.sampled_from([0.05, 0.1, 0.5, 1.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@SET
+def test_sinkhorn_step_property(n, m, d, eps, seed):
+    """Flash alternating step == dense oracle for arbitrary inputs."""
+    r = np.random.default_rng(seed)
+    x = jnp.array(r.uniform(0, 1, (n, d)).astype(np.float32))
+    y = jnp.array(r.uniform(0, 1, (m, d)).astype(np.float32))
+    a = jnp.array(r.uniform(0.1, 1, n).astype(np.float32))
+    a = a / a.sum()
+    b = jnp.array(r.uniform(0.1, 1, m).astype(np.float32))
+    b = b / b.sum()
+    ghat = arr(r, (m,), 0.1) - jnp.sum(y * y, axis=1)
+    f2, g2, _, _ = model.alternating_step(x, y, jnp.zeros(n), ghat, a, b, eps)
+    f_want = ref.f_update(x, y, ghat, b, eps)
+    g_want = ref.g_update(x, y, f_want, a, eps)
+    np.testing.assert_allclose(f2, f_want, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(g2, g_want, rtol=2e-4, atol=2e-4)
+
+
+@given(
+    n=st.integers(4, 64),
+    pad=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+@SET
+def test_padding_invariance_property(n, pad, seed):
+    """Appending zero-weight points never changes real outputs (router)."""
+    r = np.random.default_rng(seed)
+    d = 4
+    x = jnp.array(r.uniform(0, 1, (n, d)).astype(np.float32))
+    y = jnp.array(r.uniform(0, 1, (n, d)).astype(np.float32))
+    b = jnp.array(r.uniform(0.1, 1, n).astype(np.float32))
+    b = b / b.sum()
+    ghat = -jnp.sum(y * y, axis=1)
+    f_small = model.f_update(x, y, ghat, b, 0.1)
+    y_pad = jnp.concatenate([y, jnp.array(r.uniform(0, 1, (pad, d)).astype(np.float32))])
+    b_pad = jnp.concatenate([b, jnp.zeros(pad)])
+    g_pad = jnp.concatenate([ghat, jnp.zeros(pad)])
+    f_padded = model.f_update(x, y_pad, g_pad, b_pad, 0.1)
+    np.testing.assert_allclose(f_padded, f_small, rtol=1e-5, atol=1e-5)
+
+
+@given(
+    n=st.integers(4, 48),
+    m=st.integers(4, 48),
+    seed=st.integers(0, 2**31 - 1),
+)
+@SET
+def test_row_mass_identity_property(n, m, seed):
+    """Prop. 3 identity P 1 = r for ARBITRARY potentials."""
+    r_ = np.random.default_rng(seed)
+    d, eps = 3, 0.2
+    x = jnp.array(r_.uniform(0, 1, (n, d)).astype(np.float32))
+    y = jnp.array(r_.uniform(0, 1, (m, d)).astype(np.float32))
+    a = jnp.full(n, 1.0 / n)
+    b = jnp.full(m, 1.0 / m)
+    fhat = arr(r_, (n,), 0.1) - jnp.sum(x * x, axis=1)
+    ghat = arr(r_, (m,), 0.1) - jnp.sum(y * y, axis=1)
+    r_got, c_got = model.marginals(x, y, fhat, ghat, a, b, eps)
+    p = ref.plan(x, y, fhat, ghat, a, b, eps)
+    np.testing.assert_allclose(r_got, p.sum(axis=1), rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(c_got, p.sum(axis=0), rtol=3e-4, atol=3e-4)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_marginal_violation_decreases(seed):
+    """Sinkhorn monotonically drives the column marginal toward b."""
+    r_ = np.random.default_rng(seed)
+    n, d, eps = 32, 3, 0.2
+    x = jnp.array(r_.uniform(0, 1, (n, d)).astype(np.float32))
+    y = jnp.array(r_.uniform(0, 1, (n, d)).astype(np.float32))
+    a = jnp.full(n, 1.0 / n)
+    b = jnp.full(n, 1.0 / n)
+    f = jnp.zeros(n)
+    g = -jnp.sum(y * y, axis=1)
+    errs = []
+    for _ in range(4):
+        f, g, _, _ = model.alternating_step(x, y, f, g, a, b, eps)
+        _, c = model.marginals(x, y, f, g, a, b, eps)
+        errs.append(float(jnp.sum(jnp.abs(c - b))))
+    assert errs[-1] <= errs[0] + 1e-6

@@ -1,0 +1,15 @@
+//! Bench: paper Tables 14/15/16/22 -- HVP parity vs dense Moore-Penrose
+//! and streaming-vs-dense HVP timing.
+
+use flash_sinkhorn::bench;
+use flash_sinkhorn::runtime::Engine;
+
+fn main() {
+    // default = quick grids so `cargo bench` stays minutes-scale; pass
+    // --full for the paper-sized sweeps (or use `repro bench <id>`).
+    let quick = !std::env::args().any(|a| a == "--full");
+    let engine = Engine::new(flash_sinkhorn::artifact_dir()).expect("run `make artifacts`");
+    for id in ["14", "15", "22"] {
+        println!("{}", bench::run_table(&engine, id, "results", quick).unwrap());
+    }
+}

@@ -1,0 +1,14 @@
+//! Bench: paper Tables 19/20/21 -- the low-epsilon regime.
+
+use flash_sinkhorn::bench;
+use flash_sinkhorn::runtime::Engine;
+
+fn main() {
+    // default = quick grids so `cargo bench` stays minutes-scale; pass
+    // --full for the paper-sized sweeps (or use `repro bench <id>`).
+    let quick = !std::env::args().any(|a| a == "--full");
+    let engine = Engine::new(flash_sinkhorn::artifact_dir()).expect("run `make artifacts`");
+    for id in ["19", "20", "21"] {
+        println!("{}", bench::run_table(&engine, id, "results", quick).unwrap());
+    }
+}

@@ -1,0 +1,15 @@
+//! Bench: paper Figures 3, 4/7, 5/8 -- scaling series, OTDD downstream
+//! task, saddle-escape trajectory.
+
+use flash_sinkhorn::bench;
+use flash_sinkhorn::runtime::Engine;
+
+fn main() {
+    // default = quick grids so `cargo bench` stays minutes-scale; pass
+    // --full for the paper-sized sweeps (or use `repro bench <id>`).
+    let quick = !std::env::args().any(|a| a == "--full");
+    let engine = Engine::new(flash_sinkhorn::artifact_dir()).expect("run `make artifacts`");
+    for id in ["fig3", "fig4", "fig5"] {
+        println!("{}", bench::run_table(&engine, id, "results", quick).unwrap());
+    }
+}

@@ -1,0 +1,13 @@
+//! Bench: paper Tables 2/5/6/7 -- NCU-style IO-model profile + measured
+//! CPU-PJRT wall-clock for the three execution plans.
+//! (criterion is unavailable offline; this is a self-contained harness.)
+
+use flash_sinkhorn::bench;
+use flash_sinkhorn::runtime::Engine;
+
+fn main() {
+    let engine = Engine::new(flash_sinkhorn::artifact_dir()).expect("run `make artifacts`");
+    for id in ["2", "6"] {
+        println!("{}", bench::run_table(&engine, id, "results", false).unwrap());
+    }
+}

@@ -1,0 +1,15 @@
+//! Bench: paper Tables 3, 8-13, 17-18, 23 -- speedup grids, measured +
+//! IO-model projections.
+
+use flash_sinkhorn::bench;
+use flash_sinkhorn::runtime::Engine;
+
+fn main() {
+    // default = quick grids so `cargo bench` stays minutes-scale; pass
+    // --full for the paper-sized sweeps (or use `repro bench <id>`).
+    let quick = !std::env::args().any(|a| a == "--full");
+    let engine = Engine::new(flash_sinkhorn::artifact_dir()).expect("run `make artifacts`");
+    for id in ["3", "8", "10", "12", "17", "23"] {
+        println!("{}", bench::run_table(&engine, id, "results", quick).unwrap());
+    }
+}

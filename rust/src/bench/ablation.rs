@@ -1,0 +1,69 @@
+//! L1 block-size ablation (DESIGN.md §8): the same streaming f-update
+//! lowered at several Pallas tile sizes, with (a) measured interpret-mode
+//! wall-clock (structure check only -- NOT a TPU proxy) and (b) the TPU
+//! roofline estimates that actually judge kernel quality: VMEM footprint
+//! and MXU arithmetic intensity per tile choice.
+
+use anyhow::Result;
+
+use crate::data::clouds::uniform_cloud;
+use crate::iomodel::device::TPU_V4;
+use crate::iomodel::roofline::flash_kernel_estimate;
+use crate::runtime::{Engine, Manifest, Tensor};
+
+use super::tables::{fmt_ms, markdown, time_best};
+
+const BLOCKS: [usize; 4] = [16, 32, 64, 128];
+const BUCKET: (usize, usize, usize) = (1024, 1024, 64);
+
+pub fn ablation_table(engine: &Engine, quick: bool) -> Result<String> {
+    let (n, m, d) = BUCKET;
+    let reps = if quick { 2 } else { 3 };
+    let mut out = String::from("## L1 block-size ablation (streaming f-update)\n\n");
+
+    let x = Tensor::matrix(n, d, uniform_cloud(n, d, 1));
+    let y = Tensor::matrix(m, d, uniform_cloud(m, d, 2));
+    let ghat = Tensor::vector(vec![0.0; m]);
+    let b = Tensor::vector(vec![1.0 / m as f32; m]);
+    let eps = Tensor::scalar(0.1);
+
+    let mut rows = Vec::new();
+    for &bs in &BLOCKS {
+        let key = Manifest::key(&format!("f_update_bs{bs}"), n, m, d);
+        let measured = if engine.manifest().has(&key) {
+            engine.call(&key, &[x.clone(), y.clone(), ghat.clone(), b.clone(), eps.clone()])?;
+            let t = time_best(
+                || {
+                    engine
+                        .call(&key, &[x.clone(), y.clone(), ghat.clone(), b.clone(), eps.clone()])
+                        .map(|_| ())
+                },
+                1,
+                reps,
+            )?;
+            fmt_ms(t)
+        } else {
+            "n/a".into()
+        };
+        let est = flash_kernel_estimate(bs, bs, d, 0, &TPU_V4);
+        rows.push(vec![
+            format!("{bs} x {bs}"),
+            measured,
+            format!("{:.1} KiB", est.vmem_bytes / 1024.0),
+            format!("{:.4}", est.vmem_fraction),
+            format!("{:.1}", est.arithmetic_intensity),
+            format!("{:.2}", est.mxu_bound_fraction),
+        ]);
+    }
+    out.push_str(&markdown(
+        &format!("f-update at n=m={n}, d={d}: interpret-mode ms (structure only) + TPU roofline"),
+        &["tile", "CPU interpret (ms)", "VMEM/tile-pair", "VMEM frac", "MXU AI (flop/B)", "roofline frac"],
+        &rows,
+    ));
+    out.push_str(
+        "Reading: AI grows ~ linearly with the row tile (Q stays resident while K \
+         streams); 128x128 reaches the knee region while using <1% of VMEM, leaving \
+         ample double-buffer headroom -- the basis for the DESIGN.md section 8 tile choice.\n",
+    );
+    Ok(out)
+}

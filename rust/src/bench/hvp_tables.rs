@@ -1,0 +1,188 @@
+//! HVP tables: parity vs the dense Moore-Penrose ground truth (Tables 14
+//! and 22) and streaming-vs-dense timing (Tables 15/16).
+
+use anyhow::Result;
+
+use crate::coordinator::router::Router;
+use crate::data::clouds::{normal_cloud, random_simplex, uniform_cloud};
+use crate::data::rng::Rng;
+use crate::dense::hessian::DenseHessian;
+use crate::dense::linalg::{to_f32, to_f64};
+use crate::dense::sinkhorn::sinkhorn_f64;
+use crate::hvp::oracle::HvpOracle;
+use crate::iomodel::device::A100;
+use crate::iomodel::plans::{analyze, Pass, Plan, Workload};
+use crate::ot::problem::OtProblem;
+use crate::ot::solver::{Potentials, Schedule, SinkhornSolver, SolverConfig};
+use crate::runtime::Engine;
+
+use super::tables::{fmt_ms, fmt_x, markdown, time_best};
+
+/// One parity cell: streaming HVP (tau, eta) vs dense Moore-Penrose in f64.
+/// Returns (relative error, CG iterations, converged).
+#[allow(clippy::too_many_arguments)]
+pub fn parity_cell(
+    engine: &Engine,
+    n: usize,
+    d: usize,
+    eps: f32,
+    tau: f32,
+    eta: f64,
+    max_cg: usize,
+    seed: u64,
+) -> Result<(f64, usize, bool)> {
+    // normal clouds + random simplex weights (paper section H.2.3 setup)
+    let x = normal_cloud(n, d, seed);
+    let y = normal_cloud(n, d, seed + 1);
+    let a = random_simplex(n, seed + 2);
+    let b = random_simplex(n, seed + 3);
+
+    // dense f64 ground truth at tightly-converged potentials
+    let (x64, y64, a64, b64) = (to_f64(&x), to_f64(&y), to_f64(&a), to_f64(&b));
+    let sol = sinkhorn_f64(&x64, &y64, &a64, &b64, n, n, d, eps as f64, 5000, 1e-13);
+    let dense = DenseHessian::new(&x64, &y64, &a64, &b64, &sol.fhat, &sol.ghat, n, n, d, eps as f64);
+    let mut rng = Rng::new(seed + 4);
+    let a_mat64: Vec<f64> = (0..n * d).map(|_| rng.normal()).collect();
+    let truth = dense.hvp(&a_mat64);
+
+    // streaming oracle at the same potentials (f32)
+    let prob = OtProblem::new(x, y, a, b, n, n, d, eps)?;
+    let pot = Potentials { fhat: to_f32(&sol.fhat), ghat: to_f32(&sol.ghat) };
+    let router = Router::from_manifest(engine.manifest());
+    let oracle = HvpOracle::new(engine, &router, &prob, &pot, tau, eta, max_cg)?;
+    let (got, stats) = oracle.hvp(&to_f32(&a_mat64))?;
+
+    let num: f64 = got
+        .iter()
+        .zip(&truth)
+        .map(|(&g, &t)| (g as f64 - t).powi(2))
+        .sum::<f64>()
+        .sqrt();
+    let den: f64 = truth.iter().map(|t| t * t).sum::<f64>().sqrt().max(1e-300);
+    Ok((num / den, stats.cg_iters, stats.cg_converged))
+}
+
+/// Table 14: tau/eta sweep at eps in {0.1, 0.25, 0.5}.
+pub fn table14(engine: &Engine, quick: bool) -> Result<String> {
+    let n = if quick { 128 } else { 256 };
+    let d = 4;
+    let mut rows = Vec::new();
+    for &eps in &[0.1f32, 0.25, 0.5] {
+        let mut row = vec![format!("{eps:.2}")];
+        for &(tau, eta) in &[(0.0f32, 1e-7f64), (1e-7, 1e-7), (1e-5, 1e-6)] {
+            let (err, _, _) = parity_cell(engine, n, d, eps, tau, eta, 400, 11)?;
+            row.push(format!("{err:.2e}"));
+        }
+        rows.push(row);
+    }
+    Ok(markdown(
+        &format!("Table 14: HVP parity vs dense Moore-Penrose (n=m={n}, d={d})"),
+        &["eps", "tau=0, eta=1e-7", "tau=1e-7, eta=1e-7", "default tau=1e-5, eta=1e-6"],
+        &rows,
+    ))
+}
+
+/// Table 22: parity at low eps, with CG iteration counts.
+pub fn table22(engine: &Engine, quick: bool) -> Result<String> {
+    let n = if quick { 128 } else { 256 };
+    let d = 4;
+    let mut rows = Vec::new();
+    for &(eps, tau, eta) in &[
+        (0.10f32, 1e-5f32, 1e-6f64),
+        (0.05, 1e-5, 1e-6),
+        (0.01, 1e-5, 1e-6),
+        (0.01, 1e-6, 1e-5),
+    ] {
+        let (err, iters, conv) = parity_cell(engine, n, d, eps, tau, eta, 600, 13)?;
+        rows.push(vec![
+            format!("{eps:.2}"),
+            format!("{tau:.0e}"),
+            format!("{eta:.0e}"),
+            format!("{err:.2e}"),
+            iters.to_string(),
+            if conv { "Y" } else { "N" }.into(),
+        ]);
+    }
+    Ok(markdown(
+        &format!("Table 22: HVP parity at low eps (n=m={n}, d={d})"),
+        &["eps", "tau", "eta", "HVP rel. err.", "CG iters", "converged"],
+        &rows,
+    ))
+}
+
+/// Tables 15/16: HVP timing -- streaming oracle vs dense f64 Hessian, plus
+/// IO-model projection at paper scale.
+pub fn table15_16(engine: &Engine, quick: bool) -> Result<String> {
+    let mut out = String::from("## Tables 15-16: HVP timing\n\n");
+    // dense Moore-Penrose needs a (2n)^2 Jacobi eigendecomposition; n = 256
+    // is the largest cell that stays in seconds (the paper's dense baseline
+    // OOMs/OOTs similarly, Tables 15-16).
+    let ns: &[usize] = if quick { &[128] } else { &[128, 256] };
+    let ds: &[usize] = if quick { &[4] } else { &[4, 16] };
+    let reps = if quick { 1 } else { 2 };
+    let router = Router::from_manifest(engine.manifest());
+    let mut rows = Vec::new();
+    for &n in ns {
+        for &d in ds {
+            let x = uniform_cloud(n, d, 3);
+            let y = uniform_cloud(n, d, 4);
+            let prob = OtProblem::uniform(x, y, n, n, d, 0.1)?;
+            let solver = SinkhornSolver::new(
+                engine,
+                SolverConfig { max_iters: 100, tol: 1e-5, schedule: Schedule::Alternating, use_fused: true, anneal_factor: 1.0, cached_literals: true },
+            );
+            let (pot, _) = solver.solve(&prob)?;
+            let oracle = HvpOracle::new(engine, &router, &prob, &pot, 1e-5, 1e-6, 50)?;
+            let mut rng = Rng::new(9);
+            let a_mat: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+            let t_stream = time_best(|| oracle.hvp(&a_mat).map(|_| ()), 1, reps)?;
+            // dense f64 reference (build + one HVP; build dominated by eig)
+            let t_dense = time_best(
+                || {
+                    let x64 = to_f64(&prob.x);
+                    let y64 = to_f64(&prob.y);
+                    let a64 = to_f64(&prob.a);
+                    let b64 = to_f64(&prob.b);
+                    let f64p = to_f64(&pot.fhat);
+                    let g64p = to_f64(&pot.ghat);
+                    let h = DenseHessian::new(&x64, &y64, &a64, &b64, &f64p, &g64p, n, n, d, 0.1);
+                    let _ = h.hvp(&to_f64(&a_mat));
+                    Ok(())
+                },
+                0,
+                1,
+            )?;
+            rows.push(vec![
+                n.to_string(),
+                d.to_string(),
+                fmt_ms(t_stream),
+                fmt_ms(t_dense),
+                fmt_x(t_dense / t_stream),
+            ]);
+        }
+    }
+    out.push_str(&markdown(
+        "Measured: streaming HVP (50-iter CG cap) vs dense f64 Moore-Penrose",
+        &["n", "d", "streaming (ms)", "dense (ms)", "speedup"],
+        &rows,
+    ));
+
+    // IO model at paper scale: streaming flash vs unfused transport loops.
+    let mut rows2 = Vec::new();
+    for &n in &[5_000usize, 10_000, 50_000] {
+        let mut row = vec![n.to_string()];
+        for &d in &[64usize, 128, 256] {
+            let wl = Workload { n, m: n, d, iters: 100, pass: Pass::Hvp { k_cg: 50 } };
+            let b = analyze(Plan::OnlineUnfused, &wl, &A100);
+            let f = analyze(Plan::Flash, &wl, &A100);
+            row.push(if b.runtime_s > 600.0 { "OOT".into() } else { fmt_x(b.runtime_s / f.runtime_s) });
+        }
+        rows2.push(row);
+    }
+    out.push_str(&markdown(
+        "IO model @ A100: streaming-flash HVP vs unfused-online HVP",
+        &["n", "d=64", "d=128", "d=256"],
+        &rows2,
+    ));
+    Ok(out)
+}

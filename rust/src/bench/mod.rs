@@ -1,0 +1,52 @@
+//! Benchmark harness regenerating every table and figure in the paper's
+//! evaluation (DESIGN.md section 6 experiment index).  Shared between the
+//! `repro bench` CLI and the criterion benches.
+
+pub mod ablation;
+pub mod figures;
+pub mod hvp_tables;
+pub mod low_eps;
+pub mod perf;
+pub mod profile_tables;
+pub mod speedup_tables;
+pub mod tables;
+
+use anyhow::Result;
+
+use crate::runtime::Engine;
+
+/// Regenerate one table/figure by paper number; writes markdown/CSV into
+/// `out_dir` and returns the rendered text.
+pub fn run_table(engine: &Engine, id: &str, out_dir: &str, quick: bool) -> Result<String> {
+    std::fs::create_dir_all(out_dir)?;
+    let text = match id {
+        "2" | "5" => profile_tables::table2_5(engine),
+        "6" => Ok(profile_tables::table6()),
+        "3" => speedup_tables::table3(engine, quick),
+        "8" | "9" => speedup_tables::table8_9(engine, quick),
+        "10" | "11" => speedup_tables::table10_11(engine, quick),
+        "12" | "13" => speedup_tables::table12_13(engine, quick),
+        "14" => hvp_tables::table14(engine, quick),
+        "15" | "16" => hvp_tables::table15_16(engine, quick),
+        "17" | "18" => speedup_tables::table17_18(engine, quick),
+        "19" => low_eps::table19(engine, quick),
+        "20" => low_eps::table20(engine, quick),
+        "21" => low_eps::table21(engine, quick),
+        "22" => hvp_tables::table22(engine, quick),
+        "23" => speedup_tables::table23(engine, quick),
+        "fig3" => figures::figure3(engine, quick),
+        "fig4" | "fig7" => figures::figure4_7(engine, quick),
+        "fig5" | "fig8" => figures::figure5_8(engine, quick),
+        "perf" => perf::perf_table(engine, quick),
+        "ablation" => ablation::ablation_table(engine, quick),
+        other => anyhow::bail!("unknown table/figure id '{other}'"),
+    }?;
+    let path = format!("{out_dir}/table_{id}.md");
+    std::fs::write(&path, &text)?;
+    Ok(text)
+}
+
+pub const ALL_IDS: &[&str] = &[
+    "2", "3", "6", "8", "10", "12", "14", "15", "17", "19", "20", "21", "22", "23", "fig3",
+    "fig4", "fig5", "perf", "ablation",
+];

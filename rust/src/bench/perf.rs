@@ -1,0 +1,135 @@
+//! §Perf harness: before/after measurements of the L3 hot-path
+//! optimizations (EXPERIMENTS.md §Perf).
+//!
+//! * Solver iteration loop: naive per-iteration Tensor->Literal conversion
+//!   vs cached static literals + literal-resident potentials.
+//! * HVP CG loop: naive `Transport::schur_matvec` (rebuilds 11 inputs per
+//!   matvec) vs `SchurOp` (uploads only the (m,) iterate).
+
+use anyhow::Result;
+
+use crate::coordinator::router::Router;
+use crate::data::clouds::uniform_cloud;
+use crate::ot::problem::OtProblem;
+use crate::ot::solver::{Schedule, SinkhornSolver, SolverConfig};
+use crate::ot::Transport;
+use crate::runtime::Engine;
+
+use super::tables::{fmt_ms, markdown, time_best};
+
+pub fn perf_table(engine: &Engine, quick: bool) -> Result<String> {
+    let mut out = String::from("## §Perf: L3 hot-path before/after\n\n");
+    let reps = if quick { 2 } else { 5 };
+    let iters = 100;
+
+    // --- solver loop ------------------------------------------------------
+    let mut rows = Vec::new();
+    for &(n, d) in &[(256usize, 16usize), (1024, 64)] {
+        if quick && n > 256 {
+            continue;
+        }
+        let prob = OtProblem::uniform(
+            uniform_cloud(n, d, 1),
+            uniform_cloud(n, d, 2),
+            n,
+            n,
+            d,
+            0.1,
+        )?;
+        let time_solver = |cached: bool, fused: bool| -> Result<f64> {
+            let cfg = SolverConfig {
+                cached_literals: cached,
+                use_fused: fused,
+                ..SolverConfig::fixed_iters(iters, Schedule::Alternating)
+            };
+            let solver = SinkhornSolver::new(engine, cfg);
+            solver.solve(&prob)?; // warm executables
+            time_best(|| solver.solve(&prob).map(|_| ()), 1, reps)
+        };
+        let naive = time_solver(false, false)?;
+        let cached = time_solver(true, false)?;
+        let cached_fused = time_solver(true, true)?;
+        rows.push(vec![
+            format!("{n} x {d}"),
+            fmt_ms(naive),
+            fmt_ms(cached),
+            format!("{:.2}x", naive / cached),
+            fmt_ms(cached_fused),
+            format!("{:.2}x", naive / cached_fused),
+        ]);
+    }
+    out.push_str(&markdown(
+        &format!("Solver loop, {iters} alternating iterations (best of {reps})"),
+        &["n x d", "naive (ms)", "cached literals (ms)", "speedup", "+ fused k10 (ms)", "total speedup"],
+        &rows,
+    ));
+
+    // --- HVP CG matvec loop ------------------------------------------------
+    let mut rows2 = Vec::new();
+    for &(n, d) in &[(256usize, 16usize), (512, 16)] {
+        if quick && n > 256 {
+            continue;
+        }
+        let prob = OtProblem::uniform(
+            uniform_cloud(n, d, 3),
+            uniform_cloud(n, d, 4),
+            n,
+            n,
+            d,
+            0.1,
+        )?;
+        let solver = SinkhornSolver::new(
+            engine,
+            SolverConfig { max_iters: 60, tol: 1e-5, ..SolverConfig::default() },
+        );
+        let (pot, _) = solver.solve(&prob)?;
+        let router = Router::from_manifest(engine.manifest());
+        let t = Transport::new(engine, &router, &prob, &pot)?;
+        let (_, ahat) = t.apply_pv(&prob.y, d)?;
+        let (_, bhat) = t.marginals()?;
+        let w: Vec<f32> = (0..n).map(|i| (i as f32 * 0.37).sin()).collect();
+        let k = 50;
+        let naive = time_best(
+            || {
+                for _ in 0..k {
+                    t.schur_matvec(&ahat, &bhat, &w, 1e-5)?;
+                }
+                Ok(())
+            },
+            1,
+            reps,
+        )?;
+        let op = t.schur_op(&ahat, &bhat, 1e-5)?;
+        let cached = time_best(
+            || {
+                for _ in 0..k {
+                    op.matvec(&w)?;
+                }
+                Ok(())
+            },
+            1,
+            reps,
+        )?;
+        // numerical agreement of the two paths
+        let a = t.schur_matvec(&ahat, &bhat, &w, 1e-5)?;
+        let b = op.matvec(&w)?;
+        let max_diff = a
+            .iter()
+            .zip(&b)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+        rows2.push(vec![
+            format!("{n} x {d}"),
+            fmt_ms(naive),
+            fmt_ms(cached),
+            format!("{:.2}x", naive / cached),
+            format!("{max_diff:.1e}"),
+        ]);
+    }
+    out.push_str(&markdown(
+        "Schur matvec x50 (one HVP's CG transport work)",
+        &["n x d", "naive (ms)", "SchurOp (ms)", "speedup", "max |diff|"],
+        &rows2,
+    ));
+    Ok(out)
+}

@@ -1,0 +1,44 @@
+//! Profiling tables (paper Tables 2 / 5 / 6 / 7): the NCU-style report from
+//! the IO model, plus measured CPU-PJRT wall-clock for the same plans.
+
+use anyhow::Result;
+
+use crate::iomodel::device::A100;
+use crate::iomodel::plans::{Pass, Workload};
+use crate::iomodel::profile::{launch_ratio_table, ncu_style_table};
+use crate::runtime::Engine;
+
+use super::speedup_tables::{time_step_plan, ITERS};
+use super::tables::{fmt_ms, markdown};
+
+/// Tables 2/5: forward profile at the paper's setting, plus the fwd+bwd
+/// variant of Table 7.
+pub fn table2_5(engine: &Engine) -> Result<String> {
+    let mut out = String::from("## Tables 2/5: NCU-style profile (IO model)\n\n");
+    let fwd = Workload { n: 10_000, m: 10_000, d: 64, iters: ITERS, pass: Pass::Forward };
+    out.push_str(&ncu_style_table(&fwd, &A100));
+    out.push_str("\n");
+    let bwd = Workload { n: 10_000, m: 10_000, d: 128, iters: ITERS, pass: Pass::ForwardBackward };
+    out.push_str("### Table 7 variant: forward+backward (d=128)\n\n");
+    out.push_str(&ncu_style_table(&bwd, &A100));
+
+    // measured CPU counterpart at bucket scale
+    let n = 1024;
+    let d = 64;
+    let flash = time_step_plan(engine, "symmetric_step", None, n, n, d, ITERS, 3)?;
+    let online = time_step_plan(engine, "online_step", None, n, n, d, ITERS, 3)?;
+    let dense = time_step_plan(engine, "dense_step", None, n, n, d, ITERS, 3)?;
+    out.push_str(&markdown(
+        "Measured CPU-PJRT wall-clock (n=m=1024, d=64, 10 iters)",
+        &["Tensorized (ms)", "Online (ms)", "Flash (ms)"],
+        &[vec![fmt_ms(dense), fmt_ms(online), fmt_ms(flash)]],
+    ));
+    Ok(out)
+}
+
+/// Table 6: launch-count / tensor-pipe ratios.
+pub fn table6() -> String {
+    let wl = Workload { n: 10_000, m: 10_000, d: 64, iters: ITERS, pass: Pass::Forward };
+    format!("## Table 6: kernel-launch and tensor-pipe ratios (IO model)\n\n{}",
+        launch_ratio_table(&wl, &A100))
+}

@@ -1,0 +1,306 @@
+//! Speedup tables (paper Tables 3, 8-13, 17-18, 23): measured wall-clock at
+//! CPU-artifact scale plus IO-model projections at the paper's A100 scale.
+//!
+//! All three execution plans run the *same arithmetic* through PJRT; the
+//! measured columns isolate plan structure (fusion / materialization /
+//! chunked map-reduce), the IO-model columns project the paper's grid.
+
+use anyhow::Result;
+
+use crate::data::clouds::uniform_cloud;
+use crate::iomodel::device::A100;
+use crate::iomodel::plans::{analyze, Pass, Plan, Workload};
+use crate::runtime::{Engine, Manifest, Tensor};
+
+use super::tables::{fmt_ms, fmt_x, markdown, time_best};
+
+pub const EPS: f32 = 0.1;
+pub const ITERS: usize = 10;
+
+/// Time `iters` Sinkhorn iterations of a step op at an exact bucket shape.
+/// `grad_op` optionally adds one backward pass (fwd+bwd regime).
+pub fn time_step_plan(
+    engine: &Engine,
+    step_op: &str,
+    grad_op: Option<&str>,
+    n: usize,
+    m: usize,
+    d: usize,
+    iters: usize,
+    reps: usize,
+) -> Result<f64> {
+    let key = Manifest::key(step_op, n, m, d);
+    if !engine.manifest().has(&key) {
+        anyhow::bail!("missing artifact {key}");
+    }
+    let x = Tensor::matrix(n, d, uniform_cloud(n, d, 1));
+    let y = Tensor::matrix(m, d, uniform_cloud(m, d, 2));
+    let a = Tensor::vector(vec![1.0 / n as f32; n]);
+    let b = Tensor::vector(vec![1.0 / m as f32; m]);
+    let eps = Tensor::scalar(EPS);
+    let f0 = Tensor::vector(vec![0.0; n]);
+    let g0 = Tensor::vector(vec![0.0; m]);
+    // warm the executables outside the timed region
+    engine.call(&key, &[x.clone(), y.clone(), f0.clone(), g0.clone(), a.clone(), b.clone(), eps.clone()])?;
+    let gkey = grad_op.map(|g| Manifest::key(g, n, m, d));
+    if let Some(gk) = &gkey {
+        engine.call(gk, &[x.clone(), y.clone(), f0.clone(), g0.clone(), a.clone(), b.clone(), eps.clone()])?;
+    }
+    time_best(
+        || {
+            let mut f = f0.clone();
+            let mut g = g0.clone();
+            for _ in 0..iters {
+                let outs = engine.call(
+                    &key,
+                    &[x.clone(), y.clone(), f, g, a.clone(), b.clone(), eps.clone()],
+                )?;
+                let mut it = outs.into_iter();
+                f = it.next().unwrap();
+                g = it.next().unwrap();
+            }
+            if let Some(gk) = &gkey {
+                engine.call(gk, &[x.clone(), y.clone(), f, g, a.clone(), b.clone(), eps.clone()])?;
+            }
+            Ok(())
+        },
+        1,
+        reps,
+    )
+}
+
+fn measured_grid(
+    engine: &Engine,
+    flash_op: &str,
+    base_op: &str,
+    fwd_bwd: bool,
+    quick: bool,
+) -> Result<Vec<Vec<String>>> {
+    let ns: &[usize] = if quick { &[256] } else { &[256, 512, 1024, 2048] };
+    let ds: &[usize] = if quick { &[16] } else { &[4, 16, 64] };
+    let reps = if quick { 2 } else { 3 };
+    let (fg, bg) = if fwd_bwd {
+        (
+            Some("grad_x"),
+            Some(if base_op == "dense_step" { "dense_grad" } else { "online_grad" }),
+        )
+    } else {
+        (None, None)
+    };
+    let mut rows = Vec::new();
+    for &n in ns {
+        let mut row = vec![n.to_string()];
+        for &d in ds {
+            let tf = time_step_plan(engine, flash_op, fg, n, n, d, ITERS, reps)?;
+            let tb = time_step_plan(engine, base_op, bg, n, n, d, ITERS, reps)?;
+            row.push(format!("{} ({}/{} ms)", fmt_x(tb / tf), fmt_ms(tf), fmt_ms(tb)));
+        }
+        rows.push(row);
+    }
+    Ok(rows)
+}
+
+fn model_speedup(base: Plan, n: usize, d: usize, pass: Pass) -> String {
+    let wl = Workload { n, m: n, d, iters: ITERS, pass };
+    let b = analyze(base, &wl, &A100);
+    let f = analyze(Plan::Flash, &wl, &A100);
+    if b.oom {
+        "OOM".into()
+    } else if b.runtime_s > 600.0 {
+        "OOT".into()
+    } else {
+        fmt_x(b.runtime_s / f.runtime_s)
+    }
+}
+
+/// Table 3: headline speedups at (n, d) in {10k, 40k} x {128, 512}.
+pub fn table3(engine: &Engine, quick: bool) -> Result<String> {
+    let mut out = String::from("## Table 3: speedup vs baselines (flash = 1.0)\n\n");
+    let mut rows = Vec::new();
+    for &(n, d) in &[(10_000, 128), (10_000, 512), (40_000, 128), (40_000, 512)] {
+        rows.push(vec![
+            format!("{}k", n / 1000),
+            d.to_string(),
+            model_speedup(Plan::OnlineUnfused, n, d, Pass::Forward),
+            model_speedup(Plan::Tensorized, n, d, Pass::Forward),
+            model_speedup(Plan::OnlineUnfused, n, d, Pass::ForwardBackward),
+            model_speedup(Plan::Tensorized, n, d, Pass::ForwardBackward),
+        ]);
+    }
+    out.push_str(&markdown(
+        "IO-model projection @ A100 (paper scale)",
+        &["n", "d", "KeOps fwd", "Tensor. fwd", "KeOps fwd+bwd", "Tensor. fwd+bwd"],
+        &rows,
+    ));
+    out.push_str(&markdown(
+        "Measured on CPU-PJRT artifacts (speedup (flash/base ms))",
+        &["n", "d=4", "d=16", "d=64"],
+        &measured_grid(engine, "symmetric_step", "online_step", false, quick)?,
+    ));
+    Ok(out)
+}
+
+/// Tables 8/9: flash vs online-unfused over the full grid.
+pub fn table8_9(engine: &Engine, quick: bool) -> Result<String> {
+    let mut out = String::from("## Tables 8-9: FlashSinkhorn vs online (KeOps-like)\n\n");
+    for (pass, tag) in [(Pass::Forward, "fwd"), (Pass::ForwardBackward, "fwd+bwd")] {
+        let mut rows = Vec::new();
+        for &n in &[5_000usize, 10_000, 20_000, 30_000, 40_000, 50_000] {
+            let mut row = vec![n.to_string()];
+            for &d in &[4usize, 16, 64, 128, 256, 512, 1024] {
+                row.push(model_speedup(Plan::OnlineUnfused, n, d, pass));
+            }
+            rows.push(row);
+        }
+        out.push_str(&markdown(
+            &format!("IO model ({tag}), paper grid"),
+            &["n", "d=4", "d=16", "d=64", "d=128", "d=256", "d=512", "d=1024"],
+            &rows,
+        ));
+    }
+    out.push_str(&markdown(
+        "Measured (fwd): flash(sym) vs online",
+        &["n", "d=4", "d=16", "d=64"],
+        &measured_grid(engine, "symmetric_step", "online_step", false, quick)?,
+    ));
+    out.push_str(&markdown(
+        "Measured (fwd+bwd)",
+        &["n", "d=4", "d=16", "d=64"],
+        &measured_grid(engine, "symmetric_step", "online_step", true, quick)?,
+    ));
+    Ok(out)
+}
+
+/// Tables 10/11: flash vs tensorized, with the OOM frontier.
+pub fn table10_11(engine: &Engine, quick: bool) -> Result<String> {
+    let mut out = String::from("## Tables 10-11: FlashSinkhorn vs tensorized\n\n");
+    let mut rows = Vec::new();
+    for &n in &[5_000usize, 10_000, 20_000, 30_000, 40_000] {
+        let mut row = vec![n.to_string()];
+        for &d in &[4usize, 16, 64, 256, 1024] {
+            row.push(model_speedup(Plan::Tensorized, n, d, Pass::Forward));
+        }
+        rows.push(row);
+    }
+    out.push_str(&markdown(
+        "IO model (fwd), paper grid -- OOM at n >= 30k as in the paper",
+        &["n", "d=4", "d=16", "d=64", "d=256", "d=1024"],
+        &rows,
+    ));
+    out.push_str(&markdown(
+        "Measured (fwd): flash vs dense",
+        &["n", "d=4", "d=16", "d=64"],
+        &measured_grid(engine, "symmetric_step", "dense_step", false, quick)?,
+    ));
+    out.push_str(&markdown(
+        "Measured (fwd+bwd)",
+        &["n", "d=4", "d=16", "d=64"],
+        &measured_grid(engine, "symmetric_step", "dense_step", true, quick)?,
+    ));
+    Ok(out)
+}
+
+/// Tables 12/13: flash(alt) vs the OTT-JAX stand-in (alternating online).
+pub fn table12_13(engine: &Engine, quick: bool) -> Result<String> {
+    let mut out = String::from("## Tables 12-13: FlashSinkhorn vs OTT-JAX stand-in\n\n");
+    let mut rows = Vec::new();
+    for &n in &[5_000usize, 10_000, 20_000, 50_000] {
+        let mut row = vec![n.to_string()];
+        for &d in &[4usize, 32, 128, 512] {
+            // OTT's XLA online path sits between KeOps and flash: model it
+            // as the unfused plan with tensor-pipe GEMMs (cuBLAS dispatch).
+            let wl = Workload { n, m: n, d, iters: ITERS, pass: Pass::Forward };
+            let mut b = analyze(Plan::OnlineUnfused, &wl, &A100);
+            let f = analyze(Plan::Flash, &wl, &A100);
+            // give the baseline cuBLAS-grade compute (Table 12 note: the
+            // dominant X Y^T term is a cuBLAS GEMM) but keep its launch
+            // fragmentation: recompute bottleneck accordingly.
+            b.compute_time_s = f.compute_time_s * 1.6;
+            let runtime = b.mem_time_s.max(b.compute_time_s) + b.launch_time_s;
+            row.push(fmt_x(runtime / f.runtime_s));
+        }
+        rows.push(row);
+    }
+    out.push_str(&markdown(
+        "IO model (fwd), paper grid",
+        &["n", "d=4", "d=32", "d=128", "d=512"],
+        &rows,
+    ));
+    out.push_str(&markdown(
+        "Measured (fwd): flash(alt) vs online(alt)",
+        &["n", "d=4", "d=16", "d=64"],
+        &measured_grid(engine, "alternating_step", "online_step", false, quick)?,
+    ));
+    Ok(out)
+}
+
+/// Tables 17/18: symmetric vs alternating schedule crossover.
+pub fn table17_18(engine: &Engine, quick: bool) -> Result<String> {
+    let mut out = String::from("## Tables 17-18: symmetric vs alternating\n\n");
+    let ns: &[usize] = if quick { &[256, 512] } else { &[256, 512, 1024, 2048] };
+    let ds: &[usize] = if quick { &[16] } else { &[16, 64] };
+    let reps = if quick { 2 } else { 3 };
+    let mut rows = Vec::new();
+    for &d in ds {
+        for &n in ns {
+            let sym = time_step_plan(engine, "symmetric_step", None, n, n, d, ITERS, reps)?;
+            let alt = time_step_plan(engine, "alternating_step", None, n, n, d, ITERS, reps)?;
+            let winner = if sym <= alt { "Sym." } else { "Alt." };
+            rows.push(vec![
+                d.to_string(),
+                n.to_string(),
+                fmt_ms(sym),
+                fmt_ms(alt),
+                format!("{:.2}", sym / alt),
+                winner.to_string(),
+            ]);
+        }
+    }
+    out.push_str(&markdown(
+        "Measured wall-clock (10 iterations)",
+        &["d", "n", "Symmetric (ms)", "Alternating (ms)", "Ratio", "Winner"],
+        &rows,
+    ));
+    // fused k-step amortization (the launch-overhead lever of Table 17)
+    let mut rows2 = Vec::new();
+    let k = engine.manifest().k_fused;
+    for &n in ns {
+        let single = time_step_plan(engine, "alternating_step", None, n, n, 16, k, reps)?;
+        let fused = time_step_plan(engine, &format!("k{k}_alternating"), None, n, n, 16, 1, reps)?;
+        rows2.push(vec![
+            n.to_string(),
+            fmt_ms(single),
+            fmt_ms(fused),
+            format!("{:.2}", single / fused),
+        ]);
+    }
+    out.push_str(&markdown(
+        &format!("Dispatch amortization: {k} single steps vs one fused k{k} artifact (d=16)"),
+        &["n", "k singles (ms)", "fused (ms)", "ratio"],
+        &rows2,
+    ));
+    Ok(out)
+}
+
+/// Table 23: rectangular n != m.
+pub fn table23(engine: &Engine, quick: bool) -> Result<String> {
+    let reps = if quick { 2 } else { 3 };
+    let mut rows = Vec::new();
+    for &(n, m) in &[(256usize, 256usize), (256, 2048), (2048, 256)] {
+        let d = 16;
+        let flash = time_step_plan(engine, "alternating_step", None, n, m, d, ITERS, reps)?;
+        let online = time_step_plan(engine, "online_step", None, n, m, d, ITERS, reps)?;
+        rows.push(vec![
+            format!("{n} x {m}"),
+            format!("{}x", (n.max(m) / n.min(m))),
+            fmt_ms(flash),
+            fmt_ms(online),
+            fmt_x(online / flash),
+        ]);
+    }
+    Ok(markdown(
+        "Table 23: rectangular point clouds (d=16, 10 iters, measured)",
+        &["n x m", "ratio", "Flash (ms)", "Online (ms)", "speedup"],
+        &rows,
+    ))
+}

@@ -1,0 +1,78 @@
+//! Markdown table rendering + timing helpers shared by the harness.
+
+use std::time::Instant;
+
+/// Render a markdown table from a header and rows.
+pub fn markdown(title: &str, header: &[&str], rows: &[Vec<String>]) -> String {
+    let mut out = format!("### {title}\n\n|");
+    for h in header {
+        out.push_str(&format!(" {h} |"));
+    }
+    out.push_str("\n|");
+    for _ in header {
+        out.push_str("---|");
+    }
+    out.push('\n');
+    for row in rows {
+        out.push('|');
+        for cell in row {
+            out.push_str(&format!(" {cell} |"));
+        }
+        out.push('\n');
+    }
+    out.push('\n');
+    out
+}
+
+/// Best-of-k wall-clock of a fallible closure, after warmups.
+pub fn time_best<F: FnMut() -> anyhow::Result<()>>(
+    mut f: F,
+    warmup: usize,
+    reps: usize,
+) -> anyhow::Result<f64> {
+    for _ in 0..warmup {
+        f()?;
+    }
+    let mut best = f64::INFINITY;
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        f()?;
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    Ok(best)
+}
+
+pub fn fmt_ms(s: f64) -> String {
+    format!("{:.2}", s * 1e3)
+}
+
+pub fn fmt_x(ratio: f64) -> String {
+    format!("{ratio:.1}x")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_shape() {
+        let t = markdown("T", &["a", "b"], &[vec!["1".into(), "2".into()]]);
+        assert!(t.contains("| a | b |"));
+        assert!(t.contains("| 1 | 2 |"));
+    }
+
+    #[test]
+    fn time_best_runs_warmups() {
+        let mut count = 0;
+        time_best(
+            || {
+                count += 1;
+                Ok(())
+            },
+            2,
+            3,
+        )
+        .unwrap();
+        assert_eq!(count, 5);
+    }
+}

@@ -1,0 +1,190 @@
+//! JSON configuration for the launcher and the service.
+//!
+//! Every field has a default so `repro` runs with no config file;
+//! `repro --config path.json` overrides any subset (see
+//! `configs/default.json` for a fully-populated example).  JSON rather
+//! than TOML because the config parser is the in-repo `util::json`
+//! substrate (offline build; DESIGN.md section 2).
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Directory holding `manifest.json` + `*.hlo.txt` artifacts.
+    pub artifact_dir: String,
+    pub solver: SolverSection,
+    pub service: ServiceSection,
+    pub hvp: HvpSection,
+    pub bench: BenchSection,
+}
+
+#[derive(Debug, Clone)]
+pub struct SolverSection {
+    /// Maximum Sinkhorn iterations per eps level.
+    pub max_iters: usize,
+    /// Stop when the sup-norm potential change drops below this.
+    pub tol: f32,
+    /// "alternating" | "symmetric" | "auto" (auto = Table 18 crossover).
+    pub schedule: String,
+    /// Use the fused k-step artifact when far from the tolerance.
+    pub use_fused: bool,
+    /// eps-annealing factor in (0, 1]; 1.0 disables (section H.4: 0.9).
+    pub anneal_factor: f32,
+}
+
+#[derive(Debug, Clone)]
+pub struct ServiceSection {
+    /// Max jobs coalesced into one same-bucket batch.
+    pub max_batch: usize,
+    /// Max time a job waits for batch-mates before dispatch (ms).
+    pub max_wait_ms: u64,
+    /// Bound on the pending-job queue (backpressure).
+    pub queue_cap: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct HvpSection {
+    /// Tikhonov damping tau for the Schur system (paper default 1e-5).
+    pub tau: f32,
+    /// CG relative-residual tolerance eta (paper default 1e-6).
+    pub eta: f64,
+    /// CG iteration cap (paper benchmarks fix K = 50).
+    pub max_cg: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchSection {
+    /// Output directory for regenerated tables/figures.
+    pub out_dir: String,
+    /// Repetitions per timing cell.
+    pub reps: usize,
+    /// Warmup runs discarded before timing.
+    pub warmup: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            artifact_dir: crate::artifact_dir().to_string_lossy().into_owned(),
+            solver: SolverSection {
+                max_iters: 1000,
+                tol: 1e-4,
+                schedule: "auto".into(),
+                use_fused: true,
+                anneal_factor: 1.0,
+            },
+            service: ServiceSection { max_batch: 16, max_wait_ms: 2, queue_cap: 1024 },
+            hvp: HvpSection { tau: 1e-5, eta: 1e-6, max_cg: 200 },
+            bench: BenchSection { out_dir: "results".into(), reps: 3, warmup: 1 },
+        }
+    }
+}
+
+fn upd_usize(j: &Json, key: &str, slot: &mut usize) -> Result<()> {
+    if let Some(v) = j.get(key) {
+        *slot = v.as_usize()?;
+    }
+    Ok(())
+}
+
+fn upd_f32(j: &Json, key: &str, slot: &mut f32) -> Result<()> {
+    if let Some(v) = j.get(key) {
+        *slot = v.as_f64()? as f32;
+    }
+    Ok(())
+}
+
+impl Config {
+    pub fn from_json(text: &str) -> Result<Self> {
+        let j = Json::parse(text)?;
+        let mut cfg = Config::default();
+        if let Some(v) = j.get("artifact_dir") {
+            cfg.artifact_dir = v.as_str()?.to_string();
+        }
+        if let Some(s) = j.get("solver") {
+            upd_usize(s, "max_iters", &mut cfg.solver.max_iters)?;
+            upd_f32(s, "tol", &mut cfg.solver.tol)?;
+            if let Some(v) = s.get("schedule") {
+                cfg.solver.schedule = v.as_str()?.to_string();
+            }
+            if let Some(v) = s.get("use_fused") {
+                cfg.solver.use_fused = v.as_bool()?;
+            }
+            upd_f32(s, "anneal_factor", &mut cfg.solver.anneal_factor)?;
+        }
+        if let Some(s) = j.get("service") {
+            upd_usize(s, "max_batch", &mut cfg.service.max_batch)?;
+            if let Some(v) = s.get("max_wait_ms") {
+                cfg.service.max_wait_ms = v.as_usize()? as u64;
+            }
+            upd_usize(s, "queue_cap", &mut cfg.service.queue_cap)?;
+        }
+        if let Some(s) = j.get("hvp") {
+            upd_f32(s, "tau", &mut cfg.hvp.tau)?;
+            if let Some(v) = s.get("eta") {
+                cfg.hvp.eta = v.as_f64()?;
+            }
+            upd_usize(s, "max_cg", &mut cfg.hvp.max_cg)?;
+        }
+        if let Some(s) = j.get("bench") {
+            if let Some(v) = s.get("out_dir") {
+                cfg.bench.out_dir = v.as_str()?.to_string();
+            }
+            upd_usize(s, "reps", &mut cfg.bench.reps)?;
+            upd_usize(s, "warmup", &mut cfg.bench.warmup)?;
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &str) -> Result<Self> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading config {path}"))?;
+        Self::from_json(&text).with_context(|| format!("parsing config {path}"))
+    }
+
+    pub fn load_or_default(path: Option<&str>) -> Result<Self> {
+        match path {
+            Some(p) => Self::load(p),
+            None => Ok(Self::default()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partial_config_fills_defaults() {
+        let cfg = Config::from_json(r#"{"solver": {"max_iters": 7}}"#).unwrap();
+        assert_eq!(cfg.solver.max_iters, 7);
+        assert_eq!(cfg.solver.schedule, "auto");
+        assert_eq!(cfg.service.max_batch, 16);
+    }
+
+    #[test]
+    fn full_override() {
+        let cfg = Config::from_json(
+            r#"{"artifact_dir": "/tmp/a",
+                "solver": {"schedule": "symmetric", "anneal_factor": 0.9, "use_fused": false},
+                "service": {"max_batch": 4, "max_wait_ms": 10, "queue_cap": 8},
+                "hvp": {"tau": 1e-7, "eta": 1e-8, "max_cg": 33},
+                "bench": {"out_dir": "r2", "reps": 9, "warmup": 0}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.artifact_dir, "/tmp/a");
+        assert_eq!(cfg.solver.schedule, "symmetric");
+        assert!(!cfg.solver.use_fused);
+        assert_eq!(cfg.service.queue_cap, 8);
+        assert_eq!(cfg.hvp.max_cg, 33);
+        assert_eq!(cfg.bench.reps, 9);
+    }
+
+    #[test]
+    fn bad_json_is_an_error() {
+        assert!(Config::from_json("{solver: 3}").is_err());
+        assert!(Config::from_json(r#"{"solver": {"max_iters": -2}}"#).is_err());
+    }
+}

@@ -1,0 +1,141 @@
+//! Dynamic same-bucket batching.
+//!
+//! Jobs that route to the same artifact bucket are coalesced into one batch
+//! so the engine thread runs them back-to-back against a hot executable
+//! (cache affinity + amortized dispatch) -- the CPU analogue of the paper's
+//! "fewer kernel launches" lever.  Non-matching jobs are stashed, never
+//! dropped, and keep FIFO order within their own bucket class (invariants
+//! enforced by proptests).
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Anything with a batch key.
+pub trait Keyed {
+    type Key: Eq + Clone + std::fmt::Debug;
+    fn key(&self) -> Self::Key;
+}
+
+pub struct Batcher<T: Keyed> {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    stash: VecDeque<T>,
+}
+
+impl<T: Keyed> Batcher<T> {
+    pub fn new(max_batch: usize, max_wait: Duration) -> Self {
+        Self { max_batch: max_batch.max(1), max_wait, stash: VecDeque::new() }
+    }
+
+    pub fn stashed(&self) -> usize {
+        self.stash.len()
+    }
+
+    /// Block for the next batch.  Returns `None` when the channel is closed
+    /// and the stash is drained.
+    pub fn next_batch(&mut self, rx: &Receiver<T>) -> Option<Vec<T>> {
+        // seed with the oldest stashed job, else block on the channel.
+        let first = match self.stash.pop_front() {
+            Some(j) => j,
+            None => rx.recv().ok()?,
+        };
+        let key = first.key();
+        let mut batch = vec![first];
+
+        // pull same-key jobs out of the stash, preserving order.
+        let mut rest = VecDeque::with_capacity(self.stash.len());
+        while let Some(j) = self.stash.pop_front() {
+            if batch.len() < self.max_batch && j.key() == key {
+                batch.push(j);
+            } else {
+                rest.push_back(j);
+            }
+        }
+        self.stash = rest;
+
+        // top up from the channel until full or the wait budget expires.
+        let deadline = Instant::now() + self.max_wait;
+        while batch.len() < self.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(j) => {
+                    if j.key() == key {
+                        batch.push(j);
+                    } else {
+                        self.stash.push_back(j);
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::sync_channel;
+
+    #[derive(Debug, Clone, PartialEq)]
+    struct Item(u32, &'static str);
+
+    impl Keyed for Item {
+        type Key = &'static str;
+        fn key(&self) -> &'static str {
+            self.1
+        }
+    }
+
+    #[test]
+    fn coalesces_same_key() {
+        let (tx, rx) = sync_channel(16);
+        for i in 0..4 {
+            tx.send(Item(i, "a")).unwrap();
+        }
+        let mut b = Batcher::new(8, Duration::from_millis(5));
+        let batch = b.next_batch(&rx).unwrap();
+        assert_eq!(batch.len(), 4);
+        assert!(batch.iter().all(|i| i.1 == "a"));
+    }
+
+    #[test]
+    fn stashes_mismatched_and_replays_in_order() {
+        let (tx, rx) = sync_channel(16);
+        tx.send(Item(0, "a")).unwrap();
+        tx.send(Item(1, "b")).unwrap();
+        tx.send(Item(2, "a")).unwrap();
+        tx.send(Item(3, "b")).unwrap();
+        let mut b = Batcher::new(8, Duration::from_millis(5));
+        let batch1 = b.next_batch(&rx).unwrap();
+        assert_eq!(batch1, vec![Item(0, "a"), Item(2, "a")]);
+        drop(tx);
+        let batch2 = b.next_batch(&rx).unwrap();
+        assert_eq!(batch2, vec![Item(1, "b"), Item(3, "b")]);
+        assert!(b.next_batch(&rx).is_none());
+    }
+
+    #[test]
+    fn respects_max_batch() {
+        let (tx, rx) = sync_channel(32);
+        for i in 0..10 {
+            tx.send(Item(i, "a")).unwrap();
+        }
+        let mut b = Batcher::new(3, Duration::from_millis(5));
+        assert_eq!(b.next_batch(&rx).unwrap().len(), 3);
+        assert_eq!(b.next_batch(&rx).unwrap().len(), 3);
+    }
+
+    #[test]
+    fn none_when_closed_and_empty() {
+        let (tx, rx) = sync_channel::<Item>(1);
+        drop(tx);
+        let mut b = Batcher::new(4, Duration::from_millis(1));
+        assert!(b.next_batch(&rx).is_none());
+    }
+}

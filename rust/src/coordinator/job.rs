@@ -1,0 +1,46 @@
+//! Job types flowing through the OT service.
+
+use crate::ot::problem::OtProblem;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobKind {
+    /// Solve to convergence (or iteration budget) and return the OT cost.
+    Solve,
+    /// Solve, then compute the gradient w.r.t. the source points (eq. 17).
+    Grad,
+}
+
+#[derive(Debug, Clone)]
+pub struct JobRequest {
+    pub kind: JobKind,
+    pub problem: OtProblem,
+    /// Override the solver's iteration budget (paper benchmarks fix 10).
+    pub fixed_iters: Option<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct JobResponse {
+    pub cost: f64,
+    pub iters: usize,
+    /// present iff kind == Grad: flattened (n, d) gradient.
+    pub grad: Option<Vec<f32>>,
+    /// queue + execution time as seen by the service.
+    pub service_time: std::time::Duration,
+}
+
+/// Internal envelope: request + completion channel (std mpsc; the engine
+/// actor sends exactly one response per job).
+pub struct Job {
+    pub request: JobRequest,
+    pub submitted: std::time::Instant,
+    pub done: std::sync::mpsc::SyncSender<anyhow::Result<JobResponse>>,
+}
+
+impl Job {
+    /// Routing key: jobs whose problems land in the same artifact bucket
+    /// batch together (executable-cache affinity).
+    pub fn bucket_hint(&self) -> (usize, usize, usize) {
+        let p = &self.request.problem;
+        (p.n.next_power_of_two(), p.m.next_power_of_two(), p.d.next_power_of_two())
+    }
+}

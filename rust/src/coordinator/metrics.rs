@@ -1,0 +1,132 @@
+//! Service metrics: lock-free counters + a coarse log-scale latency
+//! histogram, snapshotted for `repro serve` status lines and the
+//! serve_demo example's throughput report.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+const BUCKETS: usize = 16; // 2^0 .. 2^15 ms
+
+#[derive(Default)]
+pub struct Metrics {
+    pub jobs_ok: AtomicU64,
+    pub jobs_failed: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_jobs: AtomicU64,
+    pub queue_depth: AtomicU64,
+    pub sinkhorn_iters: AtomicU64,
+    latency: Mutex<Histogram>,
+}
+
+#[derive(Default, Clone)]
+struct Histogram {
+    counts: [u64; BUCKETS],
+    total_ms: f64,
+    n: u64,
+    max_ms: f64,
+}
+
+impl Metrics {
+    pub fn record_latency(&self, d: Duration) {
+        let ms = d.as_secs_f64() * 1e3;
+        let idx = (ms.max(1.0).log2().floor() as usize).min(BUCKETS - 1);
+        let mut h = self.latency.lock().unwrap();
+        h.counts[idx] += 1;
+        h.total_ms += ms;
+        h.n += 1;
+        h.max_ms = h.max_ms.max(ms);
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let h = self.latency.lock().unwrap().clone();
+        let mean = if h.n > 0 { h.total_ms / h.n as f64 } else { 0.0 };
+        Snapshot {
+            jobs_ok: self.jobs_ok.load(Ordering::Relaxed),
+            jobs_failed: self.jobs_failed.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            batched_jobs: self.batched_jobs.load(Ordering::Relaxed),
+            queue_depth: self.queue_depth.load(Ordering::Relaxed),
+            sinkhorn_iters: self.sinkhorn_iters.load(Ordering::Relaxed),
+            latency_mean_ms: mean,
+            latency_p99_ms: h.quantile(0.99),
+            latency_max_ms: h.max_ms,
+        }
+    }
+}
+
+impl Histogram {
+    /// Upper edge of the bucket containing quantile q (coarse but lock-cheap).
+    fn quantile(&self, q: f64) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let target = (q * self.n as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return (1u64 << (i + 1)) as f64;
+            }
+        }
+        self.max_ms
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    pub jobs_ok: u64,
+    pub jobs_failed: u64,
+    pub batches: u64,
+    pub batched_jobs: u64,
+    pub queue_depth: u64,
+    pub sinkhorn_iters: u64,
+    pub latency_mean_ms: f64,
+    pub latency_p99_ms: f64,
+    pub latency_max_ms: f64,
+}
+
+impl std::fmt::Display for Snapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "jobs ok={} failed={} batches={} (avg size {:.2}) queue={} iters={} latency mean={:.1}ms p99<={:.0}ms max={:.1}ms",
+            self.jobs_ok,
+            self.jobs_failed,
+            self.batches,
+            if self.batches > 0 { self.batched_jobs as f64 / self.batches as f64 } else { 0.0 },
+            self.queue_depth,
+            self.sinkhorn_iters,
+            self.latency_mean_ms,
+            self.latency_p99_ms,
+            self.latency_max_ms
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_monotone() {
+        let m = Metrics::default();
+        for ms in [1u64, 2, 4, 8, 100, 500] {
+            m.record_latency(Duration::from_millis(ms));
+        }
+        let s = m.snapshot();
+        assert!(s.latency_p99_ms >= s.latency_mean_ms);
+        assert!(s.latency_max_ms >= 499.0);
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::default();
+        m.jobs_ok.fetch_add(3, Ordering::Relaxed);
+        m.batches.fetch_add(2, Ordering::Relaxed);
+        m.batched_jobs.fetch_add(3, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.jobs_ok, 3);
+        assert_eq!(s.batches, 2);
+    }
+}

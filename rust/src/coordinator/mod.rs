@@ -1,0 +1,18 @@
+//! The coordination layer: shape-bucket routing with exact zero-weight
+//! padding, dynamic batching, the tokio job service and its metrics.
+//!
+//! This is the "systems" substrate the paper's library-shaped contribution
+//! needs to be deployable: HLO artifacts are static-shaped, so arbitrary
+//! (n, m, d) requests are routed to the nearest precompiled bucket and
+//! padded with zero-weight points -- which the log-domain formulation makes
+//! *exact*, not approximate (padded weights w = 0 give bias eps*log w =
+//! -inf, contributing exp(-inf) = 0 to every reduction; see
+//! `python/compile/kernels/flash.py` and the padding-invariance tests).
+
+pub mod batcher;
+pub mod job;
+pub mod metrics;
+pub mod router;
+pub mod service;
+
+pub use router::{Bucket, BucketCtx, Router};

@@ -1,0 +1,273 @@
+//! Shape-bucket router + zero-weight padding.
+//!
+//! HLO artifacts are compiled for a fixed (n, m, d).  The router selects the
+//! cheapest bucket that fits a request and builds a `BucketCtx` holding the
+//! padded inputs.  Padding contract (exactness proven by property tests on
+//! both layers):
+//!
+//! * extra source/target points get weight 0 -> their log-weight bias is
+//!   -inf -> they contribute exactly nothing to any LSE/softmax reduction;
+//! * extra feature dimensions are zero-filled -> squared-Euclidean dot
+//!   products are unchanged;
+//! * padded *rows* of any output are sliced away before returning.
+
+use anyhow::{anyhow, Result};
+
+use crate::ot::problem::{sqnorms, OtProblem};
+use crate::runtime::{Manifest, Tensor};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Bucket {
+    pub n: usize,
+    pub m: usize,
+    pub d: usize,
+}
+
+impl Bucket {
+    pub fn volume(&self) -> usize {
+        self.n * self.m * self.d
+    }
+
+    pub fn key_suffix(&self) -> String {
+        format!("n{}_m{}_d{}", self.n, self.m, self.d)
+    }
+}
+
+/// Routes (n, m, d) requests to available artifact buckets.
+#[derive(Debug, Clone)]
+pub struct Router {
+    /// Buckets available for the core op family, sorted by volume.
+    buckets: Vec<Bucket>,
+    /// Buckets for the label (OTDD) op family.
+    label_buckets: Vec<Bucket>,
+}
+
+/// The op whose bucket coverage defines routability of plain EOT requests.
+const CORE_OP: &str = "alternating_step";
+const LABEL_OP: &str = "alternating_step_label";
+
+impl Router {
+    pub fn from_manifest(manifest: &Manifest) -> Self {
+        let collect = |op: &str| {
+            manifest
+                .buckets(op)
+                .into_iter()
+                .map(|(n, m, d)| Bucket { n, m, d })
+                .collect::<Vec<_>>()
+        };
+        Self { buckets: collect(CORE_OP), label_buckets: collect(LABEL_OP) }
+    }
+
+    /// Construct directly from bucket lists (tests / custom deployments).
+    pub fn from_buckets(buckets: Vec<Bucket>, label_buckets: Vec<Bucket>) -> Self {
+        Self { buckets, label_buckets }
+    }
+
+    pub fn buckets(&self) -> &[Bucket] {
+        &self.buckets
+    }
+
+    /// Smallest-volume bucket that fits (n, m, d).
+    pub fn select(&self, n: usize, m: usize, d: usize) -> Result<Bucket> {
+        self.select_in(&self.buckets, n, m, d)
+    }
+
+    /// Same, over the label-op bucket set.
+    pub fn select_label(&self, n: usize, m: usize, d: usize) -> Result<Bucket> {
+        self.select_in(&self.label_buckets, n, m, d)
+    }
+
+    fn select_in(&self, set: &[Bucket], n: usize, m: usize, d: usize) -> Result<Bucket> {
+        set.iter()
+            .filter(|b| b.n >= n && b.m >= m && b.d >= d)
+            .min_by_key(|b| b.volume())
+            .copied()
+            .ok_or_else(|| {
+                anyhow!("no artifact bucket fits n={n}, m={m}, d={d}; available: {:?}", set)
+            })
+    }
+}
+
+/// A problem padded into its bucket, plus slicing helpers.  Built once per
+/// solve and shared by the solver, transport ops and HVP oracle so the
+/// padded tensors are allocated exactly once (hot-path rule: no per-
+/// iteration allocation of the big inputs).
+#[derive(Clone)]
+pub struct BucketCtx {
+    pub bucket: Bucket,
+    pub n: usize,
+    pub m: usize,
+    pub d: usize,
+    pub eps: f32,
+    /// padded (bn, bd) source points.
+    pub x: Tensor,
+    /// padded (bm, bd) target points.
+    pub y: Tensor,
+    /// padded (bn,) weights -- zeros beyond n.
+    pub a: Tensor,
+    /// padded (bm,) weights.
+    pub b: Tensor,
+    /// |x_i|^2 over the real entries.
+    pub alpha: Vec<f32>,
+    /// |y_j|^2 over the real entries.
+    pub beta: Vec<f32>,
+}
+
+impl BucketCtx {
+    pub fn new(router: &Router, prob: &OtProblem) -> Result<Self> {
+        let bucket = router.select(prob.n, prob.m, prob.d)?;
+        Ok(Self::with_bucket(bucket, prob))
+    }
+
+    pub fn with_bucket(bucket: Bucket, prob: &OtProblem) -> Self {
+        let x = pad_points(&prob.x, prob.n, prob.d, bucket.n, bucket.d);
+        let y = pad_points(&prob.y, prob.m, prob.d, bucket.m, bucket.d);
+        let a = pad_vec(&prob.a, bucket.n, 0.0);
+        let b = pad_vec(&prob.b, bucket.m, 0.0);
+        Self {
+            bucket,
+            n: prob.n,
+            m: prob.m,
+            d: prob.d,
+            eps: prob.eps,
+            x: Tensor::matrix(bucket.n, bucket.d, x),
+            y: Tensor::matrix(bucket.m, bucket.d, y),
+            a: Tensor::vector(a),
+            b: Tensor::vector(b),
+            alpha: sqnorms(&prob.x, prob.n, prob.d),
+            beta: sqnorms(&prob.y, prob.m, prob.d),
+        }
+    }
+
+    /// Artifact key for an op at this bucket.
+    pub fn key(&self, op: &str) -> String {
+        Manifest::key(op, self.bucket.n, self.bucket.m, self.bucket.d)
+    }
+
+    /// Pad a length-n vector to bucket rows.
+    pub fn pad_n(&self, v: &[f32], fill: f32) -> Tensor {
+        debug_assert_eq!(v.len(), self.n);
+        Tensor::vector(pad_vec(v, self.bucket.n, fill))
+    }
+
+    pub fn pad_m(&self, v: &[f32], fill: f32) -> Tensor {
+        debug_assert_eq!(v.len(), self.m);
+        Tensor::vector(pad_vec(v, self.bucket.m, fill))
+    }
+
+    /// Pad an (n, p) matrix to (bn, p_pad): p_pad = 1 for p = 1 else bd.
+    pub fn pad_n_mat(&self, v: &[f32], p: usize) -> Tensor {
+        let pp = if p == 1 { 1 } else { self.bucket.d };
+        debug_assert_eq!(v.len(), self.n * p);
+        Tensor::matrix(self.bucket.n, pp, pad_points(v, self.n, p, self.bucket.n, pp))
+    }
+
+    pub fn pad_m_mat(&self, v: &[f32], p: usize) -> Tensor {
+        let pp = if p == 1 { 1 } else { self.bucket.d };
+        debug_assert_eq!(v.len(), self.m * p);
+        Tensor::matrix(self.bucket.m, pp, pad_points(v, self.m, p, self.bucket.m, pp))
+    }
+
+    /// Slice a padded (bn,) output back to n.
+    pub fn slice_n(&self, t: &Tensor) -> Result<Vec<f32>> {
+        Ok(t.as_f32()?[..self.n].to_vec())
+    }
+
+    pub fn slice_m(&self, t: &Tensor) -> Result<Vec<f32>> {
+        Ok(t.as_f32()?[..self.m].to_vec())
+    }
+
+    /// Slice a padded (bn, p_pad) output back to (n, p).
+    pub fn slice_n_mat(&self, t: &Tensor, p: usize) -> Result<Vec<f32>> {
+        let pp = if p == 1 { 1 } else { self.bucket.d };
+        slice_mat(t.as_f32()?, self.n, p, pp)
+    }
+
+    pub fn slice_m_mat(&self, t: &Tensor, p: usize) -> Result<Vec<f32>> {
+        let pp = if p == 1 { 1 } else { self.bucket.d };
+        slice_mat(t.as_f32()?, self.m, p, pp)
+    }
+}
+
+fn slice_mat(data: &[f32], rows: usize, cols: usize, padded_cols: usize) -> Result<Vec<f32>> {
+    let mut out = Vec::with_capacity(rows * cols);
+    for i in 0..rows {
+        out.extend_from_slice(&data[i * padded_cols..i * padded_cols + cols]);
+    }
+    Ok(out)
+}
+
+/// Pad an (n, d) row-major matrix to (bn, bd), zero-filling.
+pub fn pad_points(pts: &[f32], n: usize, d: usize, bn: usize, bd: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; bn * bd];
+    for i in 0..n {
+        out[i * bd..i * bd + d].copy_from_slice(&pts[i * d..(i + 1) * d]);
+    }
+    out
+}
+
+pub fn pad_vec(v: &[f32], len: usize, fill: f32) -> Vec<f32> {
+    let mut out = vec![fill; len];
+    out[..v.len()].copy_from_slice(v);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn router() -> Router {
+        Router {
+            buckets: vec![
+                Bucket { n: 256, m: 256, d: 16 },
+                Bucket { n: 256, m: 256, d: 64 },
+                Bucket { n: 512, m: 512, d: 16 },
+                Bucket { n: 256, m: 2048, d: 16 },
+            ],
+            label_buckets: vec![Bucket { n: 256, m: 256, d: 64 }],
+        }
+    }
+
+    #[test]
+    fn selects_smallest_fitting_bucket() {
+        let r = router();
+        assert_eq!(r.select(100, 200, 5).unwrap(), Bucket { n: 256, m: 256, d: 16 });
+        assert_eq!(r.select(100, 200, 17).unwrap(), Bucket { n: 256, m: 256, d: 64 });
+        assert_eq!(r.select(300, 300, 16).unwrap(), Bucket { n: 512, m: 512, d: 16 });
+        assert_eq!(r.select(100, 1500, 3).unwrap(), Bucket { n: 256, m: 2048, d: 16 });
+    }
+
+    #[test]
+    fn errors_when_nothing_fits() {
+        assert!(router().select(5000, 5000, 16).is_err());
+        assert!(router().select(100, 100, 1000).is_err());
+    }
+
+    #[test]
+    fn pad_points_layout() {
+        // [[1,2],[3,4]] (2x2) into (3, 4)
+        let p = pad_points(&[1., 2., 3., 4.], 2, 2, 3, 4);
+        assert_eq!(p, vec![1., 2., 0., 0., 3., 4., 0., 0., 0., 0., 0., 0.]);
+    }
+
+    #[test]
+    fn ctx_pads_and_slices_roundtrip() {
+        let prob = OtProblem::uniform(
+            crate::data::uniform_cloud(10, 3, 1),
+            crate::data::uniform_cloud(20, 3, 2),
+            10,
+            20,
+            3,
+            0.1,
+        )
+        .unwrap();
+        let ctx = BucketCtx::with_bucket(Bucket { n: 16, m: 32, d: 4 }, &prob);
+        assert_eq!(ctx.x.shape(), &[16, 4]);
+        assert_eq!(ctx.a.as_f32().unwrap()[10..], [0.0; 6]);
+        let v: Vec<f32> = (0..60).map(|i| i as f32).collect();
+        let padded = ctx.pad_m_mat(&v, 3);
+        assert_eq!(padded.shape(), &[32, 4]);
+        let back = ctx.slice_m_mat(&padded, 3).unwrap();
+        assert_eq!(back, v);
+    }
+}

@@ -1,0 +1,178 @@
+//! The OT job service: a cloneable client handle in front of a dedicated
+//! engine actor thread.  PJRT handles are `!Send`, so the engine owns a
+//! thread; jobs arrive over a bounded channel -- that bound *is* the
+//! backpressure knob.  (The async-runtime facade was dropped in the
+//! offline build: submission is blocking or fire-and-forget over std
+//! channels; see DESIGN.md section 2.)
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::config::Config;
+use crate::ot::solver::{Schedule, SinkhornSolver, SolverConfig};
+use crate::ot::Transport;
+use crate::runtime::Engine;
+
+use super::batcher::{Batcher, Keyed};
+use super::job::{Job, JobKind, JobRequest, JobResponse};
+use super::metrics::{Metrics, Snapshot};
+
+impl Keyed for Job {
+    type Key = (usize, usize, usize);
+    fn key(&self) -> Self::Key {
+        self.bucket_hint()
+    }
+}
+
+/// Cloneable client handle; dropping every handle shuts the engine down.
+#[derive(Clone)]
+pub struct ServiceHandle {
+    tx: SyncSender<Job>,
+    metrics: Arc<Metrics>,
+}
+
+/// An in-flight job: `recv()` blocks until the engine responds.
+pub struct Pending {
+    rx: Receiver<Result<JobResponse>>,
+}
+
+impl Pending {
+    pub fn recv(self) -> Result<JobResponse> {
+        self.rx.recv().map_err(|_| anyhow!("engine dropped the job"))?
+    }
+
+    pub fn try_recv(&self) -> Option<Result<JobResponse>> {
+        self.rx.try_recv().ok()
+    }
+}
+
+impl ServiceHandle {
+    /// Enqueue a job; returns a `Pending` ticket (submission itself never
+    /// blocks -- a full queue is an immediate backpressure error).
+    pub fn submit(&self, request: JobRequest) -> Result<Pending> {
+        let (done, rx) = sync_channel(1);
+        let job = Job { request, submitted: Instant::now(), done };
+        self.metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
+        match self.tx.try_send(job) {
+            Ok(()) => Ok(Pending { rx }),
+            Err(TrySendError::Full(_)) => {
+                self.metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                Err(anyhow!("service queue full (backpressure)"))
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                self.metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                Err(anyhow!("service stopped"))
+            }
+        }
+    }
+
+    /// Submit and wait.
+    pub fn submit_blocking(&self, request: JobRequest) -> Result<JobResponse> {
+        self.submit(request)?.recv()
+    }
+
+    pub fn metrics(&self) -> Snapshot {
+        self.metrics.snapshot()
+    }
+}
+
+/// Spawn the engine actor thread and return the handle.  Fails fast if the
+/// artifacts cannot be loaded.
+pub fn spawn(config: Config) -> Result<ServiceHandle> {
+    let (tx, rx) = sync_channel::<Job>(config.service.queue_cap);
+    let metrics = Arc::new(Metrics::default());
+    let metrics_engine = metrics.clone();
+    let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<()>>();
+
+    std::thread::Builder::new()
+        .name("ot-engine".into())
+        .spawn(move || {
+            let engine = match Engine::new(config.artifact_dir.clone()) {
+                Ok(e) => {
+                    let _ = ready_tx.send(Ok(()));
+                    e
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            let solver_cfg = SolverConfig::from_section(&config.solver);
+            let solver = SinkhornSolver::new(&engine, solver_cfg.clone());
+            let mut batcher = Batcher::new(
+                config.service.max_batch,
+                Duration::from_millis(config.service.max_wait_ms),
+            );
+            while let Some(batch) = batcher.next_batch(&rx) {
+                metrics_engine.batches.fetch_add(1, Ordering::Relaxed);
+                metrics_engine
+                    .batched_jobs
+                    .fetch_add(batch.len() as u64, Ordering::Relaxed);
+                for job in batch {
+                    metrics_engine.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                    let result = run_job(&engine, &solver, &solver_cfg, &job.request);
+                    match &result {
+                        Ok(resp) => {
+                            metrics_engine.jobs_ok.fetch_add(1, Ordering::Relaxed);
+                            metrics_engine
+                                .sinkhorn_iters
+                                .fetch_add(resp.iters as u64, Ordering::Relaxed);
+                        }
+                        Err(_) => {
+                            metrics_engine.jobs_failed.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    metrics_engine.record_latency(job.submitted.elapsed());
+                    let result = result.map(|mut r| {
+                        r.service_time = job.submitted.elapsed();
+                        r
+                    });
+                    let _ = job.done.send(result);
+                }
+            }
+        })
+        .map_err(|e| anyhow!("spawning engine thread: {e}"))?;
+
+    ready_rx
+        .recv()
+        .map_err(|_| anyhow!("engine thread died during startup"))??;
+    Ok(ServiceHandle { tx, metrics })
+}
+
+fn run_job(
+    engine: &Engine,
+    solver: &SinkhornSolver,
+    base_cfg: &SolverConfig,
+    req: &JobRequest,
+) -> Result<JobResponse> {
+    let (pot, report) = match req.fixed_iters {
+        Some(k) => {
+            let cfg = SolverConfig { max_iters: k, tol: 0.0, ..base_cfg.clone() };
+            let s = SinkhornSolver::new(engine, cfg);
+            s.solve(&req.problem)?
+        }
+        None => solver.solve(&req.problem)?,
+    };
+    let grad = match req.kind {
+        JobKind::Solve => None,
+        JobKind::Grad => {
+            let t = Transport::new(engine, solver.router(), &req.problem, &pot)?;
+            Some(t.grad_x()?.0)
+        }
+    };
+    Ok(JobResponse {
+        cost: report.cost,
+        iters: report.iters,
+        grad,
+        service_time: Duration::ZERO, // stamped by the engine loop
+    })
+}
+
+/// Pick a schedule hint for service-side solves (exposed for tests).
+pub fn schedule_for(n: usize, m: usize, d: usize) -> Schedule {
+    Schedule::Auto.resolve(n, m, d)
+}

@@ -1,0 +1,59 @@
+//! Point-cloud generators matching the paper's synthetic benchmark setup
+//! (section H.2: uniform samples from [0,1]^d, uniform or random simplex
+//! weights).
+
+use super::rng::Rng;
+
+/// n x d row-major points uniform in [0, 1)^d (paper section H.2).
+pub fn uniform_cloud(n: usize, d: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n * d).map(|_| rng.f32()).collect()
+}
+
+/// n x d standard-normal points.
+pub fn normal_cloud(n: usize, d: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n * d).map(|_| rng.normal() as f32).collect()
+}
+
+/// Uniform weights 1/n.
+pub fn uniform_weights(n: usize) -> Vec<f32> {
+    vec![1.0 / n as f32; n]
+}
+
+/// Random point on the simplex (paper section H.2.3 parity setup).
+pub fn random_simplex(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    let mut w: Vec<f32> = (0..n).map(|_| rng.range(0.1, 1.0) as f32).collect();
+    let s: f32 = w.iter().sum();
+    for v in &mut w {
+        *v /= s;
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cloud_in_unit_cube() {
+        let x = uniform_cloud(100, 3, 5);
+        assert_eq!(x.len(), 300);
+        assert!(x.iter().all(|&v| (0.0..1.0).contains(&v)));
+    }
+
+    #[test]
+    fn simplex_sums_to_one() {
+        let w = random_simplex(257, 3);
+        let s: f32 = w.iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+        assert!(w.iter().all(|&v| v > 0.0));
+    }
+
+    #[test]
+    fn clouds_are_deterministic() {
+        assert_eq!(uniform_cloud(10, 4, 9), uniform_cloud(10, 4, 9));
+        assert_ne!(uniform_cloud(10, 4, 9), uniform_cloud(10, 4, 10));
+    }
+}

@@ -1,0 +1,96 @@
+//! Synthetic flow-cytometry-like data: the stand-in for the Cornell flow
+//! cytometry dataset (paper section H.4: n = 40k cells, 5 fluorescence
+//! markers CD4/CD8/CD19/CD45/CD3).
+//!
+//! Real cytometry data is a mixture of cell populations with log-normally
+//! distributed marker intensities and strong per-population correlation
+//! structure.  We emulate that: a handful of "cell types", each a
+//! log-normal cluster with a random low-rank correlation, then global
+//! standardization -- the paper normalizes features too.
+
+use super::rng::Rng;
+
+pub const NUM_MARKERS: usize = 5;
+
+/// n x 5 standardized marker matrix.
+pub fn cytometry_cloud(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    let pops = 4; // lymphocyte-ish populations
+    let d = NUM_MARKERS;
+    // population means in log space, mixing weights
+    let means: Vec<Vec<f64>> = (0..pops)
+        .map(|_| (0..d).map(|_| rng.range(-1.0, 1.5)).collect())
+        .collect();
+    let spread: Vec<f64> = (0..pops).map(|_| rng.range(0.15, 0.45)).collect();
+    // low-rank correlation direction per population
+    let corr: Vec<Vec<f64>> = (0..pops)
+        .map(|_| (0..d).map(|_| rng.normal() * 0.3).collect())
+        .collect();
+    let mut weights: Vec<f64> = (0..pops).map(|_| rng.range(0.5, 1.0)).collect();
+    let s: f64 = weights.iter().sum();
+    weights.iter_mut().for_each(|w| *w /= s);
+
+    let mut x = vec![0.0f64; n * d];
+    for i in 0..n {
+        let u = rng.f64();
+        let mut acc = 0.0;
+        let mut p = pops - 1;
+        for (k, w) in weights.iter().enumerate() {
+            acc += w;
+            if u < acc {
+                p = k;
+                break;
+            }
+        }
+        let shared = rng.normal();
+        for t in 0..d {
+            let z = means[p][t] + spread[p] * rng.normal() + corr[p][t] * shared;
+            x[i * d + t] = z.exp(); // log-normal intensity
+        }
+    }
+    // standardize each marker (paper normalizes features)
+    for t in 0..d {
+        let col: Vec<f64> = (0..n).map(|i| x[i * d + t]).collect();
+        let mean = col.iter().sum::<f64>() / n as f64;
+        let var = col.iter().map(|v| (v - mean).powi(2)).sum::<f64>() / n as f64;
+        let sd = var.sqrt().max(1e-9);
+        for i in 0..n {
+            x[i * d + t] = (x[i * d + t] - mean) / sd;
+        }
+    }
+    x.into_iter().map(|v| v as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standardized_columns() {
+        let n = 2000;
+        let x = cytometry_cloud(n, 1);
+        for t in 0..NUM_MARKERS {
+            let col: Vec<f64> = (0..n).map(|i| x[i * NUM_MARKERS + t] as f64).collect();
+            let mean = col.iter().sum::<f64>() / n as f64;
+            let var = col.iter().map(|v| (v - mean).powi(2)).sum::<f64>() / n as f64;
+            assert!(mean.abs() < 1e-3, "marker {t} mean {mean}");
+            assert!((var - 1.0).abs() < 1e-2, "marker {t} var {var}");
+        }
+    }
+
+    #[test]
+    fn non_gaussian_structure() {
+        // log-normal mixtures are skewed pre-standardization; after
+        // standardization the data should still be multimodal-ish: check
+        // the empirical skewness is non-trivial for at least one marker.
+        let n = 4000;
+        let x = cytometry_cloud(n, 2);
+        let mut max_skew = 0.0f64;
+        for t in 0..NUM_MARKERS {
+            let col: Vec<f64> = (0..n).map(|i| x[i * NUM_MARKERS + t] as f64).collect();
+            let skew = col.iter().map(|v| v.powi(3)).sum::<f64>() / n as f64;
+            max_skew = max_skew.max(skew.abs());
+        }
+        assert!(max_skew > 0.1, "max skew {max_skew}");
+    }
+}

@@ -1,0 +1,108 @@
+//! Labeled clustered embeddings: the stand-in for the paper's
+//! MNIST/Fashion-MNIST ResNet18 embeddings in the OTDD experiments
+//! (section H.3).  Each class is a Gaussian cluster in R^d; OTDD only
+//! consumes (embedding, label) pairs, so this exercises the same code
+//! paths (class-conditional inner OT solves, in-kernel label lookup).
+
+use super::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct LabeledDataset {
+    /// n x d row-major embeddings.
+    pub x: Vec<f32>,
+    /// class id per point, in [0, num_classes).
+    pub labels: Vec<i32>,
+    pub n: usize,
+    pub d: usize,
+    pub num_classes: usize,
+}
+
+impl LabeledDataset {
+    /// Synthetic dataset: `num_classes` Gaussian clusters with random
+    /// centers (separation controls task difficulty).
+    pub fn synthetic(n: usize, d: usize, num_classes: usize, separation: f64, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let centers: Vec<Vec<f64>> = (0..num_classes)
+            .map(|_| (0..d).map(|_| rng.normal() * separation).collect())
+            .collect();
+        let mut x = Vec::with_capacity(n * d);
+        let mut labels = Vec::with_capacity(n);
+        for i in 0..n {
+            let c = i % num_classes; // balanced classes
+            labels.push(c as i32);
+            for t in 0..d {
+                x.push((centers[c][t] + 0.5 * rng.normal()) as f32);
+            }
+        }
+        Self { x, labels, n, d, num_classes }
+    }
+
+    /// Indices of all points with the given class.
+    pub fn class_indices(&self, c: i32) -> Vec<usize> {
+        (0..self.n).filter(|&i| self.labels[i] == c).collect()
+    }
+
+    /// Extract the sub-cloud for one class (rows copied).
+    pub fn class_cloud(&self, c: i32) -> Vec<f32> {
+        let idx = self.class_indices(c);
+        let mut out = Vec::with_capacity(idx.len() * self.d);
+        for &i in &idx {
+            out.extend_from_slice(&self.x[i * self.d..(i + 1) * self.d]);
+        }
+        out
+    }
+
+    /// Take the first `k` points (for subsampled inner OT solves).
+    pub fn truncated(&self, k: usize) -> Self {
+        let k = k.min(self.n);
+        Self {
+            x: self.x[..k * self.d].to_vec(),
+            labels: self.labels[..k].to_vec(),
+            n: k,
+            d: self.d,
+            num_classes: self.num_classes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balanced_classes() {
+        let ds = LabeledDataset::synthetic(100, 8, 10, 2.0, 3);
+        for c in 0..10 {
+            assert_eq!(ds.class_indices(c).len(), 10);
+        }
+    }
+
+    #[test]
+    fn class_cloud_shape() {
+        let ds = LabeledDataset::synthetic(60, 4, 6, 2.0, 4);
+        assert_eq!(ds.class_cloud(0).len(), 10 * 4);
+    }
+
+    #[test]
+    fn clusters_are_separated() {
+        // mean intra-class distance should be well below inter-class.
+        let ds = LabeledDataset::synthetic(200, 8, 4, 4.0, 5);
+        let c0 = ds.class_cloud(0);
+        let c1 = ds.class_cloud(1);
+        let d = ds.d;
+        let centroid = |xs: &[f32]| -> Vec<f32> {
+            let n = xs.len() / d;
+            let mut c = vec![0.0f32; d];
+            for i in 0..n {
+                for t in 0..d {
+                    c[t] += xs[i * d + t] / n as f32;
+                }
+            }
+            c
+        };
+        let a = centroid(&c0);
+        let b = centroid(&c1);
+        let dist: f32 = a.iter().zip(&b).map(|(u, v)| (u - v) * (u - v)).sum();
+        assert!(dist > 1.0, "inter-centroid distance^2 = {dist}");
+    }
+}

@@ -1,0 +1,15 @@
+//! Deterministic synthetic workload generators.
+//!
+//! Everything is seeded (xoshiro256**) so benches and EXPERIMENTS.md runs
+//! are exactly reproducible.  These stand in for the paper's data that we
+//! do not have (MNIST/Fashion-MNIST ResNet18 embeddings, Cornell flow
+//! cytometry) -- see DESIGN.md section 2 for the substitution argument.
+
+pub mod clouds;
+pub mod cytometry;
+pub mod gmm;
+pub mod labeled;
+pub mod rng;
+
+pub use clouds::{normal_cloud, random_simplex, uniform_cloud, uniform_weights};
+pub use rng::Rng;

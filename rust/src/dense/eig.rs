@@ -1,0 +1,174 @@
+//! Cyclic Jacobi eigensolver for symmetric matrices -- backs the dense
+//! Moore-Penrose pseudoinverse used as HVP ground truth (paper section
+//! H.2.3: "eigendecomposition-based pseudoinverse, threshold 1e-10").
+
+/// Eigendecomposition A = V diag(w) V^T of a symmetric n x n matrix.
+/// Returns (eigenvalues, eigenvectors-as-columns flat row-major n x n).
+pub fn jacobi_eigh(a_in: &[f64], n: usize, max_sweeps: usize) -> (Vec<f64>, Vec<f64>) {
+    let mut a = a_in.to_vec();
+    // v starts as identity; columns become eigenvectors.
+    let mut v = vec![0.0; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+    let off = |a: &[f64]| -> f64 {
+        let mut s = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                s += a[i * n + j] * a[i * n + j];
+            }
+        }
+        s
+    };
+    let scale: f64 = a_in.iter().map(|x| x * x).sum::<f64>().max(1e-300);
+    for _ in 0..max_sweeps {
+        if off(&a) <= 1e-26 * scale {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = a[p * n + q];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = a[p * n + p];
+                let aqq = a[q * n + q];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // rotate rows/cols p, q of A
+                for k in 0..n {
+                    let akp = a[k * n + p];
+                    let akq = a[k * n + q];
+                    a[k * n + p] = c * akp - s * akq;
+                    a[k * n + q] = s * akp + c * akq;
+                }
+                for k in 0..n {
+                    let apk = a[p * n + k];
+                    let aqk = a[q * n + k];
+                    a[p * n + k] = c * apk - s * aqk;
+                    a[q * n + k] = s * apk + c * aqk;
+                }
+                for k in 0..n {
+                    let vkp = v[k * n + p];
+                    let vkq = v[k * n + q];
+                    v[k * n + p] = c * vkp - s * vkq;
+                    v[k * n + q] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    let w: Vec<f64> = (0..n).map(|i| a[i * n + i]).collect();
+    (w, v)
+}
+
+/// Apply the Moore-Penrose pseudoinverse of a symmetric matrix to a vector:
+/// A^+ x = V diag(1/w where |w| > thresh) V^T x.
+pub fn pinv_apply(w: &[f64], v: &[f64], x: &[f64], n: usize, thresh: f64) -> Vec<f64> {
+    // coeffs = V^T x
+    let mut coeff = vec![0.0; n];
+    for k in 0..n {
+        let mut s = 0.0;
+        for i in 0..n {
+            s += v[i * n + k] * x[i];
+        }
+        coeff[k] = s;
+    }
+    let wmax = w.iter().cloned().fold(0.0f64, |acc, x| acc.max(x.abs()));
+    for k in 0..n {
+        coeff[k] = if w[k].abs() > thresh * wmax.max(1.0) {
+            coeff[k] / w[k]
+        } else {
+            0.0
+        };
+    }
+    // out = V coeff
+    let mut out = vec![0.0; n];
+    for i in 0..n {
+        let mut s = 0.0;
+        for k in 0..n {
+            s += v[i * n + k] * coeff[k];
+        }
+        out[i] = s;
+    }
+    out
+}
+
+/// Smallest eigenvalue of a symmetric matrix (for Lanczos validation).
+pub fn min_eig(a: &[f64], n: usize) -> f64 {
+    let (w, _) = jacobi_eigh(a, n, 40);
+    w.into_iter().fold(f64::INFINITY, f64::min)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diagonal_matrix_eigs() {
+        let a = vec![3.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, -2.0];
+        let (mut w, _) = jacobi_eigh(&a, 3, 30);
+        w.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        assert!((w[0] + 2.0).abs() < 1e-12);
+        assert!((w[1] - 1.0).abs() < 1e-12);
+        assert!((w[2] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] -> eigs 1, 3
+        let (mut w, v) = jacobi_eigh(&[2.0, 1.0, 1.0, 2.0], 2, 30);
+        w.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        assert!((w[0] - 1.0).abs() < 1e-12 && (w[1] - 3.0).abs() < 1e-12);
+        // reconstruct: A v_k = w_k v_k
+        let a = [2.0, 1.0, 1.0, 2.0];
+        for k in 0..2 {
+            let vk = [v[k], v[2 + k]];
+            let av = [a[0] * vk[0] + a[1] * vk[1], a[2] * vk[0] + a[3] * vk[1]];
+            let lam = (av[0] * vk[0] + av[1] * vk[1]) / (vk[0] * vk[0] + vk[1] * vk[1]);
+            let r = ((av[0] - lam * vk[0]).powi(2) + (av[1] - lam * vk[1]).powi(2)).sqrt();
+            assert!(r < 1e-10);
+        }
+    }
+
+    #[test]
+    fn pinv_of_singular_matrix() {
+        // rank-1: [[1,1],[1,1]] has eigs {0, 2}; A^+ b solves least squares.
+        let a = [1.0, 1.0, 1.0, 1.0];
+        let (w, v) = jacobi_eigh(&a, 2, 30);
+        let x = pinv_apply(&w, &v, &[2.0, 2.0], 2, 1e-10);
+        // A^+ [2,2] = [1,1]/... A [1,1]^T/2 scaled: A^+ = A/4 -> [1,1]
+        assert!((x[0] - 1.0).abs() < 1e-10 && (x[1] - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn random_spd_reconstruction() {
+        let n = 12;
+        let mut rng = crate::data::rng::Rng::new(5);
+        let mut b = vec![0.0; n * n];
+        for v in &mut b {
+            *v = rng.normal();
+        }
+        // A = B B^T is SPD
+        let a = crate::dense::linalg::matmul(
+            &b,
+            &{
+                let mut bt = vec![0.0; n * n];
+                for i in 0..n {
+                    for j in 0..n {
+                        bt[j * n + i] = b[i * n + j];
+                    }
+                }
+                bt
+            },
+            n,
+            n,
+            n,
+        );
+        let (w, _) = jacobi_eigh(&a, n, 40);
+        assert!(w.iter().all(|&x| x > -1e-9));
+        let trace: f64 = (0..n).map(|i| a[i * n + i]).sum();
+        assert!((w.iter().sum::<f64>() - trace).abs() < 1e-8 * trace.abs().max(1.0));
+    }
+}

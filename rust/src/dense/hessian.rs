@@ -1,0 +1,261 @@
+//! Dense data-space Hessian contraction with Moore-Penrose pseudoinverse:
+//! the ground truth for HVP parity (paper section H.2.3, Tables 14/22).
+//!
+//! Implements Theorem 7 / eq. (6) literally in f64:
+//!
+//! ```text
+//! T A = (1/eps) R^T H^+ (R A) + E A
+//! ```
+//! with H built from the *induced* marginals (section G.1) and H^+ via
+//! Jacobi eigendecomposition (threshold 1e-10, as in the paper).
+
+use super::eig::{jacobi_eigh, pinv_apply};
+use super::linalg::{matvec, matvec_t, row_dots};
+use super::sinkhorn::plan_f64;
+
+pub struct DenseHessian {
+    pub n: usize,
+    pub m: usize,
+    pub d: usize,
+    pub eps: f64,
+    x: Vec<f64>,
+    y: Vec<f64>,
+    /// dense plan (n x m)
+    p: Vec<f64>,
+    /// induced marginals
+    pub ahat: Vec<f64>,
+    pub bhat: Vec<f64>,
+    /// cached P Y (n x d)
+    py: Vec<f64>,
+    /// eigendecomposition of the sensitivity matrix H ((n+m)^2)
+    eig_w: Vec<f64>,
+    eig_v: Vec<f64>,
+}
+
+impl DenseHessian {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        x: &[f64],
+        y: &[f64],
+        a: &[f64],
+        b: &[f64],
+        fhat: &[f64],
+        ghat: &[f64],
+        n: usize,
+        m: usize,
+        d: usize,
+        eps: f64,
+    ) -> Self {
+        let p = plan_f64(x, y, a, b, fhat, ghat, n, m, d, eps);
+        let ahat: Vec<f64> = (0..n).map(|i| p[i * m..(i + 1) * m].iter().sum()).collect();
+        let bhat: Vec<f64> = (0..m).map(|j| (0..n).map(|i| p[i * m + j]).sum()).collect();
+        let py = super::linalg::matmul(&p, y, n, m, d);
+        // H = [[diag(ahat), P], [P^T, diag(bhat)]]
+        let nm = n + m;
+        let mut h = vec![0.0; nm * nm];
+        for i in 0..n {
+            h[i * nm + i] = ahat[i];
+            for j in 0..m {
+                h[i * nm + n + j] = p[i * m + j];
+                h[(n + j) * nm + i] = p[i * m + j];
+            }
+        }
+        for j in 0..m {
+            h[(n + j) * nm + (n + j)] = bhat[j];
+        }
+        let (eig_w, eig_v) = jacobi_eigh(&h, nm, 60);
+        Self { n, m, d, eps, x: x.to_vec(), y: y.to_vec(), p, ahat, bhat, py, eig_w, eig_v }
+    }
+
+    /// R A contraction (eq. 29): r1 = 2(ahat.u - u_P), r2 = 2(P^T u - <P^T A, Y>).
+    fn r_contract(&self, a_mat: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        let (n, m, d) = (self.n, self.m, self.d);
+        let u = row_dots(&self.x, a_mat, n, d);
+        let u_p = row_dots(&self.py, a_mat, n, d);
+        let r1: Vec<f64> = (0..n).map(|i| 2.0 * (self.ahat[i] * u[i] - u_p[i])).collect();
+        let ptu = matvec_t(&self.p, &u, n, m);
+        let pta = {
+            // P^T A: (m x d)
+            let mut out = vec![0.0; m * d];
+            for i in 0..n {
+                for j in 0..m {
+                    let pij = self.p[i * m + j];
+                    if pij == 0.0 {
+                        continue;
+                    }
+                    for t in 0..d {
+                        out[j * d + t] += pij * a_mat[i * d + t];
+                    }
+                }
+            }
+            out
+        };
+        let pta_y = row_dots(&pta, &self.y, m, d);
+        let r2: Vec<f64> = (0..m).map(|j| 2.0 * (ptu[j] - pta_y[j])).collect();
+        (r1, r2)
+    }
+
+    /// The explicit block-diagonal term E A (eq. 27-28).
+    fn explicit(&self, a_mat: &[f64]) -> Vec<f64> {
+        let (n, m, d, eps) = (self.n, self.m, self.d, self.eps);
+        let u = row_dots(&self.x, a_mat, n, d);
+        let u_p = row_dots(&self.py, a_mat, n, d);
+        // B5 = (P . (A Y^T)) Y
+        let mut b5 = vec![0.0; n * d];
+        for i in 0..n {
+            let ai = &a_mat[i * d..(i + 1) * d];
+            for j in 0..m {
+                let pij = self.p[i * m + j];
+                if pij == 0.0 {
+                    continue;
+                }
+                let yj = &self.y[j * d..(j + 1) * d];
+                let w: f64 = ai.iter().zip(yj).map(|(p, q)| p * q).sum();
+                for t in 0..d {
+                    b5[i * d + t] += pij * w * yj[t];
+                }
+            }
+        }
+        let mut out = vec![0.0; n * d];
+        for i in 0..n {
+            for t in 0..d {
+                let b1 = 2.0 * self.ahat[i] * a_mat[i * d + t];
+                let b2 = self.ahat[i] * u[i] * self.x[i * d + t];
+                let b3 = u[i] * self.py[i * d + t];
+                let b4 = u_p[i] * self.x[i * d + t];
+                out[i * d + t] = b1 - (4.0 / eps) * (b2 - b3 - b4 + b5[i * d + t]);
+            }
+        }
+        out
+    }
+
+    /// Full HVP T A via Moore-Penrose (ground truth).
+    pub fn hvp(&self, a_mat: &[f64]) -> Vec<f64> {
+        let (n, m, d, eps) = (self.n, self.m, self.d, self.eps);
+        let (r1, r2) = self.r_contract(a_mat);
+        let mut r = r1.clone();
+        r.extend_from_slice(&r2);
+        let w = pinv_apply(&self.eig_w, &self.eig_v, &r, n + m, 1e-10);
+        let (w1, w2) = w.split_at(n);
+        // R^T w (eq. 31)
+        let pw2 = matvec(&self.p, w2, n, m);
+        // P (diag(w2) Y)
+        let mut pv2 = vec![0.0; n * d];
+        for i in 0..n {
+            for j in 0..m {
+                let scale = self.p[i * m + j] * w2[j];
+                if scale == 0.0 {
+                    continue;
+                }
+                for t in 0..d {
+                    pv2[i * d + t] += scale * self.y[j * d + t];
+                }
+            }
+        }
+        let expl = self.explicit(a_mat);
+        let mut out = vec![0.0; n * d];
+        for i in 0..n {
+            for t in 0..d {
+                let rt_w = 2.0
+                    * (self.ahat[i] * w1[i] * self.x[i * d + t] - w1[i] * self.py[i * d + t]
+                        + pw2[i] * self.x[i * d + t]
+                        - pv2[i * d + t]);
+                out[i * d + t] = rt_w / eps + expl[i * d + t];
+            }
+        }
+        out
+    }
+
+    /// Dense damped Schur matvec (for validating the streaming CG operator).
+    pub fn schur_matvec(&self, w2: &[f64], tau: f64) -> Vec<f64> {
+        let (n, m) = (self.n, self.m);
+        let pw = matvec(&self.p, w2, n, m);
+        let t: Vec<f64> = (0..n)
+            .map(|i| if self.ahat[i] > 0.0 { pw[i] / self.ahat[i] } else { 0.0 })
+            .collect();
+        let ptt = matvec_t(&self.p, &t, n, m);
+        (0..m).map(|j| (self.bhat[j] + tau) * w2[j] - ptt[j]).collect()
+    }
+
+    pub fn plan(&self) -> &[f64] {
+        &self.p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::clouds::{random_simplex, uniform_cloud};
+    use crate::dense::linalg::to_f64;
+    use crate::dense::sinkhorn::sinkhorn_f64;
+
+    fn setup(n: usize, d: usize, eps: f64) -> (DenseHessian, Vec<f64>) {
+        let x = to_f64(&uniform_cloud(n, d, 11));
+        let y = to_f64(&uniform_cloud(n, d, 12));
+        let a = to_f64(&random_simplex(n, 13));
+        let b = to_f64(&random_simplex(n, 14));
+        let sol = sinkhorn_f64(&x, &y, &a, &b, n, n, d, eps, 3000, 1e-13);
+        let h = DenseHessian::new(&x, &y, &a, &b, &sol.fhat, &sol.ghat, n, n, d, eps);
+        let mut rng = crate::data::rng::Rng::new(15);
+        let a_mat: Vec<f64> = (0..n * d).map(|_| rng.normal()).collect();
+        (h, a_mat)
+    }
+
+    #[test]
+    fn hessian_is_symmetric_operator() {
+        // <T A, B> == <A, T B> for the dense contraction.
+        let (h, a_mat) = setup(12, 3, 0.3);
+        let mut rng = crate::data::rng::Rng::new(16);
+        let b_mat: Vec<f64> = (0..12 * 3).map(|_| rng.normal()).collect();
+        let ta = h.hvp(&a_mat);
+        let tb = h.hvp(&b_mat);
+        let lhs: f64 = ta.iter().zip(&b_mat).map(|(u, v)| u * v).sum();
+        let rhs: f64 = tb.iter().zip(&a_mat).map(|(u, v)| u * v).sum();
+        assert!((lhs - rhs).abs() < 1e-6 * lhs.abs().max(1.0), "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn hvp_matches_finite_difference_of_gradient() {
+        // grad(X) = 2(diag(r) X - P Y); directional derivative vs T A.
+        let n = 10;
+        let d = 2;
+        let eps = 0.4;
+        let x = to_f64(&uniform_cloud(n, d, 21));
+        let y = to_f64(&uniform_cloud(n, d, 22));
+        let a = vec![1.0 / n as f64; n];
+        let b = vec![1.0 / n as f64; n];
+        let grad_at = |xs: &[f64]| -> Vec<f64> {
+            let sol = sinkhorn_f64(xs, &y, &a, &b, n, n, d, eps, 5000, 1e-14);
+            let p = plan_f64(xs, &y, &a, &b, &sol.fhat, &sol.ghat, n, n, d, eps);
+            let py = crate::dense::linalg::matmul(&p, &y, n, n, d);
+            let r: Vec<f64> = (0..n).map(|i| p[i * n..(i + 1) * n].iter().sum()).collect();
+            (0..n * d)
+                .map(|k| 2.0 * (r[k / d] * xs[k] - py[k]))
+                .collect()
+        };
+        let sol = sinkhorn_f64(&x, &y, &a, &b, n, n, d, eps, 5000, 1e-14);
+        let h = DenseHessian::new(&x, &y, &a, &b, &sol.fhat, &sol.ghat, n, n, d, eps);
+        let mut rng = crate::data::rng::Rng::new(23);
+        let dir: Vec<f64> = (0..n * d).map(|_| rng.normal()).collect();
+        let t_dir = h.hvp(&dir);
+        let step = 1e-5;
+        let xp: Vec<f64> = x.iter().zip(&dir).map(|(u, v)| u + step * v).collect();
+        let xm: Vec<f64> = x.iter().zip(&dir).map(|(u, v)| u - step * v).collect();
+        let gp = grad_at(&xp);
+        let gm = grad_at(&xm);
+        let fd: Vec<f64> = gp.iter().zip(&gm).map(|(u, v)| (u - v) / (2.0 * step)).collect();
+        let num: f64 = t_dir.iter().zip(&fd).map(|(u, v)| (u - v) * (u - v)).sum::<f64>().sqrt();
+        let den: f64 = fd.iter().map(|v| v * v).sum::<f64>().sqrt().max(1e-12);
+        assert!(num / den < 2e-3, "relative FD mismatch {}", num / den);
+    }
+
+    #[test]
+    fn schur_nullspace_is_ones() {
+        // S 1_m = 0 at converged potentials (section F.2).
+        let (h, _) = setup(14, 3, 0.3);
+        let ones = vec![1.0; h.m];
+        let s1 = h.schur_matvec(&ones, 0.0);
+        let norm: f64 = s1.iter().map(|v| v * v).sum::<f64>().sqrt();
+        assert!(norm < 1e-8, "|S 1| = {norm}");
+    }
+}

@@ -1,0 +1,100 @@
+//! Minimal dense f64 linear algebra on flat row-major slices.
+
+/// out = A (r x k) * B (k x c), row-major.
+pub fn matmul(a: &[f64], b: &[f64], r: usize, k: usize, c: usize) -> Vec<f64> {
+    let mut out = vec![0.0; r * c];
+    for i in 0..r {
+        for l in 0..k {
+            let av = a[i * k + l];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[l * c..(l + 1) * c];
+            let orow = &mut out[i * c..(i + 1) * c];
+            for j in 0..c {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+    out
+}
+
+/// y = A (r x c) * x (c).
+pub fn matvec(a: &[f64], x: &[f64], r: usize, c: usize) -> Vec<f64> {
+    (0..r)
+        .map(|i| a[i * c..(i + 1) * c].iter().zip(x).map(|(u, v)| u * v).sum())
+        .collect()
+}
+
+/// y = A^T (r x c) * x (r) -> (c).
+pub fn matvec_t(a: &[f64], x: &[f64], r: usize, c: usize) -> Vec<f64> {
+    let mut out = vec![0.0; c];
+    for i in 0..r {
+        let xi = x[i];
+        if xi == 0.0 {
+            continue;
+        }
+        for j in 0..c {
+            out[j] += a[i * c + j] * xi;
+        }
+    }
+    out
+}
+
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(u, v)| u * v).sum()
+}
+
+pub fn norm2(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+/// Row-wise dot products of two (n x d) matrices -> (n).
+pub fn row_dots(a: &[f64], b: &[f64], n: usize, d: usize) -> Vec<f64> {
+    (0..n)
+        .map(|i| dot(&a[i * d..(i + 1) * d], &b[i * d..(i + 1) * d]))
+        .collect()
+}
+
+pub fn to_f64(v: &[f32]) -> Vec<f64> {
+    v.iter().map(|&x| x as f64).collect()
+}
+
+pub fn to_f32(v: &[f64]) -> Vec<f32> {
+    v.iter().map(|&x| x as f32).collect()
+}
+
+/// log-sum-exp of a slice (stable).
+pub fn lse(xs: &[f64]) -> f64 {
+    let m = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    if m == f64::NEG_INFINITY {
+        return f64::NEG_INFINITY;
+    }
+    m + xs.iter().map(|x| (x - m).exp()).sum::<f64>().ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = vec![1., 2., 3., 4.];
+        let id = vec![1., 0., 0., 1.];
+        assert_eq!(matmul(&a, &id, 2, 2, 2), a);
+    }
+
+    #[test]
+    fn matvec_vs_matmul() {
+        let a = vec![1., 2., 3., 4., 5., 6.]; // 2x3
+        let x = vec![1., 1., 2.];
+        assert_eq!(matvec(&a, &x, 2, 3), vec![9., 21.]);
+        assert_eq!(matvec_t(&a, &[1., 1.], 2, 3), vec![5., 7., 9.]);
+    }
+
+    #[test]
+    fn lse_stable() {
+        assert!((lse(&[1000.0, 1000.0]) - (1000.0 + 2f64.ln())).abs() < 1e-9);
+        assert_eq!(lse(&[f64::NEG_INFINITY; 3]), f64::NEG_INFINITY);
+    }
+}

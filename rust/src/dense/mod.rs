@@ -1,0 +1,15 @@
+//! Pure-Rust f64 dense reference: log-domain Sinkhorn, the dense transport
+//! plan, the full data-space Hessian contraction with a Moore-Penrose
+//! pseudoinverse, and the Jacobi eigensolver backing it.
+//!
+//! This is (a) the ground truth for the paper's parity tables (Table 14,
+//! 20, 22) and (b) the fp64 "materialized" execution plan the fp32 flash
+//! kernels are measured against.  Nothing here touches PJRT.
+
+pub mod eig;
+pub mod hessian;
+pub mod linalg;
+pub mod sinkhorn;
+
+pub use hessian::DenseHessian;
+pub use sinkhorn::DenseSolution;

@@ -1,0 +1,176 @@
+//! Dense f64 log-domain Sinkhorn (the fp64 reference of Tables 20-22).
+
+use super::linalg::lse;
+
+/// Converged dense solution in shifted potentials.
+#[derive(Debug, Clone)]
+pub struct DenseSolution {
+    pub fhat: Vec<f64>,
+    pub ghat: Vec<f64>,
+    pub iters: usize,
+    pub final_delta: f64,
+}
+
+fn safe_ln(w: f64) -> f64 {
+    if w > 0.0 {
+        w.ln()
+    } else {
+        f64::NEG_INFINITY
+    }
+}
+
+/// One dense f-update (eq. 10): fhat_i = -eps lse_j(2 x_i.y_j/eps + ghat_j/eps + ln b_j).
+fn f_update(
+    x: &[f64],
+    y: &[f64],
+    ghat: &[f64],
+    b: &[f64],
+    n: usize,
+    m: usize,
+    d: usize,
+    eps: f64,
+    out: &mut Vec<f64>,
+    scratch: &mut Vec<f64>,
+) {
+    out.clear();
+    for i in 0..n {
+        scratch.clear();
+        let xi = &x[i * d..(i + 1) * d];
+        for j in 0..m {
+            let yj = &y[j * d..(j + 1) * d];
+            let dotv: f64 = xi.iter().zip(yj).map(|(u, v)| u * v).sum();
+            scratch.push((2.0 * dotv + ghat[j]) / eps + safe_ln(b[j]));
+        }
+        out.push(-eps * lse(scratch));
+    }
+}
+
+/// Dense alternating Sinkhorn to `iters` iterations (or delta < tol).
+pub fn sinkhorn_f64(
+    x: &[f64],
+    y: &[f64],
+    a: &[f64],
+    b: &[f64],
+    n: usize,
+    m: usize,
+    d: usize,
+    eps: f64,
+    iters: usize,
+    tol: f64,
+) -> DenseSolution {
+    let mut fhat: Vec<f64> = (0..n)
+        .map(|i| -x[i * d..(i + 1) * d].iter().map(|v| v * v).sum::<f64>())
+        .collect();
+    let mut ghat: Vec<f64> = (0..m)
+        .map(|j| -y[j * d..(j + 1) * d].iter().map(|v| v * v).sum::<f64>())
+        .collect();
+    let mut f_new = Vec::with_capacity(n);
+    let mut g_new = Vec::with_capacity(m);
+    let mut scratch = Vec::with_capacity(n.max(m));
+    let mut delta = f64::INFINITY;
+    let mut done = 0;
+    for _ in 0..iters {
+        f_update(x, y, &ghat, b, n, m, d, eps, &mut f_new, &mut scratch);
+        f_update(y, x, &f_new, a, m, n, d, eps, &mut g_new, &mut scratch);
+        delta = f_new
+            .iter()
+            .zip(&fhat)
+            .chain(g_new.iter().zip(&ghat))
+            .map(|(u, v)| (u - v).abs())
+            .fold(0.0, f64::max);
+        std::mem::swap(&mut fhat, &mut f_new);
+        std::mem::swap(&mut ghat, &mut g_new);
+        done += 1;
+        if delta < tol {
+            break;
+        }
+    }
+    DenseSolution { fhat, ghat, iters: done, final_delta: delta }
+}
+
+/// Dense transport plan P from potentials (eq. 12).
+pub fn plan_f64(
+    x: &[f64],
+    y: &[f64],
+    a: &[f64],
+    b: &[f64],
+    fhat: &[f64],
+    ghat: &[f64],
+    n: usize,
+    m: usize,
+    d: usize,
+    eps: f64,
+) -> Vec<f64> {
+    let mut p = vec![0.0; n * m];
+    for i in 0..n {
+        let xi = &x[i * d..(i + 1) * d];
+        for j in 0..m {
+            let yj = &y[j * d..(j + 1) * d];
+            let dotv: f64 = xi.iter().zip(yj).map(|(u, v)| u * v).sum();
+            let logp = safe_ln(a[i]) + safe_ln(b[j]) + (fhat[i] + ghat[j] + 2.0 * dotv) / eps;
+            p[i * m + j] = logp.exp();
+        }
+    }
+    p
+}
+
+/// Dual objective in f64 (for Table 20's fp32-vs-fp64 comparison).
+pub fn dual_cost_f64(
+    x: &[f64],
+    y: &[f64],
+    a: &[f64],
+    b: &[f64],
+    fhat: &[f64],
+    ghat: &[f64],
+    n: usize,
+    m: usize,
+    d: usize,
+) -> f64 {
+    let mut acc = 0.0;
+    for i in 0..n {
+        let alpha: f64 = x[i * d..(i + 1) * d].iter().map(|v| v * v).sum();
+        acc += a[i] * (fhat[i] + alpha);
+    }
+    for j in 0..m {
+        let beta: f64 = y[j * d..(j + 1) * d].iter().map(|v| v * v).sum();
+        acc += b[j] * (ghat[j] + beta);
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::clouds::uniform_cloud;
+    use crate::dense::linalg::to_f64;
+
+    #[test]
+    fn converged_plan_has_prescribed_marginals() {
+        let (n, m, d) = (24, 30, 3);
+        let x = to_f64(&uniform_cloud(n, d, 1));
+        let y = to_f64(&uniform_cloud(m, d, 2));
+        let a = vec![1.0 / n as f64; n];
+        let b = vec![1.0 / m as f64; m];
+        let sol = sinkhorn_f64(&x, &y, &a, &b, n, m, d, 0.1, 2000, 1e-12);
+        let p = plan_f64(&x, &y, &a, &b, &sol.fhat, &sol.ghat, n, m, d, 0.1);
+        for i in 0..n {
+            let r: f64 = p[i * m..(i + 1) * m].iter().sum();
+            assert!((r - a[i]).abs() < 1e-8, "row {i}: {r}");
+        }
+        for j in 0..m {
+            let c: f64 = (0..n).map(|i| p[i * m + j]).sum();
+            assert!((c - b[j]).abs() < 1e-8, "col {j}: {c}");
+        }
+    }
+
+    #[test]
+    fn more_iterations_never_hurt() {
+        let (n, d) = (16, 2);
+        let x = to_f64(&uniform_cloud(n, d, 3));
+        let y = to_f64(&uniform_cloud(n, d, 4));
+        let a = vec![1.0 / n as f64; n];
+        let s1 = sinkhorn_f64(&x, &y, &a, &a, n, n, d, 0.2, 10, 0.0);
+        let s2 = sinkhorn_f64(&x, &y, &a, &a, n, n, d, 0.2, 100, 0.0);
+        assert!(s2.final_delta <= s1.final_delta);
+    }
+}

@@ -1,0 +1,131 @@
+//! Conjugate gradients on a matvec closure (f32 vectors, f64 reductions).
+//!
+//! Used for the damped Schur system S_tau w = rhs (Thm. 5) and for the
+//! Newton direction in the shuffled-regression optimizer.  Matvecs run as
+//! PJRT artifact calls; everything else stays on the coordinator thread.
+
+#[derive(Debug, Clone)]
+pub struct CgOutcome {
+    pub x: Vec<f32>,
+    pub iters: usize,
+    pub converged: bool,
+    /// final relative residual |r| / |b|
+    pub rel_residual: f64,
+}
+
+fn dot(a: &[f32], b: &[f32]) -> f64 {
+    a.iter().zip(b).map(|(&u, &v)| u as f64 * v as f64).sum()
+}
+
+/// Solve A x = b for SPD A given by `matvec`, starting from x = 0, stopping
+/// at relative residual `eta` or `max_iters`.
+pub fn cg_solve<F, E>(mut matvec: F, b: &[f32], eta: f64, max_iters: usize) -> Result<CgOutcome, E>
+where
+    F: FnMut(&[f32]) -> Result<Vec<f32>, E>,
+{
+    let n = b.len();
+    let bnorm = dot(b, b).sqrt();
+    if bnorm == 0.0 {
+        return Ok(CgOutcome { x: vec![0.0; n], iters: 0, converged: true, rel_residual: 0.0 });
+    }
+    let mut x = vec![0.0f32; n];
+    let mut r = b.to_vec();
+    let mut p = b.to_vec();
+    let mut rs_old = dot(&r, &r);
+    let mut iters = 0;
+    for _ in 0..max_iters {
+        let ap = matvec(&p)?;
+        let denom = dot(&p, &ap);
+        if denom.abs() < 1e-300 {
+            break;
+        }
+        let alpha = rs_old / denom;
+        for i in 0..n {
+            x[i] += (alpha * p[i] as f64) as f32;
+            r[i] -= (alpha * ap[i] as f64) as f32;
+        }
+        iters += 1;
+        let rs_new = dot(&r, &r);
+        if rs_new.sqrt() / bnorm < eta {
+            return Ok(CgOutcome { x, iters, converged: true, rel_residual: rs_new.sqrt() / bnorm });
+        }
+        let beta = rs_new / rs_old;
+        for i in 0..n {
+            p[i] = r[i] + (beta * p[i] as f64) as f32;
+        }
+        rs_old = rs_new;
+    }
+    let rel = rs_old.sqrt() / bnorm;
+    Ok(CgOutcome { x, iters, converged: rel < eta, rel_residual: rel })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// dense SPD matvec helper
+    fn dense_mv(a: &[f64], n: usize) -> impl FnMut(&[f32]) -> Result<Vec<f32>, ()> + '_ {
+        move |x: &[f32]| {
+            Ok((0..n)
+                .map(|i| {
+                    a[i * n..(i + 1) * n]
+                        .iter()
+                        .zip(x)
+                        .map(|(&u, &v)| (u * v as f64) as f32)
+                        .sum()
+                })
+                .collect())
+        }
+    }
+
+    #[test]
+    fn solves_diagonal_system() {
+        let n = 8;
+        let mut a = vec![0.0; n * n];
+        for i in 0..n {
+            a[i * n + i] = (i + 1) as f64;
+        }
+        let b: Vec<f32> = (0..n).map(|i| (i + 1) as f32).collect();
+        let out = cg_solve(dense_mv(&a, n), &b, 1e-8, 100).unwrap();
+        assert!(out.converged);
+        for x in out.x {
+            assert!((x - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn solves_random_spd() {
+        let n = 20;
+        let mut rng = crate::data::rng::Rng::new(3);
+        let mut b_mat = vec![0.0; n * n];
+        for v in &mut b_mat {
+            *v = rng.normal();
+        }
+        // A = B^T B + I
+        let mut a = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += b_mat[k * n + i] * b_mat[k * n + j];
+                }
+                a[i * n + j] = s + if i == j { 1.0 } else { 0.0 };
+            }
+        }
+        let b: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let out = cg_solve(dense_mv(&a, n), &b, 1e-7, 500).unwrap();
+        assert!(out.converged, "rel res {}", out.rel_residual);
+        // check residual directly
+        let ax = dense_mv(&a, n)(&out.x).unwrap();
+        let res: f64 = ax.iter().zip(&b).map(|(&u, &v)| ((u - v) as f64).powi(2)).sum::<f64>().sqrt();
+        let bn: f64 = b.iter().map(|&v| (v as f64).powi(2)).sum::<f64>().sqrt();
+        assert!(res / bn < 1e-4, "true rel res {}", res / bn);
+    }
+
+    #[test]
+    fn zero_rhs_short_circuits() {
+        let out = cg_solve(|_x: &[f32]| Ok::<_, ()>(vec![0.0; 4]), &[0.0; 4], 1e-6, 10).unwrap();
+        assert!(out.converged);
+        assert_eq!(out.iters, 0);
+    }
+}

@@ -1,0 +1,154 @@
+//! Lanczos estimation of the smallest eigenvalue of a symmetric operator
+//! given only matvecs -- the saddle-escape monitor of paper section H.4
+//! (scipy eigsh / ARPACK stand-in, with full reorthogonalization).
+
+use crate::data::rng::Rng;
+use crate::dense::eig::jacobi_eigh;
+
+#[derive(Debug, Clone)]
+pub struct LanczosReport {
+    pub lambda_min: f64,
+    pub lambda_max: f64,
+    pub steps: usize,
+}
+
+/// Run k Lanczos steps (with full reorthogonalization) on `matvec` over
+/// R^dim; returns extremal Ritz values.  k ~ 20-30 is plenty for the
+/// 25-dimensional regression Hessian and for coarse sign detection, which
+/// is all the switching rule needs (the paper uses a "modest eigensolver
+/// tolerance ... coarse diagnostic").
+pub fn lanczos_min_eig<F, E>(mut matvec: F, dim: usize, k: usize, seed: u64) -> Result<LanczosReport, E>
+where
+    F: FnMut(&[f32]) -> Result<Vec<f32>, E>,
+{
+    let k = k.min(dim);
+    let mut rng = Rng::new(seed);
+    let mut q: Vec<Vec<f64>> = Vec::with_capacity(k + 1);
+    let mut v: Vec<f64> = (0..dim).map(|_| rng.normal()).collect();
+    let nrm = norm(&v);
+    v.iter_mut().for_each(|x| *x /= nrm);
+    q.push(v);
+    let mut alphas = Vec::with_capacity(k);
+    let mut betas: Vec<f64> = Vec::with_capacity(k);
+    for j in 0..k {
+        let qj32: Vec<f32> = q[j].iter().map(|&x| x as f32).collect();
+        let mut w: Vec<f64> = matvec(&qj32)?.iter().map(|&x| x as f64).collect();
+        let alpha = dotf(&w, &q[j]);
+        for i in 0..dim {
+            w[i] -= alpha * q[j][i];
+            if j > 0 {
+                w[i] -= betas[j - 1] * q[j - 1][i];
+            }
+        }
+        // full reorthogonalization (twice for stability)
+        for _ in 0..2 {
+            for qi in &q {
+                let c = dotf(&w, qi);
+                for i in 0..dim {
+                    w[i] -= c * qi[i];
+                }
+            }
+        }
+        alphas.push(alpha);
+        let beta = norm(&w);
+        if beta < 1e-12 || j == k - 1 {
+            break;
+        }
+        betas.push(beta);
+        w.iter_mut().for_each(|x| *x /= beta);
+        q.push(w);
+    }
+    // eigenvalues of the tridiagonal T
+    let s = alphas.len();
+    let mut t = vec![0.0; s * s];
+    for i in 0..s {
+        t[i * s + i] = alphas[i];
+        if i + 1 < s {
+            t[i * s + i + 1] = betas[i];
+            t[(i + 1) * s + i] = betas[i];
+        }
+    }
+    let (w, _) = jacobi_eigh(&t, s, 40);
+    let lambda_min = w.iter().cloned().fold(f64::INFINITY, f64::min);
+    let lambda_max = w.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    Ok(LanczosReport { lambda_min, lambda_max, steps: s })
+}
+
+fn dotf(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(u, v)| u * v).sum()
+}
+
+fn norm(a: &[f64]) -> f64 {
+    dotf(a, a).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dense_mv(a: Vec<f64>, n: usize) -> impl FnMut(&[f32]) -> Result<Vec<f32>, ()> {
+        move |x: &[f32]| {
+            Ok((0..n)
+                .map(|i| {
+                    a[i * n..(i + 1) * n]
+                        .iter()
+                        .zip(x)
+                        .map(|(&u, &v)| (u * v as f64) as f32)
+                        .sum()
+                })
+                .collect())
+        }
+    }
+
+    #[test]
+    fn finds_min_eig_of_diagonal() {
+        let n = 30;
+        let mut a = vec![0.0; n * n];
+        for i in 0..n {
+            a[i * n + i] = i as f64 - 3.0; // min = -3
+        }
+        let rep = lanczos_min_eig(dense_mv(a, n), n, 30, 1).unwrap();
+        assert!((rep.lambda_min + 3.0).abs() < 1e-6, "{}", rep.lambda_min);
+        assert!((rep.lambda_max - 26.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn detects_negative_curvature_direction() {
+        // saddle-like: one negative eigenvalue among positives
+        let n = 25;
+        let mut rng = crate::data::rng::Rng::new(7);
+        let mut q = vec![0.0; n];
+        for v in &mut q {
+            *v = rng.normal();
+        }
+        let qn = norm(&q);
+        q.iter_mut().for_each(|v| *v /= qn);
+        // A = I - 1.5 q q^T  -> min eig = -0.5
+        let mut a = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                a[i * n + j] = if i == j { 1.0 } else { 0.0 } - 1.5 * q[i] * q[j];
+            }
+        }
+        let rep = lanczos_min_eig(dense_mv(a.clone(), n), n, 25, 2).unwrap();
+        let truth = crate::dense::eig::min_eig(&a, n);
+        assert!((rep.lambda_min - truth).abs() < 1e-6, "{} vs {truth}", rep.lambda_min);
+    }
+
+    #[test]
+    fn matches_jacobi_on_random_symmetric() {
+        let n = 16;
+        let mut rng = crate::data::rng::Rng::new(9);
+        let mut a = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..=i {
+                let v = rng.normal();
+                a[i * n + j] = v;
+                a[j * n + i] = v;
+            }
+        }
+        let rep = lanczos_min_eig(dense_mv(a.clone(), n), n, 16, 3).unwrap();
+        let truth = crate::dense::eig::min_eig(&a, n);
+        assert!((rep.lambda_min - truth).abs() < 1e-5, "{} vs {truth}", rep.lambda_min);
+    }
+}

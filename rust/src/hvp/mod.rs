@@ -1,0 +1,11 @@
+//! Streaming Hessian-vector products (paper Theorem 5 / appendix F):
+//! matrix-free second-order oracle built from transport applications, a
+//! damped Schur-complement CG solve, and Lanczos eigenvalue monitoring.
+
+pub mod cg;
+pub mod lanczos;
+pub mod oracle;
+
+pub use cg::{cg_solve, CgOutcome};
+pub use lanczos::lanczos_min_eig;
+pub use oracle::{HvpOracle, HvpStats};

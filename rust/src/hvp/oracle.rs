@@ -1,0 +1,172 @@
+//! The streaming HVP oracle (paper Theorem 5 / appendix F):
+//!
+//! ```text
+//! T A = (1/eps) R^T w + E A,   w = H^+ (R A)
+//! ```
+//!
+//! realized with (2 K_CG + 3) transport-vector products, 3 transport-matrix
+//! products and 1 Hadamard-weighted transport -- every one of them a fused
+//! streaming artifact call; nothing of size n*m is ever materialized.
+//! Memory: O((n + m) d), exactly the paper's claim.
+
+use anyhow::{anyhow, Result};
+
+use crate::ot::problem::OtProblem;
+use crate::ot::solver::Potentials;
+use crate::ot::Transport;
+use crate::runtime::Engine;
+
+use super::cg::cg_solve;
+
+#[derive(Debug, Clone, Default)]
+pub struct HvpStats {
+    pub cg_iters: usize,
+    pub cg_converged: bool,
+    pub cg_rel_residual: f64,
+    pub transport_vector_products: usize,
+    pub transport_matrix_products: usize,
+    pub hadamard_products: usize,
+}
+
+/// Second-order oracle bound to (problem, potentials).  `P Y` and the
+/// induced marginals are cached at construction and reused across repeated
+/// HVPs at the same iterate (paper section H.4: "amortize the Sinkhorn
+/// solve ... across many HVP evaluations").
+pub struct HvpOracle<'e> {
+    transport: Transport<'e>,
+    prob: OtProblem,
+    /// cached P Y (n x d)
+    py: Vec<f32>,
+    /// induced marginals (section G.1)
+    ahat: Vec<f32>,
+    bhat: Vec<f32>,
+    pub tau: f32,
+    pub eta: f64,
+    pub max_cg: usize,
+}
+
+impl<'e> HvpOracle<'e> {
+    pub fn new(
+        engine: &'e Engine,
+        router: &crate::coordinator::router::Router,
+        prob: &OtProblem,
+        pot: &Potentials,
+        tau: f32,
+        eta: f64,
+        max_cg: usize,
+    ) -> Result<Self> {
+        let transport = Transport::new(engine, router, prob, pot)?;
+        let (py, ahat) = transport.apply_pv(&prob.y, prob.d)?;
+        let (_, bhat) = transport.marginals()?;
+        Ok(Self { transport, prob: prob.clone(), py, ahat, bhat, tau, eta, max_cg })
+    }
+
+    pub fn marginals(&self) -> (&[f32], &[f32]) {
+        (&self.ahat, &self.bhat)
+    }
+
+    /// Hessian-vector product G = T A for A of shape (n, d).
+    pub fn hvp(&self, a_mat: &[f32]) -> Result<(Vec<f32>, HvpStats)> {
+        let (n, m, d) = (self.prob.n, self.prob.m, self.prob.d);
+        if a_mat.len() != n * d {
+            return Err(anyhow!("A must be (n, d) = ({n}, {d})"));
+        }
+        let eps = self.prob.eps as f64;
+        let mut stats = HvpStats::default();
+
+        // rowwise dots: u = <X, A>, u_P = <PY, A>
+        let u = row_dots(&self.prob.x, a_mat, n, d);
+        let u_p = row_dots(&self.py, a_mat, n, d);
+
+        // r1 = 2 (ahat . u - u_P)                                 (eq. 29)
+        let r1: Vec<f32> = (0..n)
+            .map(|i| 2.0 * (self.ahat[i] * u[i] - u_p[i]))
+            .collect();
+
+        // r2 = 2 (P^T u - <P^T A, Y>)
+        let (ptu, _) = self.transport.apply_ptu(&u, 1)?;
+        stats.transport_vector_products += 1;
+        let (pta, _) = self.transport.apply_ptu(a_mat, d)?;
+        stats.transport_matrix_products += 1;
+        let pta_y = row_dots(&pta, &self.prob.y, m, d);
+        let r2: Vec<f32> = (0..m).map(|j| 2.0 * (ptu[j] - pta_y[j])).collect();
+
+        // rhs = r2 - P^T (r1 / ahat)                              (eq. 30)
+        let t: Vec<f32> = (0..n)
+            .map(|i| if self.ahat[i] > 0.0 { r1[i] / self.ahat[i] } else { 0.0 })
+            .collect();
+        let (pt, _) = self.transport.apply_ptu(&t, 1)?;
+        stats.transport_vector_products += 1;
+        let rhs: Vec<f32> = (0..m).map(|j| r2[j] - pt[j]).collect();
+
+        // damped Schur CG: each iteration = one PV + one P^T U (p = 1),
+        // run through the cached-literal operator (static inputs uploaded
+        // once for the whole CG solve -- EXPERIMENTS.md section Perf).
+        let schur = self.transport.schur_op(&self.ahat, &self.bhat, self.tau)?;
+        let cg = cg_solve(
+            |w: &[f32]| -> Result<Vec<f32>> { schur.matvec(w) },
+            &rhs,
+            self.eta,
+            self.max_cg,
+        )?;
+        stats.cg_iters = cg.iters;
+        stats.cg_converged = cg.converged;
+        stats.cg_rel_residual = cg.rel_residual;
+        stats.transport_vector_products += 2 * cg.iters;
+        let w2 = cg.x;
+
+        // back-substitute w1 = (r1 - P w2) / ahat
+        let (pw2, _) = self.transport.apply_pv(&w2, 1)?;
+        stats.transport_vector_products += 1;
+        let w1: Vec<f32> = (0..n)
+            .map(|i| if self.ahat[i] > 0.0 { (r1[i] - pw2[i]) / self.ahat[i] } else { 0.0 })
+            .collect();
+
+        // R^T w (eq. 31): needs P (diag(w2) Y)
+        let v2: Vec<f32> = {
+            let mut v = self.prob.y.clone();
+            for j in 0..m {
+                for t in 0..d {
+                    v[j * d + t] *= w2[j];
+                }
+            }
+            v
+        };
+        let (pv2, _) = self.transport.apply_pv(&v2, d)?;
+        stats.transport_matrix_products += 1;
+
+        // E A (eq. 27-28): one Hadamard-weighted transport + cached PY
+        let (b5, _) = self.transport.hadamard_pv(a_mat, &self.prob.y, &self.prob.y)?;
+        stats.hadamard_products += 1;
+
+        let mut out = vec![0.0f32; n * d];
+        for i in 0..n {
+            for t in 0..d {
+                let k = i * d + t;
+                let rt_w = 2.0
+                    * (self.ahat[i] * w1[i] * self.prob.x[k] - w1[i] * self.py[k]
+                        + pw2[i] * self.prob.x[k]
+                        - pv2[k]);
+                let b2 = self.ahat[i] * u[i] * self.prob.x[k];
+                let b3 = u[i] * self.py[k];
+                let b4 = u_p[i] * self.prob.x[k];
+                let ea = 2.0 * self.ahat[i] * a_mat[k]
+                    - (4.0 / eps as f32) * (b2 - b3 - b4 + b5[k]);
+                out[k] = rt_w / eps as f32 + ea;
+            }
+        }
+        Ok((out, stats))
+    }
+}
+
+fn row_dots(a: &[f32], b: &[f32], n: usize, d: usize) -> Vec<f32> {
+    (0..n)
+        .map(|i| {
+            a[i * d..(i + 1) * d]
+                .iter()
+                .zip(&b[i * d..(i + 1) * d])
+                .map(|(&u, &v)| u * v)
+                .sum()
+        })
+        .collect()
+}

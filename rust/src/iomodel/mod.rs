@@ -1,0 +1,23 @@
+//! Analytical two-level (HBM / on-chip) IO-cost model.
+//!
+//! This is the substitution substrate for the paper's NVIDIA hardware and
+//! NCU profiler (DESIGN.md section 2): the paper's efficiency claims are
+//! IO-complexity claims (Theorem 2 + the section-4.1 NCU tables), so we
+//! count — analytically, per execution plan — the HBM scalars moved, the
+//! FLOPs issued per pipeline, the kernel launches and the resident working
+//! set, then convert to a runtime estimate with per-plan efficiency
+//! constants calibrated once against the paper's Table 5 (every constant
+//! is annotated with its provenance in `plans.rs`).
+//!
+//! The same machinery instantiated with a TPU-like profile produces the
+//! VMEM-footprint / MXU-utilization estimates mandated for the Pallas
+//! kernel (DESIGN.md section 3 / section 8).
+
+pub mod device;
+pub mod plans;
+pub mod profile;
+pub mod roofline;
+
+pub use device::DeviceProfile;
+pub use plans::{IoReport, Pass, Plan, Workload};
+pub use profile::ncu_style_table;

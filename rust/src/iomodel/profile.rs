@@ -1,0 +1,93 @@
+//! NCU-style profiling report renderer (paper Tables 2 / 5 / 6 / 7).
+
+use super::device::DeviceProfile;
+use super::plans::{analyze, IoReport, Plan, Workload};
+
+fn fmt_bytes(b: f64) -> String {
+    if b >= 1e9 {
+        format!("{:.0} GB", b / 1e9)
+    } else if b >= 1e6 {
+        format!("{:.0} MB", b / 1e6)
+    } else {
+        format!("{:.0} KB", b / 1e3)
+    }
+}
+
+/// Render the three-plan NCU-style comparison as a markdown table.
+pub fn ncu_style_table(wl: &Workload, dev: &DeviceProfile) -> String {
+    let reports: Vec<IoReport> = [Plan::Tensorized, Plan::OnlineUnfused, Plan::Flash]
+        .iter()
+        .map(|&p| analyze(p, wl, dev))
+        .collect();
+    let mut out = String::new();
+    out.push_str(&format!(
+        "IO-model profile (n={}, m={}, d={}, {} iters, {})\n\n",
+        wl.n, wl.m, wl.d, wl.iters, dev.name
+    ));
+    out.push_str("| Metric | Tensor. | Online | Flash |\n|---|---|---|---|\n");
+    let row = |name: &str, f: &dyn Fn(&IoReport) -> String| {
+        format!(
+            "| {} | {} | {} | {} |\n",
+            name,
+            f(&reports[0]),
+            f(&reports[1]),
+            f(&reports[2])
+        )
+    };
+    out.push_str(&row("Runtime (ms)", &|r| {
+        if r.oom {
+            "OOM".into()
+        } else {
+            format!("{:.1}", r.runtime_s * 1e3)
+        }
+    }));
+    out.push_str(&row("HBM Read", &|r| fmt_bytes(r.hbm_read_bytes)));
+    out.push_str(&row("HBM Write", &|r| fmt_bytes(r.hbm_write_bytes)));
+    out.push_str(&row("Peak Mem", &|r| fmt_bytes(r.peak_mem_bytes)));
+    out.push_str(&row("Kernel launches", &|r| format!("{:.0}", r.kernel_launches)));
+    out.push_str(&row("Instructions (B)", &|r| format!("{:.0}", r.instructions / 1e9)));
+    out.push_str(&row("Tensor-pipe FLOPs (G)", &|r| format!("{:.1}", r.flops_tensor / 1e9)));
+    out.push_str(&row("SM Util (%)", &|r| format!("{:.0}", r.sm_util_pct)));
+    out.push_str(&row("Mem Stalls (%)", &|r| format!("{:.0}", r.mem_stall_pct)));
+    out.push_str(&row("Bottleneck", &|r| r.bottleneck.to_string()));
+    out
+}
+
+/// Launch/tensor-pipe ratio summary (paper Table 6).
+pub fn launch_ratio_table(wl: &Workload, dev: &DeviceProfile) -> String {
+    let online = analyze(Plan::OnlineUnfused, wl, dev);
+    let flash = analyze(Plan::Flash, wl, dev);
+    format!(
+        "| Metric | Online | Flash | Ratio |\n|---|---|---|---|\n\
+         | Total kernel launches | {:.0} | {:.0} | {:.1}x fewer |\n\
+         | Tensor-pipe FLOPs (G) | {:.1} | {:.1} | {} |\n",
+        online.kernel_launches,
+        flash.kernel_launches,
+        online.kernel_launches / flash.kernel_launches,
+        online.flops_tensor / 1e9,
+        flash.flops_tensor / 1e9,
+        if online.flops_tensor == 0.0 {
+            "all vs none on tensor pipe".to_string()
+        } else {
+            format!("{:.1}x more", flash.flops_tensor / online.flops_tensor)
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::iomodel::device::A100;
+    use crate::iomodel::plans::Pass;
+
+    #[test]
+    fn renders_all_rows() {
+        let wl = Workload { n: 10_000, m: 10_000, d: 64, iters: 10, pass: Pass::Forward };
+        let t = ncu_style_table(&wl, &A100);
+        for needle in ["Runtime", "HBM Read", "Bottleneck", "Memory", "Compute"] {
+            assert!(t.contains(needle), "missing {needle} in:\n{t}");
+        }
+        let l = launch_ratio_table(&wl, &A100);
+        assert!(l.contains("fewer"));
+    }
+}

@@ -1,0 +1,113 @@
+//! TPU roofline / VMEM estimates for the Pallas kernels (the hardware-
+//! adaptation deliverable: interpret-mode wall-clock is NOT a TPU proxy, so
+//! kernel quality is judged by VMEM footprint and MXU arithmetic intensity;
+//! DESIGN.md sections 3 and 8).
+
+use super::device::DeviceProfile;
+
+#[derive(Debug, Clone)]
+pub struct KernelEstimate {
+    /// Tile sizes used by the Pallas BlockSpecs.
+    pub bn: usize,
+    pub bm: usize,
+    pub d: usize,
+    /// Value columns streamed with K (0 for pure LSE kernels).
+    pub p: usize,
+    /// VMEM bytes resident per (row-block, col-tile) pair.
+    pub vmem_bytes: f64,
+    /// Fraction of VMEM used (must stay << 1 to double-buffer).
+    pub vmem_fraction: f64,
+    /// MXU MACs per HBM byte streamed (arithmetic intensity).
+    pub arithmetic_intensity: f64,
+    /// min(1, AI / roofline knee): 1.0 = compute-bound at peak.
+    pub mxu_bound_fraction: f64,
+    pub compute_bound: bool,
+}
+
+/// Estimate the streaming-kernel VMEM/MXU characteristics at tile (bn, bm).
+/// Matches Algorithm 1's residency: Q row block (bn x d), K tile (bm x d),
+/// bias (bm), running stats (2 x bn), optional V tile (bm x p) and output
+/// accumulator (bn x p).
+pub fn flash_kernel_estimate(
+    bn: usize,
+    bm: usize,
+    d: usize,
+    p: usize,
+    dev: &DeviceProfile,
+) -> KernelEstimate {
+    let f = 4.0; // f32 (bf16 would halve this)
+    let vmem = f * (bn * d + bm * d + bm + 2 * bn + bm * p + bn * p) as f64;
+    // Per inner tile: 2*bn*bm*d MACs (GEMM) against streaming bm*(d+1+p)
+    // floats of fresh K/bias/V (Q is stationary across the inner loop).
+    let flops = 2.0 * (bn * bm * d) as f64;
+    let bytes = f * (bm * (d + 1 + p)) as f64;
+    let ai = flops / bytes;
+    let knee = dev.knee();
+    KernelEstimate {
+        bn,
+        bm,
+        d,
+        p,
+        vmem_bytes: vmem,
+        vmem_fraction: vmem / dev.sram_bytes,
+        arithmetic_intensity: ai,
+        mxu_bound_fraction: (ai / knee).min(1.0),
+        compute_bound: ai >= knee,
+    }
+}
+
+/// Scan tile candidates and return the best (largest AI that still leaves
+/// double-buffer headroom), i.e. what the paper's autotuner would pick.
+pub fn best_tiles(d: usize, p: usize, dev: &DeviceProfile) -> KernelEstimate {
+    let mut best: Option<KernelEstimate> = None;
+    for &bn in &[32usize, 64, 128, 256, 512] {
+        for &bm in &[32usize, 64, 128, 256] {
+            let est = flash_kernel_estimate(bn, bm, d, p, dev);
+            if est.vmem_fraction > 0.45 {
+                continue; // need room to double-buffer
+            }
+            let better = match &best {
+                None => true,
+                Some(b) => est.arithmetic_intensity > b.arithmetic_intensity,
+            };
+            if better {
+                best = Some(est);
+            }
+        }
+    }
+    best.unwrap_or_else(|| flash_kernel_estimate(32, 32, d, p, dev))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::iomodel::device::TPU_V4;
+
+    #[test]
+    fn default_tiles_fit_vmem_easily() {
+        let est = flash_kernel_estimate(128, 128, 64, 0, &TPU_V4);
+        assert!(est.vmem_fraction < 0.05, "vmem frac {}", est.vmem_fraction);
+    }
+
+    #[test]
+    fn ai_grows_with_row_block() {
+        let a = flash_kernel_estimate(32, 128, 64, 0, &TPU_V4);
+        let b = flash_kernel_estimate(256, 128, 64, 0, &TPU_V4);
+        assert!(b.arithmetic_intensity > a.arithmetic_intensity);
+    }
+
+    #[test]
+    fn best_tiles_leave_double_buffer_room() {
+        for d in [4, 16, 64, 128, 512] {
+            let est = best_tiles(d, 0, &TPU_V4);
+            assert!(est.vmem_fraction <= 0.45, "d={d}: {}", est.vmem_fraction);
+        }
+    }
+
+    #[test]
+    fn high_d_is_compute_bound() {
+        // at d = 512 the streaming GEMM clears the MXU knee
+        let est = best_tiles(512, 0, &TPU_V4);
+        assert!(est.compute_bound, "AI {}", est.arithmetic_intensity);
+    }
+}

@@ -1,0 +1,221 @@
+//! `repro` -- the FlashSinkhorn launcher.
+//!
+//! Subcommands:
+//!   solve    one OT solve on synthetic clouds (quick smoke)
+//!   bench    regenerate paper tables/figures (see DESIGN.md section 6)
+//!   profile  IO-model NCU-style profile for a workload
+//!   otdd     OTDD distance between synthetic labeled datasets
+//!   regress  shuffled-regression saddle-escape run
+//!   serve    start the OT job service and run a demo workload
+//!   info     manifest / artifact summary
+
+use anyhow::{bail, Result};
+
+use flash_sinkhorn::bench;
+use flash_sinkhorn::config::Config;
+use flash_sinkhorn::coordinator::job::{JobKind, JobRequest};
+use flash_sinkhorn::coordinator::service;
+use flash_sinkhorn::data::clouds::uniform_cloud;
+use flash_sinkhorn::data::labeled::LabeledDataset;
+use flash_sinkhorn::iomodel::device::A100;
+use flash_sinkhorn::iomodel::plans::{Pass, Workload};
+use flash_sinkhorn::iomodel::profile::ncu_style_table;
+use flash_sinkhorn::ot::problem::OtProblem;
+use flash_sinkhorn::ot::solver::{Schedule, SinkhornSolver, SolverConfig};
+use flash_sinkhorn::otdd;
+use flash_sinkhorn::regression::{run_saddle_escape, SaddleConfig, ShuffledRegression};
+use flash_sinkhorn::runtime::Engine;
+use flash_sinkhorn::util::cli::Args;
+
+const USAGE: &str = "\
+repro -- FlashSinkhorn: IO-aware entropic OT (Rust + JAX + Pallas)
+
+USAGE: repro [--config path.json] <command> [flags]
+
+COMMANDS:
+  solve    [--n 500] [--m 600] [--d 16] [--eps 0.1] [--schedule alternating]
+  bench    [id | all] [--quick]        regenerate paper tables/figures
+  profile  [--n 10000] [--d 64] [--iters 10]
+  otdd     [--n 400] [--d 64]
+  regress  [--n 512] [--eps 0.1] [--steps 60]
+  serve    [--jobs 64]
+  info
+";
+
+fn main() -> Result<()> {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    // global --config anywhere before the command
+    let mut config_path = None;
+    if let Some(pos) = argv.iter().position(|a| a == "--config") {
+        if pos + 1 >= argv.len() {
+            bail!("--config expects a path");
+        }
+        config_path = Some(argv.remove(pos + 1));
+        argv.remove(pos);
+    }
+    let cfg = Config::load_or_default(config_path.as_deref())?;
+    let Some(cmd) = argv.first().cloned() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let args = Args::parse(argv.into_iter().skip(1), &["quick"])?;
+
+    match cmd.as_str() {
+        "solve" => {
+            args.ensure_known(&["n", "m", "d", "eps", "schedule"])?;
+            let (n, m, d) = (args.usize("n", 500)?, args.usize("m", 600)?, args.usize("d", 16)?);
+            let eps = args.f32("eps", 0.1)?;
+            let engine = Engine::new(cfg.artifact_dir.clone())?;
+            let prob = OtProblem::uniform(
+                uniform_cloud(n, d, 1),
+                uniform_cloud(m, d, 2),
+                n,
+                m,
+                d,
+                eps,
+            )?;
+            let mut scfg = SolverConfig::from_section(&cfg.solver);
+            scfg.schedule = Schedule::parse(&args.string("schedule", "alternating"));
+            let solver = SinkhornSolver::new(&engine, scfg);
+            let (_, report) = solver.solve(&prob)?;
+            println!(
+                "OT_eps = {:.6}  iters = {}  delta = {:.2e}  converged = {}  bucket = {:?}  wall = {:?}",
+                report.cost,
+                report.iters,
+                report.final_delta,
+                report.converged,
+                report.bucket,
+                report.wall
+            );
+        }
+        "bench" => {
+            let engine = Engine::new(cfg.artifact_dir.clone())?;
+            let id = args.positional.first().map(String::as_str).unwrap_or("all");
+            let quick = args.has("quick");
+            let ids: Vec<&str> = if id == "all" { bench::ALL_IDS.to_vec() } else { vec![id] };
+            for id in ids {
+                println!("=== table/figure {id} ===");
+                let text = bench::run_table(&engine, id, &cfg.bench.out_dir, quick)?;
+                println!("{text}");
+            }
+        }
+        "profile" => {
+            args.ensure_known(&["n", "d", "iters"])?;
+            let wl = Workload {
+                n: args.usize("n", 10_000)?,
+                m: args.usize("n", 10_000)?,
+                d: args.usize("d", 64)?,
+                iters: args.usize("iters", 10)?,
+                pass: Pass::Forward,
+            };
+            println!("{}", ncu_style_table(&wl, &A100));
+        }
+        "otdd" => {
+            args.ensure_known(&["n", "d"])?;
+            let n = args.usize("n", 400)?;
+            let d = args.usize("d", 64)?;
+            let engine = Engine::new(cfg.artifact_dir.clone())?;
+            let ds_a = LabeledDataset::synthetic(n, d, 10, 2.0, 100);
+            let ds_b = LabeledDataset::synthetic(n, d, 10, 2.0, 200);
+            let rep = otdd::otdd_distance(&engine, &ds_a, &ds_b, 0.5, 0.5, 0.1, 200, 1e-4)?;
+            println!(
+                "OTDD = {:.5}  (OT_ab {:.5}, OT_aa {:.5}, OT_bb {:.5}; {} label iters, {} inner W solves)",
+                rep.distance, rep.ot_ab, rep.ot_aa, rep.ot_bb, rep.total_iters, rep.w_matrix_solves
+            );
+        }
+        "regress" => {
+            args.ensure_known(&["n", "eps", "steps"])?;
+            let n = args.usize("n", 512)?;
+            let eps = args.f32("eps", 0.1)?;
+            let steps = args.usize("steps", 60)?;
+            let engine = Engine::new(cfg.artifact_dir.clone())?;
+            let (workload, w_star) = ShuffledRegression::synthetic(n, eps, 0.05, 7);
+            let solver_cfg = SolverConfig {
+                anneal_factor: 0.9,
+                ..SolverConfig::from_section(&cfg.solver)
+            };
+            let mut rng = flash_sinkhorn::data::rng::Rng::new(3);
+            let w0: Vec<f32> =
+                (0..workload.d * workload.d).map(|_| (rng.normal() * 0.3) as f32).collect();
+            let sc = SaddleConfig { max_steps: steps, ..SaddleConfig::default() };
+            let rep = run_saddle_escape(&engine, &workload, &solver_cfg, &w0, &sc)?;
+            for p in rep.trajectory.iter().filter(|p| p.step % 5 == 0 || p.lambda_min.is_some()) {
+                println!(
+                    "step {:>3}  loss {:.5}  |g| {:.2e}  lambda_min {:>10}  {:?}",
+                    p.step,
+                    p.loss,
+                    p.grad_norm,
+                    p.lambda_min.map(|l| format!("{l:+.2e}")).unwrap_or_else(|| "-".into()),
+                    p.phase
+                );
+            }
+            println!(
+                "escapes={} reentries={} newton={} adam={} converged={} rel_err(W*)={:.3}",
+                rep.escapes,
+                rep.reentries,
+                rep.newton_steps,
+                rep.adam_steps,
+                rep.converged,
+                ShuffledRegression::rel_param_error(&rep.w, &w_star)
+            );
+        }
+        "serve" => {
+            args.ensure_known(&["jobs"])?;
+            let jobs = args.usize("jobs", 64)?;
+            let handle = service::spawn(cfg.clone())?;
+            let t0 = std::time::Instant::now();
+            let pendings: Vec<_> = (0..jobs)
+                .map(|i| {
+                    let n = [200, 400, 800][i % 3];
+                    let prob = OtProblem::uniform(
+                        uniform_cloud(n, 16, i as u64),
+                        uniform_cloud(n, 16, (i + 1000) as u64),
+                        n,
+                        n,
+                        16,
+                        0.1,
+                    )
+                    .unwrap();
+                    handle.submit(JobRequest {
+                        kind: JobKind::Solve,
+                        problem: prob,
+                        fixed_iters: Some(10),
+                    })
+                })
+                .collect();
+            let mut ok = 0;
+            for p in pendings {
+                if p.and_then(|p| p.recv()).is_ok() {
+                    ok += 1;
+                }
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            println!(
+                "{ok}/{jobs} jobs in {wall:.2}s  ({:.1} jobs/s)\n{}",
+                jobs as f64 / wall,
+                handle.metrics()
+            );
+        }
+        "info" => {
+            let engine = Engine::new(cfg.artifact_dir.clone())?;
+            let m = engine.manifest();
+            println!(
+                "platform: {}\nartifacts: {} entries (manifest v{}, k_fused={}, V={})",
+                engine.platform(),
+                m.entries.len(),
+                m.version,
+                m.k_fused,
+                m.num_classes
+            );
+            let mut ops: Vec<&String> = m.entries.values().map(|e| &e.op).collect();
+            ops.sort();
+            ops.dedup();
+            println!("ops: {ops:?}");
+        }
+        other => {
+            print!("{USAGE}");
+            bail!("unknown command '{other}'");
+        }
+    }
+    Ok(())
+}

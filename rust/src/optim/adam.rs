@@ -1,0 +1,72 @@
+//! Full-batch Adam (paper section H.4: lr 0.03, betas (0.9, 0.999)).
+//! Full-batch by design: the saddle detector needs a deterministic
+//! trajectory and a stable curvature signal (see the paper's "Why
+//! full-batch Adam?" discussion).
+
+#[derive(Debug, Clone)]
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: u32,
+}
+
+impl Adam {
+    pub fn new(dim: usize, lr: f32) -> Self {
+        Self { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, m: vec![0.0; dim], v: vec![0.0; dim], t: 0 }
+    }
+
+    /// In-place parameter update from a gradient.
+    pub fn step(&mut self, params: &mut [f32], grad: &[f32]) {
+        assert_eq!(params.len(), grad.len());
+        assert_eq!(params.len(), self.m.len());
+        self.t += 1;
+        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
+        for i in 0..params.len() {
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * grad[i];
+            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * grad[i] * grad[i];
+            let mhat = self.m[i] / bc1;
+            let vhat = self.v[i] / bc2;
+            params[i] -= self.lr * mhat / (vhat.sqrt() + self.eps);
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.m.iter_mut().for_each(|x| *x = 0.0);
+        self.v.iter_mut().for_each(|x| *x = 0.0);
+        self.t = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimizes_quadratic() {
+        // f(w) = 1/2 |w - c|^2
+        let c = [3.0f32, -2.0, 0.5];
+        let mut w = [0.0f32; 3];
+        let mut opt = Adam::new(3, 0.1);
+        for _ in 0..500 {
+            let g: Vec<f32> = w.iter().zip(&c).map(|(wi, ci)| wi - ci).collect();
+            opt.step(&mut w, &g);
+        }
+        for (wi, ci) in w.iter().zip(&c) {
+            assert!((wi - ci).abs() < 1e-2, "{wi} vs {ci}");
+        }
+    }
+
+    #[test]
+    fn first_step_size_is_lr() {
+        // classic Adam property: |first update| ~ lr regardless of grad scale
+        let mut w = [0.0f32];
+        let mut opt = Adam::new(1, 0.03);
+        opt.step(&mut w, &[1234.5]);
+        assert!((w[0].abs() - 0.03).abs() < 1e-4, "{}", w[0]);
+    }
+}

@@ -1,0 +1,9 @@
+//! First- and second-order optimizers driving EOT objectives (paper
+//! section 4.2 / H.4): full-batch Adam for saddle regions, Newton-CG with
+//! Armijo backtracking once local convexity is detected.
+
+pub mod adam;
+pub mod newton;
+
+pub use adam::Adam;
+pub use newton::{armijo_newton_step, NewtonOutcome};

@@ -1,0 +1,195 @@
+//! Streaming transport application (paper section 3.2, Algorithms 2/4/5):
+//! PV, P^T U, Hadamard-weighted transport, gradients, marginals and the
+//! Schur-complement matvec -- all matrix-free, routed through the fused
+//! Pallas artifacts.
+
+use anyhow::Result;
+
+use crate::coordinator::router::{BucketCtx, Router};
+use crate::runtime::{Engine, Tensor};
+
+use super::problem::OtProblem;
+use super::solver::Potentials;
+
+/// A transport operator bound to (problem, potentials): the Rust-side
+/// object implementing `P * ()`, `P^T * ()`, `(P . W) * ()` and eq. (17).
+/// Potentials may be *any* values (Prop. 3 holds pre-convergence); the
+/// induced marginals r, c come back with every application.
+pub struct Transport<'e> {
+    engine: &'e Engine,
+    pub ctx: BucketCtx,
+    fhat_p: Tensor,
+    ghat_p: Tensor,
+    eps: Tensor,
+}
+
+impl<'e> Transport<'e> {
+    pub fn new(engine: &'e Engine, router: &Router, prob: &OtProblem, pot: &Potentials) -> Result<Self> {
+        let ctx = BucketCtx::new(router, prob)?;
+        Ok(Self::with_ctx(engine, ctx, pot))
+    }
+
+    pub fn with_ctx(engine: &'e Engine, ctx: BucketCtx, pot: &Potentials) -> Self {
+        let fhat_p = ctx.pad_n(&pot.fhat, 0.0);
+        let ghat_p = ctx.pad_m(&pot.ghat, 0.0);
+        let eps = Tensor::scalar(ctx.eps);
+        Self { engine, ctx, fhat_p, ghat_p, eps }
+    }
+
+    fn base_inputs(&self) -> Vec<Tensor> {
+        vec![
+            self.ctx.x.clone(),
+            self.ctx.y.clone(),
+            self.fhat_p.clone(),
+            self.ghat_p.clone(),
+            self.ctx.a.clone(),
+            self.ctx.b.clone(),
+        ]
+    }
+
+    /// PV for V of shape (m, p) with p in {1, d}.  Returns (PV, r = P 1_m).
+    pub fn apply_pv(&self, v: &[f32], p: usize) -> Result<(Vec<f32>, Vec<f32>)> {
+        let op = if p == 1 { "apply_pv_p1" } else { "apply_pv_pd" };
+        let mut inputs = self.base_inputs();
+        inputs.push(self.ctx.pad_m_mat(v, p));
+        inputs.push(self.eps.clone());
+        let outs = self.engine.call(&self.ctx.key(op), &inputs)?;
+        Ok((self.ctx.slice_n_mat(&outs[0], p)?, self.ctx.slice_n(&outs[1])?))
+    }
+
+    /// P^T U for U of shape (n, p).  Returns (P^T U, c = P^T 1_n).
+    pub fn apply_ptu(&self, u: &[f32], p: usize) -> Result<(Vec<f32>, Vec<f32>)> {
+        let op = if p == 1 { "apply_ptu_p1" } else { "apply_ptu_pd" };
+        let mut inputs = self.base_inputs();
+        inputs.push(self.ctx.pad_n_mat(u, p));
+        inputs.push(self.eps.clone());
+        let outs = self.engine.call(&self.ctx.key(op), &inputs)?;
+        Ok((self.ctx.slice_m_mat(&outs[0], p)?, self.ctx.slice_m(&outs[1])?))
+    }
+
+    /// (P . (A B^T)) V with A (n, d), B (m, d), V (m, d)  (Algorithm 5).
+    pub fn hadamard_pv(&self, aa: &[f32], bb: &[f32], v: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
+        let d = self.ctx.d;
+        let mut inputs = self.base_inputs();
+        inputs.push(self.ctx.pad_n_mat(aa, d));
+        inputs.push(self.ctx.pad_m_mat(bb, d));
+        inputs.push(self.ctx.pad_m_mat(v, d));
+        inputs.push(self.eps.clone());
+        let outs = self.engine.call(&self.ctx.key("hadamard_pv"), &inputs)?;
+        Ok((self.ctx.slice_n_mat(&outs[0], d)?, self.ctx.slice_n(&outs[1])?))
+    }
+
+    /// Gradient of OT_eps w.r.t. X (eq. 17, induced marginals): (grad, r).
+    pub fn grad_x(&self) -> Result<(Vec<f32>, Vec<f32>)> {
+        let mut inputs = self.base_inputs();
+        inputs.push(self.eps.clone());
+        let outs = self.engine.call(&self.ctx.key("grad_x"), &inputs)?;
+        Ok((self.ctx.slice_n_mat(&outs[0], self.ctx.d)?, self.ctx.slice_n(&outs[1])?))
+    }
+
+    /// Induced marginals (r, c) = (P 1, P^T 1) (eq. 13-14).
+    pub fn marginals(&self) -> Result<(Vec<f32>, Vec<f32>)> {
+        let mut inputs = self.base_inputs();
+        inputs.push(self.eps.clone());
+        let outs = self.engine.call(&self.ctx.key("marginals"), &inputs)?;
+        Ok((self.ctx.slice_n(&outs[0])?, self.ctx.slice_m(&outs[1])?))
+    }
+
+    /// Damped Schur matvec: (diag(bhat) + tau) w - P^T diag(ahat)^-1 P w
+    /// (Thm. 5 / eq. 30).  One call = one CG iteration's transport work.
+    pub fn schur_matvec(&self, ahat: &[f32], bhat: &[f32], w2: &[f32], tau: f32) -> Result<Vec<f32>> {
+        let mut inputs = self.base_inputs();
+        inputs.push(self.ctx.pad_n(ahat, 0.0));
+        inputs.push(self.ctx.pad_m(bhat, 0.0));
+        inputs.push(self.ctx.pad_m(w2, 0.0));
+        inputs.push(Tensor::scalar(tau));
+        inputs.push(self.eps.clone());
+        let outs = self.engine.call(&self.ctx.key("schur_matvec"), &inputs)?;
+        self.ctx.slice_m(&outs[0])
+    }
+
+    /// Barycentric projection T_eps(X) = diag(r)^-1 P Y  (Cor. 4).
+    pub fn barycentric(&self) -> Result<Vec<f32>> {
+        let y_real = {
+            // real-row, real-col Y as a flat (m, d) for apply_pv
+            let yp = self.ctx.y.as_f32()?;
+            let (bd, d, m) = (self.ctx.bucket.d, self.ctx.d, self.ctx.m);
+            let mut out = Vec::with_capacity(m * d);
+            for j in 0..m {
+                out.extend_from_slice(&yp[j * bd..j * bd + d]);
+            }
+            out
+        };
+        let (py, r) = self.apply_pv(&y_real, self.ctx.d)?;
+        let d = self.ctx.d;
+        let mut t = py;
+        for i in 0..self.ctx.n {
+            let ri = r[i].max(1e-38);
+            for c in 0..d {
+                t[i * d + c] /= ri;
+            }
+        }
+        Ok(t)
+    }
+
+    pub fn eps(&self) -> f32 {
+        self.ctx.eps
+    }
+
+    /// Build the cached-literal Schur operator for CG loops (hot path).
+    pub fn schur_op(&self, ahat: &[f32], bhat: &[f32], tau: f32) -> Result<SchurOp<'e>> {
+        SchurOp::new(self, ahat, bhat, tau)
+    }
+}
+
+/// The damped Schur-complement matvec with every static input resident as
+/// a prebuilt literal: each CG iteration uploads only the (m,) iterate.
+/// This is the L3 hot-path optimization of EXPERIMENTS.md section Perf --
+/// the CG loop performs (2 K_CG) transport applications (Thm. 5), so
+/// per-call input rebuilding dominated the naive path.
+pub struct SchurOp<'e> {
+    engine: &'e Engine,
+    key: String,
+    statics: Vec<xla::Literal>, // x, y, fhat, ghat, a, b, ahat, bhat
+    tau: xla::Literal,
+    eps: xla::Literal,
+    ctx_m: usize,
+    bucket_m: usize,
+}
+
+impl<'e> SchurOp<'e> {
+    fn new(t: &Transport<'e>, ahat: &[f32], bhat: &[f32], tau: f32) -> Result<Self> {
+        let statics = vec![
+            t.ctx.x.to_literal()?,
+            t.ctx.y.to_literal()?,
+            t.fhat_p.to_literal()?,
+            t.ghat_p.to_literal()?,
+            t.ctx.a.to_literal()?,
+            t.ctx.b.to_literal()?,
+            t.ctx.pad_n(ahat, 0.0).to_literal()?,
+            t.ctx.pad_m(bhat, 0.0).to_literal()?,
+        ];
+        Ok(SchurOp {
+            engine: t.engine,
+            key: t.ctx.key("schur_matvec"),
+            statics,
+            tau: Tensor::scalar(tau).to_literal()?,
+            eps: t.eps.to_literal()?,
+            ctx_m: t.ctx.m,
+            bucket_m: t.ctx.bucket.m,
+        })
+    }
+
+    /// S_tau w (eq. 30) -- one fused artifact call, one small upload.
+    pub fn matvec(&self, w2: &[f32]) -> Result<Vec<f32>> {
+        let mut padded = vec![0.0f32; self.bucket_m];
+        padded[..w2.len()].copy_from_slice(w2);
+        let w_lit = Tensor::vector(padded).to_literal()?;
+        let s = &self.statics;
+        let outs = self.engine.call_literals(
+            &self.key,
+            &[&s[0], &s[1], &s[2], &s[3], &s[4], &s[5], &s[6], &s[7], &w_lit, &self.tau, &self.eps],
+        )?;
+        Ok(outs[0].to_vec::<f32>()?[..self.ctx_m].to_vec())
+    }
+}

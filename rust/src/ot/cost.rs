@@ -1,0 +1,57 @@
+//! Native O(n + m) cost evaluation.  The dual objective needs only dot
+//! products with the potentials, so it never touches an artifact -- it runs
+//! on the coordinator thread for free after a solve.
+
+use super::problem::OtProblem;
+use super::solver::Potentials;
+
+/// Dual EOT objective <a, f> + <b, g> with f = fhat + |x|^2, g = ghat + |y|^2.
+/// Equals OT_eps(mu, nu) at the Sinkhorn fixed point (appendix B; validated
+/// against the primal in python/tests and rust/tests).
+pub fn dual_cost(prob: &OtProblem, pot: &Potentials) -> f64 {
+    let alpha = prob.alpha();
+    let beta = prob.beta();
+    let mut acc = 0.0f64;
+    for i in 0..prob.n {
+        acc += prob.a[i] as f64 * (pot.fhat[i] + alpha[i]) as f64;
+    }
+    for j in 0..prob.m {
+        acc += prob.b[j] as f64 * (pot.ghat[j] + beta[j]) as f64;
+    }
+    acc
+}
+
+/// L1 marginal violation given induced marginals (r, c).
+pub fn marginal_violation(prob: &OtProblem, r: &[f32], c: &[f32]) -> (f64, f64) {
+    let dr = r
+        .iter()
+        .zip(&prob.a)
+        .map(|(x, y)| (x - y).abs() as f64)
+        .sum();
+    let dc = c
+        .iter()
+        .zip(&prob.b)
+        .map(|(x, y)| (x - y).abs() as f64)
+        .sum();
+    (dr, dc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dual_cost_of_zero_potentials_is_weighted_sqnorms() {
+        let prob = OtProblem::uniform(vec![1.0, 0.0, 0.0, 1.0], vec![2.0, 0.0, 0.0, 2.0], 2, 2, 2, 0.1).unwrap();
+        let pot = Potentials { fhat: vec![0.0; 2], ghat: vec![0.0; 2] };
+        // <a, alpha> + <b, beta> = 1 + 4
+        assert!((dual_cost(&prob, &pot) - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn violation_zero_when_marginals_match() {
+        let prob = OtProblem::uniform(vec![0.0; 4], vec![0.0; 4], 2, 2, 2, 0.1).unwrap();
+        let (dr, dc) = marginal_violation(&prob, &prob.a.clone(), &prob.b.clone());
+        assert_eq!((dr, dc), (0.0, 0.0));
+    }
+}

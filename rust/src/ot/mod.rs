@@ -1,0 +1,13 @@
+//! Entropic optimal transport: problems, the Sinkhorn solver driver, and
+//! streaming transport application -- the Rust face of the paper's core
+//! algorithm (sections 2-3).
+
+pub mod apply;
+pub mod cost;
+pub mod divergence;
+pub mod problem;
+pub mod solver;
+
+pub use apply::Transport;
+pub use problem::OtProblem;
+pub use solver::{Potentials, Schedule, SinkhornSolver, SolveReport, SolverConfig};

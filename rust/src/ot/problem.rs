@@ -1,0 +1,166 @@
+//! Problem definition: two weighted point clouds + regularization strength.
+
+use anyhow::{bail, Result};
+
+/// A discrete EOT instance (paper eq. 1): source (X, a), target (Y, b),
+/// squared-Euclidean cost, regularization eps.
+#[derive(Clone, Debug)]
+pub struct OtProblem {
+    /// n x d row-major source points.
+    pub x: Vec<f32>,
+    /// m x d row-major target points.
+    pub y: Vec<f32>,
+    /// source weights on the simplex.
+    pub a: Vec<f32>,
+    /// target weights on the simplex.
+    pub b: Vec<f32>,
+    pub n: usize,
+    pub m: usize,
+    pub d: usize,
+    pub eps: f32,
+}
+
+impl OtProblem {
+    pub fn new(
+        x: Vec<f32>,
+        y: Vec<f32>,
+        a: Vec<f32>,
+        b: Vec<f32>,
+        n: usize,
+        m: usize,
+        d: usize,
+        eps: f32,
+    ) -> Result<Self> {
+        if x.len() != n * d || y.len() != m * d {
+            bail!("point array sizes do not match (n, m, d)");
+        }
+        if a.len() != n || b.len() != m {
+            bail!("weight lengths do not match n/m");
+        }
+        if eps <= 0.0 {
+            bail!("eps must be positive");
+        }
+        for (nm, w) in [("a", &a), ("b", &b)] {
+            let s: f32 = w.iter().sum();
+            if (s - 1.0).abs() > 1e-3 {
+                bail!("weights {nm} sum to {s}, expected 1");
+            }
+            if w.iter().any(|&v| v < 0.0) {
+                bail!("weights {nm} contain negative entries");
+            }
+        }
+        Ok(Self { x, y, a, b, n, m, d, eps })
+    }
+
+    /// Uniform weights 1/n, 1/m (the paper's benchmark setting).
+    pub fn uniform(x: Vec<f32>, y: Vec<f32>, n: usize, m: usize, d: usize, eps: f32) -> Result<Self> {
+        let a = vec![1.0 / n as f32; n];
+        let b = vec![1.0 / m as f32; m];
+        Self::new(x, y, a, b, n, m, d, eps)
+    }
+
+    /// Cosine-distance EOT (paper section 3.1 "Scope of cost structure"):
+    /// on L2-normalized inputs, 1 - <x, y> = 1/2 |x - y|^2, so cosine-cost
+    /// EOT at `eps` is exactly squared-Euclidean EOT at `2 eps` with the
+    /// objective halved.  This constructor normalizes the rows and adjusts
+    /// eps; halve the reported dual cost via [`cosine_cost`] to recover the
+    /// cosine-cost OT value.
+    pub fn cosine(
+        x: Vec<f32>,
+        y: Vec<f32>,
+        a: Vec<f32>,
+        b: Vec<f32>,
+        n: usize,
+        m: usize,
+        d: usize,
+        eps: f32,
+    ) -> Result<Self> {
+        let normalize = |pts: &mut Vec<f32>, rows: usize| {
+            for i in 0..rows {
+                let row = &mut pts[i * d..(i + 1) * d];
+                let norm: f32 = row.iter().map(|v| v * v).sum::<f32>().sqrt().max(1e-12);
+                row.iter_mut().for_each(|v| *v /= norm);
+            }
+        };
+        let (mut x, mut y) = (x, y);
+        normalize(&mut x, n);
+        normalize(&mut y, m);
+        Self::new(x, y, a, b, n, m, d, 2.0 * eps)
+    }
+
+    /// Squared norms |x_i|^2 (the alpha shift of Prop. 1).
+    pub fn alpha(&self) -> Vec<f32> {
+        sqnorms(&self.x, self.n, self.d)
+    }
+
+    /// Squared norms |y_j|^2 (the beta shift).
+    pub fn beta(&self) -> Vec<f32> {
+        sqnorms(&self.y, self.m, self.d)
+    }
+
+    /// Squared diameter estimate (for eps-annealing start).
+    pub fn sq_diameter(&self) -> f32 {
+        let mut lo = vec![f32::INFINITY; self.d];
+        let mut hi = vec![f32::NEG_INFINITY; self.d];
+        for pts in [&self.x, &self.y] {
+            for row in pts.chunks(self.d) {
+                for (t, &v) in row.iter().enumerate() {
+                    lo[t] = lo[t].min(v);
+                    hi[t] = hi[t].max(v);
+                }
+            }
+        }
+        lo.iter().zip(&hi).map(|(l, h)| (h - l) * (h - l)).sum()
+    }
+}
+
+/// Recover the cosine-cost OT value from the squared-Euclidean surrogate's
+/// dual cost (see [`OtProblem::cosine`]).
+pub fn cosine_cost(sq_dual_cost: f64) -> f64 {
+    sq_dual_cost / 2.0
+}
+
+pub fn sqnorms(pts: &[f32], n: usize, d: usize) -> Vec<f32> {
+    (0..n)
+        .map(|i| pts[i * d..(i + 1) * d].iter().map(|v| v * v).sum())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> OtProblem {
+        OtProblem::uniform(vec![0.0, 0.0, 1.0, 1.0], vec![1.0, 0.0, 0.0, 1.0], 2, 2, 2, 0.1).unwrap()
+    }
+
+    #[test]
+    fn alpha_beta() {
+        let p = tiny();
+        assert_eq!(p.alpha(), vec![0.0, 2.0]);
+        assert_eq!(p.beta(), vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn diameter() {
+        let p = tiny();
+        assert!((p.sq_diameter() - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rejects_bad_weights() {
+        assert!(OtProblem::new(
+            vec![0.0; 4],
+            vec![0.0; 4],
+            vec![0.9, 0.9],
+            vec![0.5, 0.5],
+            2, 2, 2, 0.1
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn rejects_bad_eps() {
+        assert!(OtProblem::uniform(vec![0.0; 4], vec![0.0; 4], 2, 2, 2, 0.0).is_err());
+    }
+}

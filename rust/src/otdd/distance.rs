@@ -1,0 +1,220 @@
+//! Label-augmented Sinkhorn solves and the debiased OTDD distance.
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::router::{BucketCtx, Router};
+use crate::data::labeled::LabeledDataset;
+use crate::ot::problem::{sqnorms, OtProblem};
+use crate::ot::solver::Potentials;
+use crate::runtime::{Engine, Tensor};
+
+/// An EOT instance under the OTDD cost.  Labels index the joint class-
+/// distance matrix `w` of side `v` (dataset-B classes are pre-shifted).
+#[derive(Clone)]
+pub struct LabelProblem {
+    pub x: Vec<f32>,
+    pub y: Vec<f32>,
+    pub a: Vec<f32>,
+    pub b: Vec<f32>,
+    pub li: Vec<i32>,
+    pub lj: Vec<i32>,
+    /// joint class-distance matrix, row-major (v x v).
+    pub w: Vec<f32>,
+    pub v: usize,
+    pub n: usize,
+    pub m: usize,
+    pub d: usize,
+    pub lam1: f32,
+    pub lam2: f32,
+    pub eps: f32,
+}
+
+pub struct LabelSolver<'e> {
+    engine: &'e Engine,
+    router: Router,
+    pub max_iters: usize,
+    pub tol: f32,
+}
+
+impl<'e> LabelSolver<'e> {
+    pub fn new(engine: &'e Engine, max_iters: usize, tol: f32) -> Self {
+        let router = Router::from_manifest(engine.manifest());
+        Self { engine, router, max_iters, tol }
+    }
+
+    fn ctx_and_labels(&self, p: &LabelProblem) -> Result<(BucketCtx, Tensor, Tensor, Tensor)> {
+        let v_expected = self.engine.manifest().num_classes;
+        if p.v != v_expected {
+            bail!("label matrix side {} != manifest num_classes {}", p.v, v_expected);
+        }
+        let bucket = self.router.select_label(p.n, p.m, p.d)?;
+        let base = OtProblem::new(
+            p.x.clone(), p.y.clone(), p.a.clone(), p.b.clone(), p.n, p.m, p.d, p.eps,
+        )?;
+        let ctx = BucketCtx::with_bucket(bucket, &base);
+        let mut li = p.li.clone();
+        li.resize(bucket.n, 0); // padded rows have a = 0: label value is inert
+        let mut lj = p.lj.clone();
+        lj.resize(bucket.m, 0);
+        Ok((
+            ctx,
+            Tensor::i32(vec![bucket.n], li),
+            Tensor::i32(vec![bucket.m], lj),
+            Tensor::matrix(p.v, p.v, p.w.clone()),
+        ))
+    }
+
+    /// Solve with the alternating label-step artifact.  Potentials are in
+    /// the lam1-scaled shift: fhat = f - lam1 |x|^2.
+    pub fn solve(&self, p: &LabelProblem) -> Result<(Potentials, usize, f64)> {
+        let (ctx, li_t, lj_t, w_t) = self.ctx_and_labels(p)?;
+        let alpha = sqnorms(&p.x, p.n, p.d);
+        let beta = sqnorms(&p.y, p.m, p.d);
+        let mut fhat = vec![0.0f32; ctx.bucket.n];
+        let mut ghat = vec![0.0f32; ctx.bucket.m];
+        for i in 0..p.n {
+            fhat[i] = -p.lam1 * alpha[i];
+        }
+        for j in 0..p.m {
+            ghat[j] = -p.lam1 * beta[j];
+        }
+        let key = ctx.key("alternating_step_label");
+        let mut iters = 0;
+        let mut delta = f32::INFINITY;
+        while iters < self.max_iters && delta > self.tol {
+            let outs = self.engine.call(
+                &key,
+                &[
+                    ctx.x.clone(),
+                    ctx.y.clone(),
+                    Tensor::vector(fhat.clone()),
+                    Tensor::vector(ghat.clone()),
+                    ctx.a.clone(),
+                    ctx.b.clone(),
+                    li_t.clone(),
+                    lj_t.clone(),
+                    w_t.clone(),
+                    Tensor::scalar(p.lam1),
+                    Tensor::scalar(p.lam2),
+                    Tensor::scalar(p.eps),
+                ],
+            )?;
+            fhat = outs[0].as_f32()?.to_vec();
+            ghat = outs[1].as_f32()?.to_vec();
+            delta = outs[2].item()?.max(outs[3].item()?);
+            iters += 1;
+        }
+        let pot = Potentials { fhat: fhat[..p.n].to_vec(), ghat: ghat[..p.m].to_vec() };
+        // dual cost with the lam1-scaled shift
+        let mut cost = 0.0f64;
+        for i in 0..p.n {
+            cost += p.a[i] as f64 * (pot.fhat[i] + p.lam1 * alpha[i]) as f64;
+        }
+        for j in 0..p.m {
+            cost += p.b[j] as f64 * (pot.ghat[j] + p.lam1 * beta[j]) as f64;
+        }
+        Ok((pot, iters, cost))
+    }
+
+    /// Gradient of the label-augmented OT w.r.t. X (the W term is
+    /// x-independent): 2 lam1 (diag(r) X - P Y).
+    pub fn grad_x(&self, p: &LabelProblem, pot: &Potentials) -> Result<Vec<f32>> {
+        let (ctx, li_t, lj_t, w_t) = self.ctx_and_labels(p)?;
+        let outs = self.engine.call(
+            &ctx.key("grad_x_label"),
+            &[
+                ctx.x.clone(),
+                ctx.y.clone(),
+                ctx.pad_n(&pot.fhat, 0.0),
+                ctx.pad_m(&pot.ghat, 0.0),
+                ctx.a.clone(),
+                ctx.b.clone(),
+                li_t,
+                lj_t,
+                w_t,
+                Tensor::scalar(p.lam1),
+                Tensor::scalar(p.lam2),
+                Tensor::scalar(p.eps),
+            ],
+        )?;
+        ctx.slice_n_mat(&outs[0], p.d)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct OtddReport {
+    pub distance: f64,
+    pub ot_ab: f64,
+    pub ot_aa: f64,
+    pub ot_bb: f64,
+    pub total_iters: usize,
+    pub w_matrix_solves: usize,
+}
+
+/// Full OTDD distance between two labeled datasets: builds the joint class
+/// matrix W (inner OT solves), then the three debiased label-cost solves.
+#[allow(clippy::too_many_arguments)]
+pub fn otdd_distance(
+    engine: &Engine,
+    ds_a: &LabeledDataset,
+    ds_b: &LabeledDataset,
+    lam1: f32,
+    lam2: f32,
+    eps: f32,
+    max_iters: usize,
+    tol: f32,
+) -> Result<OtddReport> {
+    let (w, w_solves) = super::wmatrix::build_w_matrix(engine, ds_a, ds_b, eps)?;
+    let v = ds_a.num_classes + ds_b.num_classes;
+    let solver = LabelSolver::new(engine, max_iters, tol);
+    let shift = ds_a.num_classes as i32;
+    let lj_b: Vec<i32> = ds_b.labels.iter().map(|&l| l + shift).collect();
+    let uni = |n: usize| vec![1.0 / n as f32; n];
+
+    let mk = |x: &LabeledDataset, xl: &[i32], y: &LabeledDataset, yl: &[i32]| LabelProblem {
+        x: x.x.clone(),
+        y: y.x.clone(),
+        a: uni(x.n),
+        b: uni(y.n),
+        li: xl.to_vec(),
+        lj: yl.to_vec(),
+        w: w.clone(),
+        v,
+        n: x.n,
+        m: y.n,
+        d: x.d,
+        lam1,
+        lam2,
+        eps,
+    };
+
+    let (_, i1, ot_ab) = solver.solve(&mk(ds_a, &ds_a.labels, ds_b, &lj_b))?;
+    let (_, i2, ot_aa) = solver.solve(&mk(ds_a, &ds_a.labels, ds_a, &ds_a.labels))?;
+    let (_, i3, ot_bb) = {
+        let p = LabelProblem {
+            x: ds_b.x.clone(),
+            y: ds_b.x.clone(),
+            a: uni(ds_b.n),
+            b: uni(ds_b.n),
+            li: lj_b.clone(),
+            lj: lj_b.clone(),
+            w: w.clone(),
+            v,
+            n: ds_b.n,
+            m: ds_b.n,
+            d: ds_b.d,
+            lam1,
+            lam2,
+            eps,
+        };
+        solver.solve(&p)?
+    };
+    Ok(OtddReport {
+        distance: ot_ab - 0.5 * ot_aa - 0.5 * ot_bb,
+        ot_ab,
+        ot_aa,
+        ot_bb,
+        total_iters: i1 + i2 + i3,
+        w_matrix_solves: w_solves,
+    })
+}

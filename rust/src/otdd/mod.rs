@@ -1,0 +1,12 @@
+//! Optimal Transport Dataset Distance (paper section 4.2 / H.3):
+//! label-augmented cost C = lam1 |x - y|^2 + lam2 W[l_i, l_j], with the
+//! (V, V) class-distance matrix gathered on the fly *inside* the streaming
+//! kernels -- the capability KeOps-style backends lack (paper Table 24).
+
+pub mod distance;
+pub mod flow;
+pub mod wmatrix;
+
+pub use distance::{otdd_distance, LabelProblem, LabelSolver, OtddReport};
+pub use flow::{gradient_flow, FlowReport};
+pub use wmatrix::build_w_matrix;

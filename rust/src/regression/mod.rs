@@ -1,0 +1,215 @@
+//! OT-based shuffled linear regression (paper section 4.2 / H.4).
+//!
+//! Given (X, Y~) with Y~ = Pi*(X W* + E) for an unknown permutation Pi*,
+//! estimate W* by minimizing L(W) = OT_eps(mu_{XW}, nu_{Y~}).  The
+//! parameter gradient and Hessian-vector products chain through the
+//! data-space quantities: grad_W = X^T grad_Y OT, H_W v = X^T T (X v).
+
+pub mod saddle;
+
+use anyhow::Result;
+
+use crate::coordinator::router::Router;
+use crate::data::cytometry::{cytometry_cloud, NUM_MARKERS};
+use crate::data::rng::Rng;
+use crate::hvp::oracle::HvpOracle;
+use crate::ot::problem::OtProblem;
+use crate::ot::solver::{Potentials, SinkhornSolver, SolverConfig};
+use crate::ot::Transport;
+use crate::runtime::Engine;
+
+pub use saddle::{run_saddle_escape, Phase, SaddleConfig, TrajectoryPoint};
+
+/// The workload: source features X and shuffled observations Y~.
+#[derive(Clone)]
+pub struct ShuffledRegression {
+    /// n x d features.
+    pub x: Vec<f32>,
+    /// n x d shuffled targets.
+    pub y_obs: Vec<f32>,
+    pub n: usize,
+    pub d: usize,
+    pub eps: f32,
+}
+
+impl ShuffledRegression {
+    /// Synthetic instance on cytometry-like data (paper section H.4):
+    /// W*_ij ~ N(0, 1/d), Y = X W* + noise, then an unknown permutation.
+    /// Returns (workload, ground-truth W*).
+    pub fn synthetic(n: usize, eps: f32, noise: f32, seed: u64) -> (Self, Vec<f32>) {
+        let d = NUM_MARKERS;
+        let x = cytometry_cloud(n, seed);
+        let mut rng = Rng::new(seed.wrapping_add(1));
+        let w_star: Vec<f32> = (0..d * d)
+            .map(|_| (rng.normal() / (d as f64).sqrt()) as f32)
+            .collect();
+        let mut y = matmul_xw(&x, &w_star, n, d);
+        // estimate target std for noise scaling
+        let std = {
+            let mean: f64 = y.iter().map(|&v| v as f64).sum::<f64>() / y.len() as f64;
+            (y.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / y.len() as f64).sqrt()
+        };
+        for v in &mut y {
+            *v += (noise as f64 * std * rng.normal()) as f32;
+        }
+        // unknown permutation
+        let perm = rng.permutation(n);
+        let mut y_obs = vec![0.0f32; n * d];
+        for (i, &pi) in perm.iter().enumerate() {
+            y_obs[i * d..(i + 1) * d].copy_from_slice(&y[pi * d..(pi + 1) * d]);
+        }
+        (Self { x, y_obs, n, d, eps }, w_star)
+    }
+
+    /// The OT problem at parameter W: mu = points X W, nu = Y~.
+    pub fn problem_at(&self, w: &[f32]) -> Result<OtProblem> {
+        let y = matmul_xw(&self.x, w, self.n, self.d);
+        OtProblem::uniform(y, self.y_obs.clone(), self.n, self.n, self.d, self.eps)
+    }
+
+    /// Loss L(W) and gradient dL/dW (d x d), plus the solved potentials
+    /// (reused to build the HVP oracle at this iterate).
+    pub fn loss_grad(
+        &self,
+        engine: &Engine,
+        cfg: &SolverConfig,
+        w: &[f32],
+    ) -> Result<(f64, Vec<f32>, OtProblem, Potentials)> {
+        let solver = SinkhornSolver::new(engine, cfg.clone());
+        let prob = self.problem_at(w)?;
+        let (pot, report) = solver.solve(&prob)?;
+        let t = Transport::new(engine, solver.router(), &prob, &pot)?;
+        let (grad_y, _) = t.grad_x()?;
+        let grad_w = xt_g(&self.x, &grad_y, self.n, self.d);
+        Ok((report.cost, grad_w, prob, pot))
+    }
+
+    /// Loss only (Armijo line-search evaluations).
+    pub fn loss(&self, engine: &Engine, cfg: &SolverConfig, w: &[f32]) -> Result<f64> {
+        let solver = SinkhornSolver::new(engine, cfg.clone());
+        let prob = self.problem_at(w)?;
+        let (_, report) = solver.solve(&prob)?;
+        Ok(report.cost)
+    }
+
+    /// Parameter-space HVP: H_W v = X^T T (X v), with T the data-space
+    /// Hessian oracle at the current iterate (Thm. 5).
+    pub fn hvp_w(&self, oracle: &HvpOracle, v: &[f32]) -> Result<Vec<f32>> {
+        let a_mat = matmul_xw(&self.x, v, self.n, self.d); // X v  (n x d)
+        let (g, _) = oracle.hvp(&a_mat)?;
+        Ok(xt_g(&self.x, &g, self.n, self.d)) // X^T G  (d x d)
+    }
+
+    /// Build the curvature oracle at a solved iterate.
+    pub fn oracle<'e>(
+        &self,
+        engine: &'e Engine,
+        router: &Router,
+        prob: &OtProblem,
+        pot: &Potentials,
+        tau: f32,
+        eta: f64,
+        max_cg: usize,
+    ) -> Result<HvpOracle<'e>> {
+        HvpOracle::new(engine, router, prob, pot, tau, eta, max_cg)
+    }
+
+    /// Parameter error |W - W*|_F / |W*|_F.
+    pub fn rel_param_error(w: &[f32], w_star: &[f32]) -> f64 {
+        let num: f64 = w
+            .iter()
+            .zip(w_star)
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        let den: f64 = w_star.iter().map(|&b| (b as f64).powi(2)).sum::<f64>().sqrt();
+        num / den.max(1e-12)
+    }
+}
+
+/// Y = X W for X (n x d), W (d x d).
+pub fn matmul_xw(x: &[f32], w: &[f32], n: usize, d: usize) -> Vec<f32> {
+    let mut y = vec![0.0f32; n * d];
+    for i in 0..n {
+        for k in 0..d {
+            let xv = x[i * d + k];
+            if xv == 0.0 {
+                continue;
+            }
+            for j in 0..d {
+                y[i * d + j] += xv * w[k * d + j];
+            }
+        }
+    }
+    y
+}
+
+/// G_W = X^T G for X (n x d), G (n x d) -> (d x d).
+pub fn xt_g(x: &[f32], g: &[f32], n: usize, d: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; d * d];
+    for i in 0..n {
+        for k in 0..d {
+            let xv = x[i * d + k];
+            if xv == 0.0 {
+                continue;
+            }
+            for j in 0..d {
+                out[k * d + j] += xv * g[i * d + j];
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_shapes_and_determinism() {
+        let (w1, ws1) = ShuffledRegression::synthetic(64, 0.1, 0.05, 7);
+        let (w2, ws2) = ShuffledRegression::synthetic(64, 0.1, 0.05, 7);
+        assert_eq!(w1.x, w2.x);
+        assert_eq!(ws1, ws2);
+        assert_eq!(w1.y_obs.len(), 64 * NUM_MARKERS);
+    }
+
+    #[test]
+    fn matmul_chain_identities() {
+        // X I = X; X^T (X v) is symmetric quadratic form
+        let n = 10;
+        let d = 3;
+        let mut rng = Rng::new(3);
+        let x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let mut eye = vec![0.0f32; d * d];
+        for i in 0..d {
+            eye[i * d + i] = 1.0;
+        }
+        assert_eq!(matmul_xw(&x, &eye, n, d), x);
+        let v: Vec<f32> = (0..d * d).map(|_| rng.normal() as f32).collect();
+        let xv = matmul_xw(&x, &v, n, d);
+        let q = xt_g(&x, &xv, n, d); // X^T X v: contract with u gives symmetric form
+        let u: Vec<f32> = (0..d * d).map(|_| rng.normal() as f32).collect();
+        let xu = matmul_xw(&x, &u, n, d);
+        let q2 = xt_g(&x, &xu, n, d);
+        let lhs: f64 = q.iter().zip(&u).map(|(&a, &b)| a as f64 * b as f64).sum();
+        let rhs: f64 = q2.iter().zip(&v).map(|(&a, &b)| a as f64 * b as f64).sum();
+        assert!((lhs - rhs).abs() < 1e-3 * lhs.abs().max(1.0));
+    }
+
+    #[test]
+    fn shuffled_targets_are_a_permutation_of_clean() {
+        let (wl, w_star) = ShuffledRegression::synthetic(32, 0.1, 0.0, 9);
+        let clean = matmul_xw(&wl.x, &w_star, wl.n, wl.d);
+        // multiset of rows must match: compare sorted row checksums
+        let sum_rows = |m: &[f32]| {
+            let mut v: Vec<i64> = m
+                .chunks(wl.d)
+                .map(|r| r.iter().map(|&x| (x * 1e4) as i64).sum())
+                .collect();
+            v.sort_unstable();
+            v
+        };
+        assert_eq!(sum_rows(&clean), sum_rows(&wl.y_obs));
+    }
+}

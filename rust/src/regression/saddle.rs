@@ -1,0 +1,204 @@
+//! Saddle-escape detection and the Adam -> Newton switching rule (paper
+//! section 4.2 / H.4 and Figure 5/8): monitor lambda_min(H_W) via Lanczos
+//! every few steps; full-batch Adam while lambda_min < threshold, Newton-CG
+//! once locally convex, with automatic fallback on re-entry into a saddle
+//! region (the multi-saddle trajectory of Figure 8).
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::hvp::lanczos::lanczos_min_eig;
+use crate::optim::adam::Adam;
+use crate::optim::newton::armijo_newton_step;
+use crate::ot::solver::{SinkhornSolver, SolverConfig};
+use crate::runtime::Engine;
+
+use super::ShuffledRegression;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Adam,
+    Newton,
+}
+
+#[derive(Debug, Clone)]
+pub struct SaddleConfig {
+    pub adam_lr: f32,
+    /// switch threshold on lambda_min (paper: 0.001).
+    pub lambda_switch: f64,
+    /// Lanczos check cadence in steps (paper: every 5).
+    pub check_every: usize,
+    pub max_steps: usize,
+    /// stop when |grad| below this (paper: 5e-3).
+    pub grad_tol: f64,
+    /// Newton knobs (paper H.4).
+    pub newton_step0: f64,
+    pub newton_backtrack: f64,
+    pub newton_c: f64,
+    pub cg_tau: f32,
+    pub cg_eta: f64,
+    pub cg_max: usize,
+    pub lanczos_k: usize,
+}
+
+impl Default for SaddleConfig {
+    fn default() -> Self {
+        Self {
+            adam_lr: 0.03,
+            lambda_switch: 1e-3,
+            check_every: 5,
+            max_steps: 300,
+            grad_tol: 5e-3,
+            newton_step0: 10.0,
+            newton_backtrack: 0.5,
+            newton_c: 0.1,
+            cg_tau: 1e-5,
+            cg_eta: 1e-6,
+            cg_max: 100,
+            lanczos_k: 20,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TrajectoryPoint {
+    pub step: usize,
+    pub loss: f64,
+    pub grad_norm: f64,
+    pub lambda_min: Option<f64>,
+    pub phase: Phase,
+    pub wall_s: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct SaddleReport {
+    pub w: Vec<f32>,
+    pub trajectory: Vec<TrajectoryPoint>,
+    pub escapes: usize,
+    pub reentries: usize,
+    pub newton_steps: usize,
+    pub adam_steps: usize,
+    pub converged: bool,
+}
+
+/// Run the full controller from `w0`.
+pub fn run_saddle_escape(
+    engine: &Engine,
+    workload: &ShuffledRegression,
+    solver_cfg: &SolverConfig,
+    w0: &[f32],
+    cfg: &SaddleConfig,
+) -> Result<SaddleReport> {
+    let d2 = workload.d * workload.d;
+    assert_eq!(w0.len(), d2);
+    let t0 = Instant::now();
+    let mut w = w0.to_vec();
+    let mut adam = Adam::new(d2, cfg.adam_lr);
+    let mut phase = Phase::Adam;
+    let mut trajectory = Vec::new();
+    let (mut escapes, mut reentries, mut newton_steps, mut adam_steps) = (0, 0, 0, 0);
+    let mut converged = false;
+    let solver = SinkhornSolver::new(engine, solver_cfg.clone());
+
+    for step in 0..cfg.max_steps {
+        let (loss, grad, prob, pot) = workload.loss_grad(engine, solver_cfg, &w)?;
+        let grad_norm = grad.iter().map(|&g| (g as f64).powi(2)).sum::<f64>().sqrt();
+
+        // periodic curvature check (and always while in Newton phase)
+        let lambda_min = if step % cfg.check_every == 0 || phase == Phase::Newton {
+            let oracle = workload.oracle(
+                engine,
+                solver.router(),
+                &prob,
+                &pot,
+                cfg.cg_tau,
+                cfg.cg_eta,
+                cfg.cg_max,
+            )?;
+            let rep = lanczos_min_eig(
+                |v: &[f32]| workload.hvp_w(&oracle, v),
+                d2,
+                cfg.lanczos_k,
+                42 + step as u64,
+            )?;
+            Some(rep.lambda_min)
+        } else {
+            None
+        };
+
+        if let Some(lm) = lambda_min {
+            match phase {
+                Phase::Adam if lm >= cfg.lambda_switch => {
+                    phase = Phase::Newton;
+                    escapes += 1;
+                }
+                Phase::Newton if lm < cfg.lambda_switch => {
+                    phase = Phase::Adam;
+                    adam.reset();
+                    reentries += 1;
+                }
+                _ => {}
+            }
+        }
+
+        trajectory.push(TrajectoryPoint {
+            step,
+            loss,
+            grad_norm,
+            lambda_min,
+            phase,
+            wall_s: t0.elapsed().as_secs_f64(),
+        });
+
+        if grad_norm < cfg.grad_tol {
+            converged = true;
+            break;
+        }
+
+        match phase {
+            Phase::Adam => {
+                adam.step(&mut w, &grad);
+                adam_steps += 1;
+            }
+            Phase::Newton => {
+                let oracle = workload.oracle(
+                    engine,
+                    solver.router(),
+                    &prob,
+                    &pot,
+                    cfg.cg_tau,
+                    cfg.cg_eta,
+                    cfg.cg_max,
+                )?;
+                let out = armijo_newton_step(
+                    &w,
+                    &grad,
+                    loss,
+                    |v: &[f32]| workload.hvp_w(&oracle, v),
+                    |cand: &[f32]| workload.loss(engine, solver_cfg, cand),
+                    cfg.cg_tau,
+                    cfg.cg_eta,
+                    cfg.cg_max,
+                    cfg.newton_step0,
+                    cfg.newton_backtrack,
+                    cfg.newton_c,
+                    25,
+                )?;
+                if out.accepted {
+                    w = out.params;
+                    newton_steps += 1;
+                } else {
+                    // line search failed: curvature is unreliable here
+                    phase = Phase::Adam;
+                    adam.reset();
+                    reentries += 1;
+                    adam.step(&mut w, &grad);
+                    adam_steps += 1;
+                }
+            }
+        }
+    }
+
+    Ok(SaddleReport { w, trajectory, escapes, reentries, newton_steps, adam_steps, converged })
+}

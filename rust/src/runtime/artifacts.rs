@@ -1,0 +1,157 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime.  Records every lowered op, its shape bucket and the exact
+//! input/output layout so calls can be validated before they hit PJRT.
+//! Parsed with the in-repo JSON parser (`util::json`).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: Option<String>,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct Entry {
+    pub op: String,
+    pub n: usize,
+    pub m: usize,
+    pub d: usize,
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub version: usize,
+    pub num_classes: usize,
+    pub k_fused: usize,
+    pub entries: HashMap<String, Entry>,
+}
+
+fn io_spec(v: &Json) -> Result<IoSpec> {
+    Ok(IoSpec {
+        name: v.get("name").and_then(|n| n.as_str().ok().map(str::to_string)),
+        shape: v
+            .req("shape")?
+            .as_arr()?
+            .iter()
+            .map(|x| x.as_usize())
+            .collect::<Result<_>>()?,
+        dtype: v.req("dtype")?.as_str()?.to_string(),
+    })
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let root = Json::parse(text).context("parsing manifest.json")?;
+        let version = root.req("version")?.as_usize()?;
+        if version != 1 {
+            anyhow::bail!("unsupported manifest version {version}");
+        }
+        let mut entries = HashMap::new();
+        for (key, e) in root.req("entries")?.as_obj()? {
+            let entry = Entry {
+                op: e.req("op")?.as_str()?.to_string(),
+                n: e.req("n")?.as_usize()?,
+                m: e.req("m")?.as_usize()?,
+                d: e.req("d")?.as_usize()?,
+                file: e.req("file")?.as_str()?.to_string(),
+                inputs: e.req("inputs")?.as_arr()?.iter().map(io_spec).collect::<Result<_>>()?,
+                outputs: e.req("outputs")?.as_arr()?.iter().map(io_spec).collect::<Result<_>>()?,
+            };
+            entries.insert(key.clone(), entry);
+        }
+        Ok(Manifest {
+            version,
+            num_classes: root.req("num_classes")?.as_usize()?,
+            k_fused: root.req("k_fused")?.as_usize()?,
+            entries,
+        })
+    }
+
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Canonical artifact key for an op at a shape bucket.
+    pub fn key(op: &str, n: usize, m: usize, d: usize) -> String {
+        format!("{op}__n{n}_m{m}_d{d}")
+    }
+
+    pub fn entry(&self, key: &str) -> Result<&Entry> {
+        self.entries
+            .get(key)
+            .ok_or_else(|| anyhow!("no artifact '{key}' in manifest (rerun `make artifacts`?)"))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.entries.contains_key(key)
+    }
+
+    /// All (n, m, d) buckets available for `op`, sorted by padded volume.
+    pub fn buckets(&self, op: &str) -> Vec<(usize, usize, usize)> {
+        let mut v: Vec<_> = self
+            .entries
+            .values()
+            .filter(|e| e.op == op)
+            .map(|e| (e.n, e.m, e.d))
+            .collect();
+        v.sort_by_key(|&(n, m, d)| (n * m * d, n, m, d));
+        v
+    }
+
+    pub fn file_path(&self, dir: &Path, key: &str) -> Result<PathBuf> {
+        Ok(dir.join(&self.entry(key)?.file))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn key_format_matches_aot() {
+        assert_eq!(
+            Manifest::key("alternating_step", 256, 512, 16),
+            "alternating_step__n256_m512_d16"
+        );
+    }
+
+    #[test]
+    fn parse_minimal_manifest() {
+        let text = r#"{
+          "version": 1, "num_classes": 20, "k_fused": 10,
+          "entries": {
+            "grad_x__n256_m256_d16": {
+              "op": "grad_x", "n": 256, "m": 256, "d": 16,
+              "file": "grad_x__n256_m256_d16.hlo.txt",
+              "inputs": [{"name": "x", "shape": [256, 16], "dtype": "f32"}],
+              "outputs": [{"shape": [256, 16], "dtype": "f32"}]
+            }
+          }
+        }"#;
+        let m = Manifest::parse(text).unwrap();
+        assert!(m.has("grad_x__n256_m256_d16"));
+        assert_eq!(m.buckets("grad_x"), vec![(256, 256, 16)]);
+        let e = m.entry("grad_x__n256_m256_d16").unwrap();
+        assert_eq!(e.inputs[0].shape, vec![256, 16]);
+        assert_eq!(e.inputs[0].name.as_deref(), Some("x"));
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let text = r#"{"version": 9, "num_classes": 1, "k_fused": 1, "entries": {}}"#;
+        assert!(Manifest::parse(text).is_err());
+    }
+}

@@ -1,0 +1,173 @@
+//! The PJRT execution engine: lazy compile + executable cache + call.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::artifacts::Manifest;
+use super::tensor::Tensor;
+
+/// Aggregate counters for the hot path (exposed by `repro serve` metrics
+/// and the §Perf profiling pass).
+#[derive(Debug, Default, Clone)]
+pub struct EngineStats {
+    pub calls: u64,
+    pub compiles: u64,
+    pub cache_hits: u64,
+    pub exec_time: Duration,
+    pub compile_time: Duration,
+}
+
+/// Loads HLO-text artifacts, compiles them once on the PJRT CPU client and
+/// executes them.  `!Send` by construction (PJRT handles are raw pointers);
+/// the coordinator service gives it a dedicated actor thread.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    stats: RefCell<EngineStats>,
+}
+
+impl Engine {
+    pub fn new<P: Into<PathBuf>>(artifact_dir: P) -> Result<Self> {
+        let dir = artifact_dir.into();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Self { client, manifest, dir, cache: RefCell::default(), stats: RefCell::default() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        self.stats.borrow().clone()
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) the executable for an artifact key.
+    fn executable(&self, key: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(key) {
+            self.stats.borrow_mut().cache_hits += 1;
+            return Ok(exe.clone());
+        }
+        let path = self.manifest.file_path(&self.dir, key)?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parsing HLO text {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling {key}: {e}"))?,
+        );
+        let mut stats = self.stats.borrow_mut();
+        stats.compiles += 1;
+        stats.compile_time += t0.elapsed();
+        drop(stats);
+        self.cache.borrow_mut().insert(key.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile an artifact (used by the service warmup path).
+    pub fn warm(&self, key: &str) -> Result<()> {
+        self.executable(key).map(|_| ())
+    }
+
+    /// Validate inputs against the manifest entry, execute, unpack outputs.
+    pub fn call(&self, key: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let entry = self.manifest.entry(key)?;
+        if inputs.len() != entry.inputs.len() {
+            bail!(
+                "{key}: expected {} inputs, got {}",
+                entry.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, spec)) in inputs.iter().zip(&entry.inputs).enumerate() {
+            if t.shape() != spec.shape.as_slice() || t.dtype_name() != spec.dtype {
+                bail!(
+                    "{key}: input {i} ({}) expects {:?} {}, got {:?} {}",
+                    spec.name.as_deref().unwrap_or("?"),
+                    spec.shape,
+                    spec.dtype,
+                    t.shape(),
+                    t.dtype_name()
+                );
+            }
+        }
+        let exe = self.executable(key)?;
+        let lits: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let t0 = Instant::now();
+        let bufs = exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow::anyhow!("executing {key}: {e}"))?;
+        let result = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching result of {key}: {e}"))?;
+        let mut stats = self.stats.borrow_mut();
+        stats.calls += 1;
+        stats.exec_time += t0.elapsed();
+        drop(stats);
+        // aot.py lowers with return_tuple=True: always a tuple, even 1-ary.
+        let parts = result
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untupling result of {key}: {e}"))?;
+        if parts.len() != entry.outputs.len() {
+            bail!(
+                "{key}: manifest promises {} outputs, runtime produced {}",
+                entry.outputs.len(),
+                parts.len()
+            );
+        }
+        parts.iter().map(Tensor::from_literal).collect()
+    }
+
+    /// Hot-path variant: execute with pre-built literals (no Tensor
+    /// conversion, no per-call input copies).  Static inputs (points,
+    /// weights, eps) are built once per solve by the caller and reused
+    /// across every iteration; outputs come back as literals so evolving
+    /// state (potentials) round-trips with zero host-side copies.
+    /// Shape validation is the caller's job on this path (the solver
+    /// builds its literals from an already-validated `BucketCtx`).
+    pub fn call_literals(&self, key: &str, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(key)?;
+        let t0 = Instant::now();
+        let bufs = exe
+            .execute::<&xla::Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("executing {key}: {e}"))?;
+        let result = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching result of {key}: {e}"))?;
+        let mut stats = self.stats.borrow_mut();
+        stats.calls += 1;
+        stats.exec_time += t0.elapsed();
+        drop(stats);
+        result
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untupling result of {key}: {e}"))
+    }
+
+    /// Shorthand: call an op at bucket (n, m, d).
+    pub fn call_op(
+        &self,
+        op: &str,
+        n: usize,
+        m: usize,
+        d: usize,
+        inputs: &[Tensor],
+    ) -> Result<Vec<Tensor>> {
+        self.call(&Manifest::key(op, n, m, d), inputs)
+    }
+}

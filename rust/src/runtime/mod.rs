@@ -1,0 +1,15 @@
+//! Runtime layer: PJRT client wrapper, artifact manifest, tensor bridge.
+//!
+//! `Engine` is the only place the crate touches the `xla` crate: it loads
+//! HLO-text artifacts produced by `python/compile/aot.py`, compiles them
+//! lazily on the PJRT CPU client (caching the executables), and executes
+//! them with `Tensor` inputs.  Engine is intentionally `!Send` (PJRT handles
+//! are raw pointers); the service wraps it in a dedicated actor thread.
+
+pub mod artifacts;
+pub mod engine;
+pub mod tensor;
+
+pub use artifacts::{Entry, Manifest};
+pub use engine::Engine;
+pub use tensor::Tensor;

@@ -1,0 +1,106 @@
+//! Tiny flag parser for the `repro` launcher: `--key value` flags, `--flag`
+//! booleans, and positional arguments.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse argv (after the subcommand).  `switch_names` lists flags that
+    /// take no value (e.g. `--quick`).
+    pub fn parse<I: Iterator<Item = String>>(argv: I, switch_names: &[&str]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.peekable();
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if switch_names.contains(&name) {
+                    out.switches.push(name.to_string());
+                } else {
+                    let val = it
+                        .next()
+                        .ok_or_else(|| anyhow!("flag --{name} expects a value"))?;
+                    out.flags.insert(name.to_string(), val);
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name}: expected integer, got '{v}'")),
+        }
+    }
+
+    pub fn f32(&self, name: &str, default: f32) -> Result<f32> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name}: expected float, got '{v}'")),
+        }
+    }
+
+    pub fn string(&self, name: &str, default: &str) -> String {
+        self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Error on unknown flags (catches typos).
+    pub fn ensure_known(&self, known: &[&str]) -> Result<()> {
+        for k in self.flags.keys() {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown flag --{k} (known: {known:?})");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str], switches: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()), switches).unwrap()
+    }
+
+    #[test]
+    fn parses_flags_switches_positional() {
+        let a = parse(&["14", "--n", "512", "--quick", "--eps", "0.05"], &["quick"]);
+        assert_eq!(a.positional, vec!["14"]);
+        assert_eq!(a.usize("n", 0).unwrap(), 512);
+        assert!((a.f32("eps", 0.0).unwrap() - 0.05).abs() < 1e-9);
+        assert!(a.has("quick"));
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[], &[]);
+        assert_eq!(a.usize("n", 42).unwrap(), 42);
+        assert_eq!(a.string("schedule", "auto"), "auto");
+    }
+
+    #[test]
+    fn rejects_bad_values_and_unknown_flags() {
+        let a = parse(&["--n", "abc"], &[]);
+        assert!(a.usize("n", 0).is_err());
+        assert!(a.ensure_known(&["m"]).is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! Dependency-free substrates built in-repo (the build environment is
+//! offline, so external crates beyond `xla`/`anyhow` are unavailable --
+//! DESIGN.md section 2 records the substitutions):
+//!
+//! * `json` -- a small recursive-descent JSON parser + writer used for the
+//!   artifact manifest, the config file and metrics export;
+//! * `cli`  -- a flag parser for the `repro` launcher.
+
+pub mod cli;
+pub mod json;

@@ -1,0 +1,106 @@
+//! HVP integration: the streaming oracle (Thm. 5) vs the dense f64
+//! Moore-Penrose ground truth, CG behaviour, Lanczos on the real operator.
+
+use flash_sinkhorn::bench::hvp_tables::parity_cell;
+use flash_sinkhorn::coordinator::router::Router;
+use flash_sinkhorn::data::clouds::{normal_cloud, random_simplex};
+use flash_sinkhorn::data::rng::Rng;
+use flash_sinkhorn::dense::linalg::{to_f32, to_f64};
+use flash_sinkhorn::dense::sinkhorn::sinkhorn_f64;
+use flash_sinkhorn::hvp::lanczos::lanczos_min_eig;
+use flash_sinkhorn::hvp::oracle::HvpOracle;
+use flash_sinkhorn::ot::problem::OtProblem;
+use flash_sinkhorn::ot::solver::Potentials;
+use flash_sinkhorn::runtime::Engine;
+
+fn engine() -> Engine {
+    Engine::new(flash_sinkhorn::artifact_dir()).expect("artifacts missing: run `make artifacts`")
+}
+
+#[test]
+fn streaming_hvp_matches_dense_moore_penrose() {
+    // Table 14's tight setting: error must be small.
+    let e = engine();
+    let (err, iters, conv) = parity_cell(&e, 128, 4, 0.25, 1e-7, 1e-7, 500, 99).unwrap();
+    assert!(conv, "CG did not converge ({iters} iters)");
+    assert!(err < 1e-3, "parity error {err}");
+}
+
+#[test]
+fn damping_trades_accuracy_for_conditioning() {
+    let e = engine();
+    let (err_tight, _, _) = parity_cell(&e, 96, 4, 0.25, 1e-7, 1e-7, 500, 7).unwrap();
+    let (err_damped, _, _) = parity_cell(&e, 96, 4, 0.25, 1e-3, 1e-6, 500, 7).unwrap();
+    assert!(err_tight < err_damped, "tight {err_tight} vs damped {err_damped}");
+}
+
+fn converged_setup(n: usize, d: usize, eps: f32, seed: u64) -> (OtProblem, Potentials) {
+    let x = normal_cloud(n, d, seed);
+    let y = normal_cloud(n, d, seed + 1);
+    let a = random_simplex(n, seed + 2);
+    let b = random_simplex(n, seed + 3);
+    let sol = sinkhorn_f64(
+        &to_f64(&x), &to_f64(&y), &to_f64(&a), &to_f64(&b), n, n, d, eps as f64, 4000, 1e-13,
+    );
+    let prob = OtProblem::new(x, y, a, b, n, n, d, eps).unwrap();
+    let pot = Potentials { fhat: to_f32(&sol.fhat), ghat: to_f32(&sol.ghat) };
+    (prob, pot)
+}
+
+#[test]
+fn oracle_is_a_symmetric_operator() {
+    // <T A, B> == <A, T B> through the streaming path.
+    let e = engine();
+    let (prob, pot) = converged_setup(128, 4, 0.3, 50);
+    let router = Router::from_manifest(e.manifest());
+    let oracle = HvpOracle::new(&e, &router, &prob, &pot, 1e-7, 1e-8, 500).unwrap();
+    let mut rng = Rng::new(51);
+    let a_mat: Vec<f32> = (0..prob.n * prob.d).map(|_| rng.normal() as f32).collect();
+    let b_mat: Vec<f32> = (0..prob.n * prob.d).map(|_| rng.normal() as f32).collect();
+    let (ta, _) = oracle.hvp(&a_mat).unwrap();
+    let (tb, _) = oracle.hvp(&b_mat).unwrap();
+    let lhs: f64 = ta.iter().zip(&b_mat).map(|(&u, &v)| u as f64 * v as f64).sum();
+    let rhs: f64 = tb.iter().zip(&a_mat).map(|(&u, &v)| u as f64 * v as f64).sum();
+    assert!(
+        (lhs - rhs).abs() < 5e-3 * lhs.abs().max(1.0),
+        "asymmetry: {lhs} vs {rhs}"
+    );
+}
+
+#[test]
+fn oracle_is_linear() {
+    let e = engine();
+    let (prob, pot) = converged_setup(96, 4, 0.3, 60);
+    let router = Router::from_manifest(e.manifest());
+    let oracle = HvpOracle::new(&e, &router, &prob, &pot, 1e-7, 1e-8, 500).unwrap();
+    let mut rng = Rng::new(61);
+    let a_mat: Vec<f32> = (0..prob.n * prob.d).map(|_| rng.normal() as f32).collect();
+    let scaled: Vec<f32> = a_mat.iter().map(|v| 2.5 * v).collect();
+    let (ta, _) = oracle.hvp(&a_mat).unwrap();
+    let (ts, _) = oracle.hvp(&scaled).unwrap();
+    for (u, v) in ta.iter().zip(&ts) {
+        assert!((2.5 * u - v).abs() < 2e-3 * v.abs().max(1.0), "{u} {v}");
+    }
+}
+
+#[test]
+fn cg_iterations_grow_as_eps_shrinks() {
+    // Table 22: conditioning worsens at low eps.
+    let e = engine();
+    let (_, it_hi, _) = parity_cell(&e, 96, 4, 0.25, 1e-5, 1e-6, 800, 70).unwrap();
+    let (_, it_lo, _) = parity_cell(&e, 96, 4, 0.05, 1e-5, 1e-6, 800, 70).unwrap();
+    assert!(it_lo >= it_hi, "CG iters: eps=0.25 -> {it_hi}, eps=0.05 -> {it_lo}");
+}
+
+#[test]
+fn lanczos_on_streaming_operator_is_finite_and_stable() {
+    let e = engine();
+    let (prob, pot) = converged_setup(96, 4, 0.3, 80);
+    let router = Router::from_manifest(e.manifest());
+    let oracle = HvpOracle::new(&e, &router, &prob, &pot, 1e-5, 1e-6, 200).unwrap();
+    let dim = prob.n * prob.d;
+    let rep = lanczos_min_eig(|v: &[f32]| oracle.hvp(v).map(|(g, _)| g), dim, 8, 81).unwrap();
+    assert!(rep.lambda_min.is_finite());
+    assert!(rep.lambda_max.is_finite());
+    assert!(rep.lambda_max >= rep.lambda_min);
+}

@@ -1,0 +1,112 @@
+//! OTDD integration: label-cost solves, W-matrix axioms, the full distance
+//! and the gradient flow -- the paper's section 4.2 downstream task.
+
+use flash_sinkhorn::data::labeled::LabeledDataset;
+use flash_sinkhorn::otdd::distance::{LabelProblem, LabelSolver};
+use flash_sinkhorn::otdd::{build_w_matrix, gradient_flow, otdd_distance};
+use flash_sinkhorn::runtime::Engine;
+
+fn engine() -> Engine {
+    Engine::new(flash_sinkhorn::artifact_dir()).expect("artifacts missing: run `make artifacts`")
+}
+
+fn datasets(n: usize) -> (LabeledDataset, LabeledDataset) {
+    (
+        LabeledDataset::synthetic(n, 64, 10, 2.0, 100),
+        LabeledDataset::synthetic(n, 64, 10, 2.0, 200),
+    )
+}
+
+#[test]
+fn label_solve_reduces_to_euclidean_when_lam2_zero() {
+    let e = engine();
+    let (ds_a, ds_b) = datasets(120);
+    let v = 20;
+    let w = vec![0.3f32; v * v]; // any W: lam2 = 0 must ignore it
+    let uni = |n: usize| vec![1.0 / n as f32; n];
+    let lj: Vec<i32> = ds_b.labels.iter().map(|&l| l + 10).collect();
+    let p = LabelProblem {
+        x: ds_a.x.clone(),
+        y: ds_b.x.clone(),
+        a: uni(ds_a.n),
+        b: uni(ds_b.n),
+        li: ds_a.labels.clone(),
+        lj,
+        w,
+        v,
+        n: ds_a.n,
+        m: ds_b.n,
+        d: 64,
+        lam1: 1.0,
+        lam2: 0.0,
+        eps: 0.5,
+    };
+    let solver = LabelSolver::new(&e, 200, 1e-4);
+    let (_, _, cost_label) = solver.solve(&p).unwrap();
+    // plain Euclidean solve of the same instance
+    let prob = flash_sinkhorn::ot::problem::OtProblem::uniform(
+        ds_a.x.clone(), ds_b.x.clone(), ds_a.n, ds_b.n, 64, 0.5,
+    )
+    .unwrap();
+    let s = flash_sinkhorn::ot::solver::SinkhornSolver::new(
+        &e,
+        flash_sinkhorn::ot::solver::SolverConfig { max_iters: 200, tol: 1e-4, ..Default::default() },
+    );
+    let (_, rep) = s.solve(&prob).unwrap();
+    assert!(
+        (cost_label - rep.cost).abs() / rep.cost.abs() < 1e-3,
+        "label(lam2=0) {cost_label} vs plain {}",
+        rep.cost
+    );
+}
+
+#[test]
+fn w_matrix_is_symmetric_nonneg_zero_diag() {
+    let e = engine();
+    let (ds_a, ds_b) = datasets(100);
+    let (w, solves) = build_w_matrix(&e, &ds_a, &ds_b, 0.1).unwrap();
+    let v = 20;
+    assert_eq!(w.len(), v * v);
+    assert!(solves > 0);
+    for c1 in 0..v {
+        assert_eq!(w[c1 * v + c1], 0.0, "diagonal must be 0");
+        for c2 in 0..v {
+            assert_eq!(w[c1 * v + c2], w[c2 * v + c1], "symmetry");
+            assert!(w[c1 * v + c2] > -0.05, "near-nonneg (debiased)");
+        }
+    }
+    // distinct clusters => strictly positive off-diagonal distances
+    let off_mean: f32 =
+        (0..v).flat_map(|i| (0..v).map(move |j| (i, j))).filter(|(i, j)| i != j).map(|(i, j)| w[i * v + j]).sum::<f32>()
+            / (v * v - v) as f32;
+    assert!(off_mean > 0.1, "mean off-diagonal {off_mean}");
+}
+
+#[test]
+fn otdd_self_distance_is_near_zero_and_cross_is_positive() {
+    let e = engine();
+    let (ds_a, ds_b) = datasets(100);
+    let cross = otdd_distance(&e, &ds_a, &ds_b, 0.5, 0.5, 0.1, 150, 1e-4).unwrap();
+    assert!(cross.distance > 0.1, "cross OTDD {}", cross.distance);
+    let self_d = otdd_distance(&e, &ds_a, &ds_a, 0.5, 0.5, 0.1, 150, 1e-4).unwrap();
+    assert!(
+        self_d.distance.abs() < 0.05 * cross.distance.abs().max(1.0),
+        "self OTDD {} vs cross {}",
+        self_d.distance,
+        cross.distance
+    );
+}
+
+#[test]
+fn gradient_flow_decreases_divergence() {
+    let e = engine();
+    let (ds_a, ds_b) = datasets(100);
+    let (w, _) = build_w_matrix(&e, &ds_a, &ds_b, 0.1).unwrap();
+    let rep = gradient_flow(&e, &ds_a, &ds_b, &w, 0.5, 0.5, 0.1, 0.05, 4, 60).unwrap();
+    assert_eq!(rep.values.len(), 4);
+    assert!(
+        rep.values[3] < rep.values[0],
+        "flow did not descend: {:?}",
+        rep.values
+    );
+}

@@ -1,0 +1,144 @@
+//! Runtime integration: PJRT load + execute of real artifacts, numeric
+//! parity of the Rust-driven flash step against the dense f64 reference.
+
+use flash_sinkhorn::data::clouds::{random_simplex, uniform_cloud};
+use flash_sinkhorn::dense::linalg::to_f64;
+use flash_sinkhorn::dense::sinkhorn::sinkhorn_f64;
+use flash_sinkhorn::runtime::{Engine, Manifest, Tensor};
+
+fn engine() -> Engine {
+    Engine::new(flash_sinkhorn::artifact_dir()).expect("artifacts missing: run `make artifacts`")
+}
+
+#[test]
+fn manifest_loads_and_covers_core_ops() {
+    let e = engine();
+    let m = e.manifest();
+    for op in [
+        "alternating_step",
+        "symmetric_step",
+        "apply_pv_p1",
+        "apply_pv_pd",
+        "apply_ptu_p1",
+        "apply_ptu_pd",
+        "hadamard_pv",
+        "grad_x",
+        "marginals",
+        "schur_matvec",
+        "dense_step",
+        "online_step",
+        "alternating_step_label",
+        "grad_x_label",
+    ] {
+        assert!(!m.buckets(op).is_empty(), "no buckets for {op}");
+    }
+    assert!(m.has(&Manifest::key("alternating_step", 256, 256, 16)));
+}
+
+#[test]
+fn call_validates_shapes_and_dtypes() {
+    let e = engine();
+    let key = Manifest::key("marginals", 256, 256, 16);
+    // wrong arity
+    assert!(e.call(&key, &[]).is_err());
+    // wrong shape
+    let bad = vec![
+        Tensor::matrix(8, 16, vec![0.0; 128]),
+        Tensor::matrix(256, 16, vec![0.0; 4096]),
+        Tensor::vector(vec![0.0; 256]),
+        Tensor::vector(vec![0.0; 256]),
+        Tensor::vector(vec![0.0; 256]),
+        Tensor::vector(vec![0.0; 256]),
+        Tensor::scalar(0.1),
+    ];
+    assert!(e.call(&key, &bad).is_err());
+    // unknown key
+    assert!(e.call("nope__n1_m1_d1", &[]).is_err());
+}
+
+#[test]
+fn flash_step_matches_dense_f64_reference() {
+    let e = engine();
+    let (n, d) = (256, 16);
+    let x = uniform_cloud(n, d, 10);
+    let y = uniform_cloud(n, d, 11);
+    let a = random_simplex(n, 12);
+    let b = random_simplex(n, 13);
+    // rust-driven artifact iterations
+    let key = Manifest::key("alternating_step", n, n, d);
+    let alpha: Vec<f32> = (0..n).map(|i| x[i * d..(i + 1) * d].iter().map(|v| v * v).sum()).collect();
+    let beta: Vec<f32> = (0..n).map(|j| y[j * d..(j + 1) * d].iter().map(|v| v * v).sum()).collect();
+    let mut f = Tensor::vector(alpha.iter().map(|v| -v).collect());
+    let mut g = Tensor::vector(beta.iter().map(|v| -v).collect());
+    let xt = Tensor::matrix(n, d, x.clone());
+    let yt = Tensor::matrix(n, d, y.clone());
+    let at = Tensor::vector(a.clone());
+    let bt = Tensor::vector(b.clone());
+    for _ in 0..50 {
+        let outs = e
+            .call(&key, &[xt.clone(), yt.clone(), f, g, at.clone(), bt.clone(), Tensor::scalar(0.2)])
+            .unwrap();
+        let mut it = outs.into_iter();
+        f = it.next().unwrap();
+        g = it.next().unwrap();
+    }
+    // dense f64 reference
+    let sol = sinkhorn_f64(&to_f64(&x), &to_f64(&y), &to_f64(&a), &to_f64(&b), n, n, d, 0.2, 50, 0.0);
+    let fr = f.as_f32().unwrap();
+    for i in 0..n {
+        assert!(
+            (fr[i] as f64 - sol.fhat[i]).abs() < 1e-3,
+            "fhat[{i}] = {} vs {}",
+            fr[i],
+            sol.fhat[i]
+        );
+    }
+}
+
+#[test]
+fn executable_cache_hits_on_second_call() {
+    let e = engine();
+    let key = Manifest::key("marginals", 256, 256, 16);
+    let inputs = vec![
+        Tensor::matrix(256, 16, uniform_cloud(256, 16, 1)),
+        Tensor::matrix(256, 16, uniform_cloud(256, 16, 2)),
+        Tensor::vector(vec![0.0; 256]),
+        Tensor::vector(vec![0.0; 256]),
+        Tensor::vector(vec![1.0 / 256.0; 256]),
+        Tensor::vector(vec![1.0 / 256.0; 256]),
+        Tensor::scalar(0.1),
+    ];
+    e.call(&key, &inputs).unwrap();
+    let s1 = e.stats();
+    e.call(&key, &inputs).unwrap();
+    let s2 = e.stats();
+    assert_eq!(s2.compiles, s1.compiles, "second call must not recompile");
+    assert_eq!(s2.cache_hits, s1.cache_hits + 1);
+}
+
+#[test]
+fn scalar_eps_is_runtime_parameter() {
+    // one artifact, two eps values -> different potentials
+    let e = engine();
+    let key = Manifest::key("alternating_step", 256, 256, 16);
+    let mk = |eps: f32| {
+        let outs = e
+            .call(
+                &key,
+                &[
+                    Tensor::matrix(256, 16, uniform_cloud(256, 16, 5)),
+                    Tensor::matrix(256, 16, uniform_cloud(256, 16, 6)),
+                    Tensor::vector(vec![0.0; 256]),
+                    Tensor::vector(vec![0.0; 256]),
+                    Tensor::vector(vec![1.0 / 256.0; 256]),
+                    Tensor::vector(vec![1.0 / 256.0; 256]),
+                    Tensor::scalar(eps),
+                ],
+            )
+            .unwrap();
+        outs[0].as_f32().unwrap().to_vec()
+    };
+    let f1 = mk(0.1);
+    let f2 = mk(0.5);
+    assert!(f1.iter().zip(&f2).any(|(a, b)| (a - b).abs() > 1e-4));
+}

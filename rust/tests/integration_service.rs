@@ -1,0 +1,86 @@
+//! Service integration: concurrent submission, batching, backpressure,
+//! metrics -- the coordinator under load.
+
+use flash_sinkhorn::config::Config;
+use flash_sinkhorn::coordinator::job::{JobKind, JobRequest};
+use flash_sinkhorn::coordinator::service;
+use flash_sinkhorn::data::clouds::uniform_cloud;
+use flash_sinkhorn::ot::problem::OtProblem;
+
+fn config() -> Config {
+    let mut cfg = Config::default();
+    cfg.artifact_dir = flash_sinkhorn::artifact_dir().to_string_lossy().into_owned();
+    cfg
+}
+
+fn request(n: usize, seed: u64, kind: JobKind) -> JobRequest {
+    JobRequest {
+        kind,
+        problem: OtProblem::uniform(
+            uniform_cloud(n, 16, seed),
+            uniform_cloud(n, 16, seed + 999),
+            n,
+            n,
+            16,
+            0.1,
+        )
+        .unwrap(),
+        fixed_iters: Some(10),
+    }
+}
+
+#[test]
+fn concurrent_jobs_complete_with_batching() {
+    let handle = service::spawn(config()).unwrap();
+    let pendings: Vec<_> = (0..24)
+        .map(|i| handle.submit(request([150, 300][i % 2], i as u64, JobKind::Solve)).unwrap())
+        .collect();
+    for p in pendings {
+        let resp = p.recv().unwrap();
+        assert!(resp.cost.is_finite());
+        assert_eq!(resp.iters, 10);
+    }
+    let m = handle.metrics();
+    assert_eq!(m.jobs_ok, 24);
+    assert_eq!(m.jobs_failed, 0);
+    assert!(m.batches <= 24, "batching should coalesce: {} batches", m.batches);
+    assert_eq!(m.batched_jobs, 24);
+    assert_eq!(m.sinkhorn_iters, 240);
+}
+
+#[test]
+fn grad_jobs_return_gradients() {
+    let handle = service::spawn(config()).unwrap();
+    let resp = handle.submit_blocking(request(120, 5, JobKind::Grad)).unwrap();
+    let g = resp.grad.expect("grad missing");
+    assert_eq!(g.len(), 120 * 16);
+    assert!(g.iter().all(|v| v.is_finite()));
+    assert!(g.iter().any(|v| v.abs() > 0.0));
+}
+
+#[test]
+fn deterministic_results_across_submissions() {
+    let handle = service::spawn(config()).unwrap();
+    let r1 = handle.submit_blocking(request(200, 42, JobKind::Solve)).unwrap();
+    let r2 = handle.submit_blocking(request(200, 42, JobKind::Solve)).unwrap();
+    assert_eq!(r1.cost, r2.cost);
+}
+
+#[test]
+fn backpressure_rejects_when_queue_full() {
+    let mut cfg = config();
+    cfg.service.queue_cap = 2;
+    cfg.service.max_wait_ms = 0;
+    let handle = service::spawn(cfg).unwrap();
+    // flood: some submissions must hit the bounded queue.
+    let results: Vec<_> = (0..64).map(|i| handle.submit(request(800, i, JobKind::Solve))).collect();
+    let rejected = results.iter().filter(|r| r.is_err()).count();
+    let mut completed = 0;
+    for r in results.into_iter().flatten() {
+        if r.recv().is_ok() {
+            completed += 1;
+        }
+    }
+    assert!(rejected > 0, "expected backpressure rejections");
+    assert!(completed > 0, "accepted jobs must still complete");
+}

@@ -1,0 +1,278 @@
+//! Solver integration: convergence, schedules, padding exactness, fused
+//! steps, divergence axioms, transport identities -- all through PJRT.
+
+use flash_sinkhorn::coordinator::router::Router;
+use flash_sinkhorn::data::clouds::{random_simplex, uniform_cloud};
+use flash_sinkhorn::dense::linalg::to_f64;
+use flash_sinkhorn::dense::sinkhorn::{dual_cost_f64, sinkhorn_f64};
+use flash_sinkhorn::ot::cost::marginal_violation;
+use flash_sinkhorn::ot::divergence::sinkhorn_divergence;
+use flash_sinkhorn::ot::problem::OtProblem;
+use flash_sinkhorn::ot::solver::{Schedule, SinkhornSolver, SolverConfig};
+use flash_sinkhorn::ot::Transport;
+use flash_sinkhorn::runtime::Engine;
+
+fn engine() -> Engine {
+    Engine::new(flash_sinkhorn::artifact_dir()).expect("artifacts missing: run `make artifacts`")
+}
+
+fn problem(n: usize, m: usize, d: usize, eps: f32, seed: u64) -> OtProblem {
+    OtProblem::uniform(uniform_cloud(n, d, seed), uniform_cloud(m, d, seed + 1), n, m, d, eps)
+        .unwrap()
+}
+
+#[test]
+fn solver_converges_and_matches_dense_cost() {
+    let e = engine();
+    let prob = problem(200, 300, 8, 0.1, 1);
+    let solver = SinkhornSolver::new(&e, SolverConfig::default());
+    let (pot, report) = solver.solve(&prob).unwrap();
+    assert!(report.converged, "delta = {}", report.final_delta);
+    // dense f64 reference cost
+    let sol = sinkhorn_f64(
+        &to_f64(&prob.x), &to_f64(&prob.y), &to_f64(&prob.a), &to_f64(&prob.b),
+        prob.n, prob.m, prob.d, 0.1, 3000, 1e-12,
+    );
+    let c64 = dual_cost_f64(
+        &to_f64(&prob.x), &to_f64(&prob.y), &to_f64(&prob.a), &to_f64(&prob.b),
+        &sol.fhat, &sol.ghat, prob.n, prob.m, prob.d,
+    );
+    assert!(
+        (report.cost - c64).abs() / c64.abs() < 1e-3,
+        "cost {} vs dense {c64}",
+        report.cost
+    );
+    // converged marginals match the prescribed weights
+    let t = Transport::new(&e, solver.router(), &prob, &pot).unwrap();
+    let (r, c) = t.marginals().unwrap();
+    let (dr, dc) = marginal_violation(&prob, &r, &c);
+    assert!(dr < 1e-3 && dc < 1e-3, "marginal violation {dr} {dc}");
+}
+
+#[test]
+fn schedules_agree_at_fixed_point() {
+    let e = engine();
+    let prob = problem(128, 128, 4, 0.2, 3);
+    let mk = |s| SinkhornSolver::new(&e, SolverConfig { schedule: s, max_iters: 3000, tol: 1e-6, ..SolverConfig::default() });
+    let (_, alt) = mk(Schedule::Alternating).solve(&prob).unwrap();
+    let (_, sym) = mk(Schedule::Symmetric).solve(&prob).unwrap();
+    assert!((alt.cost - sym.cost).abs() / alt.cost.abs() < 1e-3, "{} vs {}", alt.cost, sym.cost);
+}
+
+#[test]
+fn fused_and_single_steps_agree() {
+    let e = engine();
+    let prob = problem(256, 256, 16, 0.1, 5);
+    let mk = |fused| {
+        SinkhornSolver::new(
+            &e,
+            SolverConfig { use_fused: fused, ..SolverConfig::fixed_iters(20, Schedule::Alternating) },
+        )
+    };
+    let (p1, _) = mk(true).solve(&prob).unwrap();
+    let (p2, _) = mk(false).solve(&prob).unwrap();
+    for (a, b) in p1.fhat.iter().zip(&p2.fhat) {
+        assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn padding_is_exact_across_bucket_boundary() {
+    // same problem solved in two different buckets must agree exactly
+    // (zero-weight padding contract).
+    let e = engine();
+    let prob = problem(200, 200, 16, 0.1, 7);
+    let router = Router::from_manifest(e.manifest());
+    let solver = SinkhornSolver::new(&e, SolverConfig::fixed_iters(15, Schedule::Alternating));
+    let small = flash_sinkhorn::coordinator::router::BucketCtx::with_bucket(
+        router.select(200, 200, 16).unwrap(),
+        &prob,
+    );
+    let big = flash_sinkhorn::coordinator::router::BucketCtx::with_bucket(
+        router.select(600, 600, 16).unwrap(),
+        &prob,
+    );
+    assert_ne!(small.bucket, big.bucket);
+    let (p1, _) = solver.solve_in_ctx(&prob, &small).unwrap();
+    let (p2, _) = solver.solve_in_ctx(&prob, &big).unwrap();
+    for (a, b) in p1.fhat.iter().zip(&p2.fhat) {
+        assert!((a - b).abs() < 2e-4, "padding changed result: {a} vs {b}");
+    }
+}
+
+#[test]
+fn eps_annealing_reaches_same_fixed_point() {
+    let e = engine();
+    let prob = problem(128, 128, 4, 0.05, 9);
+    let base = SolverConfig { max_iters: 4000, tol: 1e-6, schedule: Schedule::Alternating, use_fused: true, anneal_factor: 1.0, cached_literals: true };
+    let annealed = SolverConfig { anneal_factor: 0.7, ..base.clone() };
+    let (_, r1) = SinkhornSolver::new(&e, base).solve(&prob).unwrap();
+    let (_, r2) = SinkhornSolver::new(&e, annealed).solve(&prob).unwrap();
+    assert!((r1.cost - r2.cost).abs() / r1.cost.abs() < 1e-3);
+    assert!(r2.converged);
+}
+
+#[test]
+fn rectangular_problems_route_to_rect_buckets() {
+    let e = engine();
+    let prob = problem(200, 1500, 10, 0.1, 11);
+    let solver = SinkhornSolver::new(&e, SolverConfig::default());
+    let (_, report) = solver.solve(&prob).unwrap();
+    assert!(report.converged);
+    assert_eq!(report.bucket, (256, 2048, 16));
+}
+
+#[test]
+fn divergence_axioms() {
+    // S(mu, mu) ~ 0; S(mu, nu) > 0 for distinct clouds; symmetric-ish.
+    let e = engine();
+    let cfg = SolverConfig { max_iters: 400, tol: 1e-5, ..SolverConfig::default() };
+    let n = 128;
+    let d = 4;
+    let x = uniform_cloud(n, d, 20);
+    let mut y = uniform_cloud(n, d, 21);
+    for v in &mut y {
+        *v += 0.5; // shifted cloud
+    }
+    let a = random_simplex(n, 22);
+    let b = random_simplex(n, 23);
+    let s_xy = sinkhorn_divergence(&e, &cfg, &x, &y, &a, &b, n, n, d, 0.1).unwrap();
+    let s_xx = sinkhorn_divergence(&e, &cfg, &x, &x, &a, &a, n, n, d, 0.1).unwrap();
+    assert!(s_xx.value.abs() < 1e-3, "self-divergence {}", s_xx.value);
+    assert!(s_xy.value > 0.05, "shifted divergence {}", s_xy.value);
+    let s_yx = sinkhorn_divergence(&e, &cfg, &y, &x, &b, &a, n, n, d, 0.1).unwrap();
+    assert!((s_xy.value - s_yx.value).abs() / s_xy.value < 1e-2);
+}
+
+#[test]
+fn transport_identities_for_arbitrary_potentials() {
+    // Prop. 3: P 1 = r and P^T 1 = c for potentials far from convergence;
+    // PV with V = 1 column of ones equals r.
+    let e = engine();
+    let prob = problem(200, 250, 8, 0.15, 30);
+    let solver = SinkhornSolver::new(&e, SolverConfig::fixed_iters(2, Schedule::Alternating));
+    let (pot, _) = solver.solve(&prob).unwrap();
+    let t = Transport::new(&e, solver.router(), &prob, &pot).unwrap();
+    let (r, c) = t.marginals().unwrap();
+    let ones = vec![1.0f32; prob.m];
+    let (p_ones, r2) = t.apply_pv(&ones, 1).unwrap();
+    for i in 0..prob.n {
+        assert!((p_ones[i] - r[i]).abs() < 1e-5, "P1 != r at {i}");
+        assert!((r2[i] - r[i]).abs() < 1e-5);
+    }
+    let ones_n = vec![1.0f32; prob.n];
+    let (pt_ones, _) = t.apply_ptu(&ones_n, 1).unwrap();
+    for j in 0..prob.m {
+        assert!((pt_ones[j] - c[j]).abs() < 1e-5, "Pt1 != c at {j}");
+    }
+}
+
+#[test]
+fn gradient_descends_the_ot_cost() {
+    let e = engine();
+    let prob = problem(128, 128, 4, 0.1, 40);
+    let cfg = SolverConfig { max_iters: 300, tol: 1e-5, ..SolverConfig::default() };
+    let solver = SinkhornSolver::new(&e, cfg.clone());
+    let (pot, rep0) = solver.solve(&prob).unwrap();
+    let t = Transport::new(&e, solver.router(), &prob, &pot).unwrap();
+    let (g, _) = t.grad_x().unwrap();
+    let mut x2 = prob.x.clone();
+    for (xv, gv) in x2.iter_mut().zip(&g) {
+        *xv -= 0.05 * gv;
+    }
+    let prob2 = OtProblem::uniform(x2, prob.y.clone(), prob.n, prob.m, prob.d, prob.eps).unwrap();
+    let (_, rep1) = solver.solve(&prob2).unwrap();
+    assert!(rep1.cost < rep0.cost, "{} !< {}", rep1.cost, rep0.cost);
+}
+
+#[test]
+fn cosine_cost_maps_to_squared_euclidean_surrogate() {
+    // paper section 3.1: on unit vectors 1 - <x,y> = |x-y|^2 / 2, so the
+    // cosine OT value must match a dense f64 solver run directly on the
+    // cosine cost matrix.
+    let e = engine();
+    let (n, d) = (96, 8);
+    let x = flash_sinkhorn::data::clouds::normal_cloud(n, d, 60);
+    let y = flash_sinkhorn::data::clouds::normal_cloud(n, d, 61);
+    let a = vec![1.0 / n as f32; n];
+    let eps = 0.2f32;
+    let prob = OtProblem::cosine(x.clone(), y.clone(), a.clone(), a.clone(), n, n, d, eps).unwrap();
+    let solver = SinkhornSolver::new(&e, SolverConfig { max_iters: 2000, tol: 1e-6, ..Default::default() });
+    let (_, rep) = solver.solve(&prob).unwrap();
+    let got = flash_sinkhorn::ot::problem::cosine_cost(rep.cost);
+
+    // dense f64 log-domain Sinkhorn directly on C = 1 - <x/|x|, y/|y|>
+    let norm_rows = |pts: &[f32]| -> Vec<f64> {
+        let mut out = vec![0.0f64; n * d];
+        for i in 0..n {
+            let row = &pts[i * d..(i + 1) * d];
+            let nrm = row.iter().map(|v| (*v as f64).powi(2)).sum::<f64>().sqrt();
+            for t in 0..d {
+                out[i * d + t] = row[t] as f64 / nrm;
+            }
+        }
+        out
+    };
+    let xs = norm_rows(&x);
+    let ys = norm_rows(&y);
+    let mut c = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            let dot: f64 = (0..d).map(|t| xs[i * d + t] * ys[j * d + t]).sum();
+            c[i * n + j] = 1.0 - dot;
+        }
+    }
+    let eps64 = eps as f64;
+    let loga = (1.0 / n as f64).ln();
+    let mut f = vec![0.0f64; n];
+    let mut g = vec![0.0f64; n];
+    for _ in 0..2000 {
+        for i in 0..n {
+            let mx = (0..n)
+                .map(|j| (g[j] - c[i * n + j]) / eps64 + loga)
+                .fold(f64::NEG_INFINITY, f64::max);
+            let s: f64 = (0..n)
+                .map(|j| ((g[j] - c[i * n + j]) / eps64 + loga - mx).exp())
+                .sum();
+            f[i] = -eps64 * (mx + s.ln());
+        }
+        for j in 0..n {
+            let mx = (0..n)
+                .map(|i| (f[i] - c[i * n + j]) / eps64 + loga)
+                .fold(f64::NEG_INFINITY, f64::max);
+            let s: f64 = (0..n)
+                .map(|i| ((f[i] - c[i * n + j]) / eps64 + loga - mx).exp())
+                .sum();
+            g[j] = -eps64 * (mx + s.ln());
+        }
+    }
+    let want: f64 = (0..n).map(|i| (f[i] + g[i]) / n as f64).sum();
+    assert!(
+        (got - want).abs() / want.abs().max(1e-9) < 1e-3,
+        "cosine OT {got} vs dense cosine reference {want}"
+    );
+}
+
+#[test]
+fn fast_and_naive_solver_paths_agree() {
+    // the cached-literal hot path must be bit-for-bit comparable with the
+    // naive Tensor path (same artifacts, same arithmetic).
+    let e = engine();
+    let prob = problem(300, 200, 8, 0.1, 77);
+    let mk = |cached: bool| {
+        SinkhornSolver::new(
+            &e,
+            SolverConfig {
+                cached_literals: cached,
+                ..SolverConfig::fixed_iters(25, Schedule::Alternating)
+            },
+        )
+    };
+    let (p1, r1) = mk(true).solve(&prob).unwrap();
+    let (p2, r2) = mk(false).solve(&prob).unwrap();
+    assert_eq!(r1.iters, r2.iters);
+    for (a, b) in p1.fhat.iter().zip(&p2.fhat) {
+        assert_eq!(a, b, "fast path diverged from naive path");
+    }
+    assert_eq!(r1.cost, r2.cost);
+}
