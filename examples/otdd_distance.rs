@@ -12,14 +12,14 @@ use flash_sinkhorn::otdd;
 use flash_sinkhorn::prelude::*;
 
 fn main() -> Result<()> {
-    let engine = Engine::new(flash_sinkhorn::artifact_dir())?;
+    let engine = flash_sinkhorn::default_backend()?;
     // stand-ins for MNIST / Fashion-MNIST ResNet embeddings (DESIGN.md sec. 2)
     let (n, d, classes) = (300, 64, 10);
     let ds_a = LabeledDataset::synthetic(n, d, classes, 2.0, 100);
     let ds_b = LabeledDataset::synthetic(n, d, classes, 2.0, 200);
 
     let t0 = std::time::Instant::now();
-    let rep = otdd::otdd_distance(&engine, &ds_a, &ds_b, 0.5, 0.5, 0.1, 200, 1e-4)?;
+    let rep = otdd::otdd_distance(engine.as_ref(), &ds_a, &ds_b, 0.5, 0.5, 0.1, 200, 1e-4)?;
     println!(
         "OTDD(A, B) = {:.5}   ({} inner W solves, {} label-cost Sinkhorn iters, {:.2}s)",
         rep.distance,
@@ -33,12 +33,12 @@ fn main() -> Result<()> {
     );
 
     // sanity: self-distance vanishes
-    let self_rep = otdd::otdd_distance(&engine, &ds_a, &ds_a, 0.5, 0.5, 0.1, 200, 1e-4)?;
+    let self_rep = otdd::otdd_distance(engine.as_ref(), &ds_a, &ds_a, 0.5, 0.5, 0.1, 200, 1e-4)?;
     println!("OTDD(A, A) = {:.5}  (should be ~0)", self_rep.distance);
 
     // OTDD gradient flow (paper eq. 34 / Figure 4): adapt A toward B
-    let (w, _) = otdd::wmatrix::build_w_matrix(&engine, &ds_a, &ds_b, 0.1)?;
-    let flow = otdd::gradient_flow(&engine, &ds_a, &ds_b, &w, 0.5, 0.5, 0.1, 0.05, 8, 80)?;
+    let (w, _) = otdd::wmatrix::build_w_matrix(engine.as_ref(), &ds_a, &ds_b, 0.1)?;
+    let flow = otdd::gradient_flow(engine.as_ref(), &ds_a, &ds_b, &w, 0.5, 0.5, 0.1, 0.05, 8, 80)?;
     println!("\nOTDD gradient flow (8 steps):");
     for (i, (v, s)) in flow.values.iter().zip(&flow.step_seconds).enumerate() {
         println!("  step {i}: divergence = {v:.5}  ({s:.2}s)");

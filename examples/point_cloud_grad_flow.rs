@@ -13,7 +13,7 @@ use flash_sinkhorn::ot::solver::{Schedule, SolverConfig};
 use flash_sinkhorn::prelude::*;
 
 fn main() -> Result<()> {
-    let engine = Engine::new(flash_sinkhorn::artifact_dir())?;
+    let engine = flash_sinkhorn::default_backend()?;
     let (n, m, d) = (300, 300, 8);
     // source: 3-mode GMM; target: different 4-mode GMM
     let mut x = gmm_cloud(n, d, 3, 7);
@@ -37,8 +37,8 @@ fn main() -> Result<()> {
     let mut last = f64::NAN;
     for step in 0..steps {
         let t0 = std::time::Instant::now();
-        let div = sinkhorn_divergence(&engine, &cfg, &x, &y, &a, &b, n, m, d, eps)?;
-        let g = divergence_grad(&engine, &cfg, &x, &y, &a, &b, n, m, d, eps)?;
+        let div = sinkhorn_divergence(engine.as_ref(), &cfg, &x, &y, &a, &b, n, m, d, eps)?;
+        let g = divergence_grad(engine.as_ref(), &cfg, &x, &y, &a, &b, n, m, d, eps)?;
         let gnorm: f32 = g.iter().map(|v| v * v).sum::<f32>().sqrt();
         for (xv, gv) in x.iter_mut().zip(&g) {
             *xv -= eta * gv;

@@ -11,8 +11,8 @@ use flash_sinkhorn::ot::Transport;
 use flash_sinkhorn::prelude::*;
 
 fn main() -> Result<()> {
-    let engine = Engine::new(flash_sinkhorn::artifact_dir())?;
-    println!("PJRT platform: {}", engine.platform());
+    let engine = flash_sinkhorn::default_backend()?;
+    println!("compute backend: {}", engine.name());
 
     // two uniform point clouds in [0,1]^16
     let (n, m, d) = (500, 700, 16);
@@ -26,7 +26,7 @@ fn main() -> Result<()> {
     )?;
 
     // solve with the default (alternating, fused-k) schedule
-    let solver = SinkhornSolver::new(&engine, SolverConfig::default());
+    let solver = SinkhornSolver::new(engine.as_ref(), SolverConfig::default());
     let (pot, report) = solver.solve(&prob)?;
     println!(
         "OT_eps = {:.6}   iters = {}   converged = {}   bucket = {:?}   wall = {:?}",
@@ -34,7 +34,7 @@ fn main() -> Result<()> {
     );
 
     // the solved transport is a streaming operator -- nothing n x m exists
-    let transport = Transport::new(&engine, solver.router(), &prob, &pot)?;
+    let transport = Transport::new(engine.as_ref(), solver.router(), &prob, &pot)?;
     let (r, c) = transport.marginals()?;
     let (dr, dc) = marginal_violation(&prob, &r, &c);
     println!("marginal violation: |P1 - a|_1 = {dr:.2e}   |P^T1 - b|_1 = {dc:.2e}");

@@ -15,7 +15,7 @@ use flash_sinkhorn::prelude::*;
 use flash_sinkhorn::regression::{run_saddle_escape, Phase, SaddleConfig, ShuffledRegression};
 
 fn main() -> Result<()> {
-    let engine = Engine::new(flash_sinkhorn::artifact_dir())?;
+    let engine = flash_sinkhorn::default_backend()?;
     let n = 512;
     let eps = 0.1;
     let (workload, w_star) = ShuffledRegression::synthetic(n, eps, 0.05, 7);
@@ -37,7 +37,7 @@ fn main() -> Result<()> {
     let w0: Vec<f32> =
         (0..workload.d * workload.d).map(|_| (rng.normal() * 0.3) as f32).collect();
 
-    let rep = run_saddle_escape(&engine, &workload, &solver_cfg, &w0, &cfg)?;
+    let rep = run_saddle_escape(engine.as_ref(), &workload, &solver_cfg, &w0, &cfg)?;
     println!("\nstep   loss        |grad|     lambda_min   phase");
     for p in &rep.trajectory {
         if p.lambda_min.is_some() || p.step % 10 == 0 {

@@ -2,14 +2,13 @@
 //! task, saddle-escape trajectory.
 
 use flash_sinkhorn::bench;
-use flash_sinkhorn::runtime::Engine;
 
 fn main() {
     // default = quick grids so `cargo bench` stays minutes-scale; pass
     // --full for the paper-sized sweeps (or use `repro bench <id>`).
     let quick = !std::env::args().any(|a| a == "--full");
-    let engine = Engine::new(flash_sinkhorn::artifact_dir()).expect("run `make artifacts`");
+    let backend = flash_sinkhorn::default_backend().expect("backend");
     for id in ["fig3", "fig4", "fig5"] {
-        println!("{}", bench::run_table(&engine, id, "results", quick).unwrap());
+        println!("{}", bench::run_table(backend.as_ref(), id, "results", quick).unwrap());
     }
 }

@@ -3,11 +3,10 @@
 //! (criterion is unavailable offline; this is a self-contained harness.)
 
 use flash_sinkhorn::bench;
-use flash_sinkhorn::runtime::Engine;
 
 fn main() {
-    let engine = Engine::new(flash_sinkhorn::artifact_dir()).expect("run `make artifacts`");
+    let backend = flash_sinkhorn::default_backend().expect("backend");
     for id in ["2", "6"] {
-        println!("{}", bench::run_table(&engine, id, "results", false).unwrap());
+        println!("{}", bench::run_table(backend.as_ref(), id, "results", false).unwrap());
     }
 }

@@ -2,12 +2,11 @@
 //! crossover and fused-k dispatch amortization.
 
 use flash_sinkhorn::bench;
-use flash_sinkhorn::runtime::Engine;
 
 fn main() {
     // default = quick grids so `cargo bench` stays minutes-scale; pass
     // --full for the paper-sized sweeps (or use `repro bench <id>`).
     let quick = !std::env::args().any(|a| a == "--full");
-    let engine = Engine::new(flash_sinkhorn::artifact_dir()).expect("run `make artifacts`");
-    println!("{}", bench::run_table(&engine, "17", "results", quick).unwrap());
+    let backend = flash_sinkhorn::default_backend().expect("backend");
+    println!("{}", bench::run_table(backend.as_ref(), "17", "results", quick).unwrap());
 }

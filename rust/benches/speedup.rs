@@ -1,15 +1,80 @@
 //! Bench: paper Tables 3, 8-13, 17-18, 23 -- speedup grids, measured +
 //! IO-model projections.
+//!
+//! Modes:
+//! * default      quick grids (minutes-scale); `--full` for paper-sized
+//! * `--smoke`    one tiny timed solve per plan, emitting
+//!                `BENCH_<backend>.json` -- the CI perf-trajectory seed
+
+use std::time::Instant;
 
 use flash_sinkhorn::bench;
-use flash_sinkhorn::runtime::Engine;
+use flash_sinkhorn::data::clouds::uniform_cloud;
+use flash_sinkhorn::ot::problem::OtProblem;
+use flash_sinkhorn::ot::solver::{Schedule, SinkhornSolver, SolverConfig};
+use flash_sinkhorn::runtime::ComputeBackend;
+use flash_sinkhorn::util::json::{num, obj, s};
+
+fn smoke(backend: &dyn ComputeBackend) {
+    let (n, m, d, eps) = (512usize, 512usize, 16usize, 0.1f32);
+    let iters = 10usize;
+    let prob =
+        OtProblem::uniform(uniform_cloud(n, d, 1), uniform_cloud(m, d, 2), n, m, d, eps).unwrap();
+
+    // fixed-iteration timed solve (best of 3) per solver configuration
+    let time_plan = |use_fused: bool, schedule: Schedule| -> (f64, f64) {
+        let cfg = SolverConfig { use_fused, ..SolverConfig::fixed_iters(iters, schedule) };
+        let solver = SinkhornSolver::new(backend, cfg);
+        solver.solve(&prob).unwrap(); // warm
+        let mut best = f64::INFINITY;
+        let mut cost = f64::NAN;
+        for _ in 0..3 {
+            let t0 = Instant::now();
+            let (_, report) = solver.solve(&prob).unwrap();
+            best = best.min(t0.elapsed().as_secs_f64());
+            cost = report.cost;
+        }
+        (best, cost)
+    };
+    let (flash_s, cost) = time_plan(true, Schedule::Alternating);
+    let (unfused_s, _) = time_plan(false, Schedule::Alternating);
+    let (symmetric_s, _) = time_plan(true, Schedule::Symmetric);
+
+    let out = obj(vec![
+        ("backend", s(backend.name())),
+        ("n", num(n as f64)),
+        ("m", num(m as f64)),
+        ("d", num(d as f64)),
+        ("eps", num(eps as f64)),
+        ("iters", num(iters as f64)),
+        ("cost", num(cost)),
+        ("flash_ms", num(flash_s * 1e3)),
+        ("flash_ms_per_iter", num(flash_s * 1e3 / iters as f64)),
+        ("unfused_ms", num(unfused_s * 1e3)),
+        ("symmetric_ms", num(symmetric_s * 1e3)),
+        (
+            "threads",
+            num(std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1) as f64),
+        ),
+    ]);
+    let path = format!("BENCH_{}.json", backend.name());
+    let text = out.to_string_compact();
+    std::fs::write(&path, &text).expect("writing bench smoke json");
+    println!("{text}");
+    println!("wrote {path}");
+}
 
 fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let backend = flash_sinkhorn::default_backend().expect("backend");
+    if args.iter().any(|a| a == "--smoke") {
+        smoke(backend.as_ref());
+        return;
+    }
     // default = quick grids so `cargo bench` stays minutes-scale; pass
     // --full for the paper-sized sweeps (or use `repro bench <id>`).
-    let quick = !std::env::args().any(|a| a == "--full");
-    let engine = Engine::new(flash_sinkhorn::artifact_dir()).expect("run `make artifacts`");
+    let quick = !args.iter().any(|a| a == "--full");
     for id in ["3", "8", "10", "12", "17", "23"] {
-        println!("{}", bench::run_table(&engine, id, "results", quick).unwrap());
+        println!("{}", bench::run_table(backend.as_ref(), id, "results", quick).unwrap());
     }
 }

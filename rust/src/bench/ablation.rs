@@ -9,14 +9,14 @@ use anyhow::Result;
 use crate::data::clouds::uniform_cloud;
 use crate::iomodel::device::TPU_V4;
 use crate::iomodel::roofline::flash_kernel_estimate;
-use crate::runtime::{Engine, Manifest, Tensor};
+use crate::runtime::{ComputeBackend, Manifest, Tensor};
 
 use super::tables::{fmt_ms, markdown, time_best};
 
 const BLOCKS: [usize; 4] = [16, 32, 64, 128];
 const BUCKET: (usize, usize, usize) = (1024, 1024, 64);
 
-pub fn ablation_table(engine: &Engine, quick: bool) -> Result<String> {
+pub fn ablation_table(engine: &dyn ComputeBackend, quick: bool) -> Result<String> {
     let (n, m, d) = BUCKET;
     let reps = if quick { 2 } else { 3 };
     let mut out = String::from("## L1 block-size ablation (streaming f-update)\n\n");
@@ -30,7 +30,7 @@ pub fn ablation_table(engine: &Engine, quick: bool) -> Result<String> {
     let mut rows = Vec::new();
     for &bs in &BLOCKS {
         let key = Manifest::key(&format!("f_update_bs{bs}"), n, m, d);
-        let measured = if engine.manifest().has(&key) {
+        let measured = if engine.has(&key) {
             engine.call(&key, &[x.clone(), y.clone(), ghat.clone(), b.clone(), eps.clone()])?;
             let t = time_best(
                 || {

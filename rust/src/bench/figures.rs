@@ -8,13 +8,13 @@ use crate::iomodel::plans::{analyze, Pass, Plan, Workload};
 use crate::ot::solver::{Schedule, SolverConfig};
 use crate::otdd;
 use crate::regression::{run_saddle_escape, SaddleConfig, ShuffledRegression};
-use crate::runtime::Engine;
+use crate::runtime::ComputeBackend;
 
 use super::speedup_tables::{time_step_plan, ITERS};
 use super::tables::markdown;
 
 /// Figure 3: timing vs n and vs d (fwd / fwd+bwd), memory scaling, HVP.
-pub fn figure3(engine: &Engine, quick: bool) -> Result<String> {
+pub fn figure3(engine: &dyn ComputeBackend, quick: bool) -> Result<String> {
     let mut out = String::from("## Figure 3 series\n\n");
     let reps = if quick { 2 } else { 3 };
     // measured timing vs n at d=16 (CSV-style rows)
@@ -77,7 +77,7 @@ pub fn figure3(engine: &Engine, quick: bool) -> Result<String> {
 }
 
 /// Figures 4/7 + Table 24: OTDD distance and gradient flow scaling.
-pub fn figure4_7(engine: &Engine, quick: bool) -> Result<String> {
+pub fn figure4_7(engine: &dyn ComputeBackend, quick: bool) -> Result<String> {
     let mut out = String::from("## Figures 4/7: OTDD scaling (synthetic labeled embeddings)\n\n");
     let d = 64;
     let v = 10;
@@ -120,7 +120,7 @@ pub fn figure4_7(engine: &Engine, quick: bool) -> Result<String> {
 }
 
 /// Figures 5/8: saddle-escape trajectory on shuffled regression.
-pub fn figure5_8(engine: &Engine, quick: bool) -> Result<String> {
+pub fn figure5_8(engine: &dyn ComputeBackend, quick: bool) -> Result<String> {
     let n = if quick { 128 } else { 512 };
     let (workload, w_star) = ShuffledRegression::synthetic(n, 0.1, 0.05, 7);
     let d = workload.d;
@@ -130,7 +130,7 @@ pub fn figure5_8(engine: &Engine, quick: bool) -> Result<String> {
         schedule: Schedule::Alternating,
         use_fused: true,
         anneal_factor: 0.9,
-        cached_literals: true,
+        prepared: true,
     };
     let cfg = SaddleConfig {
         max_steps: if quick { 12 } else { 60 },

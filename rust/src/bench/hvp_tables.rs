@@ -3,7 +3,6 @@
 
 use anyhow::Result;
 
-use crate::coordinator::router::Router;
 use crate::data::clouds::{normal_cloud, random_simplex, uniform_cloud};
 use crate::data::rng::Rng;
 use crate::dense::hessian::DenseHessian;
@@ -14,7 +13,7 @@ use crate::iomodel::device::A100;
 use crate::iomodel::plans::{analyze, Pass, Plan, Workload};
 use crate::ot::problem::OtProblem;
 use crate::ot::solver::{Potentials, Schedule, SinkhornSolver, SolverConfig};
-use crate::runtime::Engine;
+use crate::runtime::ComputeBackend;
 
 use super::tables::{fmt_ms, fmt_x, markdown, time_best};
 
@@ -22,7 +21,7 @@ use super::tables::{fmt_ms, fmt_x, markdown, time_best};
 /// Returns (relative error, CG iterations, converged).
 #[allow(clippy::too_many_arguments)]
 pub fn parity_cell(
-    engine: &Engine,
+    engine: &dyn ComputeBackend,
     n: usize,
     d: usize,
     eps: f32,
@@ -48,7 +47,7 @@ pub fn parity_cell(
     // streaming oracle at the same potentials (f32)
     let prob = OtProblem::new(x, y, a, b, n, n, d, eps)?;
     let pot = Potentials { fhat: to_f32(&sol.fhat), ghat: to_f32(&sol.ghat) };
-    let router = Router::from_manifest(engine.manifest());
+    let router = engine.router();
     let oracle = HvpOracle::new(engine, &router, &prob, &pot, tau, eta, max_cg)?;
     let (got, stats) = oracle.hvp(&to_f32(&a_mat64))?;
 
@@ -63,7 +62,7 @@ pub fn parity_cell(
 }
 
 /// Table 14: tau/eta sweep at eps in {0.1, 0.25, 0.5}.
-pub fn table14(engine: &Engine, quick: bool) -> Result<String> {
+pub fn table14(engine: &dyn ComputeBackend, quick: bool) -> Result<String> {
     let n = if quick { 128 } else { 256 };
     let d = 4;
     let mut rows = Vec::new();
@@ -83,7 +82,7 @@ pub fn table14(engine: &Engine, quick: bool) -> Result<String> {
 }
 
 /// Table 22: parity at low eps, with CG iteration counts.
-pub fn table22(engine: &Engine, quick: bool) -> Result<String> {
+pub fn table22(engine: &dyn ComputeBackend, quick: bool) -> Result<String> {
     let n = if quick { 128 } else { 256 };
     let d = 4;
     let mut rows = Vec::new();
@@ -112,7 +111,7 @@ pub fn table22(engine: &Engine, quick: bool) -> Result<String> {
 
 /// Tables 15/16: HVP timing -- streaming oracle vs dense f64 Hessian, plus
 /// IO-model projection at paper scale.
-pub fn table15_16(engine: &Engine, quick: bool) -> Result<String> {
+pub fn table15_16(engine: &dyn ComputeBackend, quick: bool) -> Result<String> {
     let mut out = String::from("## Tables 15-16: HVP timing\n\n");
     // dense Moore-Penrose needs a (2n)^2 Jacobi eigendecomposition; n = 256
     // is the largest cell that stays in seconds (the paper's dense baseline
@@ -120,7 +119,7 @@ pub fn table15_16(engine: &Engine, quick: bool) -> Result<String> {
     let ns: &[usize] = if quick { &[128] } else { &[128, 256] };
     let ds: &[usize] = if quick { &[4] } else { &[4, 16] };
     let reps = if quick { 1 } else { 2 };
-    let router = Router::from_manifest(engine.manifest());
+    let router = engine.router();
     let mut rows = Vec::new();
     for &n in ns {
         for &d in ds {
@@ -129,7 +128,7 @@ pub fn table15_16(engine: &Engine, quick: bool) -> Result<String> {
             let prob = OtProblem::uniform(x, y, n, n, d, 0.1)?;
             let solver = SinkhornSolver::new(
                 engine,
-                SolverConfig { max_iters: 100, tol: 1e-5, schedule: Schedule::Alternating, use_fused: true, anneal_factor: 1.0, cached_literals: true },
+                SolverConfig { max_iters: 100, tol: 1e-5, schedule: Schedule::Alternating, use_fused: true, anneal_factor: 1.0, prepared: true },
             );
             let (pot, _) = solver.solve(&prob)?;
             let oracle = HvpOracle::new(engine, &router, &prob, &pot, 1e-5, 1e-6, 50)?;

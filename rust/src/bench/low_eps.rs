@@ -9,7 +9,7 @@ use crate::dense::linalg::to_f64;
 use crate::dense::sinkhorn::{dual_cost_f64, sinkhorn_f64};
 use crate::ot::problem::OtProblem;
 use crate::ot::solver::{Schedule, SinkhornSolver, SolverConfig};
-use crate::runtime::Engine;
+use crate::runtime::ComputeBackend;
 
 use super::speedup_tables::ITERS;
 use super::tables::{fmt_ms, fmt_x, markdown};
@@ -18,7 +18,7 @@ const LOW_EPS: [f32; 3] = [0.10, 0.05, 0.01];
 
 /// Table 19: 10-iteration forward time across eps (should be flat for
 /// flash; speedups vs baselines shown alongside).
-pub fn table19(engine: &Engine, quick: bool) -> Result<String> {
+pub fn table19(engine: &dyn ComputeBackend, quick: bool) -> Result<String> {
     let n = if quick { 256 } else { 1024 };
     let d = 64;
     let reps = if quick { 2 } else { 3 };
@@ -47,7 +47,7 @@ pub fn table19(engine: &Engine, quick: bool) -> Result<String> {
 }
 
 fn time_step_plan_eps(
-    engine: &Engine,
+    engine: &dyn ComputeBackend,
     op: &str,
     n: usize,
     m: usize,
@@ -84,7 +84,7 @@ fn time_step_plan_eps(
 }
 
 /// Table 20: fp32 flash OT value vs dense f64 reference at fixed iterations.
-pub fn table20(engine: &Engine, quick: bool) -> Result<String> {
+pub fn table20(engine: &dyn ComputeBackend, quick: bool) -> Result<String> {
     let n = if quick { 128 } else { 512 };
     let d = 16;
     let iters = 200;
@@ -115,7 +115,7 @@ pub fn table20(engine: &Engine, quick: bool) -> Result<String> {
 }
 
 /// Table 21: iteration budget to a fixed tolerance vs eps; ms/iter flat.
-pub fn table21(engine: &Engine, quick: bool) -> Result<String> {
+pub fn table21(engine: &dyn ComputeBackend, quick: bool) -> Result<String> {
     let n = if quick { 256 } else { 512 };
     let d = 16;
     let x = uniform_cloud(n, d, 31);
@@ -129,7 +129,7 @@ pub fn table21(engine: &Engine, quick: bool) -> Result<String> {
             schedule: Schedule::Alternating,
             use_fused: true,
             anneal_factor: 1.0,
-            cached_literals: true,
+            prepared: true,
         };
         let solver = SinkhornSolver::new(engine, cfg);
         let t0 = std::time::Instant::now();

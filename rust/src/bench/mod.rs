@@ -13,11 +13,11 @@ pub mod tables;
 
 use anyhow::Result;
 
-use crate::runtime::Engine;
+use crate::runtime::ComputeBackend;
 
 /// Regenerate one table/figure by paper number; writes markdown/CSV into
 /// `out_dir` and returns the rendered text.
-pub fn run_table(engine: &Engine, id: &str, out_dir: &str, quick: bool) -> Result<String> {
+pub fn run_table(engine: &dyn ComputeBackend, id: &str, out_dir: &str, quick: bool) -> Result<String> {
     std::fs::create_dir_all(out_dir)?;
     let text = match id {
         "2" | "5" => profile_tables::table2_5(engine),

@@ -1,23 +1,22 @@
 //! §Perf harness: before/after measurements of the L3 hot-path
 //! optimizations (EXPERIMENTS.md §Perf).
 //!
-//! * Solver iteration loop: naive per-iteration Tensor->Literal conversion
-//!   vs cached static literals + literal-resident potentials.
+//! * Solver iteration loop: naive per-iteration input rebuilding vs the
+//!   prepared-call path (statics frozen once per solve).
 //! * HVP CG loop: naive `Transport::schur_matvec` (rebuilds 11 inputs per
-//!   matvec) vs `SchurOp` (uploads only the (m,) iterate).
+//!   matvec) vs `SchurOp` (streams only the (m,) iterate).
 
 use anyhow::Result;
 
-use crate::coordinator::router::Router;
 use crate::data::clouds::uniform_cloud;
 use crate::ot::problem::OtProblem;
 use crate::ot::solver::{Schedule, SinkhornSolver, SolverConfig};
 use crate::ot::Transport;
-use crate::runtime::Engine;
+use crate::runtime::ComputeBackend;
 
 use super::tables::{fmt_ms, markdown, time_best};
 
-pub fn perf_table(engine: &Engine, quick: bool) -> Result<String> {
+pub fn perf_table(engine: &dyn ComputeBackend, quick: bool) -> Result<String> {
     let mut out = String::from("## §Perf: L3 hot-path before/after\n\n");
     let reps = if quick { 2 } else { 5 };
     let iters = 100;
@@ -38,7 +37,7 @@ pub fn perf_table(engine: &Engine, quick: bool) -> Result<String> {
         )?;
         let time_solver = |cached: bool, fused: bool| -> Result<f64> {
             let cfg = SolverConfig {
-                cached_literals: cached,
+                prepared: cached,
                 use_fused: fused,
                 ..SolverConfig::fixed_iters(iters, Schedule::Alternating)
             };
@@ -60,7 +59,7 @@ pub fn perf_table(engine: &Engine, quick: bool) -> Result<String> {
     }
     out.push_str(&markdown(
         &format!("Solver loop, {iters} alternating iterations (best of {reps})"),
-        &["n x d", "naive (ms)", "cached literals (ms)", "speedup", "+ fused k10 (ms)", "total speedup"],
+        &["n x d", "naive (ms)", "prepared (ms)", "speedup", "+ fused k10 (ms)", "total speedup"],
         &rows,
     ));
 
@@ -83,7 +82,7 @@ pub fn perf_table(engine: &Engine, quick: bool) -> Result<String> {
             SolverConfig { max_iters: 60, tol: 1e-5, ..SolverConfig::default() },
         );
         let (pot, _) = solver.solve(&prob)?;
-        let router = Router::from_manifest(engine.manifest());
+        let router = engine.router();
         let t = Transport::new(engine, &router, &prob, &pot)?;
         let (_, ahat) = t.apply_pv(&prob.y, d)?;
         let (_, bhat) = t.marginals()?;

@@ -6,14 +6,14 @@ use anyhow::Result;
 use crate::iomodel::device::A100;
 use crate::iomodel::plans::{Pass, Workload};
 use crate::iomodel::profile::{launch_ratio_table, ncu_style_table};
-use crate::runtime::Engine;
+use crate::runtime::ComputeBackend;
 
 use super::speedup_tables::{time_step_plan, ITERS};
 use super::tables::{fmt_ms, markdown};
 
 /// Tables 2/5: forward profile at the paper's setting, plus the fwd+bwd
 /// variant of Table 7.
-pub fn table2_5(engine: &Engine) -> Result<String> {
+pub fn table2_5(engine: &dyn ComputeBackend) -> Result<String> {
     let mut out = String::from("## Tables 2/5: NCU-style profile (IO model)\n\n");
     let fwd = Workload { n: 10_000, m: 10_000, d: 64, iters: ITERS, pass: Pass::Forward };
     out.push_str(&ncu_style_table(&fwd, &A100));

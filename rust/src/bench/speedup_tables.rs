@@ -10,7 +10,7 @@ use anyhow::Result;
 use crate::data::clouds::uniform_cloud;
 use crate::iomodel::device::A100;
 use crate::iomodel::plans::{analyze, Pass, Plan, Workload};
-use crate::runtime::{Engine, Manifest, Tensor};
+use crate::runtime::{ComputeBackend, Manifest, Tensor};
 
 use super::tables::{fmt_ms, fmt_x, markdown, time_best};
 
@@ -20,7 +20,7 @@ pub const ITERS: usize = 10;
 /// Time `iters` Sinkhorn iterations of a step op at an exact bucket shape.
 /// `grad_op` optionally adds one backward pass (fwd+bwd regime).
 pub fn time_step_plan(
-    engine: &Engine,
+    engine: &dyn ComputeBackend,
     step_op: &str,
     grad_op: Option<&str>,
     n: usize,
@@ -30,7 +30,7 @@ pub fn time_step_plan(
     reps: usize,
 ) -> Result<f64> {
     let key = Manifest::key(step_op, n, m, d);
-    if !engine.manifest().has(&key) {
+    if !engine.has(&key) {
         anyhow::bail!("missing artifact {key}");
     }
     let x = Tensor::matrix(n, d, uniform_cloud(n, d, 1));
@@ -70,7 +70,7 @@ pub fn time_step_plan(
 }
 
 fn measured_grid(
-    engine: &Engine,
+    engine: &dyn ComputeBackend,
     flash_op: &str,
     base_op: &str,
     fwd_bwd: bool,
@@ -114,7 +114,7 @@ fn model_speedup(base: Plan, n: usize, d: usize, pass: Pass) -> String {
 }
 
 /// Table 3: headline speedups at (n, d) in {10k, 40k} x {128, 512}.
-pub fn table3(engine: &Engine, quick: bool) -> Result<String> {
+pub fn table3(engine: &dyn ComputeBackend, quick: bool) -> Result<String> {
     let mut out = String::from("## Table 3: speedup vs baselines (flash = 1.0)\n\n");
     let mut rows = Vec::new();
     for &(n, d) in &[(10_000, 128), (10_000, 512), (40_000, 128), (40_000, 512)] {
@@ -141,7 +141,7 @@ pub fn table3(engine: &Engine, quick: bool) -> Result<String> {
 }
 
 /// Tables 8/9: flash vs online-unfused over the full grid.
-pub fn table8_9(engine: &Engine, quick: bool) -> Result<String> {
+pub fn table8_9(engine: &dyn ComputeBackend, quick: bool) -> Result<String> {
     let mut out = String::from("## Tables 8-9: FlashSinkhorn vs online (KeOps-like)\n\n");
     for (pass, tag) in [(Pass::Forward, "fwd"), (Pass::ForwardBackward, "fwd+bwd")] {
         let mut rows = Vec::new();
@@ -172,7 +172,7 @@ pub fn table8_9(engine: &Engine, quick: bool) -> Result<String> {
 }
 
 /// Tables 10/11: flash vs tensorized, with the OOM frontier.
-pub fn table10_11(engine: &Engine, quick: bool) -> Result<String> {
+pub fn table10_11(engine: &dyn ComputeBackend, quick: bool) -> Result<String> {
     let mut out = String::from("## Tables 10-11: FlashSinkhorn vs tensorized\n\n");
     let mut rows = Vec::new();
     for &n in &[5_000usize, 10_000, 20_000, 30_000, 40_000] {
@@ -201,7 +201,7 @@ pub fn table10_11(engine: &Engine, quick: bool) -> Result<String> {
 }
 
 /// Tables 12/13: flash(alt) vs the OTT-JAX stand-in (alternating online).
-pub fn table12_13(engine: &Engine, quick: bool) -> Result<String> {
+pub fn table12_13(engine: &dyn ComputeBackend, quick: bool) -> Result<String> {
     let mut out = String::from("## Tables 12-13: FlashSinkhorn vs OTT-JAX stand-in\n\n");
     let mut rows = Vec::new();
     for &n in &[5_000usize, 10_000, 20_000, 50_000] {
@@ -235,7 +235,7 @@ pub fn table12_13(engine: &Engine, quick: bool) -> Result<String> {
 }
 
 /// Tables 17/18: symmetric vs alternating schedule crossover.
-pub fn table17_18(engine: &Engine, quick: bool) -> Result<String> {
+pub fn table17_18(engine: &dyn ComputeBackend, quick: bool) -> Result<String> {
     let mut out = String::from("## Tables 17-18: symmetric vs alternating\n\n");
     let ns: &[usize] = if quick { &[256, 512] } else { &[256, 512, 1024, 2048] };
     let ds: &[usize] = if quick { &[16] } else { &[16, 64] };
@@ -263,7 +263,7 @@ pub fn table17_18(engine: &Engine, quick: bool) -> Result<String> {
     ));
     // fused k-step amortization (the launch-overhead lever of Table 17)
     let mut rows2 = Vec::new();
-    let k = engine.manifest().k_fused;
+    let k = engine.k_fused();
     for &n in ns {
         let single = time_step_plan(engine, "alternating_step", None, n, n, 16, k, reps)?;
         let fused = time_step_plan(engine, &format!("k{k}_alternating"), None, n, n, 16, 1, reps)?;
@@ -283,7 +283,7 @@ pub fn table17_18(engine: &Engine, quick: bool) -> Result<String> {
 }
 
 /// Table 23: rectangular n != m.
-pub fn table23(engine: &Engine, quick: bool) -> Result<String> {
+pub fn table23(engine: &dyn ComputeBackend, quick: bool) -> Result<String> {
     let reps = if quick { 2 } else { 3 };
     let mut rows = Vec::new();
     for &(n, m) in &[(256usize, 256usize), (256, 2048), (2048, 256)] {

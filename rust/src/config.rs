@@ -12,7 +12,10 @@ use crate::util::json::Json;
 
 #[derive(Debug, Clone)]
 pub struct Config {
-    /// Directory holding `manifest.json` + `*.hlo.txt` artifacts.
+    /// Compute backend: "native" (default, pure Rust) or "pjrt"
+    /// (HLO artifacts; requires the `pjrt` cargo feature).
+    pub backend: String,
+    /// Directory holding `manifest.json` + `*.hlo.txt` artifacts (pjrt).
     pub artifact_dir: String,
     pub solver: SolverSection,
     pub service: ServiceSection,
@@ -67,6 +70,7 @@ pub struct BenchSection {
 impl Default for Config {
     fn default() -> Self {
         Self {
+            backend: std::env::var("FLASH_SINKHORN_BACKEND").unwrap_or_else(|_| "native".into()),
             artifact_dir: crate::artifact_dir().to_string_lossy().into_owned(),
             solver: SolverSection {
                 max_iters: 1000,
@@ -100,6 +104,9 @@ impl Config {
     pub fn from_json(text: &str) -> Result<Self> {
         let j = Json::parse(text)?;
         let mut cfg = Config::default();
+        if let Some(v) = j.get("backend") {
+            cfg.backend = v.as_str()?.to_string();
+        }
         if let Some(v) = j.get("artifact_dir") {
             cfg.artifact_dir = v.as_str()?.to_string();
         }
@@ -162,6 +169,12 @@ mod tests {
         assert_eq!(cfg.solver.max_iters, 7);
         assert_eq!(cfg.solver.schedule, "auto");
         assert_eq!(cfg.service.max_batch, 16);
+    }
+
+    #[test]
+    fn backend_override_parses() {
+        let cfg = Config::from_json(r#"{"backend": "pjrt"}"#).unwrap();
+        assert_eq!(cfg.backend, "pjrt");
     }
 
     #[test]

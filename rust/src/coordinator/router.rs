@@ -34,12 +34,20 @@ impl Bucket {
 }
 
 /// Routes (n, m, d) requests to available artifact buckets.
+///
+/// Two modes:
+/// * **bucketed** (PJRT): requests go to the smallest precompiled bucket
+///   that fits, and are zero-weight padded into it;
+/// * **exact** (native backend): every (n, m, d) routes to itself — the
+///   backend compiles nothing ahead of time, so padding is pure waste.
 #[derive(Debug, Clone)]
 pub struct Router {
     /// Buckets available for the core op family, sorted by volume.
     buckets: Vec<Bucket>,
     /// Buckets for the label (OTDD) op family.
     label_buckets: Vec<Bucket>,
+    /// Exact-fit mode: `select` returns the requested shape unpadded.
+    exact: bool,
 }
 
 /// The op whose bucket coverage defines routability of plain EOT requests.
@@ -55,12 +63,22 @@ impl Router {
                 .map(|(n, m, d)| Bucket { n, m, d })
                 .collect::<Vec<_>>()
         };
-        Self { buckets: collect(CORE_OP), label_buckets: collect(LABEL_OP) }
+        Self { buckets: collect(CORE_OP), label_buckets: collect(LABEL_OP), exact: false }
     }
 
     /// Construct directly from bucket lists (tests / custom deployments).
     pub fn from_buckets(buckets: Vec<Bucket>, label_buckets: Vec<Bucket>) -> Self {
-        Self { buckets, label_buckets }
+        Self { buckets, label_buckets, exact: false }
+    }
+
+    /// Exact-fit router for shape-agnostic backends (native): every request
+    /// routes to its own (n, m, d), no padding ever happens.
+    pub fn exact() -> Self {
+        Self { buckets: Vec::new(), label_buckets: Vec::new(), exact: true }
+    }
+
+    pub fn is_exact(&self) -> bool {
+        self.exact
     }
 
     pub fn buckets(&self) -> &[Bucket] {
@@ -78,6 +96,9 @@ impl Router {
     }
 
     fn select_in(&self, set: &[Bucket], n: usize, m: usize, d: usize) -> Result<Bucket> {
+        if self.exact {
+            return Ok(Bucket { n, m, d });
+        }
         set.iter()
             .filter(|b| b.n >= n && b.m >= m && b.d >= d)
             .min_by_key(|b| b.volume())
@@ -217,15 +238,15 @@ mod tests {
     use super::*;
 
     fn router() -> Router {
-        Router {
-            buckets: vec![
+        Router::from_buckets(
+            vec![
                 Bucket { n: 256, m: 256, d: 16 },
                 Bucket { n: 256, m: 256, d: 64 },
                 Bucket { n: 512, m: 512, d: 16 },
                 Bucket { n: 256, m: 2048, d: 16 },
             ],
-            label_buckets: vec![Bucket { n: 256, m: 256, d: 64 }],
-        }
+            vec![Bucket { n: 256, m: 256, d: 64 }],
+        )
     }
 
     #[test]
@@ -241,6 +262,14 @@ mod tests {
     fn errors_when_nothing_fits() {
         assert!(router().select(5000, 5000, 16).is_err());
         assert!(router().select(100, 100, 1000).is_err());
+    }
+
+    #[test]
+    fn exact_router_returns_request_verbatim() {
+        let r = Router::exact();
+        assert!(r.is_exact());
+        assert_eq!(r.select(77, 99, 3).unwrap(), Bucket { n: 77, m: 99, d: 3 });
+        assert_eq!(r.select_label(1, 2, 3).unwrap(), Bucket { n: 1, m: 2, d: 3 });
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! The OT job service: a cloneable client handle in front of a dedicated
-//! engine actor thread.  PJRT handles are `!Send`, so the engine owns a
-//! thread; jobs arrive over a bounded channel -- that bound *is* the
+//! backend actor thread.  The backend is built *inside* the thread (PJRT
+//! handles are `!Send`; the native backend simply keeps its thread-pool
+//! affinity); jobs arrive over a bounded channel -- that bound *is* the
 //! backpressure knob.  (The async-runtime facade was dropped in the
 //! offline build: submission is blocking or fire-and-forget over std
 //! channels; see DESIGN.md section 2.)
@@ -15,7 +16,7 @@ use anyhow::{anyhow, Result};
 use crate::config::Config;
 use crate::ot::solver::{Schedule, SinkhornSolver, SolverConfig};
 use crate::ot::Transport;
-use crate::runtime::Engine;
+use crate::runtime::ComputeBackend;
 
 use super::batcher::{Batcher, Keyed};
 use super::job::{Job, JobKind, JobRequest, JobResponse};
@@ -80,8 +81,9 @@ impl ServiceHandle {
     }
 }
 
-/// Spawn the engine actor thread and return the handle.  Fails fast if the
-/// artifacts cannot be loaded.
+/// Spawn the backend actor thread and return the handle.  Fails fast if
+/// the configured backend cannot be constructed (e.g. `pjrt` with missing
+/// artifacts).
 pub fn spawn(config: Config) -> Result<ServiceHandle> {
     let (tx, rx) = sync_channel::<Job>(config.service.queue_cap);
     let metrics = Arc::new(Metrics::default());
@@ -91,18 +93,19 @@ pub fn spawn(config: Config) -> Result<ServiceHandle> {
     std::thread::Builder::new()
         .name("ot-engine".into())
         .spawn(move || {
-            let engine = match Engine::new(config.artifact_dir.clone()) {
-                Ok(e) => {
+            let backend = match crate::backend_by_name(&config.backend) {
+                Ok(b) => {
                     let _ = ready_tx.send(Ok(()));
-                    e
+                    b
                 }
                 Err(e) => {
                     let _ = ready_tx.send(Err(e));
                     return;
                 }
             };
+            let backend: &dyn ComputeBackend = backend.as_ref();
             let solver_cfg = SolverConfig::from_section(&config.solver);
-            let solver = SinkhornSolver::new(&engine, solver_cfg.clone());
+            let solver = SinkhornSolver::new(backend, solver_cfg.clone());
             let mut batcher = Batcher::new(
                 config.service.max_batch,
                 Duration::from_millis(config.service.max_wait_ms),
@@ -114,7 +117,7 @@ pub fn spawn(config: Config) -> Result<ServiceHandle> {
                     .fetch_add(batch.len() as u64, Ordering::Relaxed);
                 for job in batch {
                     metrics_engine.queue_depth.fetch_sub(1, Ordering::Relaxed);
-                    let result = run_job(&engine, &solver, &solver_cfg, &job.request);
+                    let result = run_job(backend, &solver, &solver_cfg, &job.request);
                     match &result {
                         Ok(resp) => {
                             metrics_engine.jobs_ok.fetch_add(1, Ordering::Relaxed);
@@ -144,7 +147,7 @@ pub fn spawn(config: Config) -> Result<ServiceHandle> {
 }
 
 fn run_job(
-    engine: &Engine,
+    backend: &dyn ComputeBackend,
     solver: &SinkhornSolver,
     base_cfg: &SolverConfig,
     req: &JobRequest,
@@ -152,7 +155,7 @@ fn run_job(
     let (pot, report) = match req.fixed_iters {
         Some(k) => {
             let cfg = SolverConfig { max_iters: k, tol: 0.0, ..base_cfg.clone() };
-            let s = SinkhornSolver::new(engine, cfg);
+            let s = SinkhornSolver::new(backend, cfg);
             s.solve(&req.problem)?
         }
         None => solver.solve(&req.problem)?,
@@ -160,7 +163,7 @@ fn run_job(
     let grad = match req.kind {
         JobKind::Solve => None,
         JobKind::Grad => {
-            let t = Transport::new(engine, solver.router(), &req.problem, &pot)?;
+            let t = Transport::new(backend, solver.router(), &req.problem, &pot)?;
             Some(t.grad_x()?.0)
         }
     };

@@ -14,7 +14,7 @@ use anyhow::{anyhow, Result};
 use crate::ot::problem::OtProblem;
 use crate::ot::solver::Potentials;
 use crate::ot::Transport;
-use crate::runtime::Engine;
+use crate::runtime::ComputeBackend;
 
 use super::cg::cg_solve;
 
@@ -47,7 +47,7 @@ pub struct HvpOracle<'e> {
 
 impl<'e> HvpOracle<'e> {
     pub fn new(
-        engine: &'e Engine,
+        backend: &'e dyn ComputeBackend,
         router: &crate::coordinator::router::Router,
         prob: &OtProblem,
         pot: &Potentials,
@@ -55,7 +55,7 @@ impl<'e> HvpOracle<'e> {
         eta: f64,
         max_cg: usize,
     ) -> Result<Self> {
-        let transport = Transport::new(engine, router, prob, pot)?;
+        let transport = Transport::new(backend, router, prob, pot)?;
         let (py, ahat) = transport.apply_pv(&prob.y, prob.d)?;
         let (_, bhat) = transport.marginals()?;
         Ok(Self { transport, prob: prob.clone(), py, ahat, bhat, tau, eta, max_cg })

@@ -1,35 +1,39 @@
 //! # FlashSinkhorn-RS
 //!
-//! Reproduction of *"FlashSinkhorn: IO-Aware Entropic Optimal Transport on
-//! GPU"* as a three-layer Rust + JAX + Pallas stack:
+//! Reproduction of *"FlashSinkhorn: IO-Aware Entropic Optimal Transport"*
+//! as a multi-backend Rust system:
 //!
-//! * **L1** — fused streaming Pallas kernels (paper Algorithms 1–5), compiled
-//!   at build time (`make artifacts`) into HLO-text artifacts;
-//! * **L2** — JAX compute graphs (Sinkhorn schedules, transport application,
-//!   gradients, Schur matvecs, OTDD variants, tensorized/online baselines);
-//! * **L3** — this crate: the coordinator that loads the artifacts through
-//!   the PJRT C API and owns everything systems-level: shape-bucket routing
-//!   with exact zero-weight padding, the Sinkhorn iteration loop with
-//!   ε-annealing and convergence control, the streaming HVP oracle
-//!   (Schur-complement CG + Lanczos), the OTDD pipeline, the shuffled
-//!   regression optimizer, the analytical HBM/SRAM IO-cost model used to
-//!   reproduce the paper's profiling tables, and a tokio job service.
+//! * **Compute backends** (the [`runtime::ComputeBackend`] trait) evaluate
+//!   the paper's fused streaming ops (Algorithms 1-5):
+//!   - [`native::NativeBackend`] — pure Rust, cache-tiled streaming
+//!     LogSumExp over point-cloud tiles (online-softmax accumulators,
+//!     nothing of size n x m ever materialized).  The default: builds and
+//!     tests hermetically with no Python, no FFI, no artifacts.
+//!   - `runtime::Engine` (cargo feature `pjrt`) — executes Python-lowered
+//!     HLO artifacts through the PJRT C API (`make artifacts` first).
+//! * **The coordinator** owns everything systems-level: shape routing
+//!   (exact-fit on native, zero-weight-padded buckets on PJRT), the
+//!   Sinkhorn iteration loop with eps-annealing and convergence control,
+//!   the streaming HVP oracle (Schur-complement CG + Lanczos), the OTDD
+//!   pipeline, the shuffled-regression optimizer, the analytical HBM/SRAM
+//!   IO-cost model, and the batched job service.
 //!
-//! Python never runs on the request path: after `make artifacts` the `repro`
-//! binary is self-contained.
+//! ## Quickstart (no artifacts needed)
 //!
-//! ## Quickstart
-//!
-//! ```no_run
+//! ```
 //! use flash_sinkhorn::prelude::*;
 //!
-//! let engine = Engine::new("artifacts").unwrap();
-//! let (x, y) = (uniform_cloud(500, 16, 1), uniform_cloud(600, 16, 2));
-//! let prob = OtProblem::uniform(x, y, 500, 600, 16, 0.1).unwrap();
-//! let solver = SinkhornSolver::new(&engine, SolverConfig::default());
-//! let (pot, report) = solver.solve(&prob).unwrap();
+//! let backend = NativeBackend::default();
+//! let (x, y) = (uniform_cloud(80, 4, 1), uniform_cloud(60, 4, 2));
+//! let prob = OtProblem::uniform(x, y, 80, 60, 4, 0.2).unwrap();
+//! let solver = SinkhornSolver::new(&backend, SolverConfig::default());
+//! let (_pot, report) = solver.solve(&prob).unwrap();
 //! println!("OT_eps = {:.6} in {} iters", report.cost, report.iters);
+//! assert!(report.converged);
 //! ```
+
+// Lint policy (needless_range_loop / too_many_arguments allows) lives in
+// rust/Cargo.toml [lints.clippy] so it covers every target uniformly.
 
 pub mod bench;
 pub mod config;
@@ -38,6 +42,7 @@ pub mod data;
 pub mod dense;
 pub mod hvp;
 pub mod iomodel;
+pub mod native;
 pub mod optim;
 pub mod ot;
 pub mod otdd;
@@ -45,16 +50,47 @@ pub mod regression;
 pub mod runtime;
 pub mod util;
 
+use anyhow::Result;
+use runtime::ComputeBackend;
+
 /// Convenience re-exports for downstream users and the examples.
 pub mod prelude {
     pub use crate::config::Config;
     pub use crate::coordinator::router::Router;
     pub use crate::data::clouds::{normal_cloud, uniform_cloud};
     pub use crate::hvp::oracle::HvpOracle;
+    pub use crate::native::NativeBackend;
     pub use crate::ot::problem::OtProblem;
     pub use crate::ot::solver::{Potentials, Schedule, SinkhornSolver, SolverConfig};
+    #[cfg(feature = "pjrt")]
     pub use crate::runtime::engine::Engine;
     pub use crate::runtime::tensor::Tensor;
+    pub use crate::runtime::ComputeBackend;
+}
+
+/// Build the backend selected by `$FLASH_SINKHORN_BACKEND`:
+///
+/// * unset or `"native"` — [`native::NativeBackend`] (always available);
+/// * `"pjrt"` — the artifact engine (requires the `pjrt` cargo feature and
+///   an artifact directory; see [`artifact_dir`]).
+pub fn default_backend() -> Result<Box<dyn ComputeBackend>> {
+    backend_by_name(
+        std::env::var("FLASH_SINKHORN_BACKEND").as_deref().unwrap_or("native"),
+    )
+}
+
+/// Build a backend by name ("native" or "pjrt").
+pub fn backend_by_name(name: &str) -> Result<Box<dyn ComputeBackend>> {
+    match name {
+        "" | "native" => Ok(Box::new(native::NativeBackend::default())),
+        #[cfg(feature = "pjrt")]
+        "pjrt" => Ok(Box::new(runtime::Engine::new(artifact_dir())?)),
+        #[cfg(not(feature = "pjrt"))]
+        "pjrt" => anyhow::bail!(
+            "backend 'pjrt' requires building with `--features pjrt` (and `make artifacts`)"
+        ),
+        other => anyhow::bail!("unknown backend '{other}' (expected 'native' or 'pjrt')"),
+    }
 }
 
 /// Locate the artifact directory: `$FLASH_SINKHORN_ARTIFACTS`, else
@@ -70,4 +106,36 @@ pub fn artifact_dir() -> std::path::PathBuf {
         }
     }
     "artifacts".into()
+}
+
+/// True when PJRT artifacts are present on disk (used by artifact-dependent
+/// integration tests to skip with a notice instead of erroring).
+pub fn artifacts_available() -> bool {
+    artifact_dir().join("manifest.json").exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_backend_is_native() {
+        // (env override is additive; the default path must always work)
+        let b = backend_by_name("native").unwrap();
+        assert_eq!(b.name(), "native");
+        assert!(b.num_classes().is_none());
+        assert!(b.k_fused() > 0);
+    }
+
+    #[test]
+    fn unknown_backend_is_an_error() {
+        assert!(backend_by_name("cuda").is_err());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_backend_requires_feature() {
+        let err = backend_by_name("pjrt").unwrap_err().to_string();
+        assert!(err.contains("pjrt"), "{err}");
+    }
 }

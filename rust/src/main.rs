@@ -24,11 +24,11 @@ use flash_sinkhorn::ot::problem::OtProblem;
 use flash_sinkhorn::ot::solver::{Schedule, SinkhornSolver, SolverConfig};
 use flash_sinkhorn::otdd;
 use flash_sinkhorn::regression::{run_saddle_escape, SaddleConfig, ShuffledRegression};
-use flash_sinkhorn::runtime::Engine;
+use flash_sinkhorn::runtime::ComputeBackend;
 use flash_sinkhorn::util::cli::Args;
 
 const USAGE: &str = "\
-repro -- FlashSinkhorn: IO-aware entropic OT (Rust + JAX + Pallas)
+repro -- FlashSinkhorn: IO-aware entropic OT (multi-backend Rust)
 
 USAGE: repro [--config path.json] <command> [flags]
 
@@ -40,6 +40,10 @@ COMMANDS:
   regress  [--n 512] [--eps 0.1] [--steps 60]
   serve    [--jobs 64]
   info
+
+Backend: native (pure Rust) by default; set FLASH_SINKHORN_BACKEND=pjrt
+or `"backend": "pjrt"` in the config for the artifact engine (requires
+building with --features pjrt and running `make artifacts`).
 ";
 
 fn main() -> Result<()> {
@@ -65,7 +69,7 @@ fn main() -> Result<()> {
             args.ensure_known(&["n", "m", "d", "eps", "schedule"])?;
             let (n, m, d) = (args.usize("n", 500)?, args.usize("m", 600)?, args.usize("d", 16)?);
             let eps = args.f32("eps", 0.1)?;
-            let engine = Engine::new(cfg.artifact_dir.clone())?;
+            let backend = flash_sinkhorn::backend_by_name(&cfg.backend)?;
             let prob = OtProblem::uniform(
                 uniform_cloud(n, d, 1),
                 uniform_cloud(m, d, 2),
@@ -76,7 +80,7 @@ fn main() -> Result<()> {
             )?;
             let mut scfg = SolverConfig::from_section(&cfg.solver);
             scfg.schedule = Schedule::parse(&args.string("schedule", "alternating"));
-            let solver = SinkhornSolver::new(&engine, scfg);
+            let solver = SinkhornSolver::new(backend.as_ref(), scfg);
             let (_, report) = solver.solve(&prob)?;
             println!(
                 "OT_eps = {:.6}  iters = {}  delta = {:.2e}  converged = {}  bucket = {:?}  wall = {:?}",
@@ -89,13 +93,13 @@ fn main() -> Result<()> {
             );
         }
         "bench" => {
-            let engine = Engine::new(cfg.artifact_dir.clone())?;
+            let backend = flash_sinkhorn::backend_by_name(&cfg.backend)?;
             let id = args.positional.first().map(String::as_str).unwrap_or("all");
             let quick = args.has("quick");
             let ids: Vec<&str> = if id == "all" { bench::ALL_IDS.to_vec() } else { vec![id] };
             for id in ids {
                 println!("=== table/figure {id} ===");
-                let text = bench::run_table(&engine, id, &cfg.bench.out_dir, quick)?;
+                let text = bench::run_table(backend.as_ref(), id, &cfg.bench.out_dir, quick)?;
                 println!("{text}");
             }
         }
@@ -114,10 +118,11 @@ fn main() -> Result<()> {
             args.ensure_known(&["n", "d"])?;
             let n = args.usize("n", 400)?;
             let d = args.usize("d", 64)?;
-            let engine = Engine::new(cfg.artifact_dir.clone())?;
+            let backend = flash_sinkhorn::backend_by_name(&cfg.backend)?;
             let ds_a = LabeledDataset::synthetic(n, d, 10, 2.0, 100);
             let ds_b = LabeledDataset::synthetic(n, d, 10, 2.0, 200);
-            let rep = otdd::otdd_distance(&engine, &ds_a, &ds_b, 0.5, 0.5, 0.1, 200, 1e-4)?;
+            let rep =
+                otdd::otdd_distance(backend.as_ref(), &ds_a, &ds_b, 0.5, 0.5, 0.1, 200, 1e-4)?;
             println!(
                 "OTDD = {:.5}  (OT_ab {:.5}, OT_aa {:.5}, OT_bb {:.5}; {} label iters, {} inner W solves)",
                 rep.distance, rep.ot_ab, rep.ot_aa, rep.ot_bb, rep.total_iters, rep.w_matrix_solves
@@ -128,7 +133,7 @@ fn main() -> Result<()> {
             let n = args.usize("n", 512)?;
             let eps = args.f32("eps", 0.1)?;
             let steps = args.usize("steps", 60)?;
-            let engine = Engine::new(cfg.artifact_dir.clone())?;
+            let backend = flash_sinkhorn::backend_by_name(&cfg.backend)?;
             let (workload, w_star) = ShuffledRegression::synthetic(n, eps, 0.05, 7);
             let solver_cfg = SolverConfig {
                 anneal_factor: 0.9,
@@ -138,7 +143,7 @@ fn main() -> Result<()> {
             let w0: Vec<f32> =
                 (0..workload.d * workload.d).map(|_| (rng.normal() * 0.3) as f32).collect();
             let sc = SaddleConfig { max_steps: steps, ..SaddleConfig::default() };
-            let rep = run_saddle_escape(&engine, &workload, &solver_cfg, &w0, &sc)?;
+            let rep = run_saddle_escape(backend.as_ref(), &workload, &solver_cfg, &w0, &sc)?;
             for p in rep.trajectory.iter().filter(|p| p.step % 5 == 0 || p.lambda_min.is_some()) {
                 println!(
                     "step {:>3}  loss {:.5}  |g| {:.2e}  lambda_min {:>10}  {:?}",
@@ -197,20 +202,28 @@ fn main() -> Result<()> {
             );
         }
         "info" => {
-            let engine = Engine::new(cfg.artifact_dir.clone())?;
-            let m = engine.manifest();
+            let backend = flash_sinkhorn::backend_by_name(&cfg.backend)?;
+            let b = backend.as_ref();
+            let router = b.router();
             println!(
-                "platform: {}\nartifacts: {} entries (manifest v{}, k_fused={}, V={})",
-                engine.platform(),
-                m.entries.len(),
-                m.version,
-                m.k_fused,
-                m.num_classes
+                "backend: {}  (k_fused={}, classes={})",
+                b.name(),
+                b.k_fused(),
+                b.num_classes().map(|v| v.to_string()).unwrap_or_else(|| "any".into()),
             );
-            let mut ops: Vec<&String> = m.entries.values().map(|e| &e.op).collect();
-            ops.sort();
-            ops.dedup();
-            println!("ops: {ops:?}");
+            if router.is_exact() {
+                println!("routing: exact-fit (any (n, m, d); no padding)");
+            } else {
+                println!("routing: {} precompiled buckets", router.buckets().len());
+                for bucket in router.buckets() {
+                    println!("  {} x {} x {}", bucket.n, bucket.m, bucket.d);
+                }
+            }
+            if b.name() == "native" {
+                let mut ops = flash_sinkhorn::native::NativeBackend::default().ops();
+                ops.sort();
+                println!("ops: {ops:?}");
+            }
         }
         other => {
             print!("{USAGE}");

@@ -1,0 +1,473 @@
+//! Cache-tiled streaming kernels for the native backend.
+//!
+//! Every kernel is a row-wise reduction over the implicit score matrix
+//!
+//! ```text
+//! S_ij = scale * <x_i, y_j> + bias_j + extra(i, j)
+//! ```
+//!
+//! evaluated tile-by-tile with online-softmax accumulators (running max +
+//! rescaled sums), so nothing of size n x m is ever materialized — the
+//! paper's SRAM-tiling structure (Algorithms 1-5) transplanted to CPU
+//! caches.  Scores and dot products are f32 (matching the GPU kernels);
+//! the streaming sums accumulate in f64, which is what lets the f32 solver
+//! track the dense f64 reference to ~1e-4 (validated by
+//! `tests/native_backend.rs`).
+//!
+//! Zero-weight padding stays *exact*: `safe_ln(0) = -1e30`, so a padded
+//! row/column contributes `exp(-1e30 - max) == 0.0` to every accumulator
+//! (the same `NEG_INF` convention as `python/compile/kernels/ref.py`).
+//!
+//! Row blocks are distributed over scoped threads when the problem is big
+//! enough to pay for it; within a block, columns stream in tiles so the
+//! y-tile stays cache-resident across the row block.
+
+/// log(0) sentinel shared with the Python reference kernels.
+pub const NEG_INF: f32 = -1e30;
+
+/// `ln w` with `ln 0 -> NEG_INF` (zero-weight padding contract).
+#[inline]
+pub fn safe_ln(w: f32) -> f32 {
+    if w > 0.0 {
+        w.ln()
+    } else {
+        NEG_INF
+    }
+}
+
+#[inline]
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(u, v)| u * v).sum()
+}
+
+/// Tiling + threading knobs for the streaming kernels.
+#[derive(Debug, Clone)]
+pub struct TileCfg {
+    /// Rows per inner block (accumulator state kept in registers/L1).
+    pub block_rows: usize,
+    /// Streamed columns per tile (y-tile kept cache-resident per block).
+    pub block_cols: usize,
+    /// Worker threads; 0 = one per available core.
+    pub threads: usize,
+    /// Minimum n*m*d before row blocks fan out across threads.
+    pub par_threshold: usize,
+}
+
+impl Default for TileCfg {
+    fn default() -> Self {
+        Self { block_rows: 32, block_cols: 256, threads: 0, par_threshold: 1 << 18 }
+    }
+}
+
+impl TileCfg {
+    fn effective_threads(&self, rows: usize, cols: usize, d: usize) -> usize {
+        let work = rows.saturating_mul(cols).saturating_mul(d.max(1));
+        if work < self.par_threshold {
+            return 1;
+        }
+        let hw = match self.threads {
+            0 => std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1),
+            t => t,
+        };
+        hw.clamp(1, rows.max(1))
+    }
+}
+
+/// Split `out1` (row width `w1`) and `out2` (row width 1) into contiguous
+/// row chunks and run `f(start, end, chunk1, chunk2)` on each, fanning out
+/// over scoped threads when `threads > 1`.
+fn run_row_chunks<F>(
+    n_rows: usize,
+    w1: usize,
+    threads: usize,
+    out1: &mut [f32],
+    out2: &mut [f32],
+    f: F,
+) where
+    F: Fn(usize, usize, &mut [f32], &mut [f32]) + Sync,
+{
+    debug_assert_eq!(out1.len(), n_rows * w1);
+    debug_assert_eq!(out2.len(), n_rows);
+    if n_rows == 0 {
+        return;
+    }
+    if threads <= 1 {
+        f(0, n_rows, out1, out2);
+        return;
+    }
+    let chunk = n_rows.div_ceil(threads);
+    std::thread::scope(|scope| {
+        let mut rest1 = out1;
+        let mut rest2 = out2;
+        let mut start = 0usize;
+        while start < n_rows {
+            let rows = chunk.min(n_rows - start);
+            let (c1, r1) = std::mem::take(&mut rest1).split_at_mut(rows * w1);
+            let (c2, r2) = std::mem::take(&mut rest2).split_at_mut(rows);
+            rest1 = r1;
+            rest2 = r2;
+            let fref = &f;
+            let s0 = start;
+            scope.spawn(move || fref(s0, s0 + rows, c1, c2));
+            start += rows;
+        }
+    });
+}
+
+/// Streaming potential update (paper eq. 10/11):
+///
+/// ```text
+/// out_i = -eps * LSE_j( scale * <x_i, y_j> + bias_j + extra(i, j) )
+/// ```
+///
+/// with `bias_j = ghat_j / eps + ln b_j` precomputed by the caller.  The
+/// plain Sinkhorn f-update is `scale = 2/eps, extra = 0`; the OTDD label
+/// update adds `extra(i, j) = -(lam2/eps) W[l_i, l_j]`.
+#[allow(clippy::too_many_arguments)]
+pub fn lse_update<E>(
+    x: &[f32],
+    y: &[f32],
+    bias: &[f32],
+    n: usize,
+    m: usize,
+    d: usize,
+    eps: f32,
+    scale: f32,
+    extra: E,
+    cfg: &TileCfg,
+    out: &mut [f32],
+) where
+    E: Fn(usize, usize) -> f32 + Sync,
+{
+    let threads = cfg.effective_threads(n, m, d);
+    let mut dummy = vec![0.0f32; n];
+    let br = cfg.block_rows.max(1);
+    let bc = cfg.block_cols.max(1);
+    run_row_chunks(n, 1, threads, out, &mut dummy, |r0, r1, chunk, _| {
+        let mut mx = vec![NEG_INF; br];
+        let mut acc = vec![0.0f64; br];
+        let mut i0 = r0;
+        while i0 < r1 {
+            let rb = br.min(r1 - i0);
+            mx[..rb].fill(NEG_INF);
+            acc[..rb].fill(0.0);
+            let mut j0 = 0usize;
+            while j0 < m {
+                let jb = bc.min(m - j0);
+                for ii in 0..rb {
+                    let i = i0 + ii;
+                    let xi = &x[i * d..(i + 1) * d];
+                    let (mut mxi, mut acci) = (mx[ii], acc[ii]);
+                    for j in j0..j0 + jb {
+                        let s = scale * dot(xi, &y[j * d..(j + 1) * d]) + bias[j] + extra(i, j);
+                        if s <= mxi {
+                            acci += f64::from(s - mxi).exp();
+                        } else {
+                            acci = acci * f64::from(mxi - s).exp() + 1.0;
+                            mxi = s;
+                        }
+                    }
+                    mx[ii] = mxi;
+                    acc[ii] = acci;
+                }
+                j0 += jb;
+            }
+            for ii in 0..rb {
+                chunk[i0 - r0 + ii] = -eps * (mx[ii] + acc[ii].ln() as f32);
+            }
+            i0 += rb;
+        }
+    });
+}
+
+/// Streaming transport application (paper Algorithms 2/4/5): for each row i
+/// of the implicit plan `P_ij = a_i b_j exp((fhat_i + ghat_j + s*<x,y> +
+/// eps*extra)/eps)` compute
+///
+/// ```text
+/// pv_i = sum_j P_ij * weight(i, j) * v_j      (v: m x p)
+/// r_i  = sum_j P_ij                           (induced marginal)
+/// ```
+///
+/// using online-max rescaled accumulators, so arbitrary (non-converged)
+/// potentials stay stable.  `weight` realizes the Hadamard product of
+/// Algorithm 5 (`weight = <A_i, B_j>`); plain applications pass 1.
+#[allow(clippy::too_many_arguments)]
+pub fn apply_rows<E, W>(
+    x: &[f32],
+    y: &[f32],
+    fhat: &[f32],
+    ghat: &[f32],
+    a: &[f32],
+    b: &[f32],
+    v: &[f32],
+    p: usize,
+    n: usize,
+    m: usize,
+    d: usize,
+    eps: f32,
+    scale: f32,
+    extra: E,
+    weight: W,
+    cfg: &TileCfg,
+    pv: &mut [f32],
+    r: &mut [f32],
+) where
+    E: Fn(usize, usize) -> f32 + Sync,
+    W: Fn(usize, usize) -> f32 + Sync,
+{
+    debug_assert_eq!(v.len(), m * p);
+    debug_assert_eq!(pv.len(), n * p);
+    debug_assert_eq!(r.len(), n);
+    // column bias and row constant: P_ij = exp(rowc_i) * exp(u_ij),
+    // u_ij = scale*<x_i,y_j> + bias_j + extra(i,j)
+    let bias: Vec<f32> = (0..m).map(|j| ghat[j] / eps + safe_ln(b[j])).collect();
+    let threads = cfg.effective_threads(n, m, d + p);
+    let bc = cfg.block_cols.max(1);
+    run_row_chunks(n, p, threads, pv, r, |r0, r1, pv_chunk, r_chunk| {
+        let mut accv = vec![0.0f64; p];
+        for i in r0..r1 {
+            let xi = &x[i * d..(i + 1) * d];
+            let mut mx = NEG_INF;
+            let mut accr = 0.0f64;
+            accv.fill(0.0);
+            let mut j0 = 0usize;
+            while j0 < m {
+                let jb = bc.min(m - j0);
+                for j in j0..j0 + jb {
+                    let s = scale * dot(xi, &y[j * d..(j + 1) * d]) + bias[j] + extra(i, j);
+                    let w = if s <= mx {
+                        f64::from(s - mx).exp()
+                    } else {
+                        let rescale = f64::from(mx - s).exp();
+                        accr *= rescale;
+                        for av in accv.iter_mut() {
+                            *av *= rescale;
+                        }
+                        mx = s;
+                        1.0
+                    };
+                    accr += w;
+                    if p > 0 {
+                        let wv = w * f64::from(weight(i, j));
+                        let vj = &v[j * p..(j + 1) * p];
+                        for (av, &vv) in accv.iter_mut().zip(vj) {
+                            *av += wv * f64::from(vv);
+                        }
+                    }
+                }
+                j0 += jb;
+            }
+            // single exp of the summed log factors: splitting into
+            // exp(rowc)*exp(mx) could produce inf * 0 = NaN at extreme
+            // potentials
+            let base = (f64::from(fhat[i] / eps + safe_ln(a[i])) + f64::from(mx)).exp();
+            r_chunk[i - r0] = (base * accr) as f32;
+            for (o, &av) in pv_chunk[(i - r0) * p..(i - r0 + 1) * p].iter_mut().zip(&accv) {
+                *o = (base * av) as f32;
+            }
+        }
+    });
+}
+
+/// Unfused two-pass baseline (online/KeOps-like plan): pass 1 finds the
+/// row max, pass 2 re-computes every score for the stabilized sum.  Same
+/// arithmetic as [`lse_update`], twice the dot products, no fusion and no
+/// threading — kept as an honest baseline for the speedup tables.
+#[allow(clippy::too_many_arguments)]
+pub fn lse_update_twopass(
+    x: &[f32],
+    y: &[f32],
+    bias: &[f32],
+    n: usize,
+    m: usize,
+    d: usize,
+    eps: f32,
+    scale: f32,
+    out: &mut [f32],
+) {
+    for i in 0..n {
+        let xi = &x[i * d..(i + 1) * d];
+        let mut mx = NEG_INF;
+        for j in 0..m {
+            let s = scale * dot(xi, &y[j * d..(j + 1) * d]) + bias[j];
+            mx = mx.max(s);
+        }
+        let mut acc = 0.0f64;
+        for j in 0..m {
+            let s = scale * dot(xi, &y[j * d..(j + 1) * d]) + bias[j];
+            acc += f64::from(s - mx).exp();
+        }
+        out[i] = -eps * (mx + acc.ln() as f32);
+    }
+}
+
+/// Tensorized baseline: materializes the full n x m score matrix, then
+/// reduces it row-wise.  O(n m) memory — the plan the paper's flash kernels
+/// exist to avoid; kept for plan-structure comparisons.
+#[allow(clippy::too_many_arguments)]
+pub fn lse_update_dense(
+    x: &[f32],
+    y: &[f32],
+    bias: &[f32],
+    n: usize,
+    m: usize,
+    d: usize,
+    eps: f32,
+    scale: f32,
+    out: &mut [f32],
+) {
+    let mut scores = vec![0.0f32; n * m];
+    for i in 0..n {
+        let xi = &x[i * d..(i + 1) * d];
+        let row = &mut scores[i * m..(i + 1) * m];
+        for (j, slot) in row.iter_mut().enumerate() {
+            *slot = scale * dot(xi, &y[j * d..(j + 1) * d]) + bias[j];
+        }
+    }
+    for i in 0..n {
+        let row = &scores[i * m..(i + 1) * m];
+        let mx = row.iter().cloned().fold(NEG_INF, f32::max);
+        let acc: f64 = row.iter().map(|&s| f64::from(s - mx).exp()).sum();
+        out[i] = -eps * (mx + acc.ln() as f32);
+    }
+}
+
+/// Sup-norm change `max_i |new_i - old_i|` over rows with positive weight
+/// (zero-weight padding rows are excluded so padded solves still converge).
+pub fn masked_delta(new: &[f32], old: &[f32], w: &[f32]) -> f32 {
+    let mut delta = 0.0f32;
+    for i in 0..new.len() {
+        if w[i] > 0.0 {
+            delta = delta.max((new[i] - old[i]).abs());
+        }
+    }
+    delta
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dense_lse_row(scores: &[f32]) -> f32 {
+        let mx = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        mx + scores.iter().map(|&s| f64::from(s - mx).exp()).sum::<f64>().ln() as f32
+    }
+
+    #[test]
+    fn lse_update_matches_dense_reduction() {
+        let (n, m, d) = (5, 17, 3);
+        let x: Vec<f32> = (0..n * d).map(|i| ((i * 7 % 13) as f32) * 0.1 - 0.5).collect();
+        let y: Vec<f32> = (0..m * d).map(|i| ((i * 5 % 11) as f32) * 0.1 - 0.4).collect();
+        let bias: Vec<f32> = (0..m).map(|j| (j as f32) * 0.03 - 0.2).collect();
+        let eps = 0.25f32;
+        let scale = 2.0 / eps;
+        let mut out = vec![0.0f32; n];
+        let cfg = TileCfg { block_rows: 2, block_cols: 5, threads: 1, ..TileCfg::default() };
+        lse_update(&x, &y, &bias, n, m, d, eps, scale, |_, _| 0.0, &cfg, &mut out);
+        for i in 0..n {
+            let scores: Vec<f32> = (0..m)
+                .map(|j| scale * dot(&x[i * d..(i + 1) * d], &y[j * d..(j + 1) * d]) + bias[j])
+                .collect();
+            let want = -eps * dense_lse_row(&scores);
+            assert!((out[i] - want).abs() < 1e-5, "row {i}: {} vs {want}", out[i]);
+        }
+    }
+
+    #[test]
+    fn lse_update_is_tile_and_thread_invariant() {
+        let (n, m, d) = (23, 41, 4);
+        let x: Vec<f32> = (0..n * d).map(|i| ((i * 31 % 17) as f32) * 0.07).collect();
+        let y: Vec<f32> = (0..m * d).map(|i| ((i * 13 % 19) as f32) * 0.05).collect();
+        let bias: Vec<f32> = (0..m).map(|j| (j as f32) * 0.01).collect();
+        let run = |cfg: &TileCfg| {
+            let mut out = vec![0.0f32; n];
+            lse_update(&x, &y, &bias, n, m, d, 0.1, 20.0, |_, _| 0.0, cfg, &mut out);
+            out
+        };
+        let base = run(&TileCfg { block_rows: 1, block_cols: 1, threads: 1, par_threshold: 0 });
+        for cfg in [
+            TileCfg { block_rows: 7, block_cols: 8, threads: 1, par_threshold: 0 },
+            TileCfg { block_rows: 64, block_cols: 512, threads: 4, par_threshold: 0 },
+        ] {
+            // identical summation order per row => bitwise-equal results
+            assert_eq!(run(&cfg), base);
+        }
+    }
+
+    #[test]
+    fn zero_weight_columns_contribute_nothing() {
+        let (n, m, d) = (3, 6, 2);
+        let x = vec![0.5f32; n * d];
+        let mut y = vec![0.25f32; m * d];
+        let mut b = vec![1.0f32 / 4.0; m];
+        // poison two padded columns: huge coordinates but zero weight
+        for j in 4..6 {
+            b[j] = 0.0;
+            y[j * d..(j + 1) * d].fill(1e3);
+        }
+        let eps = 0.1f32;
+        let bias: Vec<f32> = (0..m).map(|j| safe_ln(b[j])).collect();
+        let bias4: Vec<f32> = bias[..4].to_vec();
+        let cfg = TileCfg { threads: 1, ..TileCfg::default() };
+        let mut full = vec![0.0f32; n];
+        let mut trimmed = vec![0.0f32; n];
+        lse_update(&x, &y, &bias, n, m, d, eps, 2.0 / eps, |_, _| 0.0, &cfg, &mut full);
+        lse_update(&x, &y[..4 * d], &bias4, n, 4, d, eps, 2.0 / eps, |_, _| 0.0, &cfg, &mut trimmed);
+        assert_eq!(full, trimmed);
+    }
+
+    #[test]
+    fn apply_rows_matches_dense_plan() {
+        let (n, m, d, p) = (4, 9, 3, 2);
+        let x: Vec<f32> = (0..n * d).map(|i| ((i % 5) as f32) * 0.2).collect();
+        let y: Vec<f32> = (0..m * d).map(|i| ((i % 7) as f32) * 0.1).collect();
+        let fhat: Vec<f32> = (0..n).map(|i| -0.1 * i as f32).collect();
+        let ghat: Vec<f32> = (0..m).map(|j| 0.05 * j as f32 - 0.3).collect();
+        let a = vec![1.0f32 / n as f32; n];
+        let b = vec![1.0f32 / m as f32; m];
+        let v: Vec<f32> = (0..m * p).map(|i| (i as f32) * 0.1 - 0.4).collect();
+        let eps = 0.2f32;
+        let cfg = TileCfg { block_cols: 4, threads: 1, ..TileCfg::default() };
+        let mut pv = vec![0.0f32; n * p];
+        let mut r = vec![0.0f32; n];
+        apply_rows(
+            &x, &y, &fhat, &ghat, &a, &b, &v, p, n, m, d, eps, 2.0 / eps,
+            |_, _| 0.0, |_, _| 1.0, &cfg, &mut pv, &mut r,
+        );
+        // dense reference
+        for i in 0..n {
+            let mut want_r = 0.0f64;
+            let mut want_pv = vec![0.0f64; p];
+            for j in 0..m {
+                let logp = f64::from(safe_ln(a[i]))
+                    + f64::from(safe_ln(b[j]))
+                    + f64::from(
+                        fhat[i]
+                            + ghat[j]
+                            + 2.0 * dot(&x[i * d..(i + 1) * d], &y[j * d..(j + 1) * d]),
+                    ) / f64::from(eps);
+                let pij = logp.exp();
+                want_r += pij;
+                for t in 0..p {
+                    want_pv[t] += pij * f64::from(v[j * p + t]);
+                }
+            }
+            assert!((f64::from(r[i]) - want_r).abs() < 1e-6, "r[{i}]");
+            for t in 0..p {
+                assert!(
+                    (f64::from(pv[i * p + t]) - want_pv[t]).abs() < 1e-6,
+                    "pv[{i},{t}]"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn masked_delta_ignores_zero_weight_rows() {
+        let new = [1.0f32, 5.0, 2.0];
+        let old = [0.5f32, 0.0, 2.0];
+        let w = [0.5f32, 0.0, 0.5];
+        assert_eq!(masked_delta(&new, &old, &w), 0.5);
+    }
+}

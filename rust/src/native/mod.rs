@@ -1,0 +1,680 @@
+//! The pure-Rust compute backend: every fused streaming op of the artifact
+//! contract evaluated as cache-tiled online-LogSumExp passes over point
+//! clouds (see [`kernels`]).  No FFI, no Python, no precompiled shapes —
+//! ops accept any (n, m, d) and the router runs in exact-fit mode, so
+//! requests are never padded.
+//!
+//! ## Op table (artifact-manifest contract)
+//!
+//! | op | inputs | outputs |
+//! |----|--------|---------|
+//! | `alternating_step`, `symmetric_step`, `online_step`, `dense_step` | x, y, fhat, ghat, a, b, eps | fhat', ghat', df, dg |
+//! | `k{k}_alternating`, `k{k}_symmetric` | same | same (k inner steps) |
+//! | `apply_pv_p1` / `apply_pv_pd` | x, y, fhat, ghat, a, b, V, eps | PV, r |
+//! | `apply_ptu_p1` / `apply_ptu_pd` | x, y, fhat, ghat, a, b, U, eps | P^T U, c |
+//! | `hadamard_pv` | x, y, fhat, ghat, a, b, A, B, V, eps | (P . A B^T) V, r |
+//! | `grad_x`, `online_grad`, `dense_grad` | x, y, fhat, ghat, a, b, eps | grad, r |
+//! | `marginals` | x, y, fhat, ghat, a, b, eps | r, c |
+//! | `schur_matvec` | x, y, fhat, ghat, a, b, ahat, bhat, w, tau, eps | S_tau w |
+//! | `apply_plan` | x, y, fhat, ghat, a, b, eps | P (n x m, dense; debug/test) |
+//! | `alternating_step_label` | x, y, fhat, ghat, a, b, li, lj, W, lam1, lam2, eps | fhat', ghat', df, dg |
+//! | `grad_x_label` | same as label step | grad, r |
+//!
+//! `online_*` is the unfused two-pass (KeOps-like) baseline and `dense_*`
+//! the tensorized baseline that materializes the n x m interaction — kept
+//! so the speedup tables compare real execution plans on every backend.
+
+pub mod kernels;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::router::Router;
+use crate::runtime::backend::{op_of_key, ComputeBackend};
+use crate::runtime::Tensor;
+
+use kernels::{apply_rows, lse_update, lse_update_dense, lse_update_twopass, masked_delta, safe_ln, TileCfg};
+
+/// Which execution plan evaluates a Sinkhorn step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Plan {
+    /// Fused tiled streaming pass (the FlashSinkhorn plan).
+    Flash,
+    /// Unfused two-pass row reduction (online/KeOps-like baseline).
+    Online,
+    /// Materialized n x m score matrix (tensorized baseline).
+    Dense,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum StepSchedule {
+    Alternating,
+    Symmetric,
+}
+
+/// Pure-Rust implementation of [`ComputeBackend`].
+#[derive(Debug, Clone)]
+pub struct NativeBackend {
+    /// Inner iterations claimed by the fused `k{k}_*` ops.
+    pub k_fused: usize,
+    /// Tiling / threading configuration for the streaming kernels.
+    pub tile: TileCfg,
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        Self { k_fused: 10, tile: TileCfg::default() }
+    }
+}
+
+/// Ops the native backend evaluates (plus the `k{k}_*` fused family).
+const NATIVE_OPS: &[&str] = &[
+    "alternating_step",
+    "symmetric_step",
+    "online_step",
+    "dense_step",
+    "apply_pv_p1",
+    "apply_pv_pd",
+    "apply_ptu_p1",
+    "apply_ptu_pd",
+    "hadamard_pv",
+    "grad_x",
+    "online_grad",
+    "dense_grad",
+    "marginals",
+    "schur_matvec",
+    "apply_plan",
+    "alternating_step_label",
+    "grad_x_label",
+];
+
+fn parse_fused(op: &str) -> Option<(usize, StepSchedule)> {
+    let rest = op.strip_prefix('k')?;
+    let (num, kind) = rest.split_once('_')?;
+    let k: usize = num.parse().ok()?;
+    match kind {
+        "alternating" => Some((k, StepSchedule::Alternating)),
+        "symmetric" => Some((k, StepSchedule::Symmetric)),
+        _ => None,
+    }
+}
+
+impl NativeBackend {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// All op names this backend answers `has() == true` for.
+    pub fn ops(&self) -> Vec<String> {
+        let mut v: Vec<String> = NATIVE_OPS.iter().map(|s| s.to_string()).collect();
+        v.push(format!("k{}_alternating", self.k_fused));
+        v.push(format!("k{}_symmetric", self.k_fused));
+        v
+    }
+
+    /// One potential update `out = -eps LSE_row(...)` under a plan.
+    #[allow(clippy::too_many_arguments)]
+    fn update(
+        &self,
+        plan: Plan,
+        x: &[f32],
+        y: &[f32],
+        ghat: &[f32],
+        b: &[f32],
+        n: usize,
+        m: usize,
+        d: usize,
+        eps: f32,
+        out: &mut [f32],
+    ) {
+        let bias: Vec<f32> = (0..m).map(|j| ghat[j] / eps + safe_ln(b[j])).collect();
+        let scale = 2.0 / eps;
+        match plan {
+            Plan::Flash => {
+                lse_update(x, y, &bias, n, m, d, eps, scale, |_, _| 0.0, &self.tile, out)
+            }
+            Plan::Online => lse_update_twopass(x, y, &bias, n, m, d, eps, scale, out),
+            Plan::Dense => lse_update_dense(x, y, &bias, n, m, d, eps, scale, out),
+        }
+    }
+
+    fn step(
+        &self,
+        plan: Plan,
+        schedule: StepSchedule,
+        k: usize,
+        inputs: &[Tensor],
+        op: &str,
+    ) -> Result<Vec<Tensor>> {
+        let c = unpack_core(inputs, 7, op)?;
+        let eps = scalar(&inputs[6], op, "eps")?;
+        let mut fcur = c.fhat.to_vec();
+        let mut gcur = c.ghat.to_vec();
+        let mut fnew = vec![0.0f32; c.n];
+        let mut gnew = vec![0.0f32; c.m];
+        let (mut df, mut dg) = (0.0f32, 0.0f32);
+        for _ in 0..k.max(1) {
+            match schedule {
+                StepSchedule::Alternating => {
+                    self.update(plan, c.x, c.y, &gcur, c.b, c.n, c.m, c.d, eps, &mut fnew);
+                    self.update(plan, c.y, c.x, &fnew, c.a, c.m, c.n, c.d, eps, &mut gnew);
+                }
+                StepSchedule::Symmetric => {
+                    self.update(plan, c.x, c.y, &gcur, c.b, c.n, c.m, c.d, eps, &mut fnew);
+                    self.update(plan, c.y, c.x, &fcur, c.a, c.m, c.n, c.d, eps, &mut gnew);
+                    for (o, &f) in fnew.iter_mut().zip(&fcur) {
+                        *o = 0.5 * (*o + f);
+                    }
+                    for (o, &g) in gnew.iter_mut().zip(&gcur) {
+                        *o = 0.5 * (*o + g);
+                    }
+                }
+            }
+            df = masked_delta(&fnew, &fcur, c.a);
+            dg = masked_delta(&gnew, &gcur, c.b);
+            std::mem::swap(&mut fcur, &mut fnew);
+            std::mem::swap(&mut gcur, &mut gnew);
+        }
+        Ok(vec![
+            Tensor::vector(fcur),
+            Tensor::vector(gcur),
+            Tensor::scalar(df),
+            Tensor::scalar(dg),
+        ])
+    }
+
+    fn step_label(&self, inputs: &[Tensor], op: &str) -> Result<Vec<Tensor>> {
+        let c = unpack_core(inputs, 12, op)?;
+        let lbl = unpack_labels(inputs, c.n, c.m, op)?;
+        let eps = scalar(&inputs[11], op, "eps")?;
+        let mut fcur = c.fhat.to_vec();
+        let mut gcur = c.ghat.to_vec();
+        let mut fnew = vec![0.0f32; c.n];
+        let mut gnew = vec![0.0f32; c.m];
+        self.label_update_f(&c, &lbl, &gcur, eps, &mut fnew);
+        self.label_update_g(&c, &lbl, &fnew, eps, &mut gnew);
+        let df = masked_delta(&fnew, &fcur, c.a);
+        let dg = masked_delta(&gnew, &gcur, c.b);
+        std::mem::swap(&mut fcur, &mut fnew);
+        std::mem::swap(&mut gcur, &mut gnew);
+        Ok(vec![
+            Tensor::vector(fcur),
+            Tensor::vector(gcur),
+            Tensor::scalar(df),
+            Tensor::scalar(dg),
+        ])
+    }
+
+    /// Label-augmented f-update (rows = x): extra(i, j) = -(lam2/eps) W[li_i, lj_j].
+    fn label_update_f(
+        &self,
+        c: &Core<'_>,
+        l: &LabelCtx<'_>,
+        ghat: &[f32],
+        eps: f32,
+        out: &mut [f32],
+    ) {
+        let bias: Vec<f32> = (0..c.m).map(|j| ghat[j] / eps + safe_ln(c.b[j])).collect();
+        let scale = 2.0 * l.lam1 / eps;
+        let (li, lj, w, v, l2e) = (l.li, l.lj, l.w, l.v, l.lam2 / eps);
+        lse_update(
+            c.x,
+            c.y,
+            &bias,
+            c.n,
+            c.m,
+            c.d,
+            eps,
+            scale,
+            |i, j| -l2e * w[li[i] as usize * v + lj[j] as usize],
+            &self.tile,
+            out,
+        );
+    }
+
+    /// Label-augmented g-update (rows = y): extra(j, i) = -(lam2/eps) W[li_i, lj_j].
+    fn label_update_g(&self, c: &Core<'_>, l: &LabelCtx<'_>, fhat: &[f32], eps: f32, out: &mut [f32]) {
+        let bias: Vec<f32> = (0..c.n).map(|i| fhat[i] / eps + safe_ln(c.a[i])).collect();
+        let scale = 2.0 * l.lam1 / eps;
+        let (li, lj, w, v, l2e) = (l.li, l.lj, l.w, l.v, l.lam2 / eps);
+        lse_update(
+            c.y,
+            c.x,
+            &bias,
+            c.m,
+            c.n,
+            c.d,
+            eps,
+            scale,
+            |j, i| -l2e * w[li[i] as usize * v + lj[j] as usize],
+            &self.tile,
+            out,
+        );
+    }
+
+    /// (P V, r) with V of width p, forward orientation.
+    #[allow(clippy::too_many_arguments)]
+    fn pv(&self, c: &Core<'_>, v: &[f32], p: usize, eps: f32) -> (Vec<f32>, Vec<f32>) {
+        let mut pv = vec![0.0f32; c.n * p];
+        let mut r = vec![0.0f32; c.n];
+        apply_rows(
+            c.x, c.y, c.fhat, c.ghat, c.a, c.b, v, p, c.n, c.m, c.d, eps, 2.0 / eps,
+            |_, _| 0.0, |_, _| 1.0, &self.tile, &mut pv, &mut r,
+        );
+        (pv, r)
+    }
+
+    /// (P^T U, c) with U of width p: same kernel with roles swapped.
+    fn ptu(&self, c: &Core<'_>, u: &[f32], p: usize, eps: f32) -> (Vec<f32>, Vec<f32>) {
+        let mut ptu = vec![0.0f32; c.m * p];
+        let mut col = vec![0.0f32; c.m];
+        apply_rows(
+            c.y, c.x, c.ghat, c.fhat, c.b, c.a, u, p, c.m, c.n, c.d, eps, 2.0 / eps,
+            |_, _| 0.0, |_, _| 1.0, &self.tile, &mut ptu, &mut col,
+        );
+        (ptu, col)
+    }
+}
+
+impl ComputeBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn k_fused(&self) -> usize {
+        self.k_fused
+    }
+
+    fn num_classes(&self) -> Option<usize> {
+        None
+    }
+
+    fn router(&self) -> Router {
+        Router::exact()
+    }
+
+    fn has(&self, key: &str) -> bool {
+        let op = op_of_key(key);
+        NATIVE_OPS.contains(&op) || parse_fused(op).is_some()
+    }
+
+    fn call(&self, key: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let op = op_of_key(key);
+        if let Some((k, schedule)) = parse_fused(op) {
+            return self.step(Plan::Flash, schedule, k, inputs, op);
+        }
+        match op {
+            "alternating_step" => self.step(Plan::Flash, StepSchedule::Alternating, 1, inputs, op),
+            "symmetric_step" => self.step(Plan::Flash, StepSchedule::Symmetric, 1, inputs, op),
+            "online_step" => self.step(Plan::Online, StepSchedule::Alternating, 1, inputs, op),
+            "dense_step" => self.step(Plan::Dense, StepSchedule::Alternating, 1, inputs, op),
+            "apply_pv_p1" | "apply_pv_pd" => {
+                let c = unpack_core(inputs, 8, op)?;
+                let p = if op.ends_with("p1") { 1 } else { c.d };
+                let v = mat(&inputs[6], c.m, p, op, "V")?;
+                let eps = scalar(&inputs[7], op, "eps")?;
+                let (pv, r) = self.pv(&c, v, p, eps);
+                Ok(vec![Tensor::matrix(c.n, p, pv), Tensor::vector(r)])
+            }
+            "apply_ptu_p1" | "apply_ptu_pd" => {
+                let c = unpack_core(inputs, 8, op)?;
+                let p = if op.ends_with("p1") { 1 } else { c.d };
+                let u = mat(&inputs[6], c.n, p, op, "U")?;
+                let eps = scalar(&inputs[7], op, "eps")?;
+                let (ptu, col) = self.ptu(&c, u, p, eps);
+                Ok(vec![Tensor::matrix(c.m, p, ptu), Tensor::vector(col)])
+            }
+            "hadamard_pv" => {
+                let c = unpack_core(inputs, 10, op)?;
+                let aa = mat(&inputs[6], c.n, c.d, op, "A")?;
+                let bb = mat(&inputs[7], c.m, c.d, op, "B")?;
+                let v = mat(&inputs[8], c.m, c.d, op, "V")?;
+                let eps = scalar(&inputs[9], op, "eps")?;
+                let d = c.d;
+                let mut pv = vec![0.0f32; c.n * d];
+                let mut r = vec![0.0f32; c.n];
+                apply_rows(
+                    c.x, c.y, c.fhat, c.ghat, c.a, c.b, v, d, c.n, c.m, d, eps, 2.0 / eps,
+                    |_, _| 0.0,
+                    |i, j| {
+                        aa[i * d..(i + 1) * d]
+                            .iter()
+                            .zip(&bb[j * d..(j + 1) * d])
+                            .map(|(u, w)| u * w)
+                            .sum()
+                    },
+                    &self.tile,
+                    &mut pv,
+                    &mut r,
+                );
+                Ok(vec![Tensor::matrix(c.n, d, pv), Tensor::vector(r)])
+            }
+            "grad_x" | "online_grad" | "dense_grad" => {
+                let c = unpack_core(inputs, 7, op)?;
+                let eps = scalar(&inputs[6], op, "eps")?;
+                let (py, r) = self.pv(&c, c.y, c.d, eps);
+                let mut grad = vec![0.0f32; c.n * c.d];
+                for i in 0..c.n {
+                    for t in 0..c.d {
+                        grad[i * c.d + t] =
+                            2.0 * (r[i] * c.x[i * c.d + t] - py[i * c.d + t]);
+                    }
+                }
+                Ok(vec![Tensor::matrix(c.n, c.d, grad), Tensor::vector(r)])
+            }
+            "marginals" => {
+                let c = unpack_core(inputs, 7, op)?;
+                let eps = scalar(&inputs[6], op, "eps")?;
+                let ones_m = vec![1.0f32; c.m];
+                let ones_n = vec![1.0f32; c.n];
+                let (_, r) = self.pv(&c, &ones_m, 1, eps);
+                let (_, col) = self.ptu(&c, &ones_n, 1, eps);
+                Ok(vec![Tensor::vector(r), Tensor::vector(col)])
+            }
+            "schur_matvec" => {
+                let c = unpack_core(inputs, 11, op)?;
+                let ahat = vecn(&inputs[6], c.n, op, "ahat")?;
+                let bhat = vecn(&inputs[7], c.m, op, "bhat")?;
+                let w2 = vecn(&inputs[8], c.m, op, "w")?;
+                let tau = scalar(&inputs[9], op, "tau")?;
+                let eps = scalar(&inputs[10], op, "eps")?;
+                let (pw, _) = self.pv(&c, w2, 1, eps);
+                let t: Vec<f32> = (0..c.n)
+                    .map(|i| if ahat[i] > 0.0 { pw[i] / ahat[i] } else { 0.0 })
+                    .collect();
+                let (ptt, _) = self.ptu(&c, &t, 1, eps);
+                let out: Vec<f32> = (0..c.m)
+                    .map(|j| (bhat[j] + tau) * w2[j] - ptt[j])
+                    .collect();
+                Ok(vec![Tensor::vector(out)])
+            }
+            "apply_plan" => {
+                let c = unpack_core(inputs, 7, op)?;
+                let eps = scalar(&inputs[6], op, "eps")?;
+                let mut p = vec![0.0f32; c.n * c.m];
+                for i in 0..c.n {
+                    let rowc = f64::from(c.fhat[i] / eps + safe_ln(c.a[i]));
+                    for j in 0..c.m {
+                        let dotv: f32 = c.x[i * c.d..(i + 1) * c.d]
+                            .iter()
+                            .zip(&c.y[j * c.d..(j + 1) * c.d])
+                            .map(|(u, v)| u * v)
+                            .sum();
+                        let u = f64::from(
+                            (c.ghat[j] + 2.0 * dotv) / eps + safe_ln(c.b[j]),
+                        );
+                        p[i * c.m + j] = (rowc + u).exp() as f32;
+                    }
+                }
+                Ok(vec![Tensor::matrix(c.n, c.m, p)])
+            }
+            "alternating_step_label" => self.step_label(inputs, op),
+            "grad_x_label" => {
+                let c = unpack_core(inputs, 12, op)?;
+                let l = unpack_labels(inputs, c.n, c.m, op)?;
+                let eps = scalar(&inputs[11], op, "eps")?;
+                let scale = 2.0 * l.lam1 / eps;
+                let (li, lj, w, v, l2e) = (l.li, l.lj, l.w, l.v, l.lam2 / eps);
+                let mut py = vec![0.0f32; c.n * c.d];
+                let mut r = vec![0.0f32; c.n];
+                apply_rows(
+                    c.x, c.y, c.fhat, c.ghat, c.a, c.b, c.y, c.d, c.n, c.m, c.d, eps, scale,
+                    |i, j| -l2e * w[li[i] as usize * v + lj[j] as usize],
+                    |_, _| 1.0,
+                    &self.tile,
+                    &mut py,
+                    &mut r,
+                );
+                let mut grad = vec![0.0f32; c.n * c.d];
+                for i in 0..c.n {
+                    for t in 0..c.d {
+                        grad[i * c.d + t] = 2.0
+                            * l.lam1
+                            * (r[i] * c.x[i * c.d + t] - py[i * c.d + t]);
+                    }
+                }
+                Ok(vec![Tensor::matrix(c.n, c.d, grad), Tensor::vector(r)])
+            }
+            other => Err(anyhow!("native backend has no op '{other}' (key '{key}')")),
+        }
+    }
+}
+
+/// The (x, y, fhat, ghat, a, b) prefix every op shares.
+struct Core<'t> {
+    x: &'t [f32],
+    y: &'t [f32],
+    fhat: &'t [f32],
+    ghat: &'t [f32],
+    a: &'t [f32],
+    b: &'t [f32],
+    n: usize,
+    m: usize,
+    d: usize,
+}
+
+#[derive(Clone, Copy)]
+struct LabelCtx<'t> {
+    li: &'t [i32],
+    lj: &'t [i32],
+    w: &'t [f32],
+    v: usize,
+    lam1: f32,
+    lam2: f32,
+}
+
+fn unpack_core<'t>(inputs: &'t [Tensor], expect: usize, op: &str) -> Result<Core<'t>> {
+    if inputs.len() != expect {
+        bail!("{op}: expected {expect} inputs, got {}", inputs.len());
+    }
+    let (n, d) = mat_shape(&inputs[0], op, "x")?;
+    let (m, d2) = mat_shape(&inputs[1], op, "y")?;
+    if d2 != d {
+        bail!("{op}: x has d={d} but y has d={d2}");
+    }
+    Ok(Core {
+        x: inputs[0].as_f32()?,
+        y: inputs[1].as_f32()?,
+        fhat: vecn(&inputs[2], n, op, "fhat")?,
+        ghat: vecn(&inputs[3], m, op, "ghat")?,
+        a: vecn(&inputs[4], n, op, "a")?,
+        b: vecn(&inputs[5], m, op, "b")?,
+        n,
+        m,
+        d,
+    })
+}
+
+fn unpack_labels<'t>(inputs: &'t [Tensor], n: usize, m: usize, op: &str) -> Result<LabelCtx<'t>> {
+    let li = match &inputs[6] {
+        Tensor::I32 { data, .. } if data.len() == n => data.as_slice(),
+        other => bail!("{op}: li must be i32 of length {n}, got {:?}", other.shape()),
+    };
+    let lj = match &inputs[7] {
+        Tensor::I32 { data, .. } if data.len() == m => data.as_slice(),
+        other => bail!("{op}: lj must be i32 of length {m}, got {:?}", other.shape()),
+    };
+    let wshape = inputs[8].shape().to_vec();
+    if wshape.len() != 2 || wshape[0] != wshape[1] {
+        bail!("{op}: W must be square (v, v), got {wshape:?}");
+    }
+    let v = wshape[0];
+    for (name, labels) in [("li", li), ("lj", lj)] {
+        if labels.iter().any(|&l| l < 0 || l as usize >= v) {
+            bail!("{op}: {name} contains labels outside [0, {v})");
+        }
+    }
+    Ok(LabelCtx {
+        li,
+        lj,
+        w: inputs[8].as_f32()?,
+        v,
+        lam1: scalar(&inputs[9], op, "lam1")?,
+        lam2: scalar(&inputs[10], op, "lam2")?,
+    })
+}
+
+fn mat_shape(t: &Tensor, op: &str, what: &str) -> Result<(usize, usize)> {
+    match t.shape() {
+        [r, c] => Ok((*r, *c)),
+        other => Err(anyhow!("{op}: {what} must be rank-2, got {other:?}")),
+    }
+}
+
+fn mat<'t>(t: &'t Tensor, rows: usize, cols: usize, op: &str, what: &str) -> Result<&'t [f32]> {
+    let data = t.as_f32()?;
+    if data.len() != rows * cols {
+        bail!(
+            "{op}: {what} expects {rows}x{cols} = {} elements, got {} (shape {:?})",
+            rows * cols,
+            data.len(),
+            t.shape()
+        );
+    }
+    Ok(data)
+}
+
+fn vecn<'t>(t: &'t Tensor, len: usize, op: &str, what: &str) -> Result<&'t [f32]> {
+    let data = t.as_f32()?;
+    if data.len() != len {
+        bail!("{op}: {what} expects length {len}, got {} (shape {:?})", data.len(), t.shape());
+    }
+    Ok(data)
+}
+
+fn scalar(t: &Tensor, op: &str, what: &str) -> Result<f32> {
+    let data = t.as_f32()?;
+    if data.len() != 1 {
+        bail!("{op}: {what} must be a scalar, got shape {:?}", t.shape());
+    }
+    Ok(data[0])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::clouds::{random_simplex, uniform_cloud};
+    use crate::runtime::Manifest;
+
+    fn core_inputs(n: usize, m: usize, d: usize, seed: u64) -> Vec<Tensor> {
+        let x = uniform_cloud(n, d, seed);
+        let y = uniform_cloud(m, d, seed + 1);
+        let alpha: Vec<f32> =
+            (0..n).map(|i| -x[i * d..(i + 1) * d].iter().map(|v| v * v).sum::<f32>()).collect();
+        let beta: Vec<f32> =
+            (0..m).map(|j| -y[j * d..(j + 1) * d].iter().map(|v| v * v).sum::<f32>()).collect();
+        vec![
+            Tensor::matrix(n, d, x),
+            Tensor::matrix(m, d, y),
+            Tensor::vector(alpha),
+            Tensor::vector(beta),
+            Tensor::vector(random_simplex(n, seed + 2)),
+            Tensor::vector(random_simplex(m, seed + 3)),
+            Tensor::scalar(0.2),
+        ]
+    }
+
+    #[test]
+    fn has_covers_core_and_fused_ops() {
+        let b = NativeBackend::default();
+        for op in NATIVE_OPS {
+            assert!(b.has(&Manifest::key(op, 64, 64, 4)), "{op}");
+        }
+        assert!(b.has("k10_alternating__n256_m256_d16"));
+        assert!(b.has("k3_symmetric"));
+        assert!(!b.has("f_update_bs32__n1024_m1024_d64"));
+        assert!(!b.has("nope__n1_m1_d1"));
+    }
+
+    #[test]
+    fn call_validates_arity_and_shapes() {
+        let b = NativeBackend::default();
+        assert!(b.call("marginals", &[]).is_err());
+        let mut bad = core_inputs(8, 8, 2, 1);
+        bad[2] = Tensor::vector(vec![0.0; 5]); // wrong fhat length
+        assert!(b.call("marginals", &bad).is_err());
+        assert!(b.call("nope__n1_m1_d1", &[]).is_err());
+    }
+
+    #[test]
+    fn plans_agree_on_one_step() {
+        let b = NativeBackend::default();
+        let inputs = core_inputs(24, 31, 3, 5);
+        let flash = b.call("alternating_step", &inputs).unwrap();
+        let online = b.call("online_step", &inputs).unwrap();
+        let dense = b.call("dense_step", &inputs).unwrap();
+        for outs in [&online, &dense] {
+            for (of, ff) in outs[0].as_f32().unwrap().iter().zip(flash[0].as_f32().unwrap()) {
+                assert!((of - ff).abs() < 1e-5, "{of} vs {ff}");
+            }
+            for (og, fg) in outs[1].as_f32().unwrap().iter().zip(flash[1].as_f32().unwrap()) {
+                assert!((og - fg).abs() < 1e-5, "{og} vs {fg}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_k_equals_k_single_steps() {
+        let b = NativeBackend::default();
+        let mut inputs = core_inputs(16, 16, 2, 9);
+        let fused = b.call("k4_alternating", &inputs).unwrap();
+        for _ in 0..4 {
+            let outs = b.call("alternating_step", &inputs).unwrap();
+            inputs[2] = outs[0].clone();
+            inputs[3] = outs[1].clone();
+        }
+        assert_eq!(inputs[2].as_f32().unwrap(), fused[0].as_f32().unwrap());
+        assert_eq!(inputs[3].as_f32().unwrap(), fused[1].as_f32().unwrap());
+    }
+
+    #[test]
+    fn marginals_match_apply_plan_row_and_col_sums() {
+        let b = NativeBackend::default();
+        // a few alternating steps first so the plan has spread-out mass
+        let mut inputs = core_inputs(12, 15, 2, 3);
+        for _ in 0..20 {
+            let outs = b.call("alternating_step", &inputs).unwrap();
+            inputs[2] = outs[0].clone();
+            inputs[3] = outs[1].clone();
+        }
+        let p = b.call("apply_plan", &inputs).unwrap();
+        let pm = p[0].as_f32().unwrap();
+        let outs = b.call("marginals", &inputs).unwrap();
+        let (r, c) = (outs[0].as_f32().unwrap(), outs[1].as_f32().unwrap());
+        for i in 0..12 {
+            let want: f32 = pm[i * 15..(i + 1) * 15].iter().sum();
+            assert!((r[i] - want).abs() < 1e-5, "row {i}: {} vs {want}", r[i]);
+        }
+        for j in 0..15 {
+            let want: f32 = (0..12).map(|i| pm[i * 15 + j]).sum();
+            assert!((c[j] - want).abs() < 1e-5, "col {j}: {} vs {want}", c[j]);
+        }
+    }
+
+    #[test]
+    fn label_step_with_lam2_zero_matches_plain_step() {
+        let b = NativeBackend::default();
+        let n = 10;
+        let m = 13;
+        let base = core_inputs(n, m, 2, 7);
+        let plain = b.call("alternating_step", &base).unwrap();
+        let mut label = base[..6].to_vec();
+        label.push(Tensor::i32(vec![n], vec![0; n]));
+        label.push(Tensor::i32(vec![m], vec![1; m]));
+        label.push(Tensor::matrix(2, 2, vec![0.0, 5.0, 5.0, 0.0]));
+        label.push(Tensor::scalar(1.0)); // lam1
+        label.push(Tensor::scalar(0.0)); // lam2: W must be ignored
+        label.push(base[6].clone()); // eps
+        let labeled = b.call("alternating_step_label", &label).unwrap();
+        assert_eq!(plain[0].as_f32().unwrap(), labeled[0].as_f32().unwrap());
+        assert_eq!(plain[1].as_f32().unwrap(), labeled[1].as_f32().unwrap());
+    }
+
+    #[test]
+    fn exact_router_fits_everything() {
+        let r = NativeBackend::default().router();
+        let bucket = r.select(123, 456, 7).unwrap();
+        assert_eq!((bucket.n, bucket.m, bucket.d), (123, 456, 7));
+        let lbl = r.select_label(5, 6, 7).unwrap();
+        assert_eq!((lbl.n, lbl.m, lbl.d), (5, 6, 7));
+    }
+}

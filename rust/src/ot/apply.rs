@@ -1,12 +1,12 @@
 //! Streaming transport application (paper section 3.2, Algorithms 2/4/5):
 //! PV, P^T U, Hadamard-weighted transport, gradients, marginals and the
 //! Schur-complement matvec -- all matrix-free, routed through the fused
-//! Pallas artifacts.
+//! streaming backend ops.
 
 use anyhow::Result;
 
 use crate::coordinator::router::{BucketCtx, Router};
-use crate::runtime::{Engine, Tensor};
+use crate::runtime::{ComputeBackend, PreparedCall, Tensor};
 
 use super::problem::OtProblem;
 use super::solver::Potentials;
@@ -16,7 +16,7 @@ use super::solver::Potentials;
 /// Potentials may be *any* values (Prop. 3 holds pre-convergence); the
 /// induced marginals r, c come back with every application.
 pub struct Transport<'e> {
-    engine: &'e Engine,
+    backend: &'e dyn ComputeBackend,
     pub ctx: BucketCtx,
     fhat_p: Tensor,
     ghat_p: Tensor,
@@ -24,16 +24,21 @@ pub struct Transport<'e> {
 }
 
 impl<'e> Transport<'e> {
-    pub fn new(engine: &'e Engine, router: &Router, prob: &OtProblem, pot: &Potentials) -> Result<Self> {
+    pub fn new(
+        backend: &'e dyn ComputeBackend,
+        router: &Router,
+        prob: &OtProblem,
+        pot: &Potentials,
+    ) -> Result<Self> {
         let ctx = BucketCtx::new(router, prob)?;
-        Ok(Self::with_ctx(engine, ctx, pot))
+        Ok(Self::with_ctx(backend, ctx, pot))
     }
 
-    pub fn with_ctx(engine: &'e Engine, ctx: BucketCtx, pot: &Potentials) -> Self {
+    pub fn with_ctx(backend: &'e dyn ComputeBackend, ctx: BucketCtx, pot: &Potentials) -> Self {
         let fhat_p = ctx.pad_n(&pot.fhat, 0.0);
         let ghat_p = ctx.pad_m(&pot.ghat, 0.0);
         let eps = Tensor::scalar(ctx.eps);
-        Self { engine, ctx, fhat_p, ghat_p, eps }
+        Self { backend, ctx, fhat_p, ghat_p, eps }
     }
 
     fn base_inputs(&self) -> Vec<Tensor> {
@@ -53,7 +58,7 @@ impl<'e> Transport<'e> {
         let mut inputs = self.base_inputs();
         inputs.push(self.ctx.pad_m_mat(v, p));
         inputs.push(self.eps.clone());
-        let outs = self.engine.call(&self.ctx.key(op), &inputs)?;
+        let outs = self.backend.call(&self.ctx.key(op), &inputs)?;
         Ok((self.ctx.slice_n_mat(&outs[0], p)?, self.ctx.slice_n(&outs[1])?))
     }
 
@@ -63,7 +68,7 @@ impl<'e> Transport<'e> {
         let mut inputs = self.base_inputs();
         inputs.push(self.ctx.pad_n_mat(u, p));
         inputs.push(self.eps.clone());
-        let outs = self.engine.call(&self.ctx.key(op), &inputs)?;
+        let outs = self.backend.call(&self.ctx.key(op), &inputs)?;
         Ok((self.ctx.slice_m_mat(&outs[0], p)?, self.ctx.slice_m(&outs[1])?))
     }
 
@@ -75,7 +80,7 @@ impl<'e> Transport<'e> {
         inputs.push(self.ctx.pad_m_mat(bb, d));
         inputs.push(self.ctx.pad_m_mat(v, d));
         inputs.push(self.eps.clone());
-        let outs = self.engine.call(&self.ctx.key("hadamard_pv"), &inputs)?;
+        let outs = self.backend.call(&self.ctx.key("hadamard_pv"), &inputs)?;
         Ok((self.ctx.slice_n_mat(&outs[0], d)?, self.ctx.slice_n(&outs[1])?))
     }
 
@@ -83,7 +88,7 @@ impl<'e> Transport<'e> {
     pub fn grad_x(&self) -> Result<(Vec<f32>, Vec<f32>)> {
         let mut inputs = self.base_inputs();
         inputs.push(self.eps.clone());
-        let outs = self.engine.call(&self.ctx.key("grad_x"), &inputs)?;
+        let outs = self.backend.call(&self.ctx.key("grad_x"), &inputs)?;
         Ok((self.ctx.slice_n_mat(&outs[0], self.ctx.d)?, self.ctx.slice_n(&outs[1])?))
     }
 
@@ -91,7 +96,7 @@ impl<'e> Transport<'e> {
     pub fn marginals(&self) -> Result<(Vec<f32>, Vec<f32>)> {
         let mut inputs = self.base_inputs();
         inputs.push(self.eps.clone());
-        let outs = self.engine.call(&self.ctx.key("marginals"), &inputs)?;
+        let outs = self.backend.call(&self.ctx.key("marginals"), &inputs)?;
         Ok((self.ctx.slice_n(&outs[0])?, self.ctx.slice_m(&outs[1])?))
     }
 
@@ -104,7 +109,7 @@ impl<'e> Transport<'e> {
         inputs.push(self.ctx.pad_m(w2, 0.0));
         inputs.push(Tensor::scalar(tau));
         inputs.push(self.eps.clone());
-        let outs = self.engine.call(&self.ctx.key("schur_matvec"), &inputs)?;
+        let outs = self.backend.call(&self.ctx.key("schur_matvec"), &inputs)?;
         self.ctx.slice_m(&outs[0])
     }
 
@@ -136,60 +141,50 @@ impl<'e> Transport<'e> {
         self.ctx.eps
     }
 
-    /// Build the cached-literal Schur operator for CG loops (hot path).
+    /// Build the prepared Schur operator for CG loops (hot path).
     pub fn schur_op(&self, ahat: &[f32], bhat: &[f32], tau: f32) -> Result<SchurOp<'e>> {
         SchurOp::new(self, ahat, bhat, tau)
     }
 }
 
-/// The damped Schur-complement matvec with every static input resident as
-/// a prebuilt literal: each CG iteration uploads only the (m,) iterate.
-/// This is the L3 hot-path optimization of EXPERIMENTS.md section Perf --
-/// the CG loop performs (2 K_CG) transport applications (Thm. 5), so
-/// per-call input rebuilding dominated the naive path.
+/// The damped Schur-complement matvec with every static input frozen in a
+/// [`PreparedCall`]: each CG iteration supplies only the (m,) iterate.
+/// This is the L3 hot-path optimization of the CG loop -- the solve
+/// performs (2 K_CG) transport applications (Thm. 5), so per-call input
+/// rebuilding dominated the naive path.
 pub struct SchurOp<'e> {
-    engine: &'e Engine,
-    key: String,
-    statics: Vec<xla::Literal>, // x, y, fhat, ghat, a, b, ahat, bhat
-    tau: xla::Literal,
-    eps: xla::Literal,
+    call: PreparedCall<'e>,
     ctx_m: usize,
     bucket_m: usize,
 }
 
 impl<'e> SchurOp<'e> {
     fn new(t: &Transport<'e>, ahat: &[f32], bhat: &[f32], tau: f32) -> Result<Self> {
-        let statics = vec![
-            t.ctx.x.to_literal()?,
-            t.ctx.y.to_literal()?,
-            t.fhat_p.to_literal()?,
-            t.ghat_p.to_literal()?,
-            t.ctx.a.to_literal()?,
-            t.ctx.b.to_literal()?,
-            t.ctx.pad_n(ahat, 0.0).to_literal()?,
-            t.ctx.pad_m(bhat, 0.0).to_literal()?,
+        let slots = vec![
+            Some(t.ctx.x.clone()),
+            Some(t.ctx.y.clone()),
+            Some(t.fhat_p.clone()),
+            Some(t.ghat_p.clone()),
+            Some(t.ctx.a.clone()),
+            Some(t.ctx.b.clone()),
+            Some(t.ctx.pad_n(ahat, 0.0)),
+            Some(t.ctx.pad_m(bhat, 0.0)),
+            None, // w2 -- the CG iterate, streamed per call
+            Some(Tensor::scalar(tau)),
+            Some(t.eps.clone()),
         ];
         Ok(SchurOp {
-            engine: t.engine,
-            key: t.ctx.key("schur_matvec"),
-            statics,
-            tau: Tensor::scalar(tau).to_literal()?,
-            eps: t.eps.to_literal()?,
+            call: PreparedCall::new(t.backend, t.ctx.key("schur_matvec"), slots),
             ctx_m: t.ctx.m,
             bucket_m: t.ctx.bucket.m,
         })
     }
 
-    /// S_tau w (eq. 30) -- one fused artifact call, one small upload.
+    /// S_tau w (eq. 30) -- one fused op call, one small upload.
     pub fn matvec(&self, w2: &[f32]) -> Result<Vec<f32>> {
         let mut padded = vec![0.0f32; self.bucket_m];
         padded[..w2.len()].copy_from_slice(w2);
-        let w_lit = Tensor::vector(padded).to_literal()?;
-        let s = &self.statics;
-        let outs = self.engine.call_literals(
-            &self.key,
-            &[&s[0], &s[1], &s[2], &s[3], &s[4], &s[5], &s[6], &s[7], &w_lit, &self.tau, &self.eps],
-        )?;
-        Ok(outs[0].to_vec::<f32>()?[..self.ctx_m].to_vec())
+        let outs = self.call.call(&[Tensor::vector(padded)])?;
+        Ok(outs[0].as_f32()?[..self.ctx_m].to_vec())
     }
 }

@@ -8,7 +8,7 @@
 
 use anyhow::Result;
 
-use crate::runtime::Engine;
+use crate::runtime::ComputeBackend;
 
 use super::problem::OtProblem;
 use super::solver::{SinkhornSolver, SolverConfig};
@@ -25,7 +25,7 @@ pub struct DivergenceReport {
 
 /// Debiased Sinkhorn divergence between (x, a) and (y, b).
 pub fn sinkhorn_divergence(
-    engine: &Engine,
+    backend: &dyn ComputeBackend,
     cfg: &SolverConfig,
     x: &[f32],
     y: &[f32],
@@ -36,7 +36,7 @@ pub fn sinkhorn_divergence(
     d: usize,
     eps: f32,
 ) -> Result<DivergenceReport> {
-    let solver = SinkhornSolver::new(engine, cfg.clone());
+    let solver = SinkhornSolver::new(backend, cfg.clone());
     let solve = |xs: &[f32], ys: &[f32], ws_a: &[f32], ws_b: &[f32], nn: usize, mm: usize| -> Result<(f64, usize)> {
         let prob = OtProblem::new(
             xs.to_vec(), ys.to_vec(), ws_a.to_vec(), ws_b.to_vec(), nn, mm, d, eps,
@@ -61,7 +61,7 @@ pub fn sinkhorn_divergence(
 /// (the symmetric self-term contributes both slots; by symmetry that equals
 /// one first-slot gradient -- see DESIGN.md / Feydy 2020).
 pub fn divergence_grad(
-    engine: &Engine,
+    backend: &dyn ComputeBackend,
     cfg: &SolverConfig,
     x: &[f32],
     y: &[f32],
@@ -72,16 +72,16 @@ pub fn divergence_grad(
     d: usize,
     eps: f32,
 ) -> Result<Vec<f32>> {
-    let solver = SinkhornSolver::new(engine, cfg.clone());
+    let solver = SinkhornSolver::new(backend, cfg.clone());
 
     let prob_xy = OtProblem::new(x.to_vec(), y.to_vec(), a.to_vec(), b.to_vec(), n, m, d, eps)?;
     let (pot_xy, _) = solver.solve(&prob_xy)?;
-    let t_xy = Transport::new(engine, solver.router(), &prob_xy, &pot_xy)?;
+    let t_xy = Transport::new(backend, solver.router(), &prob_xy, &pot_xy)?;
     let (g_xy, _) = t_xy.grad_x()?;
 
     let prob_xx = OtProblem::new(x.to_vec(), x.to_vec(), a.to_vec(), a.to_vec(), n, n, d, eps)?;
     let (pot_xx, _) = solver.solve(&prob_xx)?;
-    let t_xx = Transport::new(engine, solver.router(), &prob_xx, &pot_xx)?;
+    let t_xx = Transport::new(backend, solver.router(), &prob_xx, &pot_xx)?;
     let (g_xx, _) = t_xx.grad_x()?;
 
     Ok(g_xy.iter().zip(&g_xx).map(|(u, v)| u - v).collect())

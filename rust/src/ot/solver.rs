@@ -1,16 +1,17 @@
-//! The Sinkhorn solver driver: the L3 iteration loop over L1/L2 artifacts.
+//! The Sinkhorn solver driver: the L3 iteration loop over backend ops.
 //!
 //! Rust owns everything the GPU library keeps in Python: schedule selection
 //! (paper section H.2.4 crossover), epsilon annealing (section H.4),
-//! convergence control, and the executable-cache hot path.  Per iteration
-//! the only work outside PJRT is two f32 copies of the potentials.
+//! convergence control, and the prepared-call hot path.  The loop is
+//! backend-agnostic: the same driver runs on the native tiled-LSE backend
+//! and (with `--features pjrt`) on precompiled HLO artifacts.
 
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::coordinator::router::{BucketCtx, Router};
-use crate::runtime::{Engine, Tensor};
+use crate::runtime::{ComputeBackend, PreparedCall, Tensor};
 
 use super::cost::dual_cost;
 use super::problem::OtProblem;
@@ -75,16 +76,16 @@ pub struct SolverConfig {
     /// Stop when the sup-norm potential change drops below this.
     pub tol: f32,
     pub schedule: Schedule,
-    /// Use the fused k-step artifact (lax.scan) when far from tolerance.
+    /// Use the fused k-step op (one dispatch per k iterations) when far
+    /// from tolerance.
     pub use_fused: bool,
     /// Epsilon annealing factor in (0, 1]; 1.0 disables (section H.4: 0.9).
     pub anneal_factor: f32,
-    /// Hot-path optimization (EXPERIMENTS.md section Perf): build the
-    /// static input literals (points, weights) once per solve and keep the
-    /// evolving potentials as literals, so the iteration loop performs no
-    /// host-side tensor copies.  `false` selects the naive per-iteration
-    /// conversion path (kept for the before/after measurement).
-    pub cached_literals: bool,
+    /// Hot-path optimization: freeze the static inputs (points, weights)
+    /// in a [`PreparedCall`] once per solve so the iteration loop streams
+    /// only the evolving potentials.  `false` selects the naive
+    /// rebuild-every-iteration path (kept for before/after measurement).
+    pub prepared: bool,
 }
 
 impl Default for SolverConfig {
@@ -95,7 +96,7 @@ impl Default for SolverConfig {
             schedule: Schedule::Alternating,
             use_fused: true,
             anneal_factor: 1.0,
-            cached_literals: true,
+            prepared: true,
         }
     }
 }
@@ -108,7 +109,7 @@ impl SolverConfig {
             schedule: Schedule::parse(&s.schedule),
             use_fused: s.use_fused,
             anneal_factor: s.anneal_factor,
-            cached_literals: true,
+            prepared: true,
         }
     }
 
@@ -136,79 +137,125 @@ pub struct SolveReport {
 }
 
 pub struct SinkhornSolver<'e> {
-    engine: &'e Engine,
+    backend: &'e dyn ComputeBackend,
     router: Router,
     pub cfg: SolverConfig,
 }
 
 impl<'e> SinkhornSolver<'e> {
-    pub fn new(engine: &'e Engine, cfg: SolverConfig) -> Self {
-        let router = Router::from_manifest(engine.manifest());
-        Self { engine, router, cfg }
+    pub fn new(backend: &'e dyn ComputeBackend, cfg: SolverConfig) -> Self {
+        let router = backend.router();
+        Self { backend, router, cfg }
     }
 
     pub fn router(&self) -> &Router {
         &self.router
     }
 
-    /// Solve: route to a bucket, pad, iterate to tolerance or budget.
+    pub fn backend(&self) -> &'e dyn ComputeBackend {
+        self.backend
+    }
+
+    /// Solve: route to a bucket, pad if bucketed, iterate to tolerance or
+    /// budget.
     pub fn solve(&self, prob: &OtProblem) -> Result<(Potentials, SolveReport)> {
         let ctx = BucketCtx::new(&self.router, prob)?;
         self.solve_in_ctx(prob, &ctx)
     }
 
     /// Solve inside a pre-built context (reused by divergence / OTDD).
-    pub fn solve_in_ctx(&self, prob: &OtProblem, ctx: &BucketCtx) -> Result<(Potentials, SolveReport)> {
-        if self.cfg.cached_literals {
-            return self.solve_in_ctx_fast(prob, ctx);
-        }
+    pub fn solve_in_ctx(
+        &self,
+        prob: &OtProblem,
+        ctx: &BucketCtx,
+    ) -> Result<(Potentials, SolveReport)> {
         let t0 = Instant::now();
         let schedule = self.cfg.schedule.resolve(prob.n, prob.m, prob.d);
-        let k_fused = self.engine.manifest().k_fused;
+        let k_fused = self.backend.k_fused();
 
         // init = unshifted f = g = 0  =>  fhat = -alpha, ghat = -beta.
-        let mut fhat = neg_padded(&ctx.alpha, ctx.bucket.n);
-        let mut ghat = neg_padded(&ctx.beta, ctx.bucket.m);
+        let mut f = Tensor::vector(neg_padded(&ctx.alpha, ctx.bucket.n));
+        let mut g = Tensor::vector(neg_padded(&ctx.beta, ctx.bucket.m));
 
-        // epsilon annealing ladder (one iteration per level).
+        let step_key = ctx.key(schedule.step_op());
+        let fused_key = ctx.key(&schedule.fused_op(k_fused));
+        let have_fused = self.cfg.use_fused && self.backend.has(&fused_key);
+
+        // one prepared call per op: statics (x, y, a, b) frozen, dynamics
+        // (f, g, eps) streamed per iteration.
+        let prep = |key: &str| {
+            PreparedCall::new(
+                self.backend,
+                key,
+                vec![
+                    Some(ctx.x.clone()),
+                    Some(ctx.y.clone()),
+                    None, // fhat
+                    None, // ghat
+                    Some(ctx.a.clone()),
+                    Some(ctx.b.clone()),
+                    None, // eps
+                ],
+            )
+        };
+        let step_call = prep(&step_key);
+        let fused_call = if have_fused { Some(prep(&fused_key)) } else { None };
+
+        let run = |call: &PreparedCall<'_>, f: &mut Tensor, g: &mut Tensor, eps: f32| -> Result<f32> {
+            let outs = if self.cfg.prepared {
+                call.call(&[f.clone(), g.clone(), Tensor::scalar(eps)])?
+            } else {
+                // naive path: rebuild the full input list every iteration
+                self.backend.call(
+                    call.key(),
+                    &[
+                        ctx.x.clone(),
+                        ctx.y.clone(),
+                        f.clone(),
+                        g.clone(),
+                        ctx.a.clone(),
+                        ctx.b.clone(),
+                        Tensor::scalar(eps),
+                    ],
+                )?
+            };
+            let mut it = outs.into_iter();
+            *f = it.next().ok_or_else(|| anyhow::anyhow!("step returned no f"))?;
+            *g = it.next().ok_or_else(|| anyhow::anyhow!("step returned no g"))?;
+            let df = it.next().ok_or_else(|| anyhow::anyhow!("step returned no df"))?.item()?;
+            let dg = it.next().ok_or_else(|| anyhow::anyhow!("step returned no dg"))?.item()?;
+            Ok(df.max(dg))
+        };
+
         let mut iters = 0usize;
         let mut delta = f32::INFINITY;
+
+        // epsilon annealing ladder (one iteration per level).
         if self.cfg.anneal_factor < 1.0 {
             let mut eps_level = prob.sq_diameter().max(prob.eps);
             while eps_level > prob.eps && iters < self.cfg.max_iters {
-                let (f2, g2, _, _) =
-                    self.step(ctx, schedule.step_op(), &fhat, &ghat, eps_level)?;
-                fhat = f2;
-                ghat = g2;
+                run(&step_call, &mut f, &mut g, eps_level)?;
                 eps_level *= self.cfg.anneal_factor;
                 iters += 1;
             }
         }
 
         // main loop at target eps.
-        let fused_key = ctx.key(&schedule.fused_op(k_fused));
-        let have_fused = self.cfg.use_fused && self.engine.manifest().has(&fused_key);
         while iters < self.cfg.max_iters && delta > self.cfg.tol {
-            if have_fused && self.cfg.max_iters - iters >= k_fused {
-                let (f2, g2, df, dg) =
-                    self.call_update(&fused_key, ctx, &fhat, &ghat, prob.eps)?;
-                fhat = f2;
-                ghat = g2;
-                delta = df.max(dg);
+            if let (Some(fused), true) =
+                (&fused_call, self.cfg.max_iters - iters >= k_fused)
+            {
+                delta = run(fused, &mut f, &mut g, prob.eps)?;
                 iters += k_fused;
             } else {
-                let (f2, g2, df, dg) =
-                    self.step(ctx, schedule.step_op(), &fhat, &ghat, prob.eps)?;
-                fhat = f2;
-                ghat = g2;
-                delta = df.max(dg);
+                delta = run(&step_call, &mut f, &mut g, prob.eps)?;
                 iters += 1;
             }
         }
 
         let pot = Potentials {
-            fhat: fhat[..prob.n].to_vec(),
-            ghat: ghat[..prob.m].to_vec(),
+            fhat: f.as_f32()?[..prob.n].to_vec(),
+            ghat: g.as_f32()?[..prob.m].to_vec(),
         };
         let cost = dual_cost(prob, &pot);
         let report = SolveReport {
@@ -221,124 +268,6 @@ impl<'e> SinkhornSolver<'e> {
             bucket: (ctx.bucket.n, ctx.bucket.m, ctx.bucket.d),
         };
         Ok((pot, report))
-    }
-
-    /// Hot path: static inputs uploaded as literals once; potentials stay
-    /// literals across iterations (no per-iteration host copies).
-    fn solve_in_ctx_fast(&self, prob: &OtProblem, ctx: &BucketCtx) -> Result<(Potentials, SolveReport)> {
-        let t0 = Instant::now();
-        let schedule = self.cfg.schedule.resolve(prob.n, prob.m, prob.d);
-        let k_fused = self.engine.manifest().k_fused;
-
-        let x_lit = ctx.x.to_literal()?;
-        let y_lit = ctx.y.to_literal()?;
-        let a_lit = ctx.a.to_literal()?;
-        let b_lit = ctx.b.to_literal()?;
-        let mut f_lit =
-            Tensor::vector(neg_padded(&ctx.alpha, ctx.bucket.n)).to_literal()?;
-        let mut g_lit =
-            Tensor::vector(neg_padded(&ctx.beta, ctx.bucket.m)).to_literal()?;
-
-        let mut iters = 0usize;
-        let mut delta = f32::INFINITY;
-        let step_key = ctx.key(schedule.step_op());
-
-        let run = |key: &str,
-                       f_lit: &mut xla::Literal,
-                       g_lit: &mut xla::Literal,
-                       eps: f32|
-         -> Result<f32> {
-            let eps_lit = Tensor::scalar(eps).to_literal()?;
-            let outs = self.engine.call_literals(
-                key,
-                &[&x_lit, &y_lit, f_lit, g_lit, &a_lit, &b_lit, &eps_lit],
-            )?;
-            let mut it = outs.into_iter();
-            *f_lit = it.next().unwrap();
-            *g_lit = it.next().unwrap();
-            let df = it.next().unwrap().get_first_element::<f32>()?;
-            let dg = it.next().unwrap().get_first_element::<f32>()?;
-            Ok(df.max(dg))
-        };
-
-        if self.cfg.anneal_factor < 1.0 {
-            let mut eps_level = prob.sq_diameter().max(prob.eps);
-            while eps_level > prob.eps && iters < self.cfg.max_iters {
-                run(&step_key, &mut f_lit, &mut g_lit, eps_level)?;
-                eps_level *= self.cfg.anneal_factor;
-                iters += 1;
-            }
-        }
-
-        let fused_key = ctx.key(&schedule.fused_op(k_fused));
-        let have_fused = self.cfg.use_fused && self.engine.manifest().has(&fused_key);
-        while iters < self.cfg.max_iters && delta > self.cfg.tol {
-            if have_fused && self.cfg.max_iters - iters >= k_fused {
-                delta = run(&fused_key, &mut f_lit, &mut g_lit, prob.eps)?;
-                iters += k_fused;
-            } else {
-                delta = run(&step_key, &mut f_lit, &mut g_lit, prob.eps)?;
-                iters += 1;
-            }
-        }
-
-        let fhat = f_lit.to_vec::<f32>()?;
-        let ghat = g_lit.to_vec::<f32>()?;
-        let pot = Potentials {
-            fhat: fhat[..prob.n].to_vec(),
-            ghat: ghat[..prob.m].to_vec(),
-        };
-        let cost = dual_cost(prob, &pot);
-        Ok((
-            pot,
-            SolveReport {
-                iters,
-                final_delta: delta,
-                cost,
-                converged: delta <= self.cfg.tol,
-                wall: t0.elapsed(),
-                schedule,
-                bucket: (ctx.bucket.n, ctx.bucket.m, ctx.bucket.d),
-            },
-        ))
-    }
-
-    fn step(
-        &self,
-        ctx: &BucketCtx,
-        op: &str,
-        fhat: &[f32],
-        ghat: &[f32],
-        eps: f32,
-    ) -> Result<(Vec<f32>, Vec<f32>, f32, f32)> {
-        self.call_update(&ctx.key(op), ctx, fhat, ghat, eps)
-    }
-
-    fn call_update(
-        &self,
-        key: &str,
-        ctx: &BucketCtx,
-        fhat: &[f32],
-        ghat: &[f32],
-        eps: f32,
-    ) -> Result<(Vec<f32>, Vec<f32>, f32, f32)> {
-        let outs = self.engine.call(
-            key,
-            &[
-                ctx.x.clone(),
-                ctx.y.clone(),
-                Tensor::vector(fhat.to_vec()),
-                Tensor::vector(ghat.to_vec()),
-                ctx.a.clone(),
-                ctx.b.clone(),
-                Tensor::scalar(eps),
-            ],
-        )?;
-        let f2 = outs[0].as_f32()?.to_vec();
-        let g2 = outs[1].as_f32()?.to_vec();
-        let df = outs[2].item()?;
-        let dg = outs[3].item()?;
-        Ok((f2, g2, df, dg))
     }
 }
 
@@ -374,5 +303,26 @@ mod tests {
         let cfg = SolverConfig::fixed_iters(10, Schedule::Symmetric);
         assert_eq!(cfg.max_iters, 10);
         assert_eq!(cfg.tol, 0.0);
+    }
+
+    #[test]
+    fn solves_on_native_backend_end_to_end() {
+        let backend = crate::native::NativeBackend::default();
+        let prob = OtProblem::uniform(
+            crate::data::clouds::uniform_cloud(40, 3, 1),
+            crate::data::clouds::uniform_cloud(50, 3, 2),
+            40,
+            50,
+            3,
+            0.2,
+        )
+        .unwrap();
+        let solver = SinkhornSolver::new(&backend, SolverConfig::default());
+        let (pot, report) = solver.solve(&prob).unwrap();
+        assert!(report.converged, "delta {}", report.final_delta);
+        assert_eq!(pot.fhat.len(), 40);
+        assert_eq!(pot.ghat.len(), 50);
+        assert_eq!(report.bucket, (40, 50, 3));
+        assert!(report.cost.is_finite());
     }
 }

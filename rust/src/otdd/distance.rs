@@ -6,7 +6,7 @@ use crate::coordinator::router::{BucketCtx, Router};
 use crate::data::labeled::LabeledDataset;
 use crate::ot::problem::{sqnorms, OtProblem};
 use crate::ot::solver::Potentials;
-use crate::runtime::{Engine, Tensor};
+use crate::runtime::{ComputeBackend, Tensor};
 
 /// An EOT instance under the OTDD cost.  Labels index the joint class-
 /// distance matrix `w` of side `v` (dataset-B classes are pre-shifted).
@@ -30,22 +30,23 @@ pub struct LabelProblem {
 }
 
 pub struct LabelSolver<'e> {
-    engine: &'e Engine,
+    backend: &'e dyn ComputeBackend,
     router: Router,
     pub max_iters: usize,
     pub tol: f32,
 }
 
 impl<'e> LabelSolver<'e> {
-    pub fn new(engine: &'e Engine, max_iters: usize, tol: f32) -> Self {
-        let router = Router::from_manifest(engine.manifest());
-        Self { engine, router, max_iters, tol }
+    pub fn new(backend: &'e dyn ComputeBackend, max_iters: usize, tol: f32) -> Self {
+        let router = backend.router();
+        Self { backend, router, max_iters, tol }
     }
 
     fn ctx_and_labels(&self, p: &LabelProblem) -> Result<(BucketCtx, Tensor, Tensor, Tensor)> {
-        let v_expected = self.engine.manifest().num_classes;
-        if p.v != v_expected {
-            bail!("label matrix side {} != manifest num_classes {}", p.v, v_expected);
+        if let Some(v_expected) = self.backend.num_classes() {
+            if p.v != v_expected {
+                bail!("label matrix side {} != backend num_classes {}", p.v, v_expected);
+            }
         }
         let bucket = self.router.select_label(p.n, p.m, p.d)?;
         let base = OtProblem::new(
@@ -82,7 +83,7 @@ impl<'e> LabelSolver<'e> {
         let mut iters = 0;
         let mut delta = f32::INFINITY;
         while iters < self.max_iters && delta > self.tol {
-            let outs = self.engine.call(
+            let outs = self.backend.call(
                 &key,
                 &[
                     ctx.x.clone(),
@@ -120,7 +121,7 @@ impl<'e> LabelSolver<'e> {
     /// x-independent): 2 lam1 (diag(r) X - P Y).
     pub fn grad_x(&self, p: &LabelProblem, pot: &Potentials) -> Result<Vec<f32>> {
         let (ctx, li_t, lj_t, w_t) = self.ctx_and_labels(p)?;
-        let outs = self.engine.call(
+        let outs = self.backend.call(
             &ctx.key("grad_x_label"),
             &[
                 ctx.x.clone(),
@@ -155,7 +156,7 @@ pub struct OtddReport {
 /// matrix W (inner OT solves), then the three debiased label-cost solves.
 #[allow(clippy::too_many_arguments)]
 pub fn otdd_distance(
-    engine: &Engine,
+    backend: &dyn ComputeBackend,
     ds_a: &LabeledDataset,
     ds_b: &LabeledDataset,
     lam1: f32,
@@ -164,9 +165,9 @@ pub fn otdd_distance(
     max_iters: usize,
     tol: f32,
 ) -> Result<OtddReport> {
-    let (w, w_solves) = super::wmatrix::build_w_matrix(engine, ds_a, ds_b, eps)?;
+    let (w, w_solves) = super::wmatrix::build_w_matrix(backend, ds_a, ds_b, eps)?;
     let v = ds_a.num_classes + ds_b.num_classes;
-    let solver = LabelSolver::new(engine, max_iters, tol);
+    let solver = LabelSolver::new(backend, max_iters, tol);
     let shift = ds_a.num_classes as i32;
     let lj_b: Vec<i32> = ds_b.labels.iter().map(|&l| l + shift).collect();
     let uni = |n: usize| vec![1.0 / n as f32; n];

@@ -5,7 +5,7 @@
 use anyhow::Result;
 
 use crate::data::labeled::LabeledDataset;
-use crate::runtime::Engine;
+use crate::runtime::ComputeBackend;
 
 use super::distance::{LabelProblem, LabelSolver};
 
@@ -24,7 +24,7 @@ pub struct FlowReport {
 /// paper's timing runs; recompute it outside if classes drift far).
 #[allow(clippy::too_many_arguments)]
 pub fn gradient_flow(
-    engine: &Engine,
+    backend: &dyn ComputeBackend,
     ds_a: &LabeledDataset,
     ds_b: &LabeledDataset,
     w: &[f32],
@@ -38,7 +38,7 @@ pub fn gradient_flow(
     let v = ds_a.num_classes + ds_b.num_classes;
     let shift = ds_a.num_classes as i32;
     let lj_b: Vec<i32> = ds_b.labels.iter().map(|&l| l + shift).collect();
-    let solver = LabelSolver::new(engine, max_iters, 1e-4);
+    let solver = LabelSolver::new(backend, max_iters, 1e-4);
     let uni = |n: usize| vec![1.0 / n as f32; n];
 
     let mut x = ds_a.x.clone();

@@ -8,7 +8,7 @@ use anyhow::Result;
 use crate::data::labeled::LabeledDataset;
 use crate::ot::divergence::sinkhorn_divergence;
 use crate::ot::solver::{Schedule, SolverConfig};
-use crate::runtime::Engine;
+use crate::runtime::ComputeBackend;
 
 /// Max points per class used in inner solves (subsampling cap; the paper's
 /// OTDD library defaults to similar caps for the label metric).
@@ -18,7 +18,7 @@ pub const CLASS_CAP: usize = 128;
 /// *debiased* entropic divergence between class clouds (so diagonals are
 /// ~0, as a metric's should be).  Returns (W flat (v x v), #inner solves).
 pub fn build_w_matrix(
-    engine: &Engine,
+    backend: &dyn ComputeBackend,
     ds_a: &LabeledDataset,
     ds_b: &LabeledDataset,
     eps: f32,
@@ -33,7 +33,7 @@ pub fn build_w_matrix(
         schedule: Schedule::Alternating,
         use_fused: true,
         anneal_factor: 1.0,
-        cached_literals: true,
+        prepared: true,
     };
 
     // collect capped class clouds once
@@ -54,7 +54,7 @@ pub fn build_w_matrix(
             let (y, m) = &clouds[c2];
             let a = vec![1.0 / *n as f32; *n];
             let b = vec![1.0 / *m as f32; *m];
-            let rep = sinkhorn_divergence(engine, &cfg, x, y, &a, &b, *n, *m, d, eps)?;
+            let rep = sinkhorn_divergence(backend, &cfg, x, y, &a, &b, *n, *m, d, eps)?;
             solves += 3;
             w[c1 * v + c2] = rep.value as f32;
             w[c2 * v + c1] = rep.value as f32;

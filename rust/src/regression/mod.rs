@@ -16,7 +16,7 @@ use crate::hvp::oracle::HvpOracle;
 use crate::ot::problem::OtProblem;
 use crate::ot::solver::{Potentials, SinkhornSolver, SolverConfig};
 use crate::ot::Transport;
-use crate::runtime::Engine;
+use crate::runtime::ComputeBackend;
 
 pub use saddle::{run_saddle_escape, Phase, SaddleConfig, TrajectoryPoint};
 
@@ -71,22 +71,22 @@ impl ShuffledRegression {
     /// (reused to build the HVP oracle at this iterate).
     pub fn loss_grad(
         &self,
-        engine: &Engine,
+        backend: &dyn ComputeBackend,
         cfg: &SolverConfig,
         w: &[f32],
     ) -> Result<(f64, Vec<f32>, OtProblem, Potentials)> {
-        let solver = SinkhornSolver::new(engine, cfg.clone());
+        let solver = SinkhornSolver::new(backend, cfg.clone());
         let prob = self.problem_at(w)?;
         let (pot, report) = solver.solve(&prob)?;
-        let t = Transport::new(engine, solver.router(), &prob, &pot)?;
+        let t = Transport::new(backend, solver.router(), &prob, &pot)?;
         let (grad_y, _) = t.grad_x()?;
         let grad_w = xt_g(&self.x, &grad_y, self.n, self.d);
         Ok((report.cost, grad_w, prob, pot))
     }
 
     /// Loss only (Armijo line-search evaluations).
-    pub fn loss(&self, engine: &Engine, cfg: &SolverConfig, w: &[f32]) -> Result<f64> {
-        let solver = SinkhornSolver::new(engine, cfg.clone());
+    pub fn loss(&self, backend: &dyn ComputeBackend, cfg: &SolverConfig, w: &[f32]) -> Result<f64> {
+        let solver = SinkhornSolver::new(backend, cfg.clone());
         let prob = self.problem_at(w)?;
         let (_, report) = solver.solve(&prob)?;
         Ok(report.cost)
@@ -103,7 +103,7 @@ impl ShuffledRegression {
     /// Build the curvature oracle at a solved iterate.
     pub fn oracle<'e>(
         &self,
-        engine: &'e Engine,
+        backend: &'e dyn ComputeBackend,
         router: &Router,
         prob: &OtProblem,
         pot: &Potentials,
@@ -111,7 +111,7 @@ impl ShuffledRegression {
         eta: f64,
         max_cg: usize,
     ) -> Result<HvpOracle<'e>> {
-        HvpOracle::new(engine, router, prob, pot, tau, eta, max_cg)
+        HvpOracle::new(backend, router, prob, pot, tau, eta, max_cg)
     }
 
     /// Parameter error |W - W*|_F / |W*|_F.

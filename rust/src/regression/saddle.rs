@@ -12,7 +12,7 @@ use crate::hvp::lanczos::lanczos_min_eig;
 use crate::optim::adam::Adam;
 use crate::optim::newton::armijo_newton_step;
 use crate::ot::solver::{SinkhornSolver, SolverConfig};
-use crate::runtime::Engine;
+use crate::runtime::ComputeBackend;
 
 use super::ShuffledRegression;
 
@@ -84,7 +84,7 @@ pub struct SaddleReport {
 
 /// Run the full controller from `w0`.
 pub fn run_saddle_escape(
-    engine: &Engine,
+    backend: &dyn ComputeBackend,
     workload: &ShuffledRegression,
     solver_cfg: &SolverConfig,
     w0: &[f32],
@@ -99,16 +99,16 @@ pub fn run_saddle_escape(
     let mut trajectory = Vec::new();
     let (mut escapes, mut reentries, mut newton_steps, mut adam_steps) = (0, 0, 0, 0);
     let mut converged = false;
-    let solver = SinkhornSolver::new(engine, solver_cfg.clone());
+    let solver = SinkhornSolver::new(backend, solver_cfg.clone());
 
     for step in 0..cfg.max_steps {
-        let (loss, grad, prob, pot) = workload.loss_grad(engine, solver_cfg, &w)?;
+        let (loss, grad, prob, pot) = workload.loss_grad(backend, solver_cfg, &w)?;
         let grad_norm = grad.iter().map(|&g| (g as f64).powi(2)).sum::<f64>().sqrt();
 
         // periodic curvature check (and always while in Newton phase)
         let lambda_min = if step % cfg.check_every == 0 || phase == Phase::Newton {
             let oracle = workload.oracle(
-                engine,
+                backend,
                 solver.router(),
                 &prob,
                 &pot,
@@ -176,7 +176,7 @@ pub fn run_saddle_escape(
                     &grad,
                     loss,
                     |v: &[f32]| workload.hvp_w(&oracle, v),
-                    |cand: &[f32]| workload.loss(engine, solver_cfg, cand),
+                    |cand: &[f32]| workload.loss(backend, solver_cfg, cand),
                     cfg.cg_tau,
                     cfg.cg_eta,
                     cfg.cg_max,

@@ -1,0 +1,138 @@
+//! The `ComputeBackend` trait: the seam between the L3 coordinator and
+//! whatever evaluates the fused streaming ops.
+//!
+//! Every heavy op the coordinator issues — Sinkhorn steps (plain, fused
+//! k-step, label-augmented), transport applications (`apply_pv*`,
+//! `apply_ptu*`, `hadamard_pv`, `apply_plan`), gradients, marginals and the
+//! Schur-complement matvec — goes through [`ComputeBackend::call`] with an
+//! op key and host [`Tensor`] inputs.  Two implementations exist:
+//!
+//! * [`crate::native::NativeBackend`] — pure Rust, cache-tiled streaming
+//!   LogSumExp over point-cloud tiles (the paper's SRAM-tiling structure on
+//!   CPU).  Exact-shape routing, no padding, no FFI.  Always available.
+//! * `runtime::Engine` (feature `pjrt`) — loads Python-lowered HLO
+//!   artifacts through the PJRT C API; static shape buckets + zero-weight
+//!   padding.
+//!
+//! Op keys use the artifact-manifest convention `"{op}__n{n}_m{m}_d{d}"`
+//! (see [`super::Manifest::key`]); backends that do not pre-compile per
+//! shape (native) ignore the suffix and derive shapes from the inputs.
+//! The dual objective itself stays host-side ([`crate::ot::cost`]): it is
+//! O(n + m) and never worth a backend round trip.
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::router::Router;
+
+use super::tensor::Tensor;
+
+/// A backend that evaluates fused streaming OT ops on host tensors.
+pub trait ComputeBackend {
+    /// Short backend identifier ("native", "pjrt", ...).
+    fn name(&self) -> &'static str;
+
+    /// Number of inner iterations in the fused `k{k}_*` step ops.
+    fn k_fused(&self) -> usize;
+
+    /// Class-count constraint for label (OTDD) ops, if the backend bakes
+    /// the class-distance matrix side into its executables.  `None` means
+    /// any `v` is accepted (native).
+    fn num_classes(&self) -> Option<usize>;
+
+    /// Shape-bucket coverage for the router.  PJRT reports its compiled
+    /// buckets; native returns an exact-fit router (every (n, m, d) routes
+    /// to itself, padding-free).
+    fn router(&self) -> Router;
+
+    /// Whether `key` (op + bucket) is executable on this backend.
+    fn has(&self, key: &str) -> bool;
+
+    /// Execute one op.  Input and output layouts follow the artifact
+    /// manifest contract (see `python/compile/aot.py` and the op table in
+    /// `crate::native`).
+    fn call(&self, key: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>>;
+}
+
+/// Strip the `__n{n}_m{m}_d{d}` bucket suffix from an artifact key,
+/// returning the bare op name.  Keys without a suffix pass through.
+pub fn op_of_key(key: &str) -> &str {
+    match key.rfind("__n") {
+        Some(pos) => &key[..pos],
+        None => key,
+    }
+}
+
+/// A repeated call with most inputs frozen: `slots` holds `Some(tensor)`
+/// for static inputs and `None` for the per-call dynamic positions, filled
+/// left-to-right from the `dynamics` argument of [`PreparedCall::call`].
+///
+/// The static tensors are materialized into the argument buffer **once at
+/// construction**; each call copies only the small dynamic inputs (the
+/// evolving potentials / CG iterate) into their slots.  This is the
+/// backend-agnostic successor of the PJRT cached-literal hot path — the
+/// per-backend upload caching can specialize behind `ComputeBackend::call`
+/// without the drivers changing.  Holds a `RefCell` argument buffer, so a
+/// prepared call is single-threaded by construction (like the backends'
+/// actor-thread usage).
+pub struct PreparedCall<'b> {
+    backend: &'b dyn ComputeBackend,
+    key: String,
+    /// Full argument buffer: statics pre-filled, dynamic slots overwritten
+    /// on every call.
+    buf: std::cell::RefCell<Vec<Tensor>>,
+    dynamic_slots: Vec<usize>,
+}
+
+impl<'b> PreparedCall<'b> {
+    pub fn new(
+        backend: &'b dyn ComputeBackend,
+        key: impl Into<String>,
+        slots: Vec<Option<Tensor>>,
+    ) -> Self {
+        let dynamic_slots: Vec<usize> = slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.is_none().then_some(i))
+            .collect();
+        let buf: Vec<Tensor> = slots
+            .into_iter()
+            .map(|s| s.unwrap_or_else(|| Tensor::scalar(0.0)))
+            .collect();
+        Self { backend, key: key.into(), buf: std::cell::RefCell::new(buf), dynamic_slots }
+    }
+
+    pub fn key(&self) -> &str {
+        &self.key
+    }
+
+    /// Execute with the dynamic slots filled in order.
+    pub fn call(&self, dynamics: &[Tensor]) -> Result<Vec<Tensor>> {
+        if dynamics.len() != self.dynamic_slots.len() {
+            return Err(anyhow!(
+                "{}: prepared call expects {} dynamic inputs, got {}",
+                self.key,
+                self.dynamic_slots.len(),
+                dynamics.len()
+            ));
+        }
+        let mut buf = self.buf.borrow_mut();
+        for (&slot, t) in self.dynamic_slots.iter().zip(dynamics) {
+            buf[slot] = t.clone();
+        }
+        self.backend.call(&self.key, &buf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn op_of_key_strips_bucket_suffix() {
+        assert_eq!(op_of_key("alternating_step__n256_m512_d16"), "alternating_step");
+        assert_eq!(op_of_key("k10_symmetric__n64_m64_d4"), "k10_symmetric");
+        assert_eq!(op_of_key("marginals"), "marginals");
+        // label ops keep their own underscores
+        assert_eq!(op_of_key("alternating_step_label__n8_m8_d2"), "alternating_step_label");
+    }
+}

@@ -1,4 +1,9 @@
 //! The PJRT execution engine: lazy compile + executable cache + call.
+//!
+//! Compiled only with `--features pjrt`, which additionally requires the
+//! `xla` FFI crate and artifacts from `make artifacts` — see README
+//! "Backends".  The default (hermetic) build uses
+//! [`crate::native::NativeBackend`] instead.
 
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -134,31 +139,6 @@ impl Engine {
         parts.iter().map(Tensor::from_literal).collect()
     }
 
-    /// Hot-path variant: execute with pre-built literals (no Tensor
-    /// conversion, no per-call input copies).  Static inputs (points,
-    /// weights, eps) are built once per solve by the caller and reused
-    /// across every iteration; outputs come back as literals so evolving
-    /// state (potentials) round-trips with zero host-side copies.
-    /// Shape validation is the caller's job on this path (the solver
-    /// builds its literals from an already-validated `BucketCtx`).
-    pub fn call_literals(&self, key: &str, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let exe = self.executable(key)?;
-        let t0 = Instant::now();
-        let bufs = exe
-            .execute::<&xla::Literal>(inputs)
-            .map_err(|e| anyhow::anyhow!("executing {key}: {e}"))?;
-        let result = bufs[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("fetching result of {key}: {e}"))?;
-        let mut stats = self.stats.borrow_mut();
-        stats.calls += 1;
-        stats.exec_time += t0.elapsed();
-        drop(stats);
-        result
-            .to_tuple()
-            .map_err(|e| anyhow::anyhow!("untupling result of {key}: {e}"))
-    }
-
     /// Shorthand: call an op at bucket (n, m, d).
     pub fn call_op(
         &self,
@@ -169,5 +149,31 @@ impl Engine {
         inputs: &[Tensor],
     ) -> Result<Vec<Tensor>> {
         self.call(&Manifest::key(op, n, m, d), inputs)
+    }
+}
+
+impl super::backend::ComputeBackend for Engine {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn k_fused(&self) -> usize {
+        self.manifest.k_fused
+    }
+
+    fn num_classes(&self) -> Option<usize> {
+        Some(self.manifest.num_classes)
+    }
+
+    fn router(&self) -> crate::coordinator::router::Router {
+        crate::coordinator::router::Router::from_manifest(&self.manifest)
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.manifest.has(key)
+    }
+
+    fn call(&self, key: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        Engine::call(self, key, inputs)
     }
 }

@@ -1,15 +1,23 @@
-//! Runtime layer: PJRT client wrapper, artifact manifest, tensor bridge.
+//! Runtime layer: the `ComputeBackend` trait, the artifact manifest, the
+//! host tensor type — and, behind the `pjrt` feature, the PJRT client
+//! wrapper that executes Python-lowered HLO artifacts.
 //!
-//! `Engine` is the only place the crate touches the `xla` crate: it loads
-//! HLO-text artifacts produced by `python/compile/aot.py`, compiles them
-//! lazily on the PJRT CPU client (caching the executables), and executes
-//! them with `Tensor` inputs.  Engine is intentionally `!Send` (PJRT handles
-//! are raw pointers); the service wraps it in a dedicated actor thread.
+//! The default build has **zero** FFI/Python dependencies: ops run on
+//! [`crate::native::NativeBackend`].  Enabling `--features pjrt` compiles
+//! [`engine::Engine`], which loads HLO-text artifacts produced by
+//! `python/compile/aot.py`, compiles them lazily on the PJRT CPU client
+//! (caching the executables), and executes them with [`Tensor`] inputs.
+//! `Engine` is intentionally `!Send` (PJRT handles are raw pointers); the
+//! service wraps whichever backend it builds in a dedicated actor thread.
 
 pub mod artifacts;
+pub mod backend;
+#[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod tensor;
 
 pub use artifacts::{Entry, Manifest};
+pub use backend::{ComputeBackend, PreparedCall};
+#[cfg(feature = "pjrt")]
 pub use engine::Engine;
 pub use tensor::Tensor;

@@ -1,6 +1,9 @@
-//! Host-side tensors and the conversion bridge to/from `xla::Literal`.
+//! Host-side tensors; with `--features pjrt`, also the conversion bridge
+//! to/from `xla::Literal`.
 
-use anyhow::{anyhow, bail, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::anyhow;
+use anyhow::{bail, Result};
 
 /// A dense host tensor (row-major).  Only the two dtypes the artifacts use.
 #[derive(Clone, Debug, PartialEq)]
@@ -79,6 +82,7 @@ impl Tensor {
         Ok(self.as_f32()?[0])
     }
 
+    #[cfg(feature = "pjrt")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
         let lit = match self {
@@ -88,6 +92,7 @@ impl Tensor {
         Ok(lit.reshape(&dims)?)
     }
 
+    #[cfg(feature = "pjrt")]
     pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
         let shape = lit.array_shape()?;
         let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
@@ -104,6 +109,30 @@ mod tests {
     use super::*;
 
     #[test]
+    fn shapes_and_dtypes() {
+        let t = Tensor::matrix(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.dtype_name(), "f32");
+        assert_eq!(t.len(), 6);
+        let i = Tensor::i32(vec![4], vec![7, -1, 0, 3]);
+        assert_eq!(i.dtype_name(), "i32");
+        assert!(i.as_f32().is_err());
+    }
+
+    #[test]
+    fn scalar_has_empty_shape() {
+        let t = Tensor::scalar(0.25);
+        assert!(t.shape().is_empty());
+        assert_eq!(t.item().unwrap(), 0.25);
+    }
+
+    #[test]
+    fn item_rejects_i32() {
+        assert!(Tensor::i32(vec![1], vec![3]).item().is_err());
+    }
+
+    #[cfg(feature = "pjrt")]
+    #[test]
     fn literal_roundtrip_f32() {
         let t = Tensor::matrix(2, 3, vec![1., 2., 3., 4., 5., 6.]);
         let lit = t.to_literal().unwrap();
@@ -111,23 +140,11 @@ mod tests {
         assert_eq!(t, back);
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn literal_roundtrip_i32() {
         let t = Tensor::i32(vec![4], vec![7, -1, 0, 3]);
         let back = Tensor::from_literal(&t.to_literal().unwrap()).unwrap();
         assert_eq!(t, back);
-    }
-
-    #[test]
-    fn literal_roundtrip_scalar() {
-        let t = Tensor::scalar(0.25);
-        let back = Tensor::from_literal(&t.to_literal().unwrap()).unwrap();
-        assert_eq!(back.item().unwrap(), 0.25);
-        assert!(back.shape().is_empty());
-    }
-
-    #[test]
-    fn item_rejects_i32() {
-        assert!(Tensor::i32(vec![1], vec![3]).item().is_err());
     }
 }

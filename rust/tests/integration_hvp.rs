@@ -2,7 +2,6 @@
 //! Moore-Penrose ground truth, CG behaviour, Lanczos on the real operator.
 
 use flash_sinkhorn::bench::hvp_tables::parity_cell;
-use flash_sinkhorn::coordinator::router::Router;
 use flash_sinkhorn::data::clouds::{normal_cloud, random_simplex};
 use flash_sinkhorn::data::rng::Rng;
 use flash_sinkhorn::dense::linalg::{to_f32, to_f64};
@@ -10,17 +9,18 @@ use flash_sinkhorn::dense::sinkhorn::sinkhorn_f64;
 use flash_sinkhorn::hvp::lanczos::lanczos_min_eig;
 use flash_sinkhorn::hvp::oracle::HvpOracle;
 use flash_sinkhorn::ot::problem::OtProblem;
+use flash_sinkhorn::native::NativeBackend;
 use flash_sinkhorn::ot::solver::Potentials;
-use flash_sinkhorn::runtime::Engine;
+use flash_sinkhorn::runtime::ComputeBackend;
 
-fn engine() -> Engine {
-    Engine::new(flash_sinkhorn::artifact_dir()).expect("artifacts missing: run `make artifacts`")
+fn backend() -> NativeBackend {
+    NativeBackend::default()
 }
 
 #[test]
 fn streaming_hvp_matches_dense_moore_penrose() {
     // Table 14's tight setting: error must be small.
-    let e = engine();
+    let e = backend();
     let (err, iters, conv) = parity_cell(&e, 128, 4, 0.25, 1e-7, 1e-7, 500, 99).unwrap();
     assert!(conv, "CG did not converge ({iters} iters)");
     assert!(err < 1e-3, "parity error {err}");
@@ -28,7 +28,7 @@ fn streaming_hvp_matches_dense_moore_penrose() {
 
 #[test]
 fn damping_trades_accuracy_for_conditioning() {
-    let e = engine();
+    let e = backend();
     let (err_tight, _, _) = parity_cell(&e, 96, 4, 0.25, 1e-7, 1e-7, 500, 7).unwrap();
     let (err_damped, _, _) = parity_cell(&e, 96, 4, 0.25, 1e-3, 1e-6, 500, 7).unwrap();
     assert!(err_tight < err_damped, "tight {err_tight} vs damped {err_damped}");
@@ -50,9 +50,9 @@ fn converged_setup(n: usize, d: usize, eps: f32, seed: u64) -> (OtProblem, Poten
 #[test]
 fn oracle_is_a_symmetric_operator() {
     // <T A, B> == <A, T B> through the streaming path.
-    let e = engine();
+    let e = backend();
     let (prob, pot) = converged_setup(128, 4, 0.3, 50);
-    let router = Router::from_manifest(e.manifest());
+    let router = e.router();
     let oracle = HvpOracle::new(&e, &router, &prob, &pot, 1e-7, 1e-8, 500).unwrap();
     let mut rng = Rng::new(51);
     let a_mat: Vec<f32> = (0..prob.n * prob.d).map(|_| rng.normal() as f32).collect();
@@ -69,9 +69,9 @@ fn oracle_is_a_symmetric_operator() {
 
 #[test]
 fn oracle_is_linear() {
-    let e = engine();
+    let e = backend();
     let (prob, pot) = converged_setup(96, 4, 0.3, 60);
-    let router = Router::from_manifest(e.manifest());
+    let router = e.router();
     let oracle = HvpOracle::new(&e, &router, &prob, &pot, 1e-7, 1e-8, 500).unwrap();
     let mut rng = Rng::new(61);
     let a_mat: Vec<f32> = (0..prob.n * prob.d).map(|_| rng.normal() as f32).collect();
@@ -86,7 +86,7 @@ fn oracle_is_linear() {
 #[test]
 fn cg_iterations_grow_as_eps_shrinks() {
     // Table 22: conditioning worsens at low eps.
-    let e = engine();
+    let e = backend();
     let (_, it_hi, _) = parity_cell(&e, 96, 4, 0.25, 1e-5, 1e-6, 800, 70).unwrap();
     let (_, it_lo, _) = parity_cell(&e, 96, 4, 0.05, 1e-5, 1e-6, 800, 70).unwrap();
     assert!(it_lo >= it_hi, "CG iters: eps=0.25 -> {it_hi}, eps=0.05 -> {it_lo}");
@@ -94,9 +94,9 @@ fn cg_iterations_grow_as_eps_shrinks() {
 
 #[test]
 fn lanczos_on_streaming_operator_is_finite_and_stable() {
-    let e = engine();
+    let e = backend();
     let (prob, pot) = converged_setup(96, 4, 0.3, 80);
-    let router = Router::from_manifest(e.manifest());
+    let router = e.router();
     let oracle = HvpOracle::new(&e, &router, &prob, &pot, 1e-5, 1e-6, 200).unwrap();
     let dim = prob.n * prob.d;
     let rep = lanczos_min_eig(|v: &[f32]| oracle.hvp(v).map(|(g, _)| g), dim, 8, 81).unwrap();

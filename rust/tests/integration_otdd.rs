@@ -3,11 +3,11 @@
 
 use flash_sinkhorn::data::labeled::LabeledDataset;
 use flash_sinkhorn::otdd::distance::{LabelProblem, LabelSolver};
+use flash_sinkhorn::native::NativeBackend;
 use flash_sinkhorn::otdd::{build_w_matrix, gradient_flow, otdd_distance};
-use flash_sinkhorn::runtime::Engine;
 
-fn engine() -> Engine {
-    Engine::new(flash_sinkhorn::artifact_dir()).expect("artifacts missing: run `make artifacts`")
+fn backend() -> NativeBackend {
+    NativeBackend::default()
 }
 
 fn datasets(n: usize) -> (LabeledDataset, LabeledDataset) {
@@ -19,7 +19,7 @@ fn datasets(n: usize) -> (LabeledDataset, LabeledDataset) {
 
 #[test]
 fn label_solve_reduces_to_euclidean_when_lam2_zero() {
-    let e = engine();
+    let e = backend();
     let (ds_a, ds_b) = datasets(120);
     let v = 20;
     let w = vec![0.3f32; v * v]; // any W: lam2 = 0 must ignore it
@@ -62,7 +62,7 @@ fn label_solve_reduces_to_euclidean_when_lam2_zero() {
 
 #[test]
 fn w_matrix_is_symmetric_nonneg_zero_diag() {
-    let e = engine();
+    let e = backend();
     let (ds_a, ds_b) = datasets(100);
     let (w, solves) = build_w_matrix(&e, &ds_a, &ds_b, 0.1).unwrap();
     let v = 20;
@@ -84,7 +84,7 @@ fn w_matrix_is_symmetric_nonneg_zero_diag() {
 
 #[test]
 fn otdd_self_distance_is_near_zero_and_cross_is_positive() {
-    let e = engine();
+    let e = backend();
     let (ds_a, ds_b) = datasets(100);
     let cross = otdd_distance(&e, &ds_a, &ds_b, 0.5, 0.5, 0.1, 150, 1e-4).unwrap();
     assert!(cross.distance > 0.1, "cross OTDD {}", cross.distance);
@@ -99,7 +99,7 @@ fn otdd_self_distance_is_near_zero_and_cross_is_positive() {
 
 #[test]
 fn gradient_flow_decreases_divergence() {
-    let e = engine();
+    let e = backend();
     let (ds_a, ds_b) = datasets(100);
     let (w, _) = build_w_matrix(&e, &ds_a, &ds_b, 0.1).unwrap();
     let rep = gradient_flow(&e, &ds_a, &ds_b, &w, 0.5, 0.5, 0.1, 0.05, 4, 60).unwrap();

@@ -8,8 +8,9 @@ use flash_sinkhorn::data::clouds::uniform_cloud;
 use flash_sinkhorn::ot::problem::OtProblem;
 
 fn config() -> Config {
+    // force the hermetic backend regardless of the environment
     let mut cfg = Config::default();
-    cfg.artifact_dir = flash_sinkhorn::artifact_dir().to_string_lossy().into_owned();
+    cfg.backend = "native".into();
     cfg
 }
 

@@ -1,19 +1,20 @@
 //! Solver integration: convergence, schedules, padding exactness, fused
-//! steps, divergence axioms, transport identities -- all through PJRT.
+//! steps, divergence axioms, transport identities -- end-to-end on the
+//! native backend (no artifacts, no Python).
 
-use flash_sinkhorn::coordinator::router::Router;
+use flash_sinkhorn::coordinator::router::{Bucket, BucketCtx};
 use flash_sinkhorn::data::clouds::{random_simplex, uniform_cloud};
 use flash_sinkhorn::dense::linalg::to_f64;
 use flash_sinkhorn::dense::sinkhorn::{dual_cost_f64, sinkhorn_f64};
+use flash_sinkhorn::native::NativeBackend;
 use flash_sinkhorn::ot::cost::marginal_violation;
 use flash_sinkhorn::ot::divergence::sinkhorn_divergence;
 use flash_sinkhorn::ot::problem::OtProblem;
 use flash_sinkhorn::ot::solver::{Schedule, SinkhornSolver, SolverConfig};
 use flash_sinkhorn::ot::Transport;
-use flash_sinkhorn::runtime::Engine;
 
-fn engine() -> Engine {
-    Engine::new(flash_sinkhorn::artifact_dir()).expect("artifacts missing: run `make artifacts`")
+fn backend() -> NativeBackend {
+    NativeBackend::default()
 }
 
 fn problem(n: usize, m: usize, d: usize, eps: f32, seed: u64) -> OtProblem {
@@ -23,7 +24,7 @@ fn problem(n: usize, m: usize, d: usize, eps: f32, seed: u64) -> OtProblem {
 
 #[test]
 fn solver_converges_and_matches_dense_cost() {
-    let e = engine();
+    let e = backend();
     let prob = problem(200, 300, 8, 0.1, 1);
     let solver = SinkhornSolver::new(&e, SolverConfig::default());
     let (pot, report) = solver.solve(&prob).unwrap();
@@ -51,9 +52,14 @@ fn solver_converges_and_matches_dense_cost() {
 
 #[test]
 fn schedules_agree_at_fixed_point() {
-    let e = engine();
+    let e = backend();
     let prob = problem(128, 128, 4, 0.2, 3);
-    let mk = |s| SinkhornSolver::new(&e, SolverConfig { schedule: s, max_iters: 3000, tol: 1e-6, ..SolverConfig::default() });
+    let mk = |s| {
+        SinkhornSolver::new(
+            &e,
+            SolverConfig { schedule: s, max_iters: 3000, tol: 1e-6, ..SolverConfig::default() },
+        )
+    };
     let (_, alt) = mk(Schedule::Alternating).solve(&prob).unwrap();
     let (_, sym) = mk(Schedule::Symmetric).solve(&prob).unwrap();
     assert!((alt.cost - sym.cost).abs() / alt.cost.abs() < 1e-3, "{} vs {}", alt.cost, sym.cost);
@@ -61,12 +67,15 @@ fn schedules_agree_at_fixed_point() {
 
 #[test]
 fn fused_and_single_steps_agree() {
-    let e = engine();
+    let e = backend();
     let prob = problem(256, 256, 16, 0.1, 5);
     let mk = |fused| {
         SinkhornSolver::new(
             &e,
-            SolverConfig { use_fused: fused, ..SolverConfig::fixed_iters(20, Schedule::Alternating) },
+            SolverConfig {
+                use_fused: fused,
+                ..SolverConfig::fixed_iters(20, Schedule::Alternating)
+            },
         )
     };
     let (p1, _) = mk(true).solve(&prob).unwrap();
@@ -78,23 +87,16 @@ fn fused_and_single_steps_agree() {
 
 #[test]
 fn padding_is_exact_across_bucket_boundary() {
-    // same problem solved in two different buckets must agree exactly
-    // (zero-weight padding contract).
-    let e = engine();
+    // the native router is exact-fit, but the zero-weight padding contract
+    // must still hold: forcing the same problem into two padded buckets
+    // cannot change the solution.
+    let e = backend();
     let prob = problem(200, 200, 16, 0.1, 7);
-    let router = Router::from_manifest(e.manifest());
     let solver = SinkhornSolver::new(&e, SolverConfig::fixed_iters(15, Schedule::Alternating));
-    let small = flash_sinkhorn::coordinator::router::BucketCtx::with_bucket(
-        router.select(200, 200, 16).unwrap(),
-        &prob,
-    );
-    let big = flash_sinkhorn::coordinator::router::BucketCtx::with_bucket(
-        router.select(600, 600, 16).unwrap(),
-        &prob,
-    );
-    assert_ne!(small.bucket, big.bucket);
-    let (p1, _) = solver.solve_in_ctx(&prob, &small).unwrap();
-    let (p2, _) = solver.solve_in_ctx(&prob, &big).unwrap();
+    let exact = BucketCtx::with_bucket(Bucket { n: 200, m: 200, d: 16 }, &prob);
+    let padded = BucketCtx::with_bucket(Bucket { n: 256, m: 320, d: 20 }, &prob);
+    let (p1, _) = solver.solve_in_ctx(&prob, &exact).unwrap();
+    let (p2, _) = solver.solve_in_ctx(&prob, &padded).unwrap();
     for (a, b) in p1.fhat.iter().zip(&p2.fhat) {
         assert!((a - b).abs() < 2e-4, "padding changed result: {a} vs {b}");
     }
@@ -102,9 +104,16 @@ fn padding_is_exact_across_bucket_boundary() {
 
 #[test]
 fn eps_annealing_reaches_same_fixed_point() {
-    let e = engine();
+    let e = backend();
     let prob = problem(128, 128, 4, 0.05, 9);
-    let base = SolverConfig { max_iters: 4000, tol: 1e-6, schedule: Schedule::Alternating, use_fused: true, anneal_factor: 1.0, cached_literals: true };
+    let base = SolverConfig {
+        max_iters: 4000,
+        tol: 1e-6,
+        schedule: Schedule::Alternating,
+        use_fused: true,
+        anneal_factor: 1.0,
+        prepared: true,
+    };
     let annealed = SolverConfig { anneal_factor: 0.7, ..base.clone() };
     let (_, r1) = SinkhornSolver::new(&e, base).solve(&prob).unwrap();
     let (_, r2) = SinkhornSolver::new(&e, annealed).solve(&prob).unwrap();
@@ -113,19 +122,20 @@ fn eps_annealing_reaches_same_fixed_point() {
 }
 
 #[test]
-fn rectangular_problems_route_to_rect_buckets() {
-    let e = engine();
+fn rectangular_problems_route_exactly() {
+    let e = backend();
     let prob = problem(200, 1500, 10, 0.1, 11);
     let solver = SinkhornSolver::new(&e, SolverConfig::default());
     let (_, report) = solver.solve(&prob).unwrap();
     assert!(report.converged);
-    assert_eq!(report.bucket, (256, 2048, 16));
+    // exact-fit routing: no padding on the native backend
+    assert_eq!(report.bucket, (200, 1500, 10));
 }
 
 #[test]
 fn divergence_axioms() {
     // S(mu, mu) ~ 0; S(mu, nu) > 0 for distinct clouds; symmetric-ish.
-    let e = engine();
+    let e = backend();
     let cfg = SolverConfig { max_iters: 400, tol: 1e-5, ..SolverConfig::default() };
     let n = 128;
     let d = 4;
@@ -148,7 +158,7 @@ fn divergence_axioms() {
 fn transport_identities_for_arbitrary_potentials() {
     // Prop. 3: P 1 = r and P^T 1 = c for potentials far from convergence;
     // PV with V = 1 column of ones equals r.
-    let e = engine();
+    let e = backend();
     let prob = problem(200, 250, 8, 0.15, 30);
     let solver = SinkhornSolver::new(&e, SolverConfig::fixed_iters(2, Schedule::Alternating));
     let (pot, _) = solver.solve(&prob).unwrap();
@@ -169,7 +179,7 @@ fn transport_identities_for_arbitrary_potentials() {
 
 #[test]
 fn gradient_descends_the_ot_cost() {
-    let e = engine();
+    let e = backend();
     let prob = problem(128, 128, 4, 0.1, 40);
     let cfg = SolverConfig { max_iters: 300, tol: 1e-5, ..SolverConfig::default() };
     let solver = SinkhornSolver::new(&e, cfg.clone());
@@ -190,14 +200,15 @@ fn cosine_cost_maps_to_squared_euclidean_surrogate() {
     // paper section 3.1: on unit vectors 1 - <x,y> = |x-y|^2 / 2, so the
     // cosine OT value must match a dense f64 solver run directly on the
     // cosine cost matrix.
-    let e = engine();
+    let e = backend();
     let (n, d) = (96, 8);
     let x = flash_sinkhorn::data::clouds::normal_cloud(n, d, 60);
     let y = flash_sinkhorn::data::clouds::normal_cloud(n, d, 61);
     let a = vec![1.0 / n as f32; n];
     let eps = 0.2f32;
     let prob = OtProblem::cosine(x.clone(), y.clone(), a.clone(), a.clone(), n, n, d, eps).unwrap();
-    let solver = SinkhornSolver::new(&e, SolverConfig { max_iters: 2000, tol: 1e-6, ..Default::default() });
+    let solver =
+        SinkhornSolver::new(&e, SolverConfig { max_iters: 2000, tol: 1e-6, ..Default::default() });
     let (_, rep) = solver.solve(&prob).unwrap();
     let got = flash_sinkhorn::ot::problem::cosine_cost(rep.cost);
 
@@ -254,25 +265,22 @@ fn cosine_cost_maps_to_squared_euclidean_surrogate() {
 }
 
 #[test]
-fn fast_and_naive_solver_paths_agree() {
-    // the cached-literal hot path must be bit-for-bit comparable with the
-    // naive Tensor path (same artifacts, same arithmetic).
-    let e = engine();
+fn prepared_and_naive_solver_paths_agree() {
+    // the prepared-call hot path must be bit-for-bit identical to the
+    // rebuild-every-iteration path (same ops, same arithmetic).
+    let e = backend();
     let prob = problem(300, 200, 8, 0.1, 77);
-    let mk = |cached: bool| {
+    let mk = |prepared: bool| {
         SinkhornSolver::new(
             &e,
-            SolverConfig {
-                cached_literals: cached,
-                ..SolverConfig::fixed_iters(25, Schedule::Alternating)
-            },
+            SolverConfig { prepared, ..SolverConfig::fixed_iters(25, Schedule::Alternating) },
         )
     };
     let (p1, r1) = mk(true).solve(&prob).unwrap();
     let (p2, r2) = mk(false).solve(&prob).unwrap();
     assert_eq!(r1.iters, r2.iters);
     for (a, b) in p1.fhat.iter().zip(&p2.fhat) {
-        assert_eq!(a, b, "fast path diverged from naive path");
+        assert_eq!(a, b, "prepared path diverged from naive path");
     }
     assert_eq!(r1.cost, r2.cost);
 }

@@ -10,15 +10,16 @@ use flash_sinkhorn::data::rng::Rng;
 use flash_sinkhorn::iomodel::device::A100;
 use flash_sinkhorn::iomodel::plans::{analyze, theorem2_accesses, Pass, Plan, Workload};
 use flash_sinkhorn::ot::problem::OtProblem;
+use flash_sinkhorn::native::NativeBackend;
 use flash_sinkhorn::ot::solver::{Schedule, SinkhornSolver, SolverConfig};
 use flash_sinkhorn::ot::Transport;
-use flash_sinkhorn::runtime::Engine;
+use flash_sinkhorn::runtime::ComputeBackend;
 use flash_sinkhorn::util::json::Json;
 
 const CASES: usize = 40;
 
-fn engine() -> Engine {
-    Engine::new(flash_sinkhorn::artifact_dir()).expect("artifacts missing: run `make artifacts`")
+fn backend() -> NativeBackend {
+    NativeBackend::default()
 }
 
 // ---------- pure coordinator invariants ----------------------------------
@@ -204,12 +205,12 @@ fn prop_json_roundtrip() {
     }
 }
 
-// ---------- engine-backed invariants (fewer cases; each hits PJRT) --------
+// ---------- backend-backed invariants (fewer cases; each runs solves) -----
 
 #[test]
 fn prop_padding_invariance_through_real_solver() {
     // appending zero-weight points never changes the solution
-    let e = engine();
+    let e = backend();
     let mut rng = Rng::new(7);
     for case in 0..6 {
         let n = 50 + rng.below(150);
@@ -226,11 +227,9 @@ fn prop_padding_invariance_through_real_solver() {
             eps,
         )
         .unwrap();
-        let router = Router::from_manifest(e.manifest());
         let solver = SinkhornSolver::new(&e, SolverConfig::fixed_iters(8, Schedule::Alternating));
-        let b1 = router.select(n, n, d).unwrap();
-        let b2 = router.select(n + 300, n + 300, d).unwrap();
-        assert_ne!(b1, b2, "case {case}: buckets must differ for the test to bite");
+        let b1 = Bucket { n, m: n, d };
+        let b2 = Bucket { n: n + 300, m: n + 300, d: d + 2 };
         let (p1, _) = solver.solve_in_ctx(&prob, &BucketCtx::with_bucket(b1, &prob)).unwrap();
         let (p2, _) = solver.solve_in_ctx(&prob, &BucketCtx::with_bucket(b2, &prob)).unwrap();
         for i in 0..n {
@@ -246,7 +245,7 @@ fn prop_padding_invariance_through_real_solver() {
 
 #[test]
 fn prop_marginal_violation_decreases_with_iterations() {
-    let e = engine();
+    let e = backend();
     let mut rng = Rng::new(8);
     for case in 0..5 {
         let n = 60 + rng.below(120);
@@ -260,7 +259,7 @@ fn prop_marginal_violation_decreases_with_iterations() {
             0.1,
         )
         .unwrap();
-        let router = Router::from_manifest(e.manifest());
+        let router = e.router();
         let violation_after = |iters: usize| -> f64 {
             let solver = SinkhornSolver::new(&e, SolverConfig::fixed_iters(iters, Schedule::Alternating));
             let (pot, _) = solver.solve(&prob).unwrap();
@@ -278,9 +277,9 @@ fn prop_marginal_violation_decreases_with_iterations() {
 #[test]
 fn prop_row_mass_identity_for_random_potentials() {
     // Prop. 3 holds for arbitrary (non-converged) potentials.
-    let e = engine();
+    let e = backend();
     let mut rng = Rng::new(9);
-    let router = Router::from_manifest(e.manifest());
+    let router = e.router();
     for case in 0..5 {
         let n = 80 + rng.below(100);
         let d = 2 + rng.below(12);

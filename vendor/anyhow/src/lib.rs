@@ -1,0 +1,158 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The workspace builds with no network access, so the real crates.io
+//! `anyhow` cannot be fetched.  This vendored crate implements the small
+//! API surface the workspace actually uses:
+//!
+//! * [`Error`] — an opaque error carrying a flattened message chain;
+//! * [`Result<T>`] — alias with `Error` as the default error type;
+//! * [`anyhow!`] / [`bail!`] — format-style construction / early return;
+//! * [`Context`] — `.context(..)` / `.with_context(..)` message prefixes;
+//! * `From<E: std::error::Error>` so `?` converts std errors.
+//!
+//! Like the real crate, `Error` deliberately does **not** implement
+//! `std::error::Error`: that keeps the blanket `From` impl coherent.
+
+use std::fmt;
+
+/// Opaque error: the full cause chain flattened into one message.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything displayable (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prefix the message with a context line (used by [`Context`]).
+    fn wrap<C: fmt::Display>(self, ctx: C) -> Self {
+        Error { msg: format!("{ctx}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            src = s.source();
+        }
+        Error { msg }
+    }
+}
+
+/// `anyhow::Result<T>` with the crate's `Error` as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to the error of a fallible computation.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().wrap(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().wrap(f()))
+    }
+}
+
+impl<T> Context<T, Error> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "boom")
+    }
+
+    #[test]
+    fn macro_and_display() {
+        let e: Error = anyhow!("bad {} at {}", "thing", 3);
+        assert_eq!(e.to_string(), "bad thing at 3");
+    }
+
+    #[test]
+    fn bail_returns_err() {
+        fn f(x: i32) -> Result<i32> {
+            if x < 0 {
+                bail!("negative: {x}");
+            }
+            Ok(x)
+        }
+        assert!(f(1).is_ok());
+        assert_eq!(f(-2).unwrap_err().to_string(), "negative: -2");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(f().unwrap_err().to_string(), "boom");
+    }
+
+    #[test]
+    fn context_prefixes_message() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading file").unwrap_err();
+        assert_eq!(e.to_string(), "reading file: boom");
+        let r2: Result<()> = Err(anyhow!("inner"));
+        let e2 = r2.with_context(|| format!("step {}", 7)).unwrap_err();
+        assert_eq!(e2.to_string(), "step 7: inner");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<i32> = None;
+        assert_eq!(v.context("missing").unwrap_err().to_string(), "missing");
+    }
+}
