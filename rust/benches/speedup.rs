@@ -9,11 +9,62 @@
 use std::time::Instant;
 
 use flash_sinkhorn::bench;
+use flash_sinkhorn::bench::trajectory;
 use flash_sinkhorn::data::clouds::uniform_cloud;
+use flash_sinkhorn::native::kernels::{lse_update, lse_update_scalar, TileCfg};
+use flash_sinkhorn::native::pool::WorkerPool;
 use flash_sinkhorn::ot::problem::OtProblem;
 use flash_sinkhorn::ot::solver::{Schedule, SinkhornSolver, SolverConfig};
 use flash_sinkhorn::runtime::ComputeBackend;
 use flash_sinkhorn::util::json::{num, obj, s};
+
+/// Size of the fixed LSE-microkernel perf-trajectory config.
+const LSE_N: usize = 4096;
+const LSE_M: usize = 4096;
+const LSE_D: usize = 64;
+
+/// Resolve an output file at the *workspace* root.  Cargo runs bench
+/// binaries with cwd = package root (`rust/`), not the invocation dir, so a
+/// bare relative path would land the smoke JSON where the CI gate (which
+/// runs `cargo run` from the repo root) never looks.
+fn workspace_path(name: &str) -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join(name)
+}
+
+/// LSE-microkernel measurement on the fixed perf-trajectory config
+/// (n = m = 4096, d = 64): one full row-LSE pass, SIMD flash path vs the
+/// scalar reference path, both single-threaded in the same process so the
+/// derived speedup is machine-relative.  Returns (simd_s, scalar_s).
+fn lse_microbench() -> (f64, f64) {
+    let (n, m, d) = (LSE_N, LSE_M, LSE_D);
+    let x = uniform_cloud(n, d, 11);
+    let y = uniform_cloud(m, d, 12);
+    let bias: Vec<f32> = (0..m).map(|j| ((j % 97) as f32) * 1e-3).collect();
+    let eps = 0.1f32;
+    let scale = 2.0 / eps;
+    let mut out = vec![0.0f32; n];
+    let pool = WorkerPool::new(1);
+    let cfg = TileCfg { threads: 1, ..TileCfg::default() };
+
+    fn time_best(f: &mut dyn FnMut()) -> f64 {
+        f(); // warm caches and the branch predictor
+        let mut best = f64::INFINITY;
+        for _ in 0..3 {
+            let t0 = Instant::now();
+            f();
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        best
+    }
+
+    let simd_s = time_best(&mut || {
+        lse_update(&pool, &x, &y, &bias, n, m, d, eps, scale, |_, _| 0.0, &cfg, &mut out);
+    });
+    let scalar_s = time_best(&mut || {
+        lse_update_scalar(&x, &y, &bias, n, m, d, eps, scale, |_, _| 0.0, &mut out);
+    });
+    (simd_s, scalar_s)
+}
 
 fn smoke(backend: &dyn ComputeBackend) {
     let (n, m, d, eps) = (512usize, 512usize, 16usize, 0.1f32);
@@ -39,6 +90,7 @@ fn smoke(backend: &dyn ComputeBackend) {
     let (flash_s, cost) = time_plan(true, Schedule::Alternating);
     let (unfused_s, _) = time_plan(false, Schedule::Alternating);
     let (symmetric_s, _) = time_plan(true, Schedule::Symmetric);
+    let (lse_simd_s, lse_scalar_s) = lse_microbench();
 
     let out = obj(vec![
         ("backend", s(backend.name())),
@@ -52,16 +104,38 @@ fn smoke(backend: &dyn ComputeBackend) {
         ("flash_ms_per_iter", num(flash_s * 1e3 / iters as f64)),
         ("unfused_ms", num(unfused_s * 1e3)),
         ("symmetric_ms", num(symmetric_s * 1e3)),
+        // LSE-microkernel pair for the perf trajectory (bench::trajectory):
+        // SIMD flash path vs scalar reference on n = m = 4096, d = 64.
+        ("lse_n", num(LSE_N as f64)),
+        ("lse_m", num(LSE_M as f64)),
+        ("lse_d", num(LSE_D as f64)),
+        ("lse_simd_ms", num(lse_simd_s * 1e3)),
+        ("lse_scalar_ms", num(lse_scalar_s * 1e3)),
+        ("lse_simd_speedup", num(lse_scalar_s / lse_simd_s)),
         (
             "threads",
             num(std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1) as f64),
         ),
     ]);
-    let path = format!("BENCH_{}.json", backend.name());
+    let path = workspace_path(&format!("BENCH_{}.json", backend.name()));
     let text = out.to_string_compact();
     std::fs::write(&path, &text).expect("writing bench smoke json");
     println!("{text}");
-    println!("wrote {path}");
+    println!("wrote {}", path.display());
+    // CI sets FLASH_SINKHORN_TRAJECTORY to accumulate a per-commit history;
+    // relative paths resolve at the workspace root like the smoke JSON.
+    if let Ok(traj) = std::env::var("FLASH_SINKHORN_TRAJECTORY") {
+        if !traj.is_empty() {
+            let traj_path = if std::path::Path::new(&traj).is_absolute() {
+                std::path::PathBuf::from(&traj)
+            } else {
+                workspace_path(&traj)
+            };
+            let traj_str = traj_path.to_string_lossy();
+            trajectory::append(&traj_str, &out).expect("appending perf trajectory");
+            println!("appended trajectory entry to {traj_str}");
+        }
+    }
 }
 
 fn main() {

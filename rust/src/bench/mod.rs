@@ -10,6 +10,7 @@ pub mod perf;
 pub mod profile_tables;
 pub mod speedup_tables;
 pub mod tables;
+pub mod trajectory;
 
 use anyhow::Result;
 

@@ -1,0 +1,180 @@
+//! Perf trajectory: a per-commit history of kernel timings.
+//!
+//! The bench smoke (`cargo bench --bench speedup -- --smoke`) emits
+//! `BENCH_native.json` with, among solver-level timings, an LSE-microkernel
+//! measurement pair: the SIMD flash path vs the scalar reference path on
+//! the fixed n = m = 4096, d = 64 config, timed in the same process so the
+//! derived `lse_simd_speedup` is machine-relative.  This module
+//!
+//! * [`append`]s such a record (stamped with the commit id from
+//!   `GITHUB_SHA` / `FLASH_SINKHORN_COMMIT`) to a JSONL trajectory file, so
+//!   CI artifacts accumulate a timing history per commit, and
+//! * [`compare`]s a fresh record against the committed baseline
+//!   (`BENCH_native.json` at the repo root), failing when the microkernel's
+//!   speedup over the scalar path degrades by more than `max_regress`
+//!   (default 15%).
+//!
+//! The regression metric is deliberately the *speedup ratio*, not wall
+//! time: CI runners vary wildly in absolute speed, but SIMD-vs-scalar in
+//! the same process on the same data cancels the machine out.
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{num, obj, s, Json};
+
+/// Committed baseline the CI gate compares against.
+pub const DEFAULT_BASELINE: &str = "BENCH_native.json";
+
+/// JSONL file the per-commit records accumulate in.
+pub const DEFAULT_TRAJECTORY: &str = "BENCH_trajectory.jsonl";
+
+/// Default allowed relative degradation of `lse_simd_speedup` (15%).
+pub const DEFAULT_MAX_REGRESS: f64 = 0.15;
+
+/// Outcome of a baseline comparison.
+#[derive(Debug, Clone)]
+pub struct Comparison {
+    pub baseline_speedup: f64,
+    pub current_speedup: f64,
+    pub baseline_ms: f64,
+    pub current_ms: f64,
+    pub regressed: bool,
+    pub summary: String,
+}
+
+fn metric(j: &Json, key: &str) -> Result<f64> {
+    j.req(key)?.as_f64()
+}
+
+/// Append one bench-smoke record to the JSONL trajectory, stamped with the
+/// commit id (`GITHUB_SHA`, else `FLASH_SINKHORN_COMMIT`, else "local") and
+/// a unix timestamp.  Creates the file if missing.
+pub fn append(trajectory_path: &str, bench: &Json) -> Result<()> {
+    let commit = std::env::var("GITHUB_SHA")
+        .or_else(|_| std::env::var("FLASH_SINKHORN_COMMIT"))
+        .unwrap_or_else(|_| "local".into());
+    let unix = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let entry = obj(vec![
+        ("commit", s(&commit)),
+        ("unix_time", num(unix as f64)),
+        ("bench", bench.clone()),
+    ]);
+    // append-mode write: one line per record, never rewrites the history
+    use std::io::Write as _;
+    let mut file = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(trajectory_path)
+        .with_context(|| format!("opening trajectory {trajectory_path}"))?;
+    writeln!(file, "{}", entry.to_string_compact())
+        .with_context(|| format!("writing trajectory {trajectory_path}"))
+}
+
+/// Parse a JSONL trajectory into its records (blank lines ignored).
+pub fn read(trajectory_path: &str) -> Result<Vec<Json>> {
+    let text = std::fs::read_to_string(trajectory_path)
+        .with_context(|| format!("reading trajectory {trajectory_path}"))?;
+    text.lines().filter(|l| !l.trim().is_empty()).map(Json::parse).collect()
+}
+
+/// Compare the LSE-microkernel measurement of `current` against `baseline`:
+/// regressed iff `current.lse_simd_speedup < baseline.lse_simd_speedup *
+/// (1 - max_regress)`.
+pub fn compare(baseline: &Json, current: &Json, max_regress: f64) -> Result<Comparison> {
+    let baseline_speedup = metric(baseline, "lse_simd_speedup")?;
+    let current_speedup = metric(current, "lse_simd_speedup")?;
+    let baseline_ms = metric(baseline, "lse_simd_ms")?;
+    let current_ms = metric(current, "lse_simd_ms")?;
+    if !(baseline_speedup.is_finite() && current_speedup.is_finite() && baseline_speedup > 0.0) {
+        bail!("bad speedup metrics: baseline {baseline_speedup}, current {current_speedup}");
+    }
+    if !(0.0..1.0).contains(&max_regress) {
+        bail!("max_regress must be in [0, 1), got {max_regress}");
+    }
+    let regressed = current_speedup < baseline_speedup * (1.0 - max_regress);
+    let summary = format!(
+        "LSE microkernel: baseline {baseline_ms:.1} ms ({baseline_speedup:.2}x vs scalar), \
+         current {current_ms:.1} ms ({current_speedup:.2}x vs scalar), \
+         allowed regression {:.0}% -> {}",
+        max_regress * 100.0,
+        if regressed { "REGRESSED" } else { "ok" }
+    );
+    Ok(Comparison {
+        baseline_speedup,
+        current_speedup,
+        baseline_ms,
+        current_ms,
+        regressed,
+        summary,
+    })
+}
+
+/// Load two bench-smoke JSON files and [`compare`] them (the CI gate).
+pub fn check(baseline_path: &str, current_path: &str, max_regress: f64) -> Result<Comparison> {
+    let baseline = Json::parse(
+        &std::fs::read_to_string(baseline_path)
+            .with_context(|| format!("reading baseline {baseline_path}"))?,
+    )
+    .with_context(|| format!("parsing baseline {baseline_path}"))?;
+    let current = Json::parse(
+        &std::fs::read_to_string(current_path)
+            .with_context(|| format!("reading current {current_path}"))?,
+    )
+    .with_context(|| format!("parsing current {current_path}"))?;
+    compare(&baseline, &current, max_regress)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(speedup: f64, ms: f64) -> Json {
+        obj(vec![("lse_simd_speedup", num(speedup)), ("lse_simd_ms", num(ms))])
+    }
+
+    #[test]
+    fn compare_flags_only_real_regressions() {
+        let base = record(2.0, 100.0);
+        // 10% slower speedup: inside the 15% budget
+        assert!(!compare(&base, &record(1.8, 111.0), 0.15).unwrap().regressed);
+        // equal and faster: fine
+        assert!(!compare(&base, &record(2.0, 100.0), 0.15).unwrap().regressed);
+        assert!(!compare(&base, &record(3.0, 70.0), 0.15).unwrap().regressed);
+        // 25% slower: regressed
+        let c = compare(&base, &record(1.5, 133.0), 0.15).unwrap();
+        assert!(c.regressed);
+        assert!(c.summary.contains("REGRESSED"), "{}", c.summary);
+    }
+
+    #[test]
+    fn compare_rejects_malformed_records() {
+        let base = record(2.0, 100.0);
+        assert!(compare(&base, &obj(vec![]), 0.15).is_err());
+        assert!(compare(&record(0.0, 1.0), &base, 0.15).is_err());
+        assert!(compare(&base, &base, 1.5).is_err());
+    }
+
+    #[test]
+    fn append_and_read_roundtrip_jsonl() {
+        let path = std::env::temp_dir()
+            .join(format!("fs_traj_{}.jsonl", std::process::id()))
+            .to_string_lossy()
+            .into_owned();
+        let _ = std::fs::remove_file(&path);
+        append(&path, &record(2.0, 100.0)).unwrap();
+        append(&path, &record(2.5, 80.0)).unwrap();
+        let entries = read(&path).unwrap();
+        assert_eq!(entries.len(), 2);
+        for e in &entries {
+            assert!(e.get("commit").is_some());
+            assert!(e.get("unix_time").is_some());
+            assert!(e.req("bench").unwrap().get("lse_simd_speedup").is_some());
+        }
+        let s0 = entries[0].req("bench").unwrap().req("lse_simd_speedup").unwrap();
+        assert_eq!(s0.as_f64().unwrap(), 2.0);
+        let _ = std::fs::remove_file(&path);
+    }
+}

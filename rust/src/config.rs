@@ -15,6 +15,11 @@ pub struct Config {
     /// Compute backend: "native" (default, pure Rust) or "pjrt"
     /// (HLO artifacts; requires the `pjrt` cargo feature).
     pub backend: String,
+    /// Worker-thread cap for the native backend's kernel pool.  0 (default)
+    /// shares the process-global pool, sized by `FLASH_SINKHORN_THREADS`
+    /// (unset = one worker per core); any other value gives this deployment
+    /// a private pool of exactly that width.
+    pub threads: usize,
     /// Directory holding `manifest.json` + `*.hlo.txt` artifacts (pjrt).
     pub artifact_dir: String,
     pub solver: SolverSection,
@@ -71,6 +76,7 @@ impl Default for Config {
     fn default() -> Self {
         Self {
             backend: std::env::var("FLASH_SINKHORN_BACKEND").unwrap_or_else(|_| "native".into()),
+            threads: 0,
             artifact_dir: crate::artifact_dir().to_string_lossy().into_owned(),
             solver: SolverSection {
                 max_iters: 1000,
@@ -107,6 +113,7 @@ impl Config {
         if let Some(v) = j.get("backend") {
             cfg.backend = v.as_str()?.to_string();
         }
+        upd_usize(&j, "threads", &mut cfg.threads)?;
         if let Some(v) = j.get("artifact_dir") {
             cfg.artifact_dir = v.as_str()?.to_string();
         }
@@ -175,6 +182,13 @@ mod tests {
     fn backend_override_parses() {
         let cfg = Config::from_json(r#"{"backend": "pjrt"}"#).unwrap();
         assert_eq!(cfg.backend, "pjrt");
+    }
+
+    #[test]
+    fn threads_knob_parses_and_defaults_to_shared_pool() {
+        assert_eq!(Config::from_json("{}").unwrap().threads, 0);
+        assert_eq!(Config::from_json(r#"{"threads": 6}"#).unwrap().threads, 6);
+        assert!(Config::from_json(r#"{"threads": -1}"#).is_err());
     }
 
     #[test]

@@ -72,7 +72,10 @@ impl Router {
     }
 
     /// Exact-fit router for shape-agnostic backends (native): every request
-    /// routes to its own (n, m, d), no padding ever happens.
+    /// routes to its own (n, m, d), no padding ever happens.  Parallelism
+    /// is the backend's concern, not the router's — native requests of any
+    /// shape fan out over the shared persistent kernel pool
+    /// (`crate::native::pool`), so routing exact-fit costs no threads.
     pub fn exact() -> Self {
         Self { buckets: Vec::new(), label_buckets: Vec::new(), exact: true }
     }

@@ -1,10 +1,16 @@
 //! The OT job service: a cloneable client handle in front of a dedicated
 //! backend actor thread.  The backend is built *inside* the thread (PJRT
-//! handles are `!Send`; the native backend simply keeps its thread-pool
-//! affinity); jobs arrive over a bounded channel -- that bound *is* the
-//! backpressure knob.  (The async-runtime facade was dropped in the
-//! offline build: submission is blocking or fire-and-forget over std
+//! handles are `!Send`); jobs arrive over a bounded channel -- that bound
+//! *is* the backpressure knob.  (The async-runtime facade was dropped in
+//! the offline build: submission is blocking or fire-and-forget over std
 //! channels; see DESIGN.md section 2.)
+//!
+//! The native backend's heavy row reductions do not run on the actor
+//! thread itself: they fan out over the persistent process-global kernel
+//! pool (`native::pool`), which the router/library path shares, so a
+//! service plus ad-hoc solves in the same process own exactly one set of
+//! worker threads.  Set the config `threads` knob to give a service a
+//! private pool instead.
 
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
@@ -93,7 +99,10 @@ pub fn spawn(config: Config) -> Result<ServiceHandle> {
     std::thread::Builder::new()
         .name("ot-engine".into())
         .spawn(move || {
-            let backend = match crate::backend_by_name(&config.backend) {
+            // `backend_from_config` keeps the service actor on the same
+            // process-global kernel pool as the router/library path unless
+            // the config's `threads` knob asks for a private pool.
+            let backend = match crate::backend_from_config(&config) {
                 Ok(b) => {
                     let _ = ready_tx.send(Ok(()));
                     b

@@ -79,6 +79,20 @@ pub fn default_backend() -> Result<Box<dyn ComputeBackend>> {
     )
 }
 
+/// Build the backend selected by a [`config::Config`], applying the
+/// coordinator-level threading knob: `threads > 0` gives the native backend
+/// a private kernel pool of exactly that width, while 0 (the default)
+/// leaves it on the process-global pool shared with every other
+/// default-constructed backend (sized by `FLASH_SINKHORN_THREADS`).
+pub fn backend_from_config(cfg: &config::Config) -> Result<Box<dyn ComputeBackend>> {
+    match cfg.backend.as_str() {
+        "" | "native" if cfg.threads > 0 => {
+            Ok(Box::new(native::NativeBackend::with_threads(cfg.threads)))
+        }
+        name => backend_by_name(name),
+    }
+}
+
 /// Build a backend by name ("native" or "pjrt").
 pub fn backend_by_name(name: &str) -> Result<Box<dyn ComputeBackend>> {
     match name {
@@ -130,6 +144,19 @@ mod tests {
     #[test]
     fn unknown_backend_is_an_error() {
         assert!(backend_by_name("cuda").is_err());
+    }
+
+    #[test]
+    fn config_threads_knob_builds_a_native_backend() {
+        let capped = config::Config {
+            backend: "native".into(),
+            threads: 2,
+            ..config::Config::default()
+        };
+        assert_eq!(backend_from_config(&capped).unwrap().name(), "native");
+        // threads = 0 falls through to the by-name path (shared pool)
+        let shared = config::Config { threads: 0, ..capped };
+        assert_eq!(backend_from_config(&shared).unwrap().name(), "native");
     }
 
     #[cfg(not(feature = "pjrt"))]

@@ -1,17 +1,19 @@
 //! `repro` -- the FlashSinkhorn launcher.
 //!
 //! Subcommands:
-//!   solve    one OT solve on synthetic clouds (quick smoke)
-//!   bench    regenerate paper tables/figures (see DESIGN.md section 6)
-//!   profile  IO-model NCU-style profile for a workload
-//!   otdd     OTDD distance between synthetic labeled datasets
-//!   regress  shuffled-regression saddle-escape run
-//!   serve    start the OT job service and run a demo workload
-//!   info     manifest / artifact summary
+//!   solve       one OT solve on synthetic clouds (quick smoke)
+//!   bench       regenerate paper tables/figures (see DESIGN.md section 6)
+//!   profile     IO-model NCU-style profile for a workload
+//!   otdd        OTDD distance between synthetic labeled datasets
+//!   regress     shuffled-regression saddle-escape run
+//!   serve       start the OT job service and run a demo workload
+//!   trajectory  perf-trajectory bookkeeping (append / check / show)
+//!   info        manifest / artifact summary
 
 use anyhow::{bail, Result};
 
 use flash_sinkhorn::bench;
+use flash_sinkhorn::bench::trajectory;
 use flash_sinkhorn::config::Config;
 use flash_sinkhorn::coordinator::job::{JobKind, JobRequest};
 use flash_sinkhorn::coordinator::service;
@@ -39,6 +41,9 @@ COMMANDS:
   otdd     [--n 400] [--d 64]
   regress  [--n 512] [--eps 0.1] [--steps 60]
   serve    [--jobs 64]
+  trajectory [append|check|show] [--baseline BENCH_native.json]
+             [--current BENCH_native.json] [--file BENCH_trajectory.jsonl]
+             [--max-regress 0.15]
   info
 
 Backend: native (pure Rust) by default; set FLASH_SINKHORN_BACKEND=pjrt
@@ -69,7 +74,7 @@ fn main() -> Result<()> {
             args.ensure_known(&["n", "m", "d", "eps", "schedule"])?;
             let (n, m, d) = (args.usize("n", 500)?, args.usize("m", 600)?, args.usize("d", 16)?);
             let eps = args.f32("eps", 0.1)?;
-            let backend = flash_sinkhorn::backend_by_name(&cfg.backend)?;
+            let backend = flash_sinkhorn::backend_from_config(&cfg)?;
             let prob = OtProblem::uniform(
                 uniform_cloud(n, d, 1),
                 uniform_cloud(m, d, 2),
@@ -93,7 +98,7 @@ fn main() -> Result<()> {
             );
         }
         "bench" => {
-            let backend = flash_sinkhorn::backend_by_name(&cfg.backend)?;
+            let backend = flash_sinkhorn::backend_from_config(&cfg)?;
             let id = args.positional.first().map(String::as_str).unwrap_or("all");
             let quick = args.has("quick");
             let ids: Vec<&str> = if id == "all" { bench::ALL_IDS.to_vec() } else { vec![id] };
@@ -118,7 +123,7 @@ fn main() -> Result<()> {
             args.ensure_known(&["n", "d"])?;
             let n = args.usize("n", 400)?;
             let d = args.usize("d", 64)?;
-            let backend = flash_sinkhorn::backend_by_name(&cfg.backend)?;
+            let backend = flash_sinkhorn::backend_from_config(&cfg)?;
             let ds_a = LabeledDataset::synthetic(n, d, 10, 2.0, 100);
             let ds_b = LabeledDataset::synthetic(n, d, 10, 2.0, 200);
             let rep =
@@ -133,7 +138,7 @@ fn main() -> Result<()> {
             let n = args.usize("n", 512)?;
             let eps = args.f32("eps", 0.1)?;
             let steps = args.usize("steps", 60)?;
-            let backend = flash_sinkhorn::backend_by_name(&cfg.backend)?;
+            let backend = flash_sinkhorn::backend_from_config(&cfg)?;
             let (workload, w_star) = ShuffledRegression::synthetic(n, eps, 0.05, 7);
             let solver_cfg = SolverConfig {
                 anneal_factor: 0.9,
@@ -201,8 +206,63 @@ fn main() -> Result<()> {
                 handle.metrics()
             );
         }
+        "trajectory" => {
+            args.ensure_known(&["baseline", "current", "file", "max-regress"])?;
+            let sub = args.positional.first().map(String::as_str).unwrap_or("check");
+            let current = args.string("current", trajectory::DEFAULT_BASELINE);
+            match sub {
+                "append" => {
+                    let file = args.string("file", trajectory::DEFAULT_TRAJECTORY);
+                    let record =
+                        flash_sinkhorn::util::json::Json::parse(&std::fs::read_to_string(
+                            &current,
+                        )?)?;
+                    trajectory::append(&file, &record)?;
+                    println!("appended {current} to {file}");
+                }
+                "check" => {
+                    let baseline = args.string("baseline", trajectory::DEFAULT_BASELINE);
+                    // canonicalize so alternate spellings of one file
+                    // (./x vs x vs absolute) can't sneak past the guard
+                    let same_file = std::fs::canonicalize(&baseline)
+                        .ok()
+                        .zip(std::fs::canonicalize(&current).ok())
+                        .map(|(b, c)| b == c)
+                        .unwrap_or(baseline == current);
+                    if same_file {
+                        bail!(
+                            "trajectory check: --baseline and --current are both '{baseline}'; \
+                             comparing a file to itself always passes. Park the committed \
+                             baseline elsewhere first (e.g. `cp BENCH_native.json /tmp/base.json`), \
+                             rerun the bench smoke, then pass --baseline /tmp/base.json"
+                        );
+                    }
+                    let max_regress =
+                        f64::from(args.f32("max-regress", trajectory::DEFAULT_MAX_REGRESS as f32)?);
+                    let cmp = trajectory::check(&baseline, &current, max_regress)?;
+                    println!("{}", cmp.summary);
+                    if cmp.regressed {
+                        bail!("LSE microkernel perf regression vs {baseline}");
+                    }
+                }
+                "show" => {
+                    let file = args.string("file", trajectory::DEFAULT_TRAJECTORY);
+                    for entry in trajectory::read(&file)? {
+                        let commit = entry
+                            .get("commit")
+                            .and_then(|c| c.as_str().ok().map(String::from))
+                            .unwrap_or_else(|| "?".into());
+                        let bench_rec = entry.req("bench")?;
+                        let ms = bench_rec.req("lse_simd_ms")?.as_f64()?;
+                        let speedup = bench_rec.req("lse_simd_speedup")?.as_f64()?;
+                        println!("{commit:>12}  lse_simd {ms:8.1} ms  {speedup:5.2}x vs scalar");
+                    }
+                }
+                other => bail!("unknown trajectory subcommand '{other}' (append|check|show)"),
+            }
+        }
         "info" => {
-            let backend = flash_sinkhorn::backend_by_name(&cfg.backend)?;
+            let backend = flash_sinkhorn::backend_from_config(&cfg)?;
             let b = backend.as_ref();
             let router = b.router();
             println!(

@@ -14,16 +14,42 @@
 //! track the dense f64 reference to ~1e-4 (validated by
 //! `tests/native_backend.rs`).
 //!
+//! ## The SIMD microkernel
+//!
+//! The inner dot product is d-blocked over [`DOT_LANES`] explicit
+//! accumulator lanes with a scalar tail ([`dot_simd`]) — the `f32x8` shape
+//! the autovectorizer lowers to whatever vector width the target actually
+//! has (AVX2, SSE2, NEON, or plain scalar ILP on everything else; no
+//! feature detection, no unsafe, no nightly).  Scores for a column tile are
+//! materialized into a small stack-local buffer first, keeping the
+//! vectorizable dot loop separate from the branchy online-max update.
+//! `lse_update`, `lse_update_twopass`, `lse_update_dense` and `apply_rows`
+//! all route through the same microkernel; [`dot_scalar`],
+//! [`lse_update_scalar`] and [`apply_rows_scalar`] are the plain scalar
+//! reference paths that `tests/kernel_parity.rs` pins it against (for
+//! `d < DOT_LANES` the two dot paths are bitwise identical).
+//!
 //! Zero-weight padding stays *exact*: `safe_ln(0) = -1e30`, so a padded
 //! row/column contributes `exp(-1e30 - max) == 0.0` to every accumulator
 //! (the same `NEG_INF` convention as `python/compile/kernels/ref.py`).
+//! Callers building the column bias mask zero-weight entries *explicitly*
+//! (bias = `NEG_INF`, never `ghat/eps + safe_ln(0)`), so even garbage
+//! warm-started duals on empty-support rows cannot poison a reduction.
 //!
-//! Row blocks are distributed over scoped threads when the problem is big
-//! enough to pay for it; within a block, columns stream in tiles so the
-//! y-tile stays cache-resident across the row block.
+//! Row ranges are distributed over the persistent [`super::pool::WorkerPool`]
+//! when the problem is big enough to pay for it (no per-call thread spawns);
+//! within a range, columns stream in tiles so the y-tile stays
+//! cache-resident across the row block.  Each row is processed by exactly
+//! one worker with a fixed reduction order, so results are bitwise-identical
+//! for every pool width.
+
+use super::pool::WorkerPool;
 
 /// log(0) sentinel shared with the Python reference kernels.
 pub const NEG_INF: f32 = -1e30;
+
+/// Accumulator lanes in the d-blocked dot-product microkernel.
+pub const DOT_LANES: usize = 8;
 
 /// `ln w` with `ln 0 -> NEG_INF` (zero-weight padding contract).
 #[inline]
@@ -35,9 +61,47 @@ pub fn safe_ln(w: f32) -> f32 {
     }
 }
 
+/// Plain sequential dot product — the scalar reference path for the
+/// kernel-parity suite.  A single loop-carried accumulator, summed in
+/// element order.
+#[inline]
+pub fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(u, v)| u * v).sum()
+}
+
+/// d-blocked dot product over [`DOT_LANES`] independent accumulator lanes
+/// with a scalar tail.  The lane loop has no loop-carried dependency, so
+/// the autovectorizer turns it into packed multiply-adds (and out-of-order
+/// cores extract the ILP even without SIMD).  Lanes are reduced in a fixed
+/// pairwise order, so the result is deterministic for a given input —
+/// it differs from [`dot_scalar`] only by f32 rounding (bitwise equal when
+/// `a.len() < DOT_LANES`, since everything lands in the tail).
+#[inline]
+pub fn dot_simd(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let d = a.len();
+    let blocks = d / DOT_LANES;
+    let mut lanes = [0.0f32; DOT_LANES];
+    for k in 0..blocks {
+        let ao = &a[k * DOT_LANES..(k + 1) * DOT_LANES];
+        let bo = &b[k * DOT_LANES..(k + 1) * DOT_LANES];
+        for l in 0..DOT_LANES {
+            lanes[l] += ao[l] * bo[l];
+        }
+    }
+    let mut tail = 0.0f32;
+    for k in blocks * DOT_LANES..d {
+        tail += a[k] * b[k];
+    }
+    let even = (lanes[0] + lanes[2]) + (lanes[4] + lanes[6]);
+    let odd = (lanes[1] + lanes[3]) + (lanes[5] + lanes[7]);
+    (even + odd) + tail
+}
+
+/// The dot product every streaming kernel uses.
 #[inline]
 fn dot(a: &[f32], b: &[f32]) -> f32 {
-    a.iter().zip(b).map(|(u, v)| u * v).sum()
+    dot_simd(a, b)
 }
 
 /// Tiling + threading knobs for the streaming kernels.
@@ -47,9 +111,9 @@ pub struct TileCfg {
     pub block_rows: usize,
     /// Streamed columns per tile (y-tile kept cache-resident per block).
     pub block_cols: usize,
-    /// Worker threads; 0 = one per available core.
+    /// Cap on pool claimants for this backend; 0 = the pool's full width.
     pub threads: usize,
-    /// Minimum n*m*d before row blocks fan out across threads.
+    /// Minimum n*m*d before row ranges fan out across the pool.
     pub par_threshold: usize,
 }
 
@@ -60,58 +124,61 @@ impl Default for TileCfg {
 }
 
 impl TileCfg {
-    fn effective_threads(&self, rows: usize, cols: usize, d: usize) -> usize {
+    fn effective_threads(&self, pool: &WorkerPool, rows: usize, cols: usize, d: usize) -> usize {
         let work = rows.saturating_mul(cols).saturating_mul(d.max(1));
         if work < self.par_threshold {
             return 1;
         }
-        let hw = match self.threads {
-            0 => std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1),
-            t => t,
+        let cap = match self.threads {
+            0 => pool.threads(),
+            t => t.min(pool.threads()),
         };
-        hw.clamp(1, rows.max(1))
+        cap.clamp(1, rows.max(1))
     }
 }
 
-/// Split `out1` (row width `w1`) and `out2` (row width 1) into contiguous
-/// row chunks and run `f(start, end, chunk1, chunk2)` on each, fanning out
-/// over scoped threads when `threads > 1`.
-fn run_row_chunks<F>(
-    n_rows: usize,
-    w1: usize,
-    threads: usize,
-    out1: &mut [f32],
-    out2: &mut [f32],
-    f: F,
-) where
-    F: Fn(usize, usize, &mut [f32], &mut [f32]) + Sync,
+/// Raw output cursor handed to pool workers.  Soundness: every row range a
+/// worker claims is disjoint (the pool's chunk cursor hands out each row
+/// exactly once), so the reconstructed `&mut` slices never alias.
+#[derive(Copy, Clone)]
+struct SendPtr(*mut f32);
+
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+impl SendPtr {
+    /// View of rows `[start, end)` at `width` values per row.
+    ///
+    /// # Safety
+    /// The caller must hold exclusive access to that row range and the
+    /// backing allocation must outlive the returned slice.
+    unsafe fn rows<'a>(self, start: usize, end: usize, width: usize) -> &'a mut [f32] {
+        std::slice::from_raw_parts_mut(self.0.add(start * width), (end - start) * width)
+    }
+}
+
+/// Fan `body(start, end)` out over the persistent pool (or run inline when
+/// the region is too small / capped to one claimant).  Chunks are sized for
+/// ~4 steal units per claimant, except when `threads` caps parallelism
+/// below the pool width — then exactly `threads` chunks exist so no more
+/// than `threads` claimants can pick up work.
+fn run_rows<F>(pool: &WorkerPool, threads: usize, n_rows: usize, body: F)
+where
+    F: Fn(usize, usize) + Sync,
 {
-    debug_assert_eq!(out1.len(), n_rows * w1);
-    debug_assert_eq!(out2.len(), n_rows);
     if n_rows == 0 {
         return;
     }
     if threads <= 1 {
-        f(0, n_rows, out1, out2);
+        body(0, n_rows);
         return;
     }
-    let chunk = n_rows.div_ceil(threads);
-    std::thread::scope(|scope| {
-        let mut rest1 = out1;
-        let mut rest2 = out2;
-        let mut start = 0usize;
-        while start < n_rows {
-            let rows = chunk.min(n_rows - start);
-            let (c1, r1) = std::mem::take(&mut rest1).split_at_mut(rows * w1);
-            let (c2, r2) = std::mem::take(&mut rest2).split_at_mut(rows);
-            rest1 = r1;
-            rest2 = r2;
-            let fref = &f;
-            let s0 = start;
-            scope.spawn(move || fref(s0, s0 + rows, c1, c2));
-            start += rows;
-        }
-    });
+    let chunk = if threads < pool.threads() {
+        n_rows.div_ceil(threads)
+    } else {
+        n_rows.div_ceil(threads * 4)
+    };
+    pool.run(n_rows, chunk.max(1), body);
 }
 
 /// Streaming potential update (paper eq. 10/11):
@@ -120,11 +187,13 @@ fn run_row_chunks<F>(
 /// out_i = -eps * LSE_j( scale * <x_i, y_j> + bias_j + extra(i, j) )
 /// ```
 ///
-/// with `bias_j = ghat_j / eps + ln b_j` precomputed by the caller.  The
-/// plain Sinkhorn f-update is `scale = 2/eps, extra = 0`; the OTDD label
-/// update adds `extra(i, j) = -(lam2/eps) W[l_i, l_j]`.
+/// with `bias_j = ghat_j / eps + ln b_j` precomputed by the caller (and
+/// forced to [`NEG_INF`] on zero-weight columns).  The plain Sinkhorn
+/// f-update is `scale = 2/eps, extra = 0`; the OTDD label update adds
+/// `extra(i, j) = -(lam2/eps) W[l_i, l_j]`.
 #[allow(clippy::too_many_arguments)]
 pub fn lse_update<E>(
+    pool: &WorkerPool,
     x: &[f32],
     y: &[f32],
     bias: &[f32],
@@ -139,13 +208,16 @@ pub fn lse_update<E>(
 ) where
     E: Fn(usize, usize) -> f32 + Sync,
 {
-    let threads = cfg.effective_threads(n, m, d);
-    let mut dummy = vec![0.0f32; n];
+    debug_assert_eq!(out.len(), n);
+    let threads = cfg.effective_threads(pool, n, m, d);
     let br = cfg.block_rows.max(1);
     let bc = cfg.block_cols.max(1);
-    run_row_chunks(n, 1, threads, out, &mut dummy, |r0, r1, chunk, _| {
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    run_rows(pool, threads, n, |r0, r1| {
+        let chunk = unsafe { out_ptr.rows(r0, r1, 1) };
         let mut mx = vec![NEG_INF; br];
         let mut acc = vec![0.0f64; br];
+        let mut sbuf = vec![0.0f32; bc];
         let mut i0 = r0;
         while i0 < r1 {
             let rb = br.min(r1 - i0);
@@ -157,9 +229,15 @@ pub fn lse_update<E>(
                 for ii in 0..rb {
                     let i = i0 + ii;
                     let xi = &x[i * d..(i + 1) * d];
+                    // SIMD pass: the whole column tile's scores first, ...
+                    for (t, slot) in sbuf[..jb].iter_mut().enumerate() {
+                        let j = j0 + t;
+                        *slot = scale * dot(xi, &y[j * d..(j + 1) * d]) + bias[j] + extra(i, j);
+                    }
+                    // ... then the branchy online-softmax update, in fixed
+                    // j order (bitwise identical for every tiling).
                     let (mut mxi, mut acci) = (mx[ii], acc[ii]);
-                    for j in j0..j0 + jb {
-                        let s = scale * dot(xi, &y[j * d..(j + 1) * d]) + bias[j] + extra(i, j);
+                    for &s in &sbuf[..jb] {
                         if s <= mxi {
                             acci += f64::from(s - mxi).exp();
                         } else {
@@ -180,6 +258,43 @@ pub fn lse_update<E>(
     });
 }
 
+/// Scalar reference for [`lse_update`]: no SIMD, no tiling, no threading —
+/// one sequential online-LSE pass per row using [`dot_scalar`].  The gold
+/// path `tests/kernel_parity.rs` pins the microkernel against, and the
+/// honest "pre-SIMD inner loop" the perf trajectory measures speedups over.
+#[allow(clippy::too_many_arguments)]
+pub fn lse_update_scalar<E>(
+    x: &[f32],
+    y: &[f32],
+    bias: &[f32],
+    n: usize,
+    m: usize,
+    d: usize,
+    eps: f32,
+    scale: f32,
+    extra: E,
+    out: &mut [f32],
+) where
+    E: Fn(usize, usize) -> f32,
+{
+    debug_assert_eq!(out.len(), n);
+    for i in 0..n {
+        let xi = &x[i * d..(i + 1) * d];
+        let mut mx = NEG_INF;
+        let mut acc = 0.0f64;
+        for j in 0..m {
+            let s = scale * dot_scalar(xi, &y[j * d..(j + 1) * d]) + bias[j] + extra(i, j);
+            if s <= mx {
+                acc += f64::from(s - mx).exp();
+            } else {
+                acc = acc * f64::from(mx - s).exp() + 1.0;
+                mx = s;
+            }
+        }
+        out[i] = -eps * (mx + acc.ln() as f32);
+    }
+}
+
 /// Streaming transport application (paper Algorithms 2/4/5): for each row i
 /// of the implicit plan `P_ij = a_i b_j exp((fhat_i + ghat_j + s*<x,y> +
 /// eps*extra)/eps)` compute
@@ -192,8 +307,12 @@ pub fn lse_update<E>(
 /// using online-max rescaled accumulators, so arbitrary (non-converged)
 /// potentials stay stable.  `weight` realizes the Hadamard product of
 /// Algorithm 5 (`weight = <A_i, B_j>`); plain applications pass 1.
+/// Zero-weight rows/columns are masked explicitly: their outputs are 0 and
+/// their bias is [`NEG_INF`] no matter what the (possibly garbage,
+/// warm-started) potentials hold.
 #[allow(clippy::too_many_arguments)]
 pub fn apply_rows<E, W>(
+    pool: &WorkerPool,
     x: &[f32],
     y: &[f32],
     fhat: &[f32],
@@ -220,13 +339,27 @@ pub fn apply_rows<E, W>(
     debug_assert_eq!(pv.len(), n * p);
     debug_assert_eq!(r.len(), n);
     // column bias and row constant: P_ij = exp(rowc_i) * exp(u_ij),
-    // u_ij = scale*<x_i,y_j> + bias_j + extra(i,j)
-    let bias: Vec<f32> = (0..m).map(|j| ghat[j] / eps + safe_ln(b[j])).collect();
-    let threads = cfg.effective_threads(n, m, d + p);
+    // u_ij = scale*<x_i,y_j> + bias_j + extra(i,j); zero-weight columns are
+    // masked outright so a garbage ghat_j cannot outweigh safe_ln(0).
+    let bias: Vec<f32> =
+        (0..m).map(|j| if b[j] > 0.0 { ghat[j] / eps + safe_ln(b[j]) } else { NEG_INF }).collect();
+    let threads = cfg.effective_threads(pool, n, m, d + p);
     let bc = cfg.block_cols.max(1);
-    run_row_chunks(n, p, threads, pv, r, |r0, r1, pv_chunk, r_chunk| {
+    let pv_ptr = SendPtr(pv.as_mut_ptr());
+    let r_ptr = SendPtr(r.as_mut_ptr());
+    run_rows(pool, threads, n, |r0, r1| {
+        let pv_chunk = unsafe { pv_ptr.rows(r0, r1, p) };
+        let r_chunk = unsafe { r_ptr.rows(r0, r1, 1) };
         let mut accv = vec![0.0f64; p];
+        let mut sbuf = vec![0.0f32; bc];
         for i in r0..r1 {
+            if a[i] <= 0.0 {
+                // empty-support row: the plan row is exactly zero, whatever
+                // stale value fhat[i] carries.
+                r_chunk[i - r0] = 0.0;
+                pv_chunk[(i - r0) * p..(i - r0 + 1) * p].fill(0.0);
+                continue;
+            }
             let xi = &x[i * d..(i + 1) * d];
             let mut mx = NEG_INF;
             let mut accr = 0.0f64;
@@ -234,8 +367,13 @@ pub fn apply_rows<E, W>(
             let mut j0 = 0usize;
             while j0 < m {
                 let jb = bc.min(m - j0);
-                for j in j0..j0 + jb {
-                    let s = scale * dot(xi, &y[j * d..(j + 1) * d]) + bias[j] + extra(i, j);
+                // SIMD pass: tile scores first, branchy update second.
+                for (t, slot) in sbuf[..jb].iter_mut().enumerate() {
+                    let j = j0 + t;
+                    *slot = scale * dot(xi, &y[j * d..(j + 1) * d]) + bias[j] + extra(i, j);
+                }
+                for (t, &s) in sbuf[..jb].iter().enumerate() {
+                    let j = j0 + t;
                     let w = if s <= mx {
                         f64::from(s - mx).exp()
                     } else {
@@ -270,10 +408,82 @@ pub fn apply_rows<E, W>(
     });
 }
 
+/// Scalar reference for [`apply_rows`]: sequential, [`dot_scalar`]-based,
+/// same masking semantics.  Gold path for the kernel-parity suite.
+#[allow(clippy::too_many_arguments)]
+pub fn apply_rows_scalar<E, W>(
+    x: &[f32],
+    y: &[f32],
+    fhat: &[f32],
+    ghat: &[f32],
+    a: &[f32],
+    b: &[f32],
+    v: &[f32],
+    p: usize,
+    n: usize,
+    m: usize,
+    d: usize,
+    eps: f32,
+    scale: f32,
+    extra: E,
+    weight: W,
+    pv: &mut [f32],
+    r: &mut [f32],
+) where
+    E: Fn(usize, usize) -> f32,
+    W: Fn(usize, usize) -> f32,
+{
+    debug_assert_eq!(v.len(), m * p);
+    debug_assert_eq!(pv.len(), n * p);
+    debug_assert_eq!(r.len(), n);
+    let bias: Vec<f32> =
+        (0..m).map(|j| if b[j] > 0.0 { ghat[j] / eps + safe_ln(b[j]) } else { NEG_INF }).collect();
+    let mut accv = vec![0.0f64; p];
+    for i in 0..n {
+        if a[i] <= 0.0 {
+            r[i] = 0.0;
+            pv[i * p..(i + 1) * p].fill(0.0);
+            continue;
+        }
+        let xi = &x[i * d..(i + 1) * d];
+        let mut mx = NEG_INF;
+        let mut accr = 0.0f64;
+        accv.fill(0.0);
+        for j in 0..m {
+            let s = scale * dot_scalar(xi, &y[j * d..(j + 1) * d]) + bias[j] + extra(i, j);
+            let w = if s <= mx {
+                f64::from(s - mx).exp()
+            } else {
+                let rescale = f64::from(mx - s).exp();
+                accr *= rescale;
+                for av in accv.iter_mut() {
+                    *av *= rescale;
+                }
+                mx = s;
+                1.0
+            };
+            accr += w;
+            if p > 0 {
+                let wv = w * f64::from(weight(i, j));
+                let vj = &v[j * p..(j + 1) * p];
+                for (av, &vv) in accv.iter_mut().zip(vj) {
+                    *av += wv * f64::from(vv);
+                }
+            }
+        }
+        let base = (f64::from(fhat[i] / eps + safe_ln(a[i])) + f64::from(mx)).exp();
+        r[i] = (base * accr) as f32;
+        for (o, &av) in pv[i * p..(i + 1) * p].iter_mut().zip(&accv) {
+            *o = (base * av) as f32;
+        }
+    }
+}
+
 /// Unfused two-pass baseline (online/KeOps-like plan): pass 1 finds the
 /// row max, pass 2 re-computes every score for the stabilized sum.  Same
-/// arithmetic as [`lse_update`], twice the dot products, no fusion and no
-/// threading — kept as an honest baseline for the speedup tables.
+/// arithmetic as [`lse_update`] (including the SIMD dot microkernel), twice
+/// the dot products, no fusion and no threading — kept as an honest
+/// baseline for the speedup tables.
 #[allow(clippy::too_many_arguments)]
 pub fn lse_update_twopass(
     x: &[f32],
@@ -333,14 +543,28 @@ pub fn lse_update_dense(
     }
 }
 
-/// Sup-norm change `max_i |new_i - old_i|` over rows with positive weight
-/// (zero-weight padding rows are excluded so padded solves still converge).
+/// Sup-norm change `max_i |new_i - old_i|` over rows with positive weight.
+///
+/// The mask is explicit: zero-weight (padding / empty-support) rows are
+/// skipped entirely, because their potentials are never consumed downstream
+/// and their `old` entries may hold stale or non-finite warm-start values
+/// that must not leak into the convergence signal.  On an unmasked row a
+/// NaN difference (inf - inf from a blown-up warm start) reports
+/// `f32::INFINITY` — "not converged" — rather than silently vanishing in
+/// the running max.
 pub fn masked_delta(new: &[f32], old: &[f32], w: &[f32]) -> f32 {
+    debug_assert_eq!(new.len(), old.len());
+    debug_assert_eq!(new.len(), w.len());
     let mut delta = 0.0f32;
-    for i in 0..new.len() {
-        if w[i] > 0.0 {
-            delta = delta.max((new[i] - old[i]).abs());
+    for ((&nv, &ov), &wi) in new.iter().zip(old).zip(w) {
+        if wi <= 0.0 {
+            continue; // empty support: potential unused, old may be stale
         }
+        let diff = (nv - ov).abs();
+        if diff.is_nan() {
+            return f32::INFINITY;
+        }
+        delta = delta.max(diff);
     }
     delta
 }
@@ -348,6 +572,10 @@ pub fn masked_delta(new: &[f32], old: &[f32], w: &[f32]) -> f32 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn pool1() -> WorkerPool {
+        WorkerPool::new(1)
+    }
 
     fn dense_lse_row(scores: &[f32]) -> f32 {
         let mx = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
@@ -364,7 +592,7 @@ mod tests {
         let scale = 2.0 / eps;
         let mut out = vec![0.0f32; n];
         let cfg = TileCfg { block_rows: 2, block_cols: 5, threads: 1, ..TileCfg::default() };
-        lse_update(&x, &y, &bias, n, m, d, eps, scale, |_, _| 0.0, &cfg, &mut out);
+        lse_update(&pool1(), &x, &y, &bias, n, m, d, eps, scale, |_, _| 0.0, &cfg, &mut out);
         for i in 0..n {
             let scores: Vec<f32> = (0..m)
                 .map(|j| scale * dot(&x[i * d..(i + 1) * d], &y[j * d..(j + 1) * d]) + bias[j])
@@ -380,9 +608,10 @@ mod tests {
         let x: Vec<f32> = (0..n * d).map(|i| ((i * 31 % 17) as f32) * 0.07).collect();
         let y: Vec<f32> = (0..m * d).map(|i| ((i * 13 % 19) as f32) * 0.05).collect();
         let bias: Vec<f32> = (0..m).map(|j| (j as f32) * 0.01).collect();
+        let pool = WorkerPool::new(4);
         let run = |cfg: &TileCfg| {
             let mut out = vec![0.0f32; n];
-            lse_update(&x, &y, &bias, n, m, d, 0.1, 20.0, |_, _| 0.0, cfg, &mut out);
+            lse_update(&pool, &x, &y, &bias, n, m, d, 0.1, 20.0, |_, _| 0.0, cfg, &mut out);
             out
         };
         let base = run(&TileCfg { block_rows: 1, block_cols: 1, threads: 1, par_threshold: 0 });
@@ -392,6 +621,15 @@ mod tests {
         ] {
             // identical summation order per row => bitwise-equal results
             assert_eq!(run(&cfg), base);
+        }
+    }
+
+    #[test]
+    fn dot_simd_tail_only_is_bitwise_scalar() {
+        for d in 0..DOT_LANES {
+            let a: Vec<f32> = (0..d).map(|i| (i as f32) * 0.3 - 0.7).collect();
+            let b: Vec<f32> = (0..d).map(|i| (i as f32) * 0.2 + 0.1).collect();
+            assert_eq!(dot_simd(&a, &b), dot_scalar(&a, &b), "d={d}");
         }
     }
 
@@ -410,10 +648,14 @@ mod tests {
         let bias: Vec<f32> = (0..m).map(|j| safe_ln(b[j])).collect();
         let bias4: Vec<f32> = bias[..4].to_vec();
         let cfg = TileCfg { threads: 1, ..TileCfg::default() };
+        let pool = pool1();
         let mut full = vec![0.0f32; n];
         let mut trimmed = vec![0.0f32; n];
-        lse_update(&x, &y, &bias, n, m, d, eps, 2.0 / eps, |_, _| 0.0, &cfg, &mut full);
-        lse_update(&x, &y[..4 * d], &bias4, n, 4, d, eps, 2.0 / eps, |_, _| 0.0, &cfg, &mut trimmed);
+        lse_update(&pool, &x, &y, &bias, n, m, d, eps, 2.0 / eps, |_, _| 0.0, &cfg, &mut full);
+        lse_update(
+            &pool, &x, &y[..4 * d], &bias4, n, 4, d, eps, 2.0 / eps, |_, _| 0.0, &cfg,
+            &mut trimmed,
+        );
         assert_eq!(full, trimmed);
     }
 
@@ -432,7 +674,7 @@ mod tests {
         let mut pv = vec![0.0f32; n * p];
         let mut r = vec![0.0f32; n];
         apply_rows(
-            &x, &y, &fhat, &ghat, &a, &b, &v, p, n, m, d, eps, 2.0 / eps,
+            &pool1(), &x, &y, &fhat, &ghat, &a, &b, &v, p, n, m, d, eps, 2.0 / eps,
             |_, _| 0.0, |_, _| 1.0, &cfg, &mut pv, &mut r,
         );
         // dense reference
@@ -469,5 +711,25 @@ mod tests {
         let old = [0.5f32, 0.0, 2.0];
         let w = [0.5f32, 0.0, 0.5];
         assert_eq!(masked_delta(&new, &old, &w), 0.5);
+    }
+
+    #[test]
+    fn masked_delta_ignores_stale_nonfinite_entries_on_masked_rows() {
+        // warm-started duals can leave +/-inf or NaN in empty-support rows;
+        // the explicit mask must keep them out of the convergence signal.
+        let new = [1.0f32, f32::INFINITY, f32::NAN, 2.0];
+        let old = [0.75f32, f32::NEG_INFINITY, 0.0, 2.0];
+        let w = [1.0f32, 0.0, 0.0, 1.0];
+        assert_eq!(masked_delta(&new, &old, &w), 0.25);
+    }
+
+    #[test]
+    fn masked_delta_reports_nan_diff_on_live_rows_as_not_converged() {
+        // inf - inf on a row that *is* in support must read as "not
+        // converged", not as 0.
+        let new = [f32::INFINITY, 1.0f32];
+        let old = [f32::INFINITY, 1.0f32];
+        let w = [1.0f32, 1.0];
+        assert_eq!(masked_delta(&new, &old, &w), f32::INFINITY);
     }
 }

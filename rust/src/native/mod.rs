@@ -25,6 +25,9 @@
 //! so the speedup tables compare real execution plans on every backend.
 
 pub mod kernels;
+pub mod pool;
+
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -32,7 +35,11 @@ use crate::coordinator::router::Router;
 use crate::runtime::backend::{op_of_key, ComputeBackend};
 use crate::runtime::Tensor;
 
-use kernels::{apply_rows, lse_update, lse_update_dense, lse_update_twopass, masked_delta, safe_ln, TileCfg};
+use kernels::{
+    apply_rows, lse_update, lse_update_dense, lse_update_twopass, masked_delta, safe_ln, TileCfg,
+    NEG_INF,
+};
+use pool::WorkerPool;
 
 /// Which execution plan evaluates a Sinkhorn step.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -58,11 +65,16 @@ pub struct NativeBackend {
     pub k_fused: usize,
     /// Tiling / threading configuration for the streaming kernels.
     pub tile: TileCfg,
+    /// Persistent worker pool the kernels fan out over.  Defaults to the
+    /// process-global pool ([`pool::global`]), so clones of this backend —
+    /// and every other default-constructed backend in the process, router
+    /// path and service actor included — share one set of worker threads.
+    pub pool: Arc<WorkerPool>,
 }
 
 impl Default for NativeBackend {
     fn default() -> Self {
-        Self { k_fused: 10, tile: TileCfg::default() }
+        Self { k_fused: 10, tile: TileCfg::default(), pool: pool::global() }
     }
 }
 
@@ -103,6 +115,29 @@ impl NativeBackend {
         Self::default()
     }
 
+    /// A backend with a *private* pool of exactly `threads` claimants
+    /// (instead of the shared global pool).  Used by the coordinator when a
+    /// config caps threads, and by the determinism tests that pin bitwise
+    /// equality across pool widths.
+    pub fn with_threads(threads: usize) -> Self {
+        let threads = threads.max(1);
+        Self {
+            k_fused: 10,
+            tile: TileCfg { threads, ..TileCfg::default() },
+            pool: Arc::new(WorkerPool::new(threads)),
+        }
+    }
+
+    /// Column bias `ghat_j / eps + ln w_j` with zero-weight entries masked
+    /// *explicitly* to [`NEG_INF`]: a stale or non-finite warm-started dual
+    /// on an empty-support point must never outweigh `safe_ln(0)`.
+    fn bias_of(ghat: &[f32], w: &[f32], eps: f32) -> Vec<f32> {
+        ghat.iter()
+            .zip(w)
+            .map(|(&g, &wj)| if wj > 0.0 { g / eps + safe_ln(wj) } else { NEG_INF })
+            .collect()
+    }
+
     /// All op names this backend answers `has() == true` for.
     pub fn ops(&self) -> Vec<String> {
         let mut v: Vec<String> = NATIVE_OPS.iter().map(|s| s.to_string()).collect();
@@ -126,12 +161,12 @@ impl NativeBackend {
         eps: f32,
         out: &mut [f32],
     ) {
-        let bias: Vec<f32> = (0..m).map(|j| ghat[j] / eps + safe_ln(b[j])).collect();
+        let bias = Self::bias_of(ghat, b, eps);
         let scale = 2.0 / eps;
         match plan {
-            Plan::Flash => {
-                lse_update(x, y, &bias, n, m, d, eps, scale, |_, _| 0.0, &self.tile, out)
-            }
+            Plan::Flash => lse_update(
+                &self.pool, x, y, &bias, n, m, d, eps, scale, |_, _| 0.0, &self.tile, out,
+            ),
             Plan::Online => lse_update_twopass(x, y, &bias, n, m, d, eps, scale, out),
             Plan::Dense => lse_update_dense(x, y, &bias, n, m, d, eps, scale, out),
         }
@@ -213,10 +248,11 @@ impl NativeBackend {
         eps: f32,
         out: &mut [f32],
     ) {
-        let bias: Vec<f32> = (0..c.m).map(|j| ghat[j] / eps + safe_ln(c.b[j])).collect();
+        let bias = Self::bias_of(ghat, c.b, eps);
         let scale = 2.0 * l.lam1 / eps;
         let (li, lj, w, v, l2e) = (l.li, l.lj, l.w, l.v, l.lam2 / eps);
         lse_update(
+            &self.pool,
             c.x,
             c.y,
             &bias,
@@ -233,10 +269,11 @@ impl NativeBackend {
 
     /// Label-augmented g-update (rows = y): extra(j, i) = -(lam2/eps) W[li_i, lj_j].
     fn label_update_g(&self, c: &Core<'_>, l: &LabelCtx<'_>, fhat: &[f32], eps: f32, out: &mut [f32]) {
-        let bias: Vec<f32> = (0..c.n).map(|i| fhat[i] / eps + safe_ln(c.a[i])).collect();
+        let bias = Self::bias_of(fhat, c.a, eps);
         let scale = 2.0 * l.lam1 / eps;
         let (li, lj, w, v, l2e) = (l.li, l.lj, l.w, l.v, l.lam2 / eps);
         lse_update(
+            &self.pool,
             c.y,
             c.x,
             &bias,
@@ -257,7 +294,7 @@ impl NativeBackend {
         let mut pv = vec![0.0f32; c.n * p];
         let mut r = vec![0.0f32; c.n];
         apply_rows(
-            c.x, c.y, c.fhat, c.ghat, c.a, c.b, v, p, c.n, c.m, c.d, eps, 2.0 / eps,
+            &self.pool, c.x, c.y, c.fhat, c.ghat, c.a, c.b, v, p, c.n, c.m, c.d, eps, 2.0 / eps,
             |_, _| 0.0, |_, _| 1.0, &self.tile, &mut pv, &mut r,
         );
         (pv, r)
@@ -268,7 +305,7 @@ impl NativeBackend {
         let mut ptu = vec![0.0f32; c.m * p];
         let mut col = vec![0.0f32; c.m];
         apply_rows(
-            c.y, c.x, c.ghat, c.fhat, c.b, c.a, u, p, c.m, c.n, c.d, eps, 2.0 / eps,
+            &self.pool, c.y, c.x, c.ghat, c.fhat, c.b, c.a, u, p, c.m, c.n, c.d, eps, 2.0 / eps,
             |_, _| 0.0, |_, _| 1.0, &self.tile, &mut ptu, &mut col,
         );
         (ptu, col)
@@ -333,7 +370,8 @@ impl ComputeBackend for NativeBackend {
                 let mut pv = vec![0.0f32; c.n * d];
                 let mut r = vec![0.0f32; c.n];
                 apply_rows(
-                    c.x, c.y, c.fhat, c.ghat, c.a, c.b, v, d, c.n, c.m, d, eps, 2.0 / eps,
+                    &self.pool, c.x, c.y, c.fhat, c.ghat, c.a, c.b, v, d, c.n, c.m, d, eps,
+                    2.0 / eps,
                     |_, _| 0.0,
                     |i, j| {
                         aa[i * d..(i + 1) * d]
@@ -417,7 +455,8 @@ impl ComputeBackend for NativeBackend {
                 let mut py = vec![0.0f32; c.n * c.d];
                 let mut r = vec![0.0f32; c.n];
                 apply_rows(
-                    c.x, c.y, c.fhat, c.ghat, c.a, c.b, c.y, c.d, c.n, c.m, c.d, eps, scale,
+                    &self.pool, c.x, c.y, c.fhat, c.ghat, c.a, c.b, c.y, c.d, c.n, c.m, c.d, eps,
+                    scale,
                     |i, j| -l2e * w[li[i] as usize * v + lj[j] as usize],
                     |_, _| 1.0,
                     &self.tile,

@@ -1,0 +1,336 @@
+//! Persistent worker pool for the native streaming kernels.
+//!
+//! PR 1 fanned row blocks out with `std::thread::scope`, paying a full
+//! thread spawn + join per kernel call — fine for one solve, hostile to a
+//! service doing thousands of small solves per second.  This pool keeps a
+//! fixed set of long-lived workers parked on a condvar; each parallel
+//! region publishes one lifetime-erased `Fn(start, end)` body plus an
+//! atomic chunk cursor, and workers (the submitting thread included) claim
+//! row chunks with `fetch_add` until the range is drained — chunked work
+//! stealing with zero per-call thread churn.
+//!
+//! Determinism contract: a chunk is a contiguous row range and every row is
+//! processed by exactly one claimant, so per-row reduction order — and hence
+//! the f32 result — is bitwise-identical for every pool width and every
+//! chunk schedule (validated by the pool-determinism test in
+//! `tests/native_backend.rs`).
+//!
+//! One pool is shared process-wide (see [`global`]): the router path, the
+//! service actor and every default-constructed [`crate::native::NativeBackend`]
+//! draw from the same workers, sized once from `FLASH_SINKHORN_THREADS`
+//! (unset or 0 = one worker per available core).  Regions are serialized by
+//! a submit lock; concurrent solves queue rather than oversubscribe.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
+use std::thread::JoinHandle;
+
+/// A lifetime-erased parallel-region body: `body(start, end)` processes the
+/// contiguous row range `[start, end)`.
+type Body = dyn Fn(usize, usize) + Sync;
+
+struct Ctrl {
+    /// Bumped once per parallel region so parked workers detect new work.
+    epoch: u64,
+    /// The current region's body; `None` while idle.  The reference is
+    /// lifetime-erased in [`WorkerPool::run`], which does not return until
+    /// every worker has finished the epoch — the borrow never escapes.
+    body: Option<&'static Body>,
+    /// Workers that have not yet finished the current epoch.
+    running: usize,
+    shutdown: bool,
+}
+
+struct Shared {
+    ctrl: Mutex<Ctrl>,
+    /// Workers park here between regions.
+    work_cv: Condvar,
+    /// The submitter parks here until `running == 0`.
+    done_cv: Condvar,
+    /// Next row index to claim (chunked work stealing).
+    cursor: AtomicUsize,
+    rows: AtomicUsize,
+    chunk: AtomicUsize,
+    /// A worker panicked inside a region body.
+    panicked: AtomicBool,
+}
+
+/// Long-lived worker threads fed row-range tasks over a shared cursor.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    threads: usize,
+    /// Serializes parallel regions: the pool runs one task at a time, so
+    /// concurrent solves (service actor + tests + router path) queue here
+    /// instead of corrupting the shared cursor.
+    submit: Mutex<()>,
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "WorkerPool({} threads)", self.threads)
+    }
+}
+
+/// Lock that shrugs off poisoning: a panic that unwound through a guard
+/// must not wedge every later solve in the process-wide pool.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn worker(shared: Arc<Shared>) {
+    let mut seen = 0u64;
+    loop {
+        let body = {
+            let mut g = lock(&shared.ctrl);
+            loop {
+                if g.shutdown {
+                    return;
+                }
+                match g.body {
+                    Some(b) if g.epoch != seen => {
+                        seen = g.epoch;
+                        break b;
+                    }
+                    _ => g = shared.work_cv.wait(g).unwrap_or_else(|e| e.into_inner()),
+                }
+            }
+        };
+        let rows = shared.rows.load(Ordering::Acquire);
+        let chunk = shared.chunk.load(Ordering::Acquire).max(1);
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| loop {
+            let start = shared.cursor.fetch_add(chunk, Ordering::Relaxed);
+            if start >= rows {
+                break;
+            }
+            body(start, (start + chunk).min(rows));
+        }));
+        if outcome.is_err() {
+            shared.panicked.store(true, Ordering::Release);
+        }
+        let mut g = lock(&shared.ctrl);
+        g.running -= 1;
+        if g.running == 0 {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+impl WorkerPool {
+    /// A pool with `threads` total claimants: the submitting thread plus
+    /// `threads - 1` spawned workers.  `threads <= 1` spawns nothing and
+    /// [`run`](Self::run) executes inline.
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            ctrl: Mutex::new(Ctrl { epoch: 0, body: None, running: 0, shutdown: false }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            cursor: AtomicUsize::new(0),
+            rows: AtomicUsize::new(0),
+            chunk: AtomicUsize::new(1),
+            panicked: AtomicBool::new(false),
+        });
+        let mut handles = Vec::with_capacity(threads - 1);
+        for i in 0..threads - 1 {
+            let s = Arc::clone(&shared);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("fs-pool-{i}"))
+                    .spawn(move || worker(s))
+                    .expect("spawning pool worker"),
+            );
+        }
+        Self { shared, handles, threads, submit: Mutex::new(()) }
+    }
+
+    /// Total claimants (submitting thread included).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `body(start, end)` over disjoint `chunk`-row pieces of
+    /// `0..rows`, the calling thread stealing chunks alongside the workers.
+    /// Returns only after every chunk has completed, so `body` may borrow
+    /// from the caller's stack.  Panics inside `body` are re-raised here.
+    // The transmute below changes only the reference lifetime (the whole
+    // point of the erasure); clippy flags lifetime-only transmutes.
+    #[allow(clippy::useless_transmute)]
+    pub fn run<F>(&self, rows: usize, chunk: usize, body: F)
+    where
+        F: Fn(usize, usize) + Sync,
+    {
+        if rows == 0 {
+            return;
+        }
+        let chunk = chunk.max(1);
+        if self.handles.is_empty() {
+            body(0, rows);
+            return;
+        }
+        let _region = lock(&self.submit);
+        // Lifetime erasure: workers hold the reference only between
+        // observing the epoch and decrementing `running`, and we wait for
+        // `running == 0` below before returning, so the erased borrow never
+        // outlives this frame.
+        let body_ref: &(dyn Fn(usize, usize) + Sync) = &body;
+        let body_static = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize, usize) + Sync), &'static Body>(body_ref)
+        };
+        self.shared.cursor.store(0, Ordering::Relaxed);
+        self.shared.rows.store(rows, Ordering::Release);
+        self.shared.chunk.store(chunk, Ordering::Release);
+        {
+            let mut g = lock(&self.shared.ctrl);
+            g.epoch = g.epoch.wrapping_add(1);
+            g.body = Some(body_static);
+            g.running = self.handles.len();
+            self.shared.work_cv.notify_all();
+        }
+        // The submitter is a claimant too; catch panics so the workers are
+        // always joined on the epoch before the unwind continues (the body
+        // borrows from this very frame).
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| loop {
+            let start = self.shared.cursor.fetch_add(chunk, Ordering::Relaxed);
+            if start >= rows {
+                break;
+            }
+            body(start, (start + chunk).min(rows));
+        }));
+        let mut g = lock(&self.shared.ctrl);
+        while g.running > 0 {
+            g = self.shared.done_cv.wait(g).unwrap_or_else(|e| e.into_inner());
+        }
+        g.body = None;
+        drop(g);
+        // Clear the worker-panic flag *before* a possible resume_unwind:
+        // if both the submitter and a worker panicked in this region, the
+        // flag must not leak into (and spuriously fail) the next region on
+        // the shared pool.
+        let worker_panicked = self.shared.panicked.swap(false, Ordering::AcqRel);
+        if let Err(payload) = outcome {
+            std::panic::resume_unwind(payload);
+        }
+        if worker_panicked {
+            panic!("flash-sinkhorn pool worker panicked inside a parallel region");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut g = lock(&self.shared.ctrl);
+            g.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Pool width from `FLASH_SINKHORN_THREADS`; unset, unparsable or 0 means
+/// one claimant per available core.
+pub fn configured_threads() -> usize {
+    match std::env::var("FLASH_SINKHORN_THREADS").ok().and_then(|v| v.parse::<usize>().ok()) {
+        Some(t) if t > 0 => t,
+        _ => std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1),
+    }
+}
+
+static GLOBAL: OnceLock<Arc<WorkerPool>> = OnceLock::new();
+
+/// The process-wide pool shared by every default-constructed backend —
+/// router path, service actor and library callers alike — so the whole
+/// process owns exactly one set of worker threads.
+pub fn global() -> Arc<WorkerPool> {
+    Arc::clone(GLOBAL.get_or_init(|| Arc::new(WorkerPool::new(configured_threads()))))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn covers_every_row_exactly_once() {
+        let pool = WorkerPool::new(4);
+        for rows in [1usize, 7, 64, 1000] {
+            for chunk in [1usize, 3, 17, 1000] {
+                let hits: Vec<AtomicUsize> = (0..rows).map(|_| AtomicUsize::new(0)).collect();
+                pool.run(rows, chunk, |r0, r1| {
+                    for i in r0..r1 {
+                        hits[i].fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+                for (i, h) in hits.iter().enumerate() {
+                    assert_eq!(h.load(Ordering::Relaxed), 1, "row {i} (rows={rows}, chunk={chunk})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_thread_pool_runs_inline() {
+        let pool = WorkerPool::new(1);
+        assert_eq!(pool.threads(), 1);
+        let sum = AtomicU64::new(0);
+        pool.run(100, 8, |r0, r1| {
+            for i in r0..r1 {
+                sum.fetch_add(i as u64, Ordering::Relaxed);
+            }
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 99 * 100 / 2);
+    }
+
+    #[test]
+    fn zero_rows_is_a_noop() {
+        let pool = WorkerPool::new(2);
+        pool.run(0, 4, |_, _| panic!("must not be called"));
+    }
+
+    #[test]
+    fn sequential_regions_reuse_the_same_workers() {
+        let pool = WorkerPool::new(3);
+        for round in 0..50usize {
+            let sum = AtomicU64::new(0);
+            pool.run(round + 1, 2, |r0, r1| {
+                for i in r0..r1 {
+                    sum.fetch_add(i as u64 + 1, Ordering::Relaxed);
+                }
+            });
+            let n = (round + 1) as u64;
+            assert_eq!(sum.load(Ordering::Relaxed), n * (n + 1) / 2, "round {round}");
+        }
+    }
+
+    #[test]
+    fn concurrent_submitters_serialize_cleanly() {
+        let pool = Arc::new(WorkerPool::new(4));
+        std::thread::scope(|scope| {
+            for t in 0..4u64 {
+                let pool = Arc::clone(&pool);
+                scope.spawn(move || {
+                    for _ in 0..20 {
+                        let sum = AtomicU64::new(0);
+                        pool.run(128, 5, |r0, r1| {
+                            for i in r0..r1 {
+                                sum.fetch_add(i as u64 + t, Ordering::Relaxed);
+                            }
+                        });
+                        assert_eq!(sum.load(Ordering::Relaxed), 127 * 128 / 2 + 128 * t);
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn global_pool_is_shared() {
+        let a = global();
+        let b = global();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert!(a.threads() >= 1);
+    }
+}

@@ -9,7 +9,10 @@
 //!
 //! * [`crate::native::NativeBackend`] — pure Rust, cache-tiled streaming
 //!   LogSumExp over point-cloud tiles (the paper's SRAM-tiling structure on
-//!   CPU).  Exact-shape routing, no padding, no FFI.  Always available.
+//!   CPU), with a d-blocked SIMD dot/LSE microkernel and row ranges fanned
+//!   out over a persistent process-global worker pool
+//!   (`crate::native::pool`, sized by `FLASH_SINKHORN_THREADS`).
+//!   Exact-shape routing, no padding, no FFI.  Always available.
 //! * `runtime::Engine` (feature `pjrt`) — loads Python-lowered HLO
 //!   artifacts through the PJRT C API; static shape buckets + zero-weight
 //!   padding.

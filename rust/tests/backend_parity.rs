@@ -1,0 +1,141 @@
+//! Backend parity: the fused `k{k}_*` step family against k explicit
+//! single steps, driven through the public `ComputeBackend::call` surface
+//! with bucket-suffixed artifact keys — covering the `parse_fused` routing
+//! in `native::mod` (key -> (k, schedule)) end to end, including the
+//! induced-marginal agreement the solver relies on when it swaps fused and
+//! single-step plans mid-solve.
+
+use flash_sinkhorn::data::clouds::{random_simplex, uniform_cloud};
+use flash_sinkhorn::native::NativeBackend;
+use flash_sinkhorn::runtime::{ComputeBackend, Tensor};
+
+fn core_inputs(n: usize, m: usize, d: usize, seed: u64, eps: f32) -> Vec<Tensor> {
+    let x = uniform_cloud(n, d, seed);
+    let y = uniform_cloud(m, d, seed + 1);
+    let alpha: Vec<f32> =
+        (0..n).map(|i| -x[i * d..(i + 1) * d].iter().map(|v| v * v).sum::<f32>()).collect();
+    let beta: Vec<f32> =
+        (0..m).map(|j| -y[j * d..(j + 1) * d].iter().map(|v| v * v).sum::<f32>()).collect();
+    vec![
+        Tensor::matrix(n, d, x),
+        Tensor::matrix(m, d, y),
+        Tensor::vector(alpha),
+        Tensor::vector(beta),
+        Tensor::vector(random_simplex(n, seed + 2)),
+        Tensor::vector(random_simplex(m, seed + 3)),
+        Tensor::scalar(eps),
+    ]
+}
+
+/// Drive `k` single `step_op` calls, returning the final inputs (duals
+/// updated in place) and the last step's (df, dg).
+fn k_single_steps(
+    b: &NativeBackend,
+    step_op: &str,
+    k: usize,
+    mut inputs: Vec<Tensor>,
+) -> (Vec<Tensor>, f32, f32) {
+    let (mut df, mut dg) = (f32::NAN, f32::NAN);
+    for _ in 0..k {
+        let outs = b.call(step_op, &inputs).unwrap();
+        inputs[2] = outs[0].clone();
+        inputs[3] = outs[1].clone();
+        df = outs[2].as_f32().unwrap()[0];
+        dg = outs[3].as_f32().unwrap()[0];
+    }
+    (inputs, df, dg)
+}
+
+#[test]
+fn fused_alternating_matches_k_single_steps_bitwise() {
+    let b = NativeBackend::default();
+    for k in [1usize, 3, 7] {
+        let (n, m, d) = (21, 17, 5);
+        let inputs = core_inputs(n, m, d, 100 + k as u64, 0.2);
+        // bucket-suffixed key: exercises op_of_key + parse_fused together
+        let fused = b
+            .call(&format!("k{k}_alternating__n{n}_m{m}_d{d}"), &inputs)
+            .unwrap();
+        let (single, df, dg) = k_single_steps(&b, "alternating_step", k, inputs);
+        assert_eq!(
+            single[2].as_f32().unwrap(),
+            fused[0].as_f32().unwrap(),
+            "k={k}: fused fhat differs from {k} single steps"
+        );
+        assert_eq!(
+            single[3].as_f32().unwrap(),
+            fused[1].as_f32().unwrap(),
+            "k={k}: fused ghat differs from {k} single steps"
+        );
+        // dual deltas: the fused op reports its last inner iteration's
+        // (df, dg), which must equal the k-th single step's.
+        assert_eq!(fused[2].as_f32().unwrap()[0], df, "k={k}: df differs");
+        assert_eq!(fused[3].as_f32().unwrap()[0], dg, "k={k}: dg differs");
+    }
+}
+
+#[test]
+fn fused_symmetric_matches_k_single_steps_bitwise() {
+    let b = NativeBackend::default();
+    for k in [2usize, 5] {
+        let (n, m, d) = (16, 23, 4);
+        let inputs = core_inputs(n, m, d, 200 + k as u64, 0.15);
+        let fused = b.call(&format!("k{k}_symmetric__n{n}_m{m}_d{d}"), &inputs).unwrap();
+        let (single, df, dg) = k_single_steps(&b, "symmetric_step", k, inputs);
+        assert_eq!(single[2].as_f32().unwrap(), fused[0].as_f32().unwrap(), "k={k}: fhat");
+        assert_eq!(single[3].as_f32().unwrap(), fused[1].as_f32().unwrap(), "k={k}: ghat");
+        assert_eq!(fused[2].as_f32().unwrap()[0], df, "k={k}: df");
+        assert_eq!(fused[3].as_f32().unwrap()[0], dg, "k={k}: dg");
+    }
+}
+
+#[test]
+fn fused_and_single_step_plans_induce_identical_marginals() {
+    let b = NativeBackend::default();
+    let (n, m, d, k) = (19, 25, 3, 6);
+    let base = core_inputs(n, m, d, 300, 0.2);
+    let fused = b.call(&format!("k{k}_alternating__n{n}_m{m}_d{d}"), &base).unwrap();
+    let (single, _, _) = k_single_steps(&b, "alternating_step", k, base.clone());
+
+    let with_duals = |f: &Tensor, g: &Tensor| -> (Vec<f32>, Vec<f32>) {
+        let mut inputs = base.clone();
+        inputs[2] = f.clone();
+        inputs[3] = g.clone();
+        let outs = b.call("marginals", &inputs).unwrap();
+        (outs[0].as_f32().unwrap().to_vec(), outs[1].as_f32().unwrap().to_vec())
+    };
+    let (rf, cf) = with_duals(&fused[0], &fused[1]);
+    let (rs, cs) = with_duals(&single[2], &single[3]);
+    assert_eq!(rf, rs, "row marginals differ between fused and single-step duals");
+    assert_eq!(cf, cs, "col marginals differ");
+
+    // marginal error vs the prescribed weights agrees too (the quantity the
+    // solver's convergence accounting actually consumes)
+    let a = base[4].as_f32().unwrap();
+    let bw = base[5].as_f32().unwrap();
+    let err = |r: &[f32], c: &[f32]| -> f32 {
+        let er = r.iter().zip(a).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
+        let ec = c.iter().zip(bw).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
+        er.max(ec)
+    };
+    assert_eq!(err(&rf, &cf), err(&rs, &cs));
+}
+
+#[test]
+fn parse_fused_routing_accepts_and_rejects_the_right_keys() {
+    let b = NativeBackend::default();
+    // accepted: any k with either schedule, with or without bucket suffix
+    for key in ["k1_alternating", "k42_symmetric", "k3_alternating__n64_m64_d4"] {
+        assert!(b.has(key), "{key} should route");
+    }
+    // rejected: malformed k, unknown schedule, missing underscore
+    for key in ["kx_alternating", "k_alternating", "k3_weird", "k3alternating", "q3_symmetric"] {
+        assert!(!b.has(key), "{key} should not route");
+    }
+    // k0 clamps to one inner step rather than doing nothing
+    let inputs = core_inputs(9, 8, 2, 400, 0.3);
+    let k0 = b.call("k0_alternating", &inputs).unwrap();
+    let one = b.call("alternating_step", &inputs).unwrap();
+    assert_eq!(k0[0].as_f32().unwrap(), one[0].as_f32().unwrap());
+    assert_eq!(k0[1].as_f32().unwrap(), one[1].as_f32().unwrap());
+}

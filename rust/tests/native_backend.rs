@@ -235,6 +235,59 @@ fn prop_zero_weight_padding_is_exact() {
     }
 }
 
+/// Worker-pool determinism: the same solve on 1-, 2- and 8-thread pools
+/// produces bitwise-identical dual potentials.  Rows are partitioned into
+/// contiguous chunks and never split, and the per-row reduction order is
+/// fixed, so pool width must not change a single bit.
+#[test]
+fn pool_thread_count_is_bitwise_invariant() {
+    let (n, m, d) = (257, 193, 19);
+    let (x, y, a, b) = instance(n, m, d, 77);
+    let prob = OtProblem::new(x, y, a, b, n, m, d, 0.1).unwrap();
+    let solve_with = |threads: usize| {
+        let mut backend = NativeBackend::with_threads(threads);
+        // force the pool even on this deliberately small problem
+        backend.tile.par_threshold = 0;
+        let solver =
+            SinkhornSolver::new(&backend, SolverConfig::fixed_iters(12, Schedule::Alternating));
+        let (pot, _) = solver.solve(&prob).unwrap();
+        pot
+    };
+    let base = solve_with(1);
+    for threads in [2usize, 8] {
+        let pot = solve_with(threads);
+        assert_eq!(base.fhat, pot.fhat, "{threads}-thread pool changed fhat bitwise");
+        assert_eq!(base.ghat, pot.ghat, "{threads}-thread pool changed ghat bitwise");
+    }
+}
+
+/// Same determinism through the transport/application path (apply_rows):
+/// marginals and P V must be bitwise pool-width invariant too.
+#[test]
+fn pool_thread_count_is_bitwise_invariant_for_transport() {
+    let (n, m, d) = (211, 167, 9);
+    let (x, y, a, b) = instance(n, m, d, 91);
+    let prob = OtProblem::new(x, y.clone(), a, b, n, m, d, 0.15).unwrap();
+    let run = |threads: usize| {
+        let mut backend = NativeBackend::with_threads(threads);
+        backend.tile.par_threshold = 0;
+        let solver =
+            SinkhornSolver::new(&backend, SolverConfig::fixed_iters(8, Schedule::Alternating));
+        let (pot, _) = solver.solve(&prob).unwrap();
+        let t = Transport::new(&backend, solver.router(), &prob, &pot).unwrap();
+        let (r, c) = t.marginals().unwrap();
+        let (pv, _) = t.apply_pv(&y, d).unwrap();
+        (r, c, pv)
+    };
+    let (r1, c1, pv1) = run(1);
+    for threads in [2usize, 8] {
+        let (rt, ct, pvt) = run(threads);
+        assert_eq!(r1, rt, "{threads} threads changed row marginals");
+        assert_eq!(c1, ct, "{threads} threads changed col marginals");
+        assert_eq!(pv1, pvt, "{threads} threads changed P V");
+    }
+}
+
 /// `has` answers the full advertised op surface of the backend.
 #[test]
 fn backend_surface_is_complete() {
