@@ -10,6 +10,9 @@ use std::time::Instant;
 
 use flash_sinkhorn::bench;
 use flash_sinkhorn::bench::trajectory;
+use flash_sinkhorn::config::Config;
+use flash_sinkhorn::coordinator::job::{JobKind, JobRequest};
+use flash_sinkhorn::coordinator::service;
 use flash_sinkhorn::data::clouds::uniform_cloud;
 use flash_sinkhorn::native::kernels::{lse_update, lse_update_scalar, TileCfg};
 use flash_sinkhorn::native::pool::WorkerPool;
@@ -66,6 +69,44 @@ fn lse_microbench() -> (f64, f64) {
     (simd_s, scalar_s)
 }
 
+/// Sharded-service throughput smoke: a mixed small-solve workload through
+/// a 2-actor pool.  Recorded into the bench JSON for trend-watching, not
+/// gated — absolute jobs/s is machine-dependent.  (The process-global
+/// kernel pool spun up by the earlier solve timings stays alive but its
+/// workers are condvar-parked — nothing submits to it here — so the
+/// partitioned actor pools measure on an otherwise idle machine.)
+const SERVE_ACTORS: usize = 2;
+const SERVE_JOBS: usize = 48;
+
+fn serve_microbench() -> f64 {
+    let mut cfg = Config::default();
+    cfg.backend = "native".into();
+    cfg.service.actors = SERVE_ACTORS;
+    let handle = service::spawn(cfg).expect("spawning bench service");
+    let t0 = Instant::now();
+    let pendings: Vec<_> = (0..SERVE_JOBS)
+        .map(|i| {
+            let n = [64usize, 128, 256][i % 3];
+            let prob = OtProblem::uniform(
+                uniform_cloud(n, 16, i as u64),
+                uniform_cloud(n, 16, i as u64 + 500),
+                n,
+                n,
+                16,
+                0.1,
+            )
+            .unwrap();
+            handle
+                .submit(JobRequest::with_fixed_iters(JobKind::Solve, prob, 10))
+                .expect("submitting bench job")
+        })
+        .collect();
+    for p in pendings {
+        p.recv().expect("bench job failed");
+    }
+    SERVE_JOBS as f64 / t0.elapsed().as_secs_f64()
+}
+
 fn smoke(backend: &dyn ComputeBackend) {
     let (n, m, d, eps) = (512usize, 512usize, 16usize, 0.1f32);
     let iters = 10usize;
@@ -91,6 +132,7 @@ fn smoke(backend: &dyn ComputeBackend) {
     let (unfused_s, _) = time_plan(false, Schedule::Alternating);
     let (symmetric_s, _) = time_plan(true, Schedule::Symmetric);
     let (lse_simd_s, lse_scalar_s) = lse_microbench();
+    let serve_jobs_per_s = serve_microbench();
 
     let out = obj(vec![
         ("backend", s(backend.name())),
@@ -112,6 +154,10 @@ fn smoke(backend: &dyn ComputeBackend) {
         ("lse_simd_ms", num(lse_simd_s * 1e3)),
         ("lse_scalar_ms", num(lse_scalar_s * 1e3)),
         ("lse_simd_speedup", num(lse_scalar_s / lse_simd_s)),
+        // sharded-service throughput (trend only; not gated)
+        ("serve_actors", num(SERVE_ACTORS as f64)),
+        ("serve_jobs", num(SERVE_JOBS as f64)),
+        ("serve_jobs_per_s", num(serve_jobs_per_s)),
         (
             "threads",
             num(std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1) as f64),

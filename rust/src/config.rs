@@ -50,6 +50,12 @@ pub struct ServiceSection {
     pub max_wait_ms: u64,
     /// Bound on the pending-job queue (backpressure).
     pub queue_cap: usize,
+    /// Backend actors the service shards across.  1 (the default) is the
+    /// original single-actor service; N > 1 partitions the kernel pool
+    /// into N slices and steals queued classes across actors.  Defaults
+    /// from `FLASH_SINKHORN_ACTORS` (unset or 0 = 1); the config key and
+    /// the `repro serve --actors` flag override it, in that order.
+    pub actors: usize,
 }
 
 #[derive(Debug, Clone)]
@@ -85,7 +91,16 @@ impl Default for Config {
                 use_fused: true,
                 anneal_factor: 1.0,
             },
-            service: ServiceSection { max_batch: 16, max_wait_ms: 2, queue_cap: 1024 },
+            service: ServiceSection {
+                max_batch: 16,
+                max_wait_ms: 2,
+                queue_cap: 1024,
+                actors: std::env::var("FLASH_SINKHORN_ACTORS")
+                    .ok()
+                    .and_then(|v| v.parse::<usize>().ok())
+                    .filter(|&a| a > 0)
+                    .unwrap_or(1),
+            },
             hvp: HvpSection { tau: 1e-5, eta: 1e-6, max_cg: 200 },
             bench: BenchSection { out_dir: "results".into(), reps: 3, warmup: 1 },
         }
@@ -134,6 +149,7 @@ impl Config {
                 cfg.service.max_wait_ms = v.as_usize()? as u64;
             }
             upd_usize(s, "queue_cap", &mut cfg.service.queue_cap)?;
+            upd_usize(s, "actors", &mut cfg.service.actors)?;
         }
         if let Some(s) = j.get("hvp") {
             upd_f32(s, "tau", &mut cfg.hvp.tau)?;
@@ -189,6 +205,17 @@ mod tests {
         assert_eq!(Config::from_json("{}").unwrap().threads, 0);
         assert_eq!(Config::from_json(r#"{"threads": 6}"#).unwrap().threads, 6);
         assert!(Config::from_json(r#"{"threads": -1}"#).is_err());
+    }
+
+    #[test]
+    fn actors_knob_parses_and_defaults_to_one() {
+        // (FLASH_SINKHORN_ACTORS is not set in the test environment)
+        assert!(Config::from_json("{}").unwrap().service.actors >= 1);
+        assert_eq!(
+            Config::from_json(r#"{"service": {"actors": 4}}"#).unwrap().service.actors,
+            4
+        );
+        assert!(Config::from_json(r#"{"service": {"actors": -2}}"#).is_err());
     }
 
     #[test]

@@ -1,33 +1,56 @@
-//! Dynamic same-bucket batching.
+//! Dynamic same-class batching.
 //!
-//! Jobs that route to the same artifact bucket are coalesced into one batch
-//! so the engine thread runs them back-to-back against a hot executable
-//! (cache affinity + amortized dispatch) -- the CPU analogue of the paper's
-//! "fewer kernel launches" lever.  Non-matching jobs are stashed, never
-//! dropped, and keep FIFO order within their own bucket class (invariants
-//! enforced by proptests).
+//! Jobs that route to the same shape class are coalesced into one batch so
+//! an actor runs them back-to-back against hot code and caches (the CPU
+//! analogue of the paper's "fewer kernel launches" lever).  Two structures
+//! live here:
+//!
+//! * [`Batcher`] — the original single-consumer channel batcher: pulls from
+//!   one `mpsc` receiver, coalesces same-key jobs, stashes mismatches
+//!   (FIFO within a key; invariants enforced by the unit tests below).
+//!   Still the right tool for a dedicated single actor.
+//! * [`ClassQueues`] — the sharded service's admission structure: one FIFO
+//!   queue *per class key*, a global admission cap (backpressure), and
+//!   arrival-order bookkeeping so schedulers can pick the oldest /
+//!   highest-priority class and steal across classes without ever
+//!   reordering jobs inside a class.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};
 
-/// Anything with a batch key.
+/// Anything with a batch key (and, optionally, a scheduling priority).
 pub trait Keyed {
+    /// The class key jobs coalesce under.
     type Key: Eq + Clone + std::fmt::Debug;
+
+    /// The item's class key.
     fn key(&self) -> Self::Key;
+
+    /// Scheduling priority; higher is served first when a consumer picks
+    /// among classes.  Defaults to 0 (pure FIFO across classes).
+    fn priority(&self) -> u8 {
+        0
+    }
 }
 
+/// Single-consumer channel batcher (see module docs).
 pub struct Batcher<T: Keyed> {
+    /// Max jobs coalesced into one batch.
     pub max_batch: usize,
+    /// Max time to wait for batch-mates before dispatching a partial batch.
     pub max_wait: Duration,
     stash: VecDeque<T>,
 }
 
 impl<T: Keyed> Batcher<T> {
+    /// A batcher dispatching at most `max_batch` jobs per batch, waiting at
+    /// most `max_wait` for same-key batch-mates.
     pub fn new(max_batch: usize, max_wait: Duration) -> Self {
         Self { max_batch: max_batch.max(1), max_wait, stash: VecDeque::new() }
     }
 
+    /// Jobs pulled off the channel but not yet dispatched (key mismatch).
     pub fn stashed(&self) -> usize {
         self.stash.len()
     }
@@ -77,6 +100,149 @@ impl<T: Keyed> Batcher<T> {
     }
 }
 
+/// The scheduling-relevant view of one class's queue front, as returned by
+/// [`ClassQueues::fronts`]: enough for a consumer to pick a class without
+/// touching the jobs themselves.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ClassFront<K> {
+    /// The class key.
+    pub class: K,
+    /// Highest priority among the jobs queued in this class — not just the
+    /// front job's, so an urgent job buried behind same-class mates still
+    /// raises its whole class (in-class order stays FIFO regardless).
+    pub priority: u8,
+    /// Global arrival sequence number of the front job (lower = older).
+    pub seq: u64,
+    /// Jobs currently queued in this class.
+    pub depth: usize,
+}
+
+/// Per-class FIFO queues with a global admission cap.
+///
+/// Invariants (enforced by the tests below):
+/// * jobs never reorder within a class — `pop_batch` returns them in
+///   arrival order;
+/// * the map never holds an empty class — a drained class disappears, so
+///   `fronts()` only reports classes with work;
+/// * `push` past the admission cap is rejected (the caller gets the job
+///   back to fail it upstream — that *is* the backpressure signal);
+/// * `drain()` returns every remaining job in global arrival order — a
+///   flush utility for embedders.  (The job service's actors drain at
+///   shutdown via repeated `pop_batch` instead, so class batching is
+///   preserved even for stragglers.)
+pub struct ClassQueues<T: Keyed>
+where
+    T::Key: Ord,
+{
+    queues: BTreeMap<T::Key, VecDeque<(u64, T)>>,
+    seq: u64,
+    len: usize,
+    cap: usize,
+}
+
+impl<T: Keyed> ClassQueues<T>
+where
+    T::Key: Ord,
+{
+    /// Queues admitting at most `cap` jobs in total (0 = unbounded).
+    pub fn with_capacity(cap: usize) -> Self {
+        Self {
+            queues: BTreeMap::new(),
+            seq: 0,
+            len: 0,
+            cap: if cap == 0 { usize::MAX } else { cap },
+        }
+    }
+
+    /// Total queued jobs across all classes.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when no job is queued in any class.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Number of distinct classes with at least one queued job.
+    pub fn class_count(&self) -> usize {
+        self.queues.len()
+    }
+
+    /// Jobs queued in `class` (0 when the class is empty / unknown).
+    pub fn depth(&self, class: &T::Key) -> usize {
+        self.queues.get(class).map_or(0, VecDeque::len)
+    }
+
+    /// Admit a job into its class queue.  Returns the job back when the
+    /// admission cap is reached — the caller converts that into a
+    /// backpressure error without the job ever entering a queue.
+    pub fn push(&mut self, item: T) -> Result<(), T> {
+        if self.len >= self.cap {
+            return Err(item);
+        }
+        let key = item.key();
+        let seq = self.seq;
+        self.seq += 1;
+        self.len += 1;
+        self.queues.entry(key).or_default().push_back((seq, item));
+        Ok(())
+    }
+
+    /// One [`ClassFront`] per non-empty class, in key order.  Consumers
+    /// pick a class (home-first, priority, then oldest seq) and call
+    /// [`pop_batch`](Self::pop_batch).
+    ///
+    /// The per-class max-priority scan makes this O(total queued) — bounded
+    /// by the admission cap and microseconds against millisecond-scale
+    /// solves.  If scheduler-lock contention ever shows up in profiles,
+    /// the next step is caching a per-class max (bump on push, recompute
+    /// one class on pop).
+    pub fn fronts(&self) -> Vec<ClassFront<T::Key>> {
+        self.queues
+            .iter()
+            .map(|(k, q)| {
+                let (seq, _) = q.front().expect("class queues never hold an empty class");
+                ClassFront {
+                    class: k.clone(),
+                    priority: q.iter().map(|(_, it)| it.priority()).max().unwrap_or(0),
+                    seq: *seq,
+                    depth: q.len(),
+                }
+            })
+            .collect()
+    }
+
+    /// Remove and return up to `max` jobs from `class`, in arrival order.
+    /// Returns an empty vec for an empty / unknown class.  A drained class
+    /// is removed from the map entirely.
+    pub fn pop_batch(&mut self, class: &T::Key, max: usize) -> Vec<T> {
+        let max = max.max(1);
+        let Some(q) = self.queues.get_mut(class) else {
+            return Vec::new();
+        };
+        let take = q.len().min(max);
+        let batch: Vec<T> = q.drain(..take).map(|(_, item)| item).collect();
+        if q.is_empty() {
+            self.queues.remove(class);
+        }
+        self.len -= batch.len();
+        batch
+    }
+
+    /// Remove and return every queued job in global arrival order — the
+    /// order they were admitted, regardless of class.  A flush utility for
+    /// embedders; the job service's shutdown path drains via `pop_batch`
+    /// to keep class batching.
+    pub fn drain(&mut self) -> Vec<T> {
+        let mut all: Vec<(u64, T)> =
+            std::mem::take(&mut self.queues).into_values().flatten().collect();
+        all.sort_by_key(|(seq, _)| *seq);
+        self.len = 0;
+        all.into_iter().map(|(_, item)| item).collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -89,6 +255,20 @@ mod tests {
         type Key = &'static str;
         fn key(&self) -> &'static str {
             self.1
+        }
+    }
+
+    /// Item with an explicit priority (ClassQueues scheduling tests).
+    #[derive(Debug, Clone, PartialEq)]
+    struct Prio(u32, &'static str, u8);
+
+    impl Keyed for Prio {
+        type Key = &'static str;
+        fn key(&self) -> &'static str {
+            self.1
+        }
+        fn priority(&self) -> u8 {
+            self.2
         }
     }
 
@@ -137,5 +317,106 @@ mod tests {
         drop(tx);
         let mut b = Batcher::new(4, Duration::from_millis(1));
         assert!(b.next_batch(&rx).is_none());
+    }
+
+    // --- ClassQueues edge cases ---------------------------------------
+
+    #[test]
+    fn empty_class_pops_nothing() {
+        let mut q: ClassQueues<Item> = ClassQueues::with_capacity(8);
+        assert!(q.is_empty());
+        assert_eq!(q.pop_batch(&"a", 4), Vec::<Item>::new());
+        assert_eq!(q.depth(&"a"), 0);
+        assert_eq!(q.class_count(), 0);
+        assert!(q.fronts().is_empty());
+        // popping an unknown class must not corrupt the length accounting
+        q.push(Item(0, "b")).unwrap();
+        assert_eq!(q.pop_batch(&"a", 4), Vec::<Item>::new());
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn single_oversized_job_forms_its_own_batch() {
+        // a lone job in a class is dispatched as a batch of one, even when
+        // max_batch would admit more — and the drained class disappears.
+        let mut q: ClassQueues<Item> = ClassQueues::with_capacity(8);
+        q.push(Item(7, "big")).unwrap();
+        assert_eq!(q.class_count(), 1);
+        let batch = q.pop_batch(&"big", 16);
+        assert_eq!(batch, vec![Item(7, "big")]);
+        assert!(q.is_empty());
+        assert_eq!(q.class_count(), 0, "drained class must be removed");
+    }
+
+    #[test]
+    fn fifo_within_class_and_cap_admission() {
+        let mut q: ClassQueues<Item> = ClassQueues::with_capacity(3);
+        q.push(Item(0, "a")).unwrap();
+        q.push(Item(1, "b")).unwrap();
+        q.push(Item(2, "a")).unwrap();
+        // cap reached: the job comes back, queues untouched
+        let rejected = q.push(Item(3, "a")).unwrap_err();
+        assert_eq!(rejected, Item(3, "a"));
+        assert_eq!(q.len(), 3);
+        // in-class FIFO regardless of interleaved classes
+        assert_eq!(q.pop_batch(&"a", 8), vec![Item(0, "a"), Item(2, "a")]);
+        // freed capacity admits again
+        q.push(Item(4, "b")).unwrap();
+        assert_eq!(q.pop_batch(&"b", 1), vec![Item(1, "b")]);
+        assert_eq!(q.pop_batch(&"b", 1), vec![Item(4, "b")]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn fronts_expose_priority_and_age() {
+        let mut q: ClassQueues<Prio> = ClassQueues::with_capacity(8);
+        q.push(Prio(0, "low", 0)).unwrap();
+        q.push(Prio(1, "high", 9)).unwrap();
+        q.push(Prio(2, "low", 0)).unwrap();
+        let fronts = q.fronts();
+        assert_eq!(fronts.len(), 2);
+        let high = fronts.iter().find(|f| f.class == "high").unwrap();
+        let low = fronts.iter().find(|f| f.class == "low").unwrap();
+        assert_eq!(high.priority, 9);
+        assert_eq!(high.depth, 1);
+        assert_eq!(low.priority, 0);
+        assert_eq!(low.depth, 2);
+        assert!(low.seq < high.seq, "front seq tracks arrival order");
+        // an urgent job buried *behind* class-mates still raises its class
+        q.push(Prio(3, "low", 7)).unwrap();
+        let low = q.fronts().into_iter().find(|f| f.class == "low").unwrap();
+        assert_eq!(low.priority, 7, "class priority is the max over the queue");
+        // in-class order is still FIFO — priority never reorders a class
+        assert_eq!(
+            q.pop_batch(&"low", 8),
+            vec![Prio(0, "low", 0), Prio(2, "low", 0), Prio(3, "low", 7)]
+        );
+    }
+
+    #[test]
+    fn drain_on_shutdown_returns_global_arrival_order() {
+        let mut q: ClassQueues<Item> = ClassQueues::with_capacity(0);
+        q.push(Item(0, "a")).unwrap();
+        q.push(Item(1, "b")).unwrap();
+        q.push(Item(2, "a")).unwrap();
+        q.push(Item(3, "c")).unwrap();
+        let drained = q.drain();
+        assert_eq!(
+            drained,
+            vec![Item(0, "a"), Item(1, "b"), Item(2, "a"), Item(3, "c")]
+        );
+        assert!(q.is_empty());
+        assert_eq!(q.class_count(), 0);
+        assert_eq!(q.drain(), Vec::<Item>::new(), "second drain is empty");
+    }
+
+    #[test]
+    fn zero_capacity_means_unbounded() {
+        let mut q: ClassQueues<Item> = ClassQueues::with_capacity(0);
+        for i in 0..100 {
+            q.push(Item(i, "a")).unwrap();
+        }
+        assert_eq!(q.len(), 100);
+        assert_eq!(q.pop_batch(&"a", 100).len(), 100);
     }
 }

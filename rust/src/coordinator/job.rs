@@ -1,7 +1,9 @@
 //! Job types flowing through the OT service.
 
+use crate::coordinator::router::{class_of, shard_of, ClassKey};
 use crate::ot::problem::OtProblem;
 
+/// What the service computes for a request.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum JobKind {
     /// Solve to convergence (or iteration budget) and return the OT cost.
@@ -10,17 +12,54 @@ pub enum JobKind {
     Grad,
 }
 
+/// A client-facing request: what to compute, on which problem, under which
+/// scheduling hints.
 #[derive(Debug, Clone)]
 pub struct JobRequest {
+    /// What to compute ([`JobKind::Solve`] or [`JobKind::Grad`]).
     pub kind: JobKind,
+    /// The EOT instance to solve.
     pub problem: OtProblem,
     /// Override the solver's iteration budget (paper benchmarks fix 10).
     pub fixed_iters: Option<usize>,
+    /// Scheduling priority; higher runs first when an actor picks among
+    /// queued classes.  Jobs of equal priority keep FIFO order.
+    pub priority: u8,
+    /// Optional tenant label for per-tenant latency accounting
+    /// (`Metrics::snapshot().tenants`).  `None` folds into the anonymous
+    /// aggregate only.
+    pub tenant: Option<String>,
 }
 
+impl JobRequest {
+    /// A plain request with default scheduling (priority 0, no tenant, the
+    /// solver's own iteration budget).
+    pub fn new(kind: JobKind, problem: OtProblem) -> Self {
+        Self { kind, problem, fixed_iters: None, priority: 0, tenant: None }
+    }
+
+    /// Same, with the iteration budget pinned (paper benchmarks fix 10).
+    pub fn with_fixed_iters(kind: JobKind, problem: OtProblem, iters: usize) -> Self {
+        Self { kind, problem, fixed_iters: Some(iters), priority: 0, tenant: None }
+    }
+
+    /// The shape class this request batches (and homes) under.
+    pub fn class(&self) -> ClassKey {
+        class_of(self.problem.n, self.problem.m, self.problem.d)
+    }
+
+    /// Home shard of this request's class for an `actors`-wide service.
+    pub fn shard(&self, actors: usize) -> usize {
+        shard_of(&self.class(), actors)
+    }
+}
+
+/// The service's answer to a [`JobRequest`].
 #[derive(Debug, Clone)]
 pub struct JobResponse {
+    /// The regularized OT cost `OT_eps`.
     pub cost: f64,
+    /// Sinkhorn iterations actually run.
     pub iters: usize,
     /// present iff kind == Grad: flattened (n, d) gradient.
     pub grad: Option<Vec<f32>>,
@@ -31,16 +70,18 @@ pub struct JobResponse {
 /// Internal envelope: request + completion channel (std mpsc; the engine
 /// actor sends exactly one response per job).
 pub struct Job {
+    /// The request as submitted.
     pub request: JobRequest,
+    /// Submission instant, for service-side latency accounting.
     pub submitted: std::time::Instant,
+    /// Completion channel: the executing actor sends exactly one response.
     pub done: std::sync::mpsc::SyncSender<anyhow::Result<JobResponse>>,
 }
 
 impl Job {
-    /// Routing key: jobs whose problems land in the same artifact bucket
-    /// batch together (executable-cache affinity).
-    pub fn bucket_hint(&self) -> (usize, usize, usize) {
-        let p = &self.request.problem;
-        (p.n.next_power_of_two(), p.m.next_power_of_two(), p.d.next_power_of_two())
+    /// Routing key: jobs whose problems land in the same shape class
+    /// batch together (executable-cache affinity) and share a home actor.
+    pub fn bucket_hint(&self) -> ClassKey {
+        self.request.class()
     }
 }

@@ -1,22 +1,78 @@
-//! Service metrics: lock-free counters + a coarse log-scale latency
-//! histogram, snapshotted for `repro serve` status lines and the
+//! Service metrics: lock-free counters + coarse log-scale latency
+//! histograms, snapshotted for `repro serve` status lines and the
 //! serve_demo example's throughput report.
+//!
+//! The sharded service adds three dimensions to the original flat
+//! counters:
+//!
+//! * **per-actor** — jobs run, batches dispatched, jobs obtained by
+//!   stealing a non-home class, and the live queue depth of the actor's
+//!   home classes.  The actor vector is sized at construction
+//!   ([`Metrics::with_actors`]), so every gauge is present — reading 0 —
+//!   *before any job has run*: scrapers never have to disambiguate
+//!   "absent" from "zero".
+//! * **per-class** — a live queue-depth gauge per shape class, registered
+//!   on first admission and kept at an explicit 0 after the class drains.
+//! * **per-tenant** — a latency histogram per tenant label on the request
+//!   (jobs without a label only feed the anonymous aggregate).
+//!
+//! Metric names as exposed by [`Snapshot`] (documented for scrapers in the
+//! README's "Serving & scaling" section): `jobs_ok`, `jobs_failed`,
+//! `batches`, `batched_jobs`, `queue_depth`, `sinkhorn_iters`, `steals`,
+//! `actors[i].{jobs,batches,steals,queue_depth}`,
+//! `class_depths[(n,m,d)]`, `tenants[label].{jobs,mean_ms,p99_ms,max_ms}`,
+//! `latency_{mean,p99,max}_ms`.
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
+use super::router::{shard_of, ClassKey};
+
 const BUCKETS: usize = 16; // 2^0 .. 2^15 ms
 
+/// Per-actor counters (one slot per actor thread, fixed at construction).
 #[derive(Default)]
-pub struct Metrics {
-    pub jobs_ok: AtomicU64,
-    pub jobs_failed: AtomicU64,
+pub struct ActorMetrics {
+    /// Jobs this actor completed (ok or failed).
+    pub jobs: AtomicU64,
+    /// Batches this actor dispatched.
     pub batches: AtomicU64,
+    /// Jobs this actor obtained by stealing a class homed elsewhere.
+    pub steals: AtomicU64,
+}
+
+/// Shared counters + histograms for one service instance.
+pub struct Metrics {
+    /// Jobs completed successfully.
+    pub jobs_ok: AtomicU64,
+    /// Jobs that returned an error.
+    pub jobs_failed: AtomicU64,
+    /// Class batches dispatched across all actors.
+    pub batches: AtomicU64,
+    /// Jobs dispatched inside those batches.
     pub batched_jobs: AtomicU64,
+    /// Jobs queued awaiting dispatch (excludes the batch an actor is
+    /// currently executing — in-flight work shows up in neither
+    /// `queue_depth` nor `jobs_ok` until it completes).
     pub queue_depth: AtomicU64,
+    /// Total Sinkhorn iterations run on behalf of jobs.
     pub sinkhorn_iters: AtomicU64,
+    /// Jobs run by a non-home actor (work stealing), across all actors.
+    pub steals: AtomicU64,
+    actors: Vec<ActorMetrics>,
+    /// Live queue depth per shape class.  Entries persist at 0 after a
+    /// class drains so scrapers see explicit zeros, not absence.
+    class_depths: Mutex<BTreeMap<ClassKey, u64>>,
     latency: Mutex<Histogram>,
+    tenants: Mutex<BTreeMap<String, Histogram>>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::with_actors(1)
+    }
 }
 
 #[derive(Default, Clone)]
@@ -27,35 +83,23 @@ struct Histogram {
     max_ms: f64,
 }
 
-impl Metrics {
-    pub fn record_latency(&self, d: Duration) {
-        let ms = d.as_secs_f64() * 1e3;
+impl Histogram {
+    fn record(&mut self, ms: f64) {
         let idx = (ms.max(1.0).log2().floor() as usize).min(BUCKETS - 1);
-        let mut h = self.latency.lock().unwrap();
-        h.counts[idx] += 1;
-        h.total_ms += ms;
-        h.n += 1;
-        h.max_ms = h.max_ms.max(ms);
+        self.counts[idx] += 1;
+        self.total_ms += ms;
+        self.n += 1;
+        self.max_ms = self.max_ms.max(ms);
     }
 
-    pub fn snapshot(&self) -> Snapshot {
-        let h = self.latency.lock().unwrap().clone();
-        let mean = if h.n > 0 { h.total_ms / h.n as f64 } else { 0.0 };
-        Snapshot {
-            jobs_ok: self.jobs_ok.load(Ordering::Relaxed),
-            jobs_failed: self.jobs_failed.load(Ordering::Relaxed),
-            batches: self.batches.load(Ordering::Relaxed),
-            batched_jobs: self.batched_jobs.load(Ordering::Relaxed),
-            queue_depth: self.queue_depth.load(Ordering::Relaxed),
-            sinkhorn_iters: self.sinkhorn_iters.load(Ordering::Relaxed),
-            latency_mean_ms: mean,
-            latency_p99_ms: h.quantile(0.99),
-            latency_max_ms: h.max_ms,
+    fn mean(&self) -> f64 {
+        if self.n > 0 {
+            self.total_ms / self.n as f64
+        } else {
+            0.0
         }
     }
-}
 
-impl Histogram {
     /// Upper edge of the bucket containing quantile q (coarse but lock-cheap).
     fn quantile(&self, q: f64) -> f64 {
         if self.n == 0 {
@@ -73,16 +117,185 @@ impl Histogram {
     }
 }
 
+impl Metrics {
+    /// Metrics for an `actors`-wide service.  The per-actor slots exist —
+    /// and snapshot as zeros — from this moment on, before any job runs.
+    pub fn with_actors(actors: usize) -> Self {
+        let actors = actors.max(1);
+        Self {
+            jobs_ok: AtomicU64::new(0),
+            jobs_failed: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batched_jobs: AtomicU64::new(0),
+            queue_depth: AtomicU64::new(0),
+            sinkhorn_iters: AtomicU64::new(0),
+            steals: AtomicU64::new(0),
+            actors: (0..actors).map(|_| ActorMetrics::default()).collect(),
+            class_depths: Mutex::new(BTreeMap::new()),
+            latency: Mutex::new(Histogram::default()),
+            tenants: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Number of actor slots (fixed at construction).
+    pub fn actor_count(&self) -> usize {
+        self.actors.len()
+    }
+
+    /// The counters of actor `i` (panics when out of range — actor indices
+    /// come from the service that sized this struct).
+    pub fn actor(&self, i: usize) -> &ActorMetrics {
+        &self.actors[i]
+    }
+
+    /// Register an admission into `class`: bumps the global and per-class
+    /// queue-depth gauges.  Registering is what makes a class visible in
+    /// [`Snapshot::class_depths`] — at an explicit 0 once it drains.
+    pub fn on_enqueue(&self, class: &ClassKey) {
+        self.queue_depth.fetch_add(1, Ordering::Relaxed);
+        let mut depths = self.class_depths.lock().unwrap_or_else(|e| e.into_inner());
+        *depths.entry(*class).or_insert(0) += 1;
+    }
+
+    /// Register `taken` jobs leaving `class`'s queue for execution.
+    pub fn on_dequeue(&self, class: &ClassKey, taken: usize) {
+        self.queue_depth.fetch_sub(taken as u64, Ordering::Relaxed);
+        let mut depths = self.class_depths.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(d) = depths.get_mut(class) {
+            *d = d.saturating_sub(taken as u64);
+        }
+    }
+
+    /// Record a completed job's end-to-end latency, optionally attributed
+    /// to a tenant label.
+    pub fn record_latency(&self, tenant: Option<&str>, d: Duration) {
+        let ms = d.as_secs_f64() * 1e3;
+        self.latency.lock().unwrap_or_else(|e| e.into_inner()).record(ms);
+        if let Some(t) = tenant {
+            let mut tenants = self.tenants.lock().unwrap_or_else(|e| e.into_inner());
+            tenants.entry(t.to_string()).or_default().record(ms);
+        }
+    }
+
+    /// A consistent point-in-time copy of every counter and gauge.
+    pub fn snapshot(&self) -> Snapshot {
+        let h = self.latency.lock().unwrap_or_else(|e| e.into_inner()).clone();
+        let class_depths: Vec<(ClassKey, u64)> = self
+            .class_depths
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .iter()
+            .map(|(k, &v)| (*k, v))
+            .collect();
+        let actors = self.actors.len();
+        let actor_snaps: Vec<ActorSnapshot> = self
+            .actors
+            .iter()
+            .enumerate()
+            .map(|(i, a)| ActorSnapshot {
+                actor: i,
+                jobs: a.jobs.load(Ordering::Relaxed),
+                batches: a.batches.load(Ordering::Relaxed),
+                steals: a.steals.load(Ordering::Relaxed),
+                // live depth of the classes homed to this actor
+                queue_depth: class_depths
+                    .iter()
+                    .filter(|(k, _)| shard_of(k, actors) == i)
+                    .map(|(_, v)| v)
+                    .sum(),
+            })
+            .collect();
+        let tenants: Vec<TenantSnapshot> = self
+            .tenants
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .iter()
+            .map(|(name, th)| TenantSnapshot {
+                tenant: name.clone(),
+                jobs: th.n,
+                latency_mean_ms: th.mean(),
+                latency_p99_ms: th.quantile(0.99),
+                latency_max_ms: th.max_ms,
+            })
+            .collect();
+        Snapshot {
+            jobs_ok: self.jobs_ok.load(Ordering::Relaxed),
+            jobs_failed: self.jobs_failed.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            batched_jobs: self.batched_jobs.load(Ordering::Relaxed),
+            queue_depth: self.queue_depth.load(Ordering::Relaxed),
+            sinkhorn_iters: self.sinkhorn_iters.load(Ordering::Relaxed),
+            steals: self.steals.load(Ordering::Relaxed),
+            actors: actor_snaps,
+            class_depths,
+            tenants,
+            latency_mean_ms: h.mean(),
+            latency_p99_ms: h.quantile(0.99),
+            latency_max_ms: h.max_ms,
+        }
+    }
+}
+
+/// Point-in-time copy of one actor's counters.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ActorSnapshot {
+    /// Actor index (0-based, stable for the service's lifetime).
+    pub actor: usize,
+    /// Jobs this actor completed.
+    pub jobs: u64,
+    /// Batches this actor dispatched.
+    pub batches: u64,
+    /// Jobs this actor obtained by stealing a non-home class.
+    pub steals: u64,
+    /// Live queued jobs across this actor's home classes.
+    pub queue_depth: u64,
+}
+
+/// Point-in-time latency summary for one tenant label.
+#[derive(Debug, Clone)]
+pub struct TenantSnapshot {
+    /// The tenant label as submitted on the request.
+    pub tenant: String,
+    /// Jobs completed under this label.
+    pub jobs: u64,
+    /// Mean end-to-end latency (queue + execution), milliseconds.
+    pub latency_mean_ms: f64,
+    /// Coarse p99 latency upper bound, milliseconds.
+    pub latency_p99_ms: f64,
+    /// Worst observed latency, milliseconds.
+    pub latency_max_ms: f64,
+}
+
+/// Point-in-time copy of every service counter and gauge.
 #[derive(Debug, Clone)]
 pub struct Snapshot {
+    /// Jobs completed successfully.
     pub jobs_ok: u64,
+    /// Jobs that returned an error.
     pub jobs_failed: u64,
+    /// Class batches dispatched across all actors.
     pub batches: u64,
+    /// Jobs dispatched inside those batches.
     pub batched_jobs: u64,
+    /// Jobs queued awaiting dispatch (global gauge; always present).
+    /// Excludes batches currently executing on an actor.
     pub queue_depth: u64,
+    /// Total Sinkhorn iterations run on behalf of jobs.
     pub sinkhorn_iters: u64,
+    /// Jobs run by a non-home actor (work stealing).
+    pub steals: u64,
+    /// One entry per actor, present (as zeros) before any job has run.
+    pub actors: Vec<ActorSnapshot>,
+    /// Live queue depth per shape class seen so far (explicit zeros after
+    /// a class drains).
+    pub class_depths: Vec<(ClassKey, u64)>,
+    /// Latency summaries per tenant label seen so far.
+    pub tenants: Vec<TenantSnapshot>,
+    /// Mean end-to-end latency, milliseconds.
     pub latency_mean_ms: f64,
+    /// Coarse p99 latency upper bound, milliseconds.
     pub latency_p99_ms: f64,
+    /// Worst observed latency, milliseconds.
     pub latency_max_ms: f64,
 }
 
@@ -90,17 +303,33 @@ impl std::fmt::Display for Snapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "jobs ok={} failed={} batches={} (avg size {:.2}) queue={} iters={} latency mean={:.1}ms p99<={:.0}ms max={:.1}ms",
+            "jobs ok={} failed={} batches={} (avg size {:.2}) queue={} iters={} steals={} latency mean={:.1}ms p99<={:.0}ms max={:.1}ms",
             self.jobs_ok,
             self.jobs_failed,
             self.batches,
             if self.batches > 0 { self.batched_jobs as f64 / self.batches as f64 } else { 0.0 },
             self.queue_depth,
             self.sinkhorn_iters,
+            self.steals,
             self.latency_mean_ms,
             self.latency_p99_ms,
             self.latency_max_ms
-        )
+        )?;
+        for a in &self.actors {
+            write!(
+                f,
+                "\n  actor {}: jobs={} batches={} steals={} home-queue={}",
+                a.actor, a.jobs, a.batches, a.steals, a.queue_depth
+            )?;
+        }
+        for t in &self.tenants {
+            write!(
+                f,
+                "\n  tenant {}: jobs={} latency mean={:.1}ms p99<={:.0}ms max={:.1}ms",
+                t.tenant, t.jobs, t.latency_mean_ms, t.latency_p99_ms, t.latency_max_ms
+            )?;
+        }
+        Ok(())
     }
 }
 
@@ -112,7 +341,7 @@ mod tests {
     fn histogram_quantiles_monotone() {
         let m = Metrics::default();
         for ms in [1u64, 2, 4, 8, 100, 500] {
-            m.record_latency(Duration::from_millis(ms));
+            m.record_latency(None, Duration::from_millis(ms));
         }
         let s = m.snapshot();
         assert!(s.latency_p99_ms >= s.latency_mean_ms);
@@ -128,5 +357,61 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.jobs_ok, 3);
         assert_eq!(s.batches, 2);
+    }
+
+    #[test]
+    fn gauges_present_before_any_job() {
+        // the absent-vs-zero fix: a scraper hitting a fresh service sees
+        // every actor gauge at an explicit 0, not a missing series.
+        let m = Metrics::with_actors(3);
+        let s = m.snapshot();
+        assert_eq!(s.actors.len(), 3);
+        for (i, a) in s.actors.iter().enumerate() {
+            assert_eq!(a.actor, i);
+            assert_eq!((a.jobs, a.batches, a.steals, a.queue_depth), (0, 0, 0, 0));
+        }
+        assert_eq!(s.queue_depth, 0);
+        assert_eq!(s.steals, 0);
+        assert!(s.class_depths.is_empty());
+        assert!(s.tenants.is_empty());
+    }
+
+    #[test]
+    fn class_gauge_persists_at_zero_after_drain() {
+        let m = Metrics::with_actors(2);
+        let class = (256usize, 256usize, 16usize);
+        m.on_enqueue(&class);
+        m.on_enqueue(&class);
+        assert_eq!(m.snapshot().class_depths, vec![(class, 2)]);
+        m.on_dequeue(&class, 2);
+        // drained class still reports, at an explicit zero
+        assert_eq!(m.snapshot().class_depths, vec![(class, 0)]);
+        assert_eq!(m.snapshot().queue_depth, 0);
+    }
+
+    #[test]
+    fn tenant_latency_is_attributed() {
+        let m = Metrics::default();
+        m.record_latency(Some("acme"), Duration::from_millis(10));
+        m.record_latency(Some("acme"), Duration::from_millis(20));
+        m.record_latency(None, Duration::from_millis(500));
+        let s = m.snapshot();
+        assert_eq!(s.tenants.len(), 1);
+        assert_eq!(s.tenants[0].tenant, "acme");
+        assert_eq!(s.tenants[0].jobs, 2);
+        // anonymous job feeds the aggregate only
+        assert!(s.latency_max_ms >= 499.0);
+        assert!(s.tenants[0].latency_max_ms < 499.0);
+    }
+
+    #[test]
+    fn actor_home_queue_depth_follows_shard_assignment() {
+        let m = Metrics::with_actors(2);
+        let class = (64usize, 64usize, 16usize);
+        let home = shard_of(&class, 2);
+        m.on_enqueue(&class);
+        let s = m.snapshot();
+        assert_eq!(s.actors[home].queue_depth, 1);
+        assert_eq!(s.actors[1 - home].queue_depth, 0);
     }
 }

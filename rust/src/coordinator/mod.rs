@@ -1,5 +1,7 @@
-//! The coordination layer: shape-bucket routing with exact zero-weight
-//! padding, dynamic batching, the tokio job service and its metrics.
+//! The coordination layer: shape-class routing with exact zero-weight
+//! padding, per-class dynamic batching, the sharded multi-actor job
+//! service and its metrics.  (See `ARCHITECTURE.md` at the repo root for
+//! the full layer map and the actor/steal design.)
 //!
 //! This is the "systems" substrate the paper's library-shaped contribution
 //! needs to be deployable: HLO artifacts are static-shaped, so arbitrary
@@ -8,6 +10,13 @@
 //! *exact*, not approximate (padded weights w = 0 give bias eps*log w =
 //! -inf, contributing exp(-inf) = 0 to every reduction; see
 //! `python/compile/kernels/flash.py` and the padding-invariance tests).
+//!
+//! Above routing sits the serving stack: requests are classified by shape
+//! ([`router::class_of`]), admitted into per-class FIFO queues
+//! ([`batcher::ClassQueues`]), and drained by a pool of backend actors
+//! ([`service::spawn`]) that prefer their home classes
+//! ([`router::shard_of`]) and steal across classes when idle, so
+//! multi-tenant bursts never serialize behind one large solve.
 
 pub mod batcher;
 pub mod job;
@@ -15,4 +24,4 @@ pub mod metrics;
 pub mod router;
 pub mod service;
 
-pub use router::{Bucket, BucketCtx, Router};
+pub use router::{class_of, shard_of, Bucket, BucketCtx, ClassKey, Router};

@@ -16,18 +16,56 @@ use anyhow::{anyhow, Result};
 use crate::ot::problem::{sqnorms, OtProblem};
 use crate::runtime::{Manifest, Tensor};
 
+/// Shape-class key shared by the router, the batcher and the sharded
+/// service: the power-of-two bucket envelope `(n, m, d)` a request rounds
+/// up into.  Two requests with the same class batch together (executable /
+/// cache affinity) and share the same *home actor* in the sharded service
+/// (see [`shard_of`] and `coordinator::service`).
+pub type ClassKey = (usize, usize, usize);
+
+/// Classify a request shape into its [`ClassKey`]: each extent rounds up
+/// to the next power of two, so near-identical shapes coalesce while the
+/// class count stays logarithmic in problem size.
+pub fn class_of(n: usize, m: usize, d: usize) -> ClassKey {
+    (n.next_power_of_two(), m.next_power_of_two(), d.next_power_of_two())
+}
+
+/// Deterministic home shard for a class: the actor that prefers draining
+/// this class's queue.  A splitmix-style mix of the three extents keeps
+/// neighbouring power-of-two classes from all landing on one actor.  Any
+/// idle actor may still *steal* from a non-home class — this is an
+/// affinity hint, not an ownership constraint.
+pub fn shard_of(key: &ClassKey, shards: usize) -> usize {
+    if shards <= 1 {
+        return 0;
+    }
+    let mut h = (key.0 as u64)
+        ^ (key.1 as u64).rotate_left(21)
+        ^ (key.2 as u64).rotate_left(42);
+    h ^= h >> 33;
+    h = h.wrapping_mul(0xff51_afd7_ed55_8ccd);
+    h ^= h >> 33;
+    (h % shards as u64) as usize
+}
+
+/// A precompiled (or exact-fit) shape envelope requests are routed into.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct Bucket {
+    /// Source rows the bucket was compiled for.
     pub n: usize,
+    /// Target rows the bucket was compiled for.
     pub m: usize,
+    /// Feature dimension the bucket was compiled for.
     pub d: usize,
 }
 
 impl Bucket {
+    /// Padded element count `n * m * d` — the routing cost measure.
     pub fn volume(&self) -> usize {
         self.n * self.m * self.d
     }
 
+    /// The `n{n}_m{m}_d{d}` artifact-key suffix for this bucket.
     pub fn key_suffix(&self) -> String {
         format!("n{}_m{}_d{}", self.n, self.m, self.d)
     }
@@ -55,6 +93,7 @@ const CORE_OP: &str = "alternating_step";
 const LABEL_OP: &str = "alternating_step_label";
 
 impl Router {
+    /// Bucketed router over the artifact manifest's compiled shapes.
     pub fn from_manifest(manifest: &Manifest) -> Self {
         let collect = |op: &str| {
             manifest
@@ -80,10 +119,12 @@ impl Router {
         Self { buckets: Vec::new(), label_buckets: Vec::new(), exact: true }
     }
 
+    /// True for the exact-fit (native) router: no padding ever happens.
     pub fn is_exact(&self) -> bool {
         self.exact
     }
 
+    /// The core-op bucket set (empty in exact-fit mode).
     pub fn buckets(&self) -> &[Bucket] {
         &self.buckets
     }
@@ -118,10 +159,15 @@ impl Router {
 /// iteration allocation of the big inputs).
 #[derive(Clone)]
 pub struct BucketCtx {
+    /// The bucket the problem was padded into.
     pub bucket: Bucket,
+    /// True (unpadded) source size.
     pub n: usize,
+    /// True (unpadded) target size.
     pub m: usize,
+    /// True (unpadded) feature dimension.
     pub d: usize,
+    /// Regularization strength of the underlying problem.
     pub eps: f32,
     /// padded (bn, bd) source points.
     pub x: Tensor,
@@ -138,11 +184,13 @@ pub struct BucketCtx {
 }
 
 impl BucketCtx {
+    /// Route `prob` through `router` and pad it into the selected bucket.
     pub fn new(router: &Router, prob: &OtProblem) -> Result<Self> {
         let bucket = router.select(prob.n, prob.m, prob.d)?;
         Ok(Self::with_bucket(bucket, prob))
     }
 
+    /// Pad `prob` into an explicitly chosen bucket (tests / replay).
     pub fn with_bucket(bucket: Bucket, prob: &OtProblem) -> Self {
         let x = pad_points(&prob.x, prob.n, prob.d, bucket.n, bucket.d);
         let y = pad_points(&prob.y, prob.m, prob.d, bucket.m, bucket.d);
@@ -174,6 +222,7 @@ impl BucketCtx {
         Tensor::vector(pad_vec(v, self.bucket.n, fill))
     }
 
+    /// Pad a length-m vector to bucket columns.
     pub fn pad_m(&self, v: &[f32], fill: f32) -> Tensor {
         debug_assert_eq!(v.len(), self.m);
         Tensor::vector(pad_vec(v, self.bucket.m, fill))
@@ -186,6 +235,7 @@ impl BucketCtx {
         Tensor::matrix(self.bucket.n, pp, pad_points(v, self.n, p, self.bucket.n, pp))
     }
 
+    /// Pad an (m, p) matrix to (bm, p_pad): p_pad = 1 for p = 1 else bd.
     pub fn pad_m_mat(&self, v: &[f32], p: usize) -> Tensor {
         let pp = if p == 1 { 1 } else { self.bucket.d };
         debug_assert_eq!(v.len(), self.m * p);
@@ -197,6 +247,7 @@ impl BucketCtx {
         Ok(t.as_f32()?[..self.n].to_vec())
     }
 
+    /// Slice a padded (bm,) output back to m.
     pub fn slice_m(&self, t: &Tensor) -> Result<Vec<f32>> {
         Ok(t.as_f32()?[..self.m].to_vec())
     }
@@ -207,6 +258,7 @@ impl BucketCtx {
         slice_mat(t.as_f32()?, self.n, p, pp)
     }
 
+    /// Slice a padded (bm, p_pad) output back to (m, p).
     pub fn slice_m_mat(&self, t: &Tensor, p: usize) -> Result<Vec<f32>> {
         let pp = if p == 1 { 1 } else { self.bucket.d };
         slice_mat(t.as_f32()?, self.m, p, pp)
@@ -230,6 +282,7 @@ pub fn pad_points(pts: &[f32], n: usize, d: usize, bn: usize, bd: usize) -> Vec<
     out
 }
 
+/// Pad a vector to `len`, filling the tail with `fill`.
 pub fn pad_vec(v: &[f32], len: usize, fill: f32) -> Vec<f32> {
     let mut out = vec![fill; len];
     out[..v.len()].copy_from_slice(v);
@@ -273,6 +326,29 @@ mod tests {
         assert!(r.is_exact());
         assert_eq!(r.select(77, 99, 3).unwrap(), Bucket { n: 77, m: 99, d: 3 });
         assert_eq!(r.select_label(1, 2, 3).unwrap(), Bucket { n: 1, m: 2, d: 3 });
+    }
+
+    #[test]
+    fn class_keys_round_up_and_coalesce() {
+        assert_eq!(class_of(100, 200, 5), (128, 256, 8));
+        assert_eq!(class_of(128, 256, 8), (128, 256, 8));
+        assert_eq!(class_of(100, 200, 5), class_of(128, 129, 8));
+        assert_ne!(class_of(100, 200, 5), class_of(300, 200, 5));
+    }
+
+    #[test]
+    fn shard_of_is_stable_and_in_range() {
+        let classes = [(64, 64, 16), (128, 128, 16), (1024, 1024, 16), (256, 2048, 64)];
+        for shards in [1usize, 2, 3, 8] {
+            for c in &classes {
+                let s = shard_of(c, shards);
+                assert!(s < shards, "shard {s} out of range for {shards}");
+                assert_eq!(s, shard_of(c, shards), "shard must be deterministic");
+            }
+        }
+        // one shard: everything is home
+        assert_eq!(shard_of(&(64, 64, 16), 1), 0);
+        assert_eq!(shard_of(&(64, 64, 16), 0), 0);
     }
 
     #[test]

@@ -1,57 +1,130 @@
-//! The OT job service: a cloneable client handle in front of a dedicated
-//! backend actor thread.  The backend is built *inside* the thread (PJRT
-//! handles are `!Send`); jobs arrive over a bounded channel -- that bound
-//! *is* the backpressure knob.  (The async-runtime facade was dropped in
-//! the offline build: submission is blocking or fire-and-forget over std
-//! channels; see DESIGN.md section 2.)
+//! The OT job service: a cloneable client handle in front of a pool of
+//! backend actor threads sharded by shape class.
 //!
-//! The native backend's heavy row reductions do not run on the actor
-//! thread itself: they fan out over the persistent process-global kernel
-//! pool (`native::pool`), which the router/library path shares, so a
-//! service plus ad-hoc solves in the same process own exactly one set of
-//! worker threads.  Set the config `threads` knob to give a service a
-//! private pool instead.
+//! ## Sharded actor pool
+//!
+//! `spawn` starts `config.service.actors` actor threads (default 1 — the
+//! original single-actor service).  Each actor builds its *own* backend
+//! inside the thread (PJRT handles are `!Send`); for the native backend
+//! the actors receive disjoint slices of the kernel-thread budget
+//! ([`crate::native::pool::partitioned`]), so N actors together own
+//! about as many kernel threads as one actor on the global pool would —
+//! sharding multiplies concurrent solves, not threads.
+//!
+//! Admission goes through per-class FIFO queues
+//! ([`super::batcher::ClassQueues`]): a job is classified by its shape
+//! class ([`super::router::class_of`] — the same key the router's
+//! exact-fit/bucketed selection coalesces under) and queued behind its
+//! class-mates.  The queue bound is the backpressure knob: a full queue
+//! rejects at submission, never silently drops.
+//!
+//! Each class has a deterministic *home actor*
+//! ([`super::router::shard_of`]); an idle actor drains its home classes
+//! first (executable/cache affinity) and **steals the oldest queued class
+//! from anyone else** when its own are empty — a burst of small solves can
+//! never starve behind one large solve while an idle actor exists.  Within
+//! a class, jobs keep FIFO order; across classes the highest priority
+//! queued in the class, then the front job's age, decides.  Because every
+//! solve runs the same deterministic
+//! kernels regardless of which actor (and pool width) executes it, results
+//! are bitwise identical across actor counts — `tests/coordinator_sharding.rs`
+//! pins 1-actor vs N-actor equality.
+//!
+//! (The async-runtime facade was dropped in the offline build: submission
+//! is blocking or fire-and-forget over std channels; see DESIGN.md
+//! section 2.)
 
 use std::sync::atomic::Ordering;
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
-use std::sync::Arc;
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
 use crate::config::Config;
+use crate::native::pool;
 use crate::ot::solver::{Schedule, SinkhornSolver, SolverConfig};
 use crate::ot::Transport;
 use crate::runtime::ComputeBackend;
 
-use super::batcher::{Batcher, Keyed};
+use super::batcher::{ClassQueues, Keyed};
 use super::job::{Job, JobKind, JobRequest, JobResponse};
 use super::metrics::{Metrics, Snapshot};
+use super::router::{shard_of, ClassKey};
 
 impl Keyed for Job {
-    type Key = (usize, usize, usize);
+    type Key = ClassKey;
     fn key(&self) -> Self::Key {
         self.bucket_hint()
     }
+    fn priority(&self) -> u8 {
+        self.request.priority
+    }
 }
 
-/// Cloneable client handle; dropping every handle shuts the engine down.
-#[derive(Clone)]
+/// Lock that shrugs off poisoning: a panic elsewhere must not wedge the
+/// whole service.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Scheduler state shared by every client handle and actor.
+struct State {
+    queues: ClassQueues<Job>,
+    /// Live `ServiceHandle` count; the last drop initiates shutdown.
+    handles: usize,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Actors park here when every relevant queue is empty.
+    work_cv: Condvar,
+    max_batch: usize,
+    /// How long a partial batch waits for same-class batch-mates before
+    /// dispatch (the classic dynamic-batching knob, `service.max_wait_ms`).
+    max_wait: Duration,
+    actors: usize,
+}
+
+/// Cloneable client handle; dropping every handle shuts the actors down
+/// (after they drain what is already queued).
 pub struct ServiceHandle {
-    tx: SyncSender<Job>,
+    shared: Arc<Shared>,
     metrics: Arc<Metrics>,
 }
 
-/// An in-flight job: `recv()` blocks until the engine responds.
+impl Clone for ServiceHandle {
+    fn clone(&self) -> Self {
+        lock(&self.shared.state).handles += 1;
+        Self { shared: Arc::clone(&self.shared), metrics: Arc::clone(&self.metrics) }
+    }
+}
+
+impl Drop for ServiceHandle {
+    fn drop(&mut self) {
+        let mut st = lock(&self.shared.state);
+        st.handles -= 1;
+        if st.handles == 0 {
+            st.shutdown = true;
+            drop(st);
+            self.shared.work_cv.notify_all();
+        }
+    }
+}
+
+/// An in-flight job: `recv()` blocks until an actor responds.
 pub struct Pending {
     rx: Receiver<Result<JobResponse>>,
 }
 
 impl Pending {
+    /// Block until the executing actor responds.
     pub fn recv(self) -> Result<JobResponse> {
         self.rx.recv().map_err(|_| anyhow!("engine dropped the job"))?
     }
 
+    /// Non-blocking poll; `None` while the job is still queued or running.
     pub fn try_recv(&self) -> Option<Result<JobResponse>> {
         self.rx.try_recv().ok()
     }
@@ -63,18 +136,22 @@ impl ServiceHandle {
     pub fn submit(&self, request: JobRequest) -> Result<Pending> {
         let (done, rx) = sync_channel(1);
         let job = Job { request, submitted: Instant::now(), done };
-        self.metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
-        match self.tx.try_send(job) {
-            Ok(()) => Ok(Pending { rx }),
-            Err(TrySendError::Full(_)) => {
-                self.metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
-                Err(anyhow!("service queue full (backpressure)"))
+        let class = job.bucket_hint();
+        {
+            let mut st = lock(&self.shared.state);
+            if st.shutdown {
+                return Err(anyhow!("service stopped"));
             }
-            Err(TrySendError::Disconnected(_)) => {
-                self.metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
-                Err(anyhow!("service stopped"))
+            if st.queues.push(job).is_err() {
+                return Err(anyhow!("service queue full (backpressure)"));
             }
+            // gauge bump under the same lock as the push: an already-awake
+            // actor dequeues under this lock too, so its matching
+            // on_dequeue can never run before this increment.
+            self.metrics.on_enqueue(&class);
         }
+        self.shared.work_cv.notify_all();
+        Ok(Pending { rx })
     }
 
     /// Submit and wait.
@@ -82,77 +159,213 @@ impl ServiceHandle {
         self.submit(request)?.recv()
     }
 
+    /// Point-in-time copy of the service counters and gauges.
     pub fn metrics(&self) -> Snapshot {
         self.metrics.snapshot()
     }
+
+    /// Number of backend actors this service runs.
+    pub fn actors(&self) -> usize {
+        self.shared.actors
+    }
 }
 
-/// Spawn the backend actor thread and return the handle.  Fails fast if
-/// the configured backend cannot be constructed (e.g. `pjrt` with missing
-/// artifacts).
-pub fn spawn(config: Config) -> Result<ServiceHandle> {
-    let (tx, rx) = sync_channel::<Job>(config.service.queue_cap);
-    let metrics = Arc::new(Metrics::default());
-    let metrics_engine = metrics.clone();
-    let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<()>>();
+/// Pick the class actor `index` should drain next, if any: home classes
+/// first (highest queued priority, then oldest front), else steal the
+/// best non-home class.  The bool is true for a steal.
+fn pick_class(queues: &ClassQueues<Job>, index: usize, actors: usize) -> Option<(ClassKey, bool)> {
+    let fronts = queues.fronts();
+    if fronts.is_empty() {
+        return None;
+    }
+    let best_of = |home: bool| {
+        fronts
+            .iter()
+            .filter(|f| (shard_of(&f.class, actors) == index) == home)
+            .min_by_key(|f| (std::cmp::Reverse(f.priority), f.seq))
+            .map(|f| f.class)
+    };
+    if let Some(class) = best_of(true) {
+        return Some((class, false));
+    }
+    best_of(false).map(|class| (class, true))
+}
 
-    std::thread::Builder::new()
-        .name("ot-engine".into())
-        .spawn(move || {
-            // `backend_from_config` keeps the service actor on the same
-            // process-global kernel pool as the router/library path unless
-            // the config's `threads` knob asks for a private pool.
-            let backend = match crate::backend_from_config(&config) {
-                Ok(b) => {
-                    let _ = ready_tx.send(Ok(()));
-                    b
-                }
-                Err(e) => {
-                    let _ = ready_tx.send(Err(e));
-                    return;
-                }
-            };
-            let backend: &dyn ComputeBackend = backend.as_ref();
-            let solver_cfg = SolverConfig::from_section(&config.solver);
-            let solver = SinkhornSolver::new(backend, solver_cfg.clone());
-            let mut batcher = Batcher::new(
-                config.service.max_batch,
-                Duration::from_millis(config.service.max_wait_ms),
-            );
-            while let Some(batch) = batcher.next_batch(&rx) {
-                metrics_engine.batches.fetch_add(1, Ordering::Relaxed);
-                metrics_engine
-                    .batched_jobs
-                    .fetch_add(batch.len() as u64, Ordering::Relaxed);
-                for job in batch {
-                    metrics_engine.queue_depth.fetch_sub(1, Ordering::Relaxed);
-                    let result = run_job(backend, &solver, &solver_cfg, &job.request);
-                    match &result {
-                        Ok(resp) => {
-                            metrics_engine.jobs_ok.fetch_add(1, Ordering::Relaxed);
-                            metrics_engine
-                                .sinkhorn_iters
-                                .fetch_add(resp.iters as u64, Ordering::Relaxed);
-                        }
-                        Err(_) => {
-                            metrics_engine.jobs_failed.fetch_add(1, Ordering::Relaxed);
-                        }
+/// Spawn the backend actor pool and return the handle.  Fails fast if any
+/// configured backend cannot be constructed (e.g. `pjrt` with missing
+/// artifacts); actors that did start are shut down again on failure.
+pub fn spawn(config: Config) -> Result<ServiceHandle> {
+    let actors = config.service.actors.max(1);
+    let metrics = Arc::new(Metrics::with_actors(actors));
+    let shared = Arc::new(Shared {
+        state: Mutex::new(State {
+            queues: ClassQueues::with_capacity(config.service.queue_cap),
+            handles: 1,
+            shutdown: false,
+        }),
+        work_cv: Condvar::new(),
+        max_batch: config.service.max_batch.max(1),
+        max_wait: Duration::from_millis(config.service.max_wait_ms),
+        actors,
+    });
+    let solver_cfg = SolverConfig::from_section(&config.solver);
+
+    // Per-actor kernel budgets: partition the configured private width
+    // (threads knob) or the global width into disjoint private pools, so
+    // N actors never oversubscribe the machine.  Non-native backends get
+    // an empty list (they manage their own execution resources).
+    let pools: Vec<Arc<pool::WorkerPool>> =
+        if actors > 1 && matches!(config.backend.as_str(), "" | "native") {
+            let total =
+                if config.threads > 0 { config.threads } else { pool::configured_threads() };
+            pool::partitioned(total, actors)
+        } else {
+            Vec::new()
+        };
+
+    // Shut everything down (actors drain and exit) and report the error.
+    let fail = |e: anyhow::Error| -> anyhow::Error {
+        lock(&shared.state).shutdown = true;
+        shared.work_cv.notify_all();
+        e
+    };
+
+    let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<()>>();
+    for index in 0..actors {
+        let shared_a = Arc::clone(&shared);
+        let metrics = Arc::clone(&metrics);
+        let config = config.clone();
+        let solver_cfg = solver_cfg.clone();
+        let ready_tx = ready_tx.clone();
+        let actor_pool = pools.get(index).cloned();
+        let spawned = std::thread::Builder::new()
+            .name(format!("ot-engine-{index}"))
+            .spawn(move || {
+                // Build the backend *inside* the thread (PJRT handles are
+                // !Send).  Single-actor services keep the exact
+                // pre-sharding construction path, pool sharing included.
+                let backend = match actor_backend(&config, actors, actor_pool) {
+                    Ok(b) => {
+                        let _ = ready_tx.send(Ok(()));
+                        b
                     }
-                    metrics_engine.record_latency(job.submitted.elapsed());
-                    let result = result.map(|mut r| {
-                        r.service_time = job.submitted.elapsed();
-                        r
-                    });
-                    let _ = job.done.send(result);
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                actor_loop(&shared_a, &metrics, backend.as_ref(), &solver_cfg, index);
+            });
+        if let Err(e) = spawned {
+            // release the actors that did start before propagating
+            return Err(fail(anyhow!("spawning engine thread: {e}")));
+        }
+    }
+    drop(ready_tx);
+    for _ in 0..actors {
+        let ready = ready_rx.recv().map_err(|_| anyhow!("engine thread died during startup"));
+        if let Err(e) = ready.and_then(|r| r) {
+            return Err(fail(e));
+        }
+    }
+    Ok(ServiceHandle { shared, metrics })
+}
+
+/// Construct the backend for one actor.  With a single actor this is
+/// exactly [`crate::backend_from_config`]; with several, native actors are
+/// bound to their slice of the partitioned kernel pool and other backends
+/// are built per actor by name.
+fn actor_backend(
+    config: &Config,
+    actors: usize,
+    actor_pool: Option<Arc<pool::WorkerPool>>,
+) -> Result<Box<dyn ComputeBackend>> {
+    if actors <= 1 {
+        return crate::backend_from_config(config);
+    }
+    match (config.backend.as_str(), actor_pool) {
+        ("" | "native", Some(p)) => Ok(Box::new(crate::native::NativeBackend::with_pool(p))),
+        ("" | "native", None) => Ok(Box::new(crate::native::NativeBackend::default())),
+        (name, _) => crate::backend_by_name(name),
+    }
+}
+
+/// One actor: drain home classes, steal when idle, exit when shut down
+/// *and* drained (queued jobs always complete).
+fn actor_loop(
+    shared: &Shared,
+    metrics: &Metrics,
+    backend: &dyn ComputeBackend,
+    solver_cfg: &SolverConfig,
+    index: usize,
+) {
+    let solver = SinkhornSolver::new(backend, solver_cfg.clone());
+    loop {
+        let picked = {
+            let mut st = lock(&shared.state);
+            loop {
+                if let Some((class, stolen)) = pick_class(&st.queues, index, shared.actors) {
+                    let batch = st.queues.pop_batch(&class, shared.max_batch);
+                    break Some((class, batch, stolen));
+                }
+                if st.shutdown {
+                    break None;
+                }
+                st = shared.work_cv.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        let Some((class, mut batch, stolen)) = picked else { return };
+        // Top-up phase: a partial batch waits up to `max_wait` for
+        // same-class batch-mates (the classic dynamic-batching lever;
+        // other actors keep draining other classes meanwhile).
+        if batch.len() < shared.max_batch && !shared.max_wait.is_zero() {
+            let deadline = Instant::now() + shared.max_wait;
+            let mut st = lock(&shared.state);
+            loop {
+                let extra = st.queues.pop_batch(&class, shared.max_batch - batch.len());
+                batch.extend(extra);
+                if batch.len() >= shared.max_batch || st.shutdown {
+                    break;
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (g, _timeout) = shared
+                    .work_cv
+                    .wait_timeout(st, deadline - now)
+                    .unwrap_or_else(|e| e.into_inner());
+                st = g;
+            }
+        }
+        metrics.on_dequeue(&class, batch.len());
+        metrics.batches.fetch_add(1, Ordering::Relaxed);
+        metrics.batched_jobs.fetch_add(batch.len() as u64, Ordering::Relaxed);
+        metrics.actor(index).batches.fetch_add(1, Ordering::Relaxed);
+        if stolen {
+            metrics.steals.fetch_add(batch.len() as u64, Ordering::Relaxed);
+            metrics.actor(index).steals.fetch_add(batch.len() as u64, Ordering::Relaxed);
+        }
+        for job in batch {
+            let result = run_job(backend, &solver, solver_cfg, &job.request);
+            match &result {
+                Ok(resp) => {
+                    metrics.jobs_ok.fetch_add(1, Ordering::Relaxed);
+                    metrics.sinkhorn_iters.fetch_add(resp.iters as u64, Ordering::Relaxed);
+                }
+                Err(_) => {
+                    metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
                 }
             }
-        })
-        .map_err(|e| anyhow!("spawning engine thread: {e}"))?;
-
-    ready_rx
-        .recv()
-        .map_err(|_| anyhow!("engine thread died during startup"))??;
-    Ok(ServiceHandle { tx, metrics })
+            metrics.actor(index).jobs.fetch_add(1, Ordering::Relaxed);
+            metrics.record_latency(job.request.tenant.as_deref(), job.submitted.elapsed());
+            let result = result.map(|mut r| {
+                r.service_time = job.submitted.elapsed();
+                r
+            });
+            let _ = job.done.send(result);
+        }
+    }
 }
 
 fn run_job(
@@ -180,7 +393,7 @@ fn run_job(
         cost: report.cost,
         iters: report.iters,
         grad,
-        service_time: Duration::ZERO, // stamped by the engine loop
+        service_time: Duration::ZERO, // stamped by the actor loop
     })
 }
 

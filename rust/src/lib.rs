@@ -16,7 +16,8 @@
 //!   Sinkhorn iteration loop with eps-annealing and convergence control,
 //!   the streaming HVP oracle (Schur-complement CG + Lanczos), the OTDD
 //!   pipeline, the shuffled-regression optimizer, the analytical HBM/SRAM
-//!   IO-cost model, and the batched job service.
+//!   IO-cost model, and the sharded multi-actor job service (see
+//!   `ARCHITECTURE.md` at the repo root for the full layer map).
 //!
 //! ## Quickstart (no artifacts needed)
 //!

@@ -40,7 +40,7 @@ COMMANDS:
   profile  [--n 10000] [--d 64] [--iters 10]
   otdd     [--n 400] [--d 64]
   regress  [--n 512] [--eps 0.1] [--steps 60]
-  serve    [--jobs 64]
+  serve    [--jobs 64] [--actors N]   (N defaults to config/FLASH_SINKHORN_ACTORS, else 1)
   trajectory [append|check|show] [--baseline BENCH_native.json]
              [--current BENCH_native.json] [--file BENCH_trajectory.jsonl]
              [--max-regress 0.15]
@@ -170,9 +170,15 @@ fn main() -> Result<()> {
             );
         }
         "serve" => {
-            args.ensure_known(&["jobs"])?;
+            args.ensure_known(&["jobs", "actors"])?;
             let jobs = args.usize("jobs", 64)?;
-            let handle = service::spawn(cfg.clone())?;
+            // precedence: CLI flag > config key > FLASH_SINKHORN_ACTORS env
+            // (the env default is folded into Config::default already)
+            let mut cfg = cfg.clone();
+            let actors = args.usize("actors", cfg.service.actors)?;
+            cfg.service.actors = actors.max(1);
+            let handle = service::spawn(cfg)?;
+            println!("service up: {} actor(s)", handle.actors());
             let t0 = std::time::Instant::now();
             let pendings: Vec<_> = (0..jobs)
                 .map(|i| {
@@ -186,11 +192,7 @@ fn main() -> Result<()> {
                         0.1,
                     )
                     .unwrap();
-                    handle.submit(JobRequest {
-                        kind: JobKind::Solve,
-                        problem: prob,
-                        fixed_iters: Some(10),
-                    })
+                    handle.submit(JobRequest::with_fixed_iters(JobKind::Solve, prob, 10))
                 })
                 .collect();
             let mut ok = 0;

@@ -111,6 +111,8 @@ fn parse_fused(op: &str) -> Option<(usize, StepSchedule)> {
 }
 
 impl NativeBackend {
+    /// The default backend: k_fused = 10, default tiling, shared global
+    /// pool (same as `NativeBackend::default()`).
     pub fn new() -> Self {
         Self::default()
     }
@@ -121,11 +123,17 @@ impl NativeBackend {
     /// equality across pool widths.
     pub fn with_threads(threads: usize) -> Self {
         let threads = threads.max(1);
-        Self {
-            k_fused: 10,
-            tile: TileCfg { threads, ..TileCfg::default() },
-            pool: Arc::new(WorkerPool::new(threads)),
-        }
+        Self::with_pool(Arc::new(WorkerPool::new(threads)))
+    }
+
+    /// A backend on an explicit worker pool — typically one slice of a
+    /// [`pool::partitioned`] split, so N service actors together own about
+    /// as many kernel threads as one actor on the global pool would
+    /// (results stay bitwise identical at any width; see `pool`'s
+    /// determinism contract).
+    pub fn with_pool(pool: Arc<WorkerPool>) -> Self {
+        let threads = pool.threads();
+        Self { k_fused: 10, tile: TileCfg { threads, ..TileCfg::default() }, pool }
     }
 
     /// Column bias `ghat_j / eps + ln w_j` with zero-weight entries masked

@@ -239,6 +239,30 @@ pub fn configured_threads() -> usize {
     }
 }
 
+/// Split a total claimant budget into `parts` per-actor widths that sum to
+/// `max(total, parts)`: every part gets at least one claimant, and the
+/// remainder spreads over the leading parts.  This is how the sharded
+/// service partitions the machine — N actors with private pools of these
+/// widths own (about) as many threads as one actor on the global pool
+/// would, instead of N times as many.
+pub fn partition_widths(total: usize, parts: usize) -> Vec<usize> {
+    let parts = parts.max(1);
+    let total = total.max(parts);
+    let base = total / parts;
+    let rem = total % parts;
+    (0..parts).map(|i| base + usize::from(i < rem)).collect()
+}
+
+/// Build `parts` private pools partitioning `total` claimants (see
+/// [`partition_widths`]).  Each handle owns its worker threads; dropping it
+/// joins them.
+pub fn partitioned(total: usize, parts: usize) -> Vec<Arc<WorkerPool>> {
+    partition_widths(total, parts)
+        .into_iter()
+        .map(|w| Arc::new(WorkerPool::new(w)))
+        .collect()
+}
+
 static GLOBAL: OnceLock<Arc<WorkerPool>> = OnceLock::new();
 
 /// The process-wide pool shared by every default-constructed backend —
@@ -321,6 +345,42 @@ mod tests {
                         });
                         assert_eq!(sum.load(Ordering::Relaxed), 127 * 128 / 2 + 128 * t);
                     }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn partition_widths_cover_without_oversubscription() {
+        assert_eq!(partition_widths(8, 2), vec![4, 4]);
+        assert_eq!(partition_widths(8, 3), vec![3, 3, 2]);
+        assert_eq!(partition_widths(2, 4), vec![1, 1, 1, 1]); // min 1 each
+        assert_eq!(partition_widths(7, 1), vec![7]);
+        assert_eq!(partition_widths(0, 3), vec![1, 1, 1]);
+        for (total, parts) in [(16usize, 5usize), (3, 3), (9, 2)] {
+            let w = partition_widths(total, parts);
+            assert_eq!(w.len(), parts);
+            assert_eq!(w.iter().sum::<usize>(), total.max(parts));
+            assert!(w.iter().all(|&x| x >= 1));
+        }
+    }
+
+    #[test]
+    fn partitioned_pools_are_independent() {
+        let pools = partitioned(4, 2);
+        assert_eq!(pools.len(), 2);
+        assert_eq!(pools[0].threads() + pools[1].threads(), 4);
+        // both pools can run regions concurrently (no shared submit lock)
+        std::thread::scope(|scope| {
+            for pool in &pools {
+                scope.spawn(move || {
+                    let sum = AtomicU64::new(0);
+                    pool.run(64, 4, |r0, r1| {
+                        for i in r0..r1 {
+                            sum.fetch_add(i as u64, Ordering::Relaxed);
+                        }
+                    });
+                    assert_eq!(sum.load(Ordering::Relaxed), 63 * 64 / 2);
                 });
             }
         });

@@ -70,11 +70,14 @@ impl Schedule {
     }
 }
 
+/// Iteration-loop configuration for [`SinkhornSolver`].
 #[derive(Debug, Clone)]
 pub struct SolverConfig {
+    /// Maximum Sinkhorn iterations (per eps level when annealing).
     pub max_iters: usize,
     /// Stop when the sup-norm potential change drops below this.
     pub tol: f32,
+    /// Update schedule (alternating / symmetric / auto crossover).
     pub schedule: Schedule,
     /// Use the fused k-step op (one dispatch per k iterations) when far
     /// from tolerance.
@@ -102,6 +105,7 @@ impl Default for SolverConfig {
 }
 
 impl SolverConfig {
+    /// Build from the launcher's JSON `solver` section.
     pub fn from_section(s: &crate::config::SolverSection) -> Self {
         Self {
             max_iters: s.max_iters,
@@ -113,6 +117,8 @@ impl SolverConfig {
         }
     }
 
+    /// A budget-pinned config: exactly `iters` iterations, no tolerance
+    /// check (paper benchmarks fix 10).
     pub fn fixed_iters(iters: usize, schedule: Schedule) -> Self {
         Self { max_iters: iters, tol: 0.0, schedule, ..Self::default() }
     }
@@ -121,43 +127,77 @@ impl SolverConfig {
 /// Shifted dual potentials (Prop. 1): fhat = f - |x|^2, ghat = g - |y|^2.
 #[derive(Debug, Clone)]
 pub struct Potentials {
+    /// Shifted source potential, length n.
     pub fhat: Vec<f32>,
+    /// Shifted target potential, length m.
     pub ghat: Vec<f32>,
 }
 
+/// What a solve did: iterations, convergence, cost, timing, routing.
 #[derive(Debug, Clone)]
 pub struct SolveReport {
+    /// Sinkhorn iterations actually run.
     pub iters: usize,
+    /// Last sup-norm potential change observed.
     pub final_delta: f32,
+    /// The regularized OT cost `OT_eps` (dual objective).
     pub cost: f64,
+    /// True when `final_delta` dropped below the tolerance in budget.
     pub converged: bool,
+    /// Wall-clock time of the solve.
     pub wall: std::time::Duration,
+    /// The schedule actually used (Auto resolved).
     pub schedule: Schedule,
+    /// The (n, m, d) bucket the problem routed into.
     pub bucket: (usize, usize, usize),
 }
 
+/// The L3 iteration-loop driver: schedules backend step ops, controls
+/// convergence and eps-annealing, and reports cost.  Backend-agnostic —
+/// the same driver runs on the native tiled-LSE backend and on
+/// precompiled HLO artifacts.
 pub struct SinkhornSolver<'e> {
     backend: &'e dyn ComputeBackend,
     router: Router,
+    /// The iteration-loop configuration this solver was built with.
     pub cfg: SolverConfig,
 }
 
 impl<'e> SinkhornSolver<'e> {
+    /// A solver on `backend` with the given loop configuration.
     pub fn new(backend: &'e dyn ComputeBackend, cfg: SolverConfig) -> Self {
         let router = backend.router();
         Self { backend, router, cfg }
     }
 
+    /// The backend's router (exact-fit on native, bucketed on PJRT).
     pub fn router(&self) -> &Router {
         &self.router
     }
 
+    /// The backend this solver dispatches to.
     pub fn backend(&self) -> &'e dyn ComputeBackend {
         self.backend
     }
 
     /// Solve: route to a bucket, pad if bucketed, iterate to tolerance or
-    /// budget.
+    /// budget.  This is the top-level entry point for one EOT solve.
+    ///
+    /// # Example
+    ///
+    /// ```
+    /// use flash_sinkhorn::prelude::*;
+    ///
+    /// let backend = NativeBackend::default();
+    /// let (x, y) = (uniform_cloud(64, 4, 1), uniform_cloud(48, 4, 2));
+    /// let prob = OtProblem::uniform(x, y, 64, 48, 4, 0.2).unwrap();
+    /// let solver = SinkhornSolver::new(&backend, SolverConfig::default());
+    /// let (potentials, report) = solver.solve(&prob).unwrap();
+    /// assert!(report.converged);
+    /// assert!(report.cost.is_finite());
+    /// assert_eq!(potentials.fhat.len(), 64);
+    /// assert_eq!(potentials.ghat.len(), 48);
+    /// ```
     pub fn solve(&self, prob: &OtProblem) -> Result<(Potentials, SolveReport)> {
         let ctx = BucketCtx::new(&self.router, prob)?;
         self.solve_in_ctx(prob, &ctx)

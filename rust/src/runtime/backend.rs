@@ -87,6 +87,8 @@ pub struct PreparedCall<'b> {
 }
 
 impl<'b> PreparedCall<'b> {
+    /// Prepare `key` on `backend` with `slots` holding `Some(tensor)` for
+    /// each frozen static input and `None` for each per-call dynamic slot.
     pub fn new(
         backend: &'b dyn ComputeBackend,
         key: impl Into<String>,
@@ -104,6 +106,7 @@ impl<'b> PreparedCall<'b> {
         Self { backend, key: key.into(), buf: std::cell::RefCell::new(buf), dynamic_slots }
     }
 
+    /// The artifact/op key this call was prepared for.
     pub fn key(&self) -> &str {
         &self.key
     }

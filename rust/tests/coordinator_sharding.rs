@@ -1,0 +1,222 @@
+//! Sharded-coordinator suite: determinism across actor counts, fairness
+//! under mixed workloads (no small job starves behind a large solve while
+//! an idle actor exists), drain-on-shutdown, and gauge presence.
+//!
+//! The determinism tests are the acceptance gate for the sharded service:
+//! per-solve results must be **bitwise identical** between the 1-actor
+//! and N-actor configurations.  This holds because the native kernels are
+//! bitwise-deterministic across pool widths (chunked row ownership, fixed
+//! per-row reduction order — see `native::pool`), so which actor (and how
+//! wide a pool slice) runs a solve cannot change its bits.
+
+use flash_sinkhorn::config::Config;
+use flash_sinkhorn::coordinator::job::{JobKind, JobRequest};
+use flash_sinkhorn::coordinator::router::{class_of, shard_of};
+use flash_sinkhorn::coordinator::service;
+use flash_sinkhorn::data::clouds::uniform_cloud;
+use flash_sinkhorn::ot::problem::OtProblem;
+
+fn config(actors: usize) -> Config {
+    // force the hermetic backend regardless of the environment
+    let mut cfg = Config::default();
+    cfg.backend = "native".into();
+    cfg.service.actors = actors;
+    cfg
+}
+
+fn problem(n: usize, m: usize, seed: u64) -> OtProblem {
+    OtProblem::uniform(
+        uniform_cloud(n, 16, seed),
+        uniform_cloud(m, 16, seed + 999),
+        n,
+        m,
+        16,
+        0.1,
+    )
+    .unwrap()
+}
+
+fn request(n: usize, m: usize, seed: u64, kind: JobKind, iters: usize) -> JobRequest {
+    JobRequest::with_fixed_iters(kind, problem(n, m, seed), iters)
+}
+
+/// Run a fixed mixed workload through an `actors`-wide service and return
+/// each job's (cost bits, gradient) in submission order.
+fn run_workload(actors: usize) -> Vec<(u64, Option<Vec<f32>>)> {
+    let handle = service::spawn(config(actors)).unwrap();
+    let requests: Vec<JobRequest> = (0..12)
+        .map(|i| {
+            let (n, m) = [(60, 80), (150, 150), (300, 200), (500, 500)][i % 4];
+            let kind = if i % 3 == 0 { JobKind::Grad } else { JobKind::Solve };
+            request(n, m, i as u64, kind, 8)
+        })
+        .collect();
+    let pendings: Vec<_> =
+        requests.into_iter().map(|r| handle.submit(r).unwrap()).collect();
+    pendings
+        .into_iter()
+        .map(|p| {
+            let resp = p.recv().unwrap();
+            (resp.cost.to_bits(), resp.grad)
+        })
+        .collect()
+}
+
+#[test]
+fn results_bitwise_identical_across_actor_counts() {
+    let one = run_workload(1);
+    for actors in [2usize, 3] {
+        let many = run_workload(actors);
+        assert_eq!(one.len(), many.len());
+        for (i, (a, b)) in one.iter().zip(&many).enumerate() {
+            assert_eq!(a.0, b.0, "job {i}: cost bits differ at {actors} actors");
+            assert_eq!(a.1, b.1, "job {i}: gradient differs at {actors} actors");
+        }
+    }
+}
+
+#[test]
+fn small_jobs_do_not_starve_behind_a_large_solve() {
+    // Pick shapes whose classes share a *home* shard at 2 actors, so the
+    // only way the small jobs run concurrently with the large solve is the
+    // steal path.  (Verified as a precondition so a future change to the
+    // shard hash fails loudly here instead of silently weakening the test.)
+    let large_class = class_of(768, 768, 16);
+    let small_class = class_of(16, 16, 16);
+    assert_eq!(
+        shard_of(&large_class, 2),
+        shard_of(&small_class, 2),
+        "test precondition: large and small classes must share a home shard"
+    );
+
+    let mut cfg = config(2);
+    cfg.service.max_batch = 4;
+    let handle = service::spawn(cfg).unwrap();
+    // one long solve, then a burst of tiny ones in the colliding class
+    let large = handle.submit(request(768, 768, 1, JobKind::Solve, 60)).unwrap();
+    let smalls: Vec<_> = (0..12)
+        .map(|i| handle.submit(request(16, 16, 100 + i, JobKind::Solve, 2)).unwrap())
+        .collect();
+    for p in smalls {
+        p.recv().unwrap();
+    }
+    large.recv().unwrap();
+
+    let m = handle.metrics();
+    assert_eq!(m.jobs_ok, 13);
+    assert_eq!(m.actors.len(), 2);
+    // the idle actor picked up work instead of letting it queue behind the
+    // large solve: every actor ran at least one job, via at least one steal
+    assert!(
+        m.actors.iter().all(|a| a.jobs >= 1),
+        "an actor sat idle while jobs queued: {m}"
+    );
+    assert!(m.steals >= 1, "colliding classes require the steal path: {m}");
+}
+
+#[test]
+fn shutdown_drains_queued_jobs() {
+    let handle = service::spawn(config(2)).unwrap();
+    let pendings: Vec<_> = (0..16)
+        .map(|i| handle.submit(request(100, 100, i, JobKind::Solve, 5)).unwrap())
+        .collect();
+    // drop every handle while jobs are still queued: actors must drain,
+    // not abandon, the queue
+    drop(handle);
+    for (i, p) in pendings.into_iter().enumerate() {
+        let resp = p.recv().unwrap_or_else(|e| panic!("job {i} dropped in shutdown: {e}"));
+        assert!(resp.cost.is_finite());
+        assert_eq!(resp.iters, 5);
+    }
+}
+
+#[test]
+fn clones_keep_the_service_alive() {
+    let handle = service::spawn(config(2)).unwrap();
+    let extra = handle.clone();
+    drop(handle);
+    // a surviving clone keeps the actors running
+    extra.submit_blocking(request(50, 50, 7, JobKind::Solve, 2)).unwrap();
+    let again = extra.clone();
+    drop(extra);
+    again.submit_blocking(request(50, 50, 8, JobKind::Solve, 2)).unwrap();
+}
+
+#[test]
+fn gauges_present_on_a_fresh_service() {
+    let handle = service::spawn(config(3)).unwrap();
+    let m = handle.metrics();
+    assert_eq!(m.actors.len(), 3, "every actor slot reports before any job: {m}");
+    for a in &m.actors {
+        assert_eq!((a.jobs, a.batches, a.steals, a.queue_depth), (0, 0, 0, 0));
+    }
+    assert_eq!(m.queue_depth, 0);
+    assert!(m.class_depths.is_empty());
+}
+
+#[test]
+fn tenant_latency_is_reported_per_label() {
+    let handle = service::spawn(config(2)).unwrap();
+    for (tenant, seed) in [("alpha", 1u64), ("alpha", 2), ("beta", 3)] {
+        let mut req = request(80, 80, seed, JobKind::Solve, 4);
+        req.tenant = Some(tenant.to_string());
+        handle.submit_blocking(req).unwrap();
+    }
+    handle.submit_blocking(request(80, 80, 4, JobKind::Solve, 4)).unwrap(); // anonymous
+    let m = handle.metrics();
+    assert_eq!(m.jobs_ok, 4);
+    let mut labels: Vec<(&str, u64)> =
+        m.tenants.iter().map(|t| (t.tenant.as_str(), t.jobs)).collect();
+    labels.sort();
+    assert_eq!(labels, vec![("alpha", 2), ("beta", 1)]);
+}
+
+#[test]
+fn priorities_jump_the_class_queue() {
+    // with max_batch 1 and one actor, queued classes are served by
+    // (priority, age); a high-priority late arrival runs before older
+    // normal-priority classes that are still queued
+    let mut cfg = config(1);
+    cfg.service.max_batch = 1;
+    let handle = service::spawn(cfg).unwrap();
+    // occupy the actor so the rest of the submissions queue up behind it
+    let blocker = handle.submit(request(400, 400, 9, JobKind::Solve, 30)).unwrap();
+    let normal = handle.submit(request(30, 30, 10, JobKind::Solve, 2)).unwrap();
+    let mut urgent_req = request(60, 60, 11, JobKind::Solve, 2);
+    urgent_req.priority = 5;
+    let urgent = handle.submit(urgent_req).unwrap();
+    blocker.recv().unwrap();
+    let u = urgent.recv().unwrap();
+    let n = normal.recv().unwrap();
+    assert!(
+        u.service_time <= n.service_time,
+        "priority job waited longer than the normal job it should preempt: {:?} vs {:?}",
+        u.service_time,
+        n.service_time
+    );
+}
+
+/// Throughput smoke: a mixed multi-class workload on a sharded service
+/// completes fully.  (Wall-clock numbers go to BENCH_native.json via the
+/// bench smoke, not to assertions — CI machines vary too much.)
+#[test]
+fn sharded_throughput_smoke() {
+    let handle = service::spawn(config(2)).unwrap();
+    let pendings: Vec<_> = (0..32)
+        .map(|i| {
+            let n = [40, 90, 180][i % 3];
+            handle.submit(request(n, n, i as u64, JobKind::Solve, 4)).unwrap()
+        })
+        .collect();
+    let mut ok = 0;
+    for p in pendings {
+        if p.recv().is_ok() {
+            ok += 1;
+        }
+    }
+    let m = handle.metrics();
+    assert_eq!(ok, 32);
+    assert_eq!(m.jobs_ok, 32);
+    assert_eq!(m.batched_jobs, 32);
+    assert!(m.batches >= 1 && m.batches <= 32);
+}

@@ -8,16 +8,18 @@ use flash_sinkhorn::data::clouds::uniform_cloud;
 use flash_sinkhorn::ot::problem::OtProblem;
 
 fn config() -> Config {
-    // force the hermetic backend regardless of the environment
+    // force the hermetic backend and the single-actor layout regardless of
+    // the environment (FLASH_SINKHORN_BACKEND / FLASH_SINKHORN_ACTORS)
     let mut cfg = Config::default();
     cfg.backend = "native".into();
+    cfg.service.actors = 1;
     cfg
 }
 
 fn request(n: usize, seed: u64, kind: JobKind) -> JobRequest {
-    JobRequest {
+    JobRequest::with_fixed_iters(
         kind,
-        problem: OtProblem::uniform(
+        OtProblem::uniform(
             uniform_cloud(n, 16, seed),
             uniform_cloud(n, 16, seed + 999),
             n,
@@ -26,8 +28,8 @@ fn request(n: usize, seed: u64, kind: JobKind) -> JobRequest {
             0.1,
         )
         .unwrap(),
-        fixed_iters: Some(10),
-    }
+        10,
+    )
 }
 
 #[test]
@@ -47,6 +49,11 @@ fn concurrent_jobs_complete_with_batching() {
     assert!(m.batches <= 24, "batching should coalesce: {} batches", m.batches);
     assert_eq!(m.batched_jobs, 24);
     assert_eq!(m.sinkhorn_iters, 240);
+    // single-actor default: one actor slot, no steals, class gauges drained
+    assert_eq!(m.actors.len(), 1);
+    assert_eq!(m.steals, 0);
+    assert_eq!(m.actors[0].jobs, 24);
+    assert!(m.class_depths.iter().all(|&(_, d)| d == 0), "queues drained: {:?}", m.class_depths);
 }
 
 #[test]

@@ -3,7 +3,7 @@
 //! offline build; DESIGN.md section 2).  Each property runs across many
 //! random cases and prints the failing seed on assertion failure.
 
-use flash_sinkhorn::coordinator::batcher::{Batcher, Keyed};
+use flash_sinkhorn::coordinator::batcher::{Batcher, ClassQueues, Keyed};
 use flash_sinkhorn::coordinator::router::{pad_points, pad_vec, Bucket, BucketCtx, Router};
 use flash_sinkhorn::data::clouds::{random_simplex, uniform_cloud};
 use flash_sinkhorn::data::rng::Rng;
@@ -124,6 +124,45 @@ fn prop_batcher_never_drops_never_reorders_within_key() {
             let orig: Vec<u64> = items.iter().filter(|i| i.1 == key).map(|i| i.0).collect();
             let got: Vec<u64> = seen.iter().filter(|i| i.1 == key).map(|i| i.0).collect();
             assert_eq!(orig, got, "case {case}: reorder within key {key}");
+        }
+    }
+}
+
+#[test]
+fn prop_class_queues_never_drop_never_reorder_within_class() {
+    let mut rng = Rng::new(9);
+    for case in 0..CASES {
+        let n_items = 1 + rng.below(60);
+        let cap = 1 + rng.below(80);
+        let max_batch = 1 + rng.below(8);
+        let items: Vec<Item> =
+            (0..n_items).map(|i| Item(i as u64, rng.below(3) as u8)).collect();
+        let mut q: ClassQueues<Item> = ClassQueues::with_capacity(cap);
+        let mut admitted: Vec<Item> = Vec::new();
+        for it in &items {
+            match q.push(it.clone()) {
+                Ok(()) => admitted.push(it.clone()),
+                Err(back) => {
+                    assert_eq!(&back, it, "case {case}: rejected job must come back intact");
+                    assert_eq!(q.len(), cap, "case {case}: rejection only at the cap");
+                }
+            }
+        }
+        // drain by always popping the oldest front (what a single actor does)
+        let mut seen: Vec<Item> = Vec::new();
+        while let Some(front) = q.fronts().into_iter().min_by_key(|f| f.seq) {
+            let batch = q.pop_batch(&front.class, max_batch);
+            assert!(!batch.is_empty(), "case {case}: non-empty front must pop");
+            assert!(batch.len() <= max_batch, "case {case}: batch too big");
+            assert!(batch.iter().all(|i| i.1 == front.class), "case {case}: mixed classes");
+            seen.extend(batch);
+        }
+        assert!(q.is_empty());
+        assert_eq!(seen.len(), admitted.len(), "case {case}: dropped jobs");
+        for key in 0..3u8 {
+            let orig: Vec<u64> = admitted.iter().filter(|i| i.1 == key).map(|i| i.0).collect();
+            let got: Vec<u64> = seen.iter().filter(|i| i.1 == key).map(|i| i.0).collect();
+            assert_eq!(orig, got, "case {case}: reorder within class {key}");
         }
     }
 }
