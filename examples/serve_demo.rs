@@ -1,8 +1,11 @@
 //! Service demo: batched OT jobs through the coordinator's job service --
-//! bounded queue (backpressure), same-class dynamic batching, executable-
-//! cache affinity, latency/throughput metrics.  A mixed workload trace of
-//! solve and gradient jobs at three problem sizes runs from 4 client
-//! threads (each a named tenant) against a sharded two-actor pool.
+//! bounded queue (backpressure), per-tenant admission control (token-bucket
+//! rate limit + in-flight cap, typed rejections), same-class dynamic
+//! batching, and an adaptive actor pool that grows under queue depth and
+//! parks when idle.  A mixed workload trace of solve and gradient jobs at
+//! three problem sizes runs from 4 well-behaved client threads (each a
+//! named tenant) while a fifth "hog" tenant floods the service and is
+//! throttled without affecting the others.
 //!
 //! Run: `cargo run --release --example serve_demo`
 
@@ -10,18 +13,28 @@ use std::sync::Arc;
 
 use anyhow::Result;
 use flash_sinkhorn::config::Config;
+use flash_sinkhorn::coordinator::batcher::Rejection;
 use flash_sinkhorn::coordinator::job::{JobKind, JobRequest};
-use flash_sinkhorn::coordinator::service;
+use flash_sinkhorn::coordinator::service::{self, SubmitError};
 use flash_sinkhorn::prelude::*;
 
 fn main() -> Result<()> {
     let mut cfg = Config::default();
     cfg.service.max_batch = 8;
     cfg.service.max_wait_ms = 3;
-    cfg.service.actors = 2;
+    // adaptive pool: start at 1 actor, grow to 4 under sustained depth
+    cfg.service.actors_min = 1;
+    cfg.service.actors_max = 4;
+    // per-tenant quotas: generous enough that the polite clients never
+    // notice, tight enough that the hog's flood is throttled
+    cfg.service.tenant_rate = 200.0;
+    cfg.service.tenant_burst = 32.0;
+    cfg.service.tenant_inflight = 48;
     let handle = Arc::new(service::spawn(cfg)?);
+    let (lo, hi) = handle.actor_range();
     println!(
-        "service up ({} actors); dispatching mixed workload trace from 4 client threads",
+        "service up ({} actor slots, adaptive {lo}..{hi}); \
+         4 tenant clients + 1 flooding hog",
         handle.actors()
     );
 
@@ -63,17 +76,77 @@ fn main() -> Result<()> {
         })
         .collect();
 
+    // The hog: fire-and-forget floods without waiting for completions.
+    // Typed rejections tell throttling apart from backpressure.
+    let hog = {
+        let h = handle.clone();
+        std::thread::spawn(move || -> Result<(usize, usize, usize)> {
+            let (mut admitted, mut throttled, mut backpressured) = (0, 0, 0);
+            let mut pendings = Vec::new();
+            for i in 0..256u64 {
+                let prob = OtProblem::uniform(
+                    uniform_cloud(120, 16, 9000 + i),
+                    uniform_cloud(120, 16, 9500 + i),
+                    120,
+                    120,
+                    16,
+                    0.1,
+                )?;
+                let req = JobRequest::with_fixed_iters(JobKind::Solve, prob, 6).for_tenant("hog");
+                match h.try_submit(req) {
+                    Ok(p) => {
+                        admitted += 1;
+                        pendings.push(p);
+                    }
+                    Err(SubmitError::Rejected(
+                        Rejection::RateLimited | Rejection::TenantCap,
+                    )) => throttled += 1,
+                    Err(SubmitError::Rejected(Rejection::QueueFull)) => backpressured += 1,
+                    Err(SubmitError::Stopped) => break,
+                }
+            }
+            for p in pendings {
+                p.recv()?;
+            }
+            Ok((admitted, throttled, backpressured))
+        })
+    };
+
     let mut total_ok = 0;
     for c in clients {
         let (ok, _) = c.join().unwrap()?;
         total_ok += ok;
     }
+    let (hog_admitted, hog_throttled, hog_backpressured) = hog.join().unwrap()?;
     let wall = t0.elapsed().as_secs_f64();
     let m = handle.metrics();
-    println!("\n{total_ok} jobs in {wall:.2}s = {:.1} jobs/s", total_ok as f64 / wall);
+    println!(
+        "\n{total_ok} tenant jobs + {hog_admitted} hog jobs in {wall:.2}s = {:.1} jobs/s",
+        (total_ok + hog_admitted) as f64 / wall
+    );
+    println!(
+        "hog: admitted={hog_admitted} throttled={hog_throttled} backpressured={hog_backpressured}"
+    );
     println!("{m}");
-    assert_eq!(m.jobs_ok as usize, total_ok);
+    assert_eq!(m.jobs_ok as usize, total_ok + hog_admitted);
     assert!(m.batches <= m.batched_jobs, "every batch carries at least one job");
-    assert_eq!(m.actors.len(), 2, "snapshot reports every actor, even idle ones");
+    assert_eq!(m.actors.len(), 4, "snapshot reports every actor slot, even parked ones");
+    assert_eq!(m.admitted as usize, total_ok + hog_admitted);
+    // the polite tenants were never throttled: every rejection is the hog's
+    let hog_t = m.tenants.iter().find(|t| t.tenant == "hog").expect("hog series registered");
+    assert_eq!(
+        (hog_t.rejected_rate_limited + hog_t.rejected_tenant_cap) as usize,
+        hog_throttled,
+        "typed rejections must match the per-tenant counters"
+    );
+    for t in m.tenants.iter().filter(|t| t.tenant != "hog") {
+        assert_eq!(t.rejected_rate_limited, 0, "polite tenant throttled: {t:?}");
+        assert_eq!(t.rejected_tenant_cap, 0, "polite tenant capped: {t:?}");
+    }
+    assert!(
+        m.active_actors as usize >= lo && m.active_actors as usize <= hi,
+        "active actors outside [{lo}, {hi}]: {}",
+        m.active_actors
+    );
     Ok(())
 }

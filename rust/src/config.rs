@@ -56,6 +56,25 @@ pub struct ServiceSection {
     /// from `FLASH_SINKHORN_ACTORS` (unset or 0 = 1); the config key and
     /// the `repro serve --actors` flag override it, in that order.
     pub actors: usize,
+    /// Lower bound for the adaptive actor pool: the supervisor never
+    /// parks below this many active actors.  0 (default) means `actors`
+    /// — together with `actors_max = 0` that is the static pool.
+    pub actors_min: usize,
+    /// Upper bound for the adaptive actor pool (actor *slots* spawned).
+    /// 0 (default) means `actors`; setting `actors_min < actors_max`
+    /// turns elasticity on (grow on sustained queue depth, park on
+    /// sustained idleness, kernel pool repartitioned on every resize).
+    pub actors_max: usize,
+    /// Per-tenant token refill rate, jobs/second (0 = rate limiting off).
+    /// Defaults from `FLASH_SINKHORN_TENANT_RATE`; config key and the
+    /// `repro serve --tenant-rate` flag override it, in that order.
+    pub tenant_rate: f64,
+    /// Per-tenant token-bucket burst capacity (0 = `max(tenant_rate, 1)`).
+    /// Defaults from `FLASH_SINKHORN_TENANT_BURST`.
+    pub tenant_burst: f64,
+    /// Per-tenant cap on admitted-but-incomplete jobs (0 = off).
+    /// Defaults from `FLASH_SINKHORN_TENANT_INFLIGHT`.
+    pub tenant_inflight: usize,
 }
 
 #[derive(Debug, Clone)]
@@ -100,11 +119,29 @@ impl Default for Config {
                     .and_then(|v| v.parse::<usize>().ok())
                     .filter(|&a| a > 0)
                     .unwrap_or(1),
+                actors_min: 0,
+                actors_max: 0,
+                tenant_rate: env_f64("FLASH_SINKHORN_TENANT_RATE"),
+                tenant_burst: env_f64("FLASH_SINKHORN_TENANT_BURST"),
+                tenant_inflight: std::env::var("FLASH_SINKHORN_TENANT_INFLIGHT")
+                    .ok()
+                    .and_then(|v| v.parse::<usize>().ok())
+                    .unwrap_or(0),
             },
             hvp: HvpSection { tau: 1e-5, eta: 1e-6, max_cg: 200 },
             bench: BenchSection { out_dir: "results".into(), reps: 3, warmup: 1 },
         }
     }
+}
+
+/// Non-negative f64 from the environment; unset, unparsable or negative
+/// reads as 0.0 (= that limit disabled).
+fn env_f64(var: &str) -> f64 {
+    std::env::var(var)
+        .ok()
+        .and_then(|v| v.parse::<f64>().ok())
+        .filter(|v| v.is_finite() && *v >= 0.0)
+        .unwrap_or(0.0)
 }
 
 fn upd_usize(j: &Json, key: &str, slot: &mut usize) -> Result<()> {
@@ -150,6 +187,15 @@ impl Config {
             }
             upd_usize(s, "queue_cap", &mut cfg.service.queue_cap)?;
             upd_usize(s, "actors", &mut cfg.service.actors)?;
+            upd_usize(s, "actors_min", &mut cfg.service.actors_min)?;
+            upd_usize(s, "actors_max", &mut cfg.service.actors_max)?;
+            if let Some(v) = s.get("tenant_rate") {
+                cfg.service.tenant_rate = v.as_f64()?;
+            }
+            if let Some(v) = s.get("tenant_burst") {
+                cfg.service.tenant_burst = v.as_f64()?;
+            }
+            upd_usize(s, "tenant_inflight", &mut cfg.service.tenant_inflight)?;
         }
         if let Some(s) = j.get("hvp") {
             upd_f32(s, "tau", &mut cfg.hvp.tau)?;
@@ -216,6 +262,28 @@ mod tests {
             4
         );
         assert!(Config::from_json(r#"{"service": {"actors": -2}}"#).is_err());
+    }
+
+    #[test]
+    fn adaptive_and_tenant_knobs_parse_and_default_off() {
+        // (FLASH_SINKHORN_TENANT_* are not set in the test environment)
+        let d = Config::from_json("{}").unwrap();
+        assert_eq!((d.service.actors_min, d.service.actors_max), (0, 0));
+        assert_eq!(d.service.tenant_rate, 0.0);
+        assert_eq!(d.service.tenant_burst, 0.0);
+        assert_eq!(d.service.tenant_inflight, 0);
+        let cfg = Config::from_json(
+            r#"{"service": {"actors_min": 2, "actors_max": 8,
+                 "tenant_rate": 12.5, "tenant_burst": 4, "tenant_inflight": 3}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.service.actors_min, 2);
+        assert_eq!(cfg.service.actors_max, 8);
+        assert_eq!(cfg.service.tenant_rate, 12.5);
+        assert_eq!(cfg.service.tenant_burst, 4.0);
+        assert_eq!(cfg.service.tenant_inflight, 3);
+        assert!(Config::from_json(r#"{"service": {"actors_min": -1}}"#).is_err());
+        assert!(Config::from_json(r#"{"service": {"tenant_rate": "fast"}}"#).is_err());
     }
 
     #[test]

@@ -1,9 +1,8 @@
-//! Dynamic same-class batching.
+//! Dynamic same-class batching and per-tenant admission control.
 //!
 //! Jobs that route to the same shape class are coalesced into one batch so
 //! an actor runs them back-to-back against hot code and caches (the CPU
-//! analogue of the paper's "fewer kernel launches" lever).  Two structures
-//! live here:
+//! analogue of the paper's "fewer kernel launches" lever).  Structures:
 //!
 //! * [`Batcher`] — the original single-consumer channel batcher: pulls from
 //!   one `mpsc` receiver, coalesces same-key jobs, stashes mismatches
@@ -14,6 +13,17 @@
 //!   arrival-order bookkeeping so schedulers can pick the oldest /
 //!   highest-priority class and steal across classes without ever
 //!   reordering jobs inside a class.
+//! * [`Admission`] — per-tenant quotas in front of the queues: a
+//!   [`TokenBucket`] rate limiter and a max-in-flight cap, both optional,
+//!   applied per tenant label.  A refusal is a typed [`Rejection`] so
+//!   callers can distinguish whole-service backpressure
+//!   ([`Rejection::QueueFull`]) from per-tenant throttling
+//!   ([`Rejection::RateLimited`], [`Rejection::TenantCap`]) and react
+//!   differently (retry-later vs slow-down vs widen-the-cap).
+//!
+//! Admission never sleeps and never consults wall time directly — "now"
+//! comes in as a [`Duration`] reading from a [`super::clock::Clock`], so
+//! the whole layer is deterministic under an injected virtual clock.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
@@ -31,6 +41,259 @@ pub trait Keyed {
     /// among classes.  Defaults to 0 (pure FIFO across classes).
     fn priority(&self) -> u8 {
         0
+    }
+}
+
+/// Why the service refused a job at submission.  Typed (rather than a
+/// string error) so callers can tell backpressure from throttling.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rejection {
+    /// The global admission queue is at capacity — the *service* is
+    /// saturated.  Retrying later helps; submitting elsewhere helps more.
+    QueueFull,
+    /// This tenant spent its token-bucket budget — the *tenant* is over
+    /// rate.  Other tenants are unaffected; the tenant should slow down
+    /// (tokens refill at `tenant_rate` per second, up to `tenant_burst`).
+    RateLimited,
+    /// This tenant already has `tenant_inflight` admitted-but-incomplete
+    /// jobs.  A slot frees exactly when one of them completes.
+    TenantCap,
+}
+
+impl std::fmt::Display for Rejection {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Rejection::QueueFull => write!(f, "service queue full (backpressure)"),
+            Rejection::RateLimited => write!(f, "tenant rate limit exceeded (throttled)"),
+            Rejection::TenantCap => write!(f, "tenant in-flight cap reached"),
+        }
+    }
+}
+
+impl std::error::Error for Rejection {}
+
+/// Per-tenant quota knobs (`service.tenant_*` config keys,
+/// `FLASH_SINKHORN_TENANT_*` env, `repro serve --tenant-*` flags).
+/// Every limit is off by default; a zero disables that limit.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct TenantPolicy {
+    /// Token refill rate, jobs per second.  `<= 0` disables rate limiting.
+    pub rate: f64,
+    /// Token-bucket capacity (max burst).  `<= 0` defaults to
+    /// `max(rate, 1)` — one second's worth of budget.
+    pub burst: f64,
+    /// Max admitted-but-incomplete jobs per tenant.  `0` disables.
+    pub inflight: usize,
+}
+
+impl TenantPolicy {
+    /// True when any limit is configured (the admission fast path skips
+    /// all bookkeeping otherwise).
+    pub fn any_limit(&self) -> bool {
+        self.rate > 0.0 || self.inflight > 0
+    }
+
+    /// Effective bucket capacity (see [`TenantPolicy::burst`]).  Clamped
+    /// to at least one whole token: a configured burst in `(0, 1)` would
+    /// otherwise make `try_take` unsatisfiable forever — a silent
+    /// total-rejection outage rather than a tight-but-working limit.
+    pub fn capacity(&self) -> f64 {
+        if self.burst > 0.0 {
+            self.burst.max(1.0)
+        } else {
+            self.rate.max(1.0)
+        }
+    }
+}
+
+/// The classic token bucket, driven by explicit clock readings.
+///
+/// Invariants (pinned by `tests/proptests.rs`):
+/// * over any window `W`, admissions never exceed `capacity + rate * W`;
+/// * refill is monotone — advancing time never *removes* tokens, and a
+///   rewound clock refills nothing (readings are `saturating_sub`-guarded);
+/// * tokens never exceed `capacity`.
+#[derive(Debug, Clone)]
+pub struct TokenBucket {
+    capacity: f64,
+    rate: f64,
+    tokens: f64,
+    last: Duration,
+}
+
+impl TokenBucket {
+    /// A bucket starting full (a fresh tenant gets its whole burst).
+    pub fn new(rate: f64, capacity: f64, now: Duration) -> Self {
+        let capacity = capacity.max(0.0);
+        Self { capacity, rate: rate.max(0.0), tokens: capacity, last: now }
+    }
+
+    /// Credit tokens for the time elapsed since the last reading.
+    pub fn refill(&mut self, now: Duration) {
+        let dt = now.saturating_sub(self.last);
+        if self.last < now {
+            self.last = now;
+        }
+        self.tokens = (self.tokens + dt.as_secs_f64() * self.rate).min(self.capacity);
+    }
+
+    /// Refill, then take one token if available.
+    pub fn try_take(&mut self, now: Duration) -> bool {
+        self.refill(now);
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Current token balance (after the last refill).
+    pub fn tokens(&self) -> f64 {
+        self.tokens
+    }
+}
+
+/// One tenant's live admission state.
+#[derive(Debug)]
+struct TenantState {
+    /// Present iff rate limiting is configured.
+    bucket: Option<TokenBucket>,
+    /// Jobs admitted and not yet released (completed).
+    inflight: usize,
+}
+
+/// Per-tenant admission control: token-bucket rate limiting plus an
+/// in-flight cap, both optional, applied uniformly to every tenant label.
+/// Jobs without a tenant label are metered as the anonymous `""` tenant,
+/// so an unlabeled client cannot route around the quotas.
+///
+/// Distinct tenant states are bounded by [`TENANT_STATE_CAP`]: once that
+/// many labels exist, *new* labels share one overflow state
+/// ([`OVERFLOW_LABEL`]).  Without the cap, a client cycling fresh labels
+/// would both grow this map without bound **and** mint a fresh full burst
+/// per label — a rate-limit bypass.  Folding the excess into one shared
+/// bucket throttles a label-cycling flood collectively instead.
+///
+/// The caller (the service's submit path) is responsible for pairing every
+/// successful [`admit`](Self::admit) with exactly one
+/// [`release`](Self::release) when the job completes — that pairing *is*
+/// the `TenantCap` semantics ("releases exactly on completion", pinned by
+/// `tests/proptests.rs`).
+#[derive(Debug)]
+pub struct Admission {
+    policy: TenantPolicy,
+    tenants: BTreeMap<String, TenantState>,
+}
+
+/// Max distinct per-tenant admission states (see [`Admission`]).
+pub const TENANT_STATE_CAP: usize = 1024;
+
+/// The shared state key for labels beyond [`TENANT_STATE_CAP`].  Starts
+/// with a NUL so it cannot collide with a sane real-world label.
+pub const OVERFLOW_LABEL: &str = "\u{0}overflow";
+
+impl Admission {
+    /// Admission under `policy` (no per-tenant state until first seen).
+    pub fn new(policy: TenantPolicy) -> Self {
+        Self { policy, tenants: BTreeMap::new() }
+    }
+
+    /// The configured policy.
+    pub fn policy(&self) -> TenantPolicy {
+        self.policy
+    }
+
+    /// The state key `tenant` is metered under: its own label, or
+    /// [`OVERFLOW_LABEL`] once the state cap is reached and the label has
+    /// never been seen before.
+    fn key<'t>(&self, tenant: Option<&'t str>) -> &'t str {
+        let raw = tenant.unwrap_or("");
+        if self.tenants.contains_key(raw) || self.tenants.len() < TENANT_STATE_CAP {
+            raw
+        } else {
+            OVERFLOW_LABEL
+        }
+    }
+
+    /// Gate one admission against `st` under `policy`: the in-flight cap
+    /// first (no side effects), then the rate token — so a capped tenant
+    /// never drains its own bucket while blocked.
+    fn gate(st: &mut TenantState, policy: TenantPolicy, now: Duration) -> Result<(), Rejection> {
+        if policy.inflight > 0 && st.inflight >= policy.inflight {
+            return Err(Rejection::TenantCap);
+        }
+        if let Some(bucket) = &mut st.bucket {
+            if !bucket.try_take(now) {
+                return Err(Rejection::RateLimited);
+            }
+        }
+        st.inflight += 1;
+        Ok(())
+    }
+
+    /// Admit one job for `tenant` at clock reading `now`: the in-flight
+    /// cap is checked first (no side effects), then a rate token is
+    /// spent — so a capped tenant never drains its own bucket while
+    /// blocked.  Known labels take an allocation-free fast path; only a
+    /// genuinely new state allocates its key — this runs under the
+    /// service's one scheduler lock.
+    pub fn admit(&mut self, tenant: Option<&str>, now: Duration) -> Result<(), Rejection> {
+        if !self.policy.any_limit() {
+            return Ok(());
+        }
+        let policy = self.policy;
+        let raw = tenant.unwrap_or("");
+        if let Some(st) = self.tenants.get_mut(raw) {
+            return Self::gate(st, policy, now);
+        }
+        // unseen label: its own state while the cap has room, else the
+        // shared overflow state (which may itself already exist)
+        let key = if self.tenants.len() < TENANT_STATE_CAP { raw } else { OVERFLOW_LABEL };
+        if key != raw {
+            if let Some(st) = self.tenants.get_mut(key) {
+                return Self::gate(st, policy, now);
+            }
+        }
+        let st = self.tenants.entry(key.to_string()).or_insert_with(|| TenantState {
+            bucket: (policy.rate > 0.0)
+                .then(|| TokenBucket::new(policy.rate, policy.capacity(), now)),
+            inflight: 0,
+        });
+        Self::gate(st, policy, now)
+    }
+
+    /// Release the in-flight slot taken by a completed job.  Must be
+    /// called exactly once per successful [`admit`](Self::admit);
+    /// allocation-free (the per-job completion hot path).
+    pub fn release(&mut self, tenant: Option<&str>) {
+        if !self.policy.any_limit() {
+            return;
+        }
+        if let Some(st) = self.tenants.get_mut(tenant.unwrap_or("")) {
+            st.inflight = st.inflight.saturating_sub(1);
+            return;
+        }
+        // a label that was admitted under the shared overflow state
+        // (it only exists once the distinct-label cap was reached)
+        if let Some(st) = self.tenants.get_mut(OVERFLOW_LABEL) {
+            st.inflight = st.inflight.saturating_sub(1);
+        }
+    }
+
+    /// Jobs currently admitted-but-incomplete for `tenant` (0 when the
+    /// tenant is unknown or no limit is configured).
+    pub fn inflight(&self, tenant: Option<&str>) -> usize {
+        self.tenants.get(self.key(tenant)).map_or(0, |st| st.inflight)
+    }
+
+    /// Current token balance for `tenant` (`None` when rate limiting is
+    /// off or the tenant is unknown).  Exposed for tests and metrics.
+    pub fn tokens(&self, tenant: Option<&str>) -> Option<f64> {
+        self.tenants
+            .get(self.key(tenant))
+            .and_then(|st| st.bucket.as_ref())
+            .map(TokenBucket::tokens)
     }
 }
 
@@ -134,10 +397,26 @@ pub struct ClassQueues<T: Keyed>
 where
     T::Key: Ord,
 {
-    queues: BTreeMap<T::Key, VecDeque<(u64, T)>>,
+    queues: BTreeMap<T::Key, ClassQueue<T>>,
     seq: u64,
     len: usize,
     cap: usize,
+}
+
+/// One class's FIFO plus its cached scheduling summary.
+struct ClassQueue<T> {
+    items: VecDeque<(u64, T)>,
+    /// Cached `max(priority)` over `items`: bumped on push, recomputed on
+    /// pop *only* when the popped batch contained the cached maximum.
+    /// This turns [`ClassQueues::fronts`] from O(total queued) under the
+    /// scheduler lock into O(classes) — the ROADMAP's cached-max fix.
+    max_prio: u8,
+}
+
+impl<T> ClassQueue<T> {
+    fn new() -> Self {
+        Self { items: VecDeque::new(), max_prio: 0 }
+    }
 }
 
 impl<T: Keyed> ClassQueues<T>
@@ -171,7 +450,18 @@ where
 
     /// Jobs queued in `class` (0 when the class is empty / unknown).
     pub fn depth(&self, class: &T::Key) -> usize {
-        self.queues.get(class).map_or(0, VecDeque::len)
+        self.queues.get(class).map_or(0, |q| q.items.len())
+    }
+
+    /// Deepest single class queue (0 when everything is empty).  The
+    /// elasticity supervisor's high-water probe.
+    pub fn max_class_depth(&self) -> usize {
+        self.queues.values().map(|q| q.items.len()).max().unwrap_or(0)
+    }
+
+    /// True while the admission cap has room for one more job.
+    pub fn has_capacity(&self) -> bool {
+        self.len < self.cap
     }
 
     /// Admit a job into its class queue.  Returns the job back when the
@@ -182,10 +472,13 @@ where
             return Err(item);
         }
         let key = item.key();
+        let prio = item.priority();
         let seq = self.seq;
         self.seq += 1;
         self.len += 1;
-        self.queues.entry(key).or_default().push_back((seq, item));
+        let q = self.queues.entry(key).or_insert_with(ClassQueue::new);
+        q.max_prio = q.max_prio.max(prio);
+        q.items.push_back((seq, item));
         Ok(())
     }
 
@@ -193,21 +486,21 @@ where
     /// pick a class (home-first, priority, then oldest seq) and call
     /// [`pop_batch`](Self::pop_batch).
     ///
-    /// The per-class max-priority scan makes this O(total queued) — bounded
-    /// by the admission cap and microseconds against millisecond-scale
-    /// solves.  If scheduler-lock contention ever shows up in profiles,
-    /// the next step is caching a per-class max (bump on push, recompute
-    /// one class on pop).
+    /// O(classes), not O(total queued): the per-class max priority is a
+    /// cache maintained on push/pop (bump on push; recompute one class on
+    /// pop, and only when the popped batch held the cached maximum).  The
+    /// cache-vs-recomputed-scan agreement is pinned by a randomized test
+    /// below.
     pub fn fronts(&self) -> Vec<ClassFront<T::Key>> {
         self.queues
             .iter()
             .map(|(k, q)| {
-                let (seq, _) = q.front().expect("class queues never hold an empty class");
+                let (seq, _) = q.items.front().expect("class queues never hold an empty class");
                 ClassFront {
                     class: k.clone(),
-                    priority: q.iter().map(|(_, it)| it.priority()).max().unwrap_or(0),
+                    priority: q.max_prio,
                     seq: *seq,
-                    depth: q.len(),
+                    depth: q.items.len(),
                 }
             })
             .collect()
@@ -221,10 +514,14 @@ where
         let Some(q) = self.queues.get_mut(class) else {
             return Vec::new();
         };
-        let take = q.len().min(max);
-        let batch: Vec<T> = q.drain(..take).map(|(_, item)| item).collect();
-        if q.is_empty() {
+        let take = q.items.len().min(max);
+        let batch: Vec<T> = q.items.drain(..take).map(|(_, item)| item).collect();
+        if q.items.is_empty() {
             self.queues.remove(class);
+        } else if batch.iter().any(|item| item.priority() >= q.max_prio) {
+            // the cached max may have left with the batch; recompute over
+            // what remains (one class only, and only on this path)
+            q.max_prio = q.items.iter().map(|(_, it)| it.priority()).max().unwrap_or(0);
         }
         self.len -= batch.len();
         batch
@@ -235,8 +532,10 @@ where
     /// embedders; the job service's shutdown path drains via `pop_batch`
     /// to keep class batching.
     pub fn drain(&mut self) -> Vec<T> {
-        let mut all: Vec<(u64, T)> =
-            std::mem::take(&mut self.queues).into_values().flatten().collect();
+        let mut all: Vec<(u64, T)> = std::mem::take(&mut self.queues)
+            .into_values()
+            .flat_map(|q| q.items)
+            .collect();
         all.sort_by_key(|(seq, _)| *seq);
         self.len = 0;
         all.into_iter().map(|(_, item)| item).collect()
@@ -418,5 +717,167 @@ mod tests {
         }
         assert_eq!(q.len(), 100);
         assert_eq!(q.pop_batch(&"a", 100).len(), 100);
+    }
+
+    #[test]
+    fn prio_cache_matches_recomputed_scan_under_random_ops() {
+        // the cached per-class max priority (bump on push, recompute on
+        // pop) must always agree with a brute-force scan of a shadow model
+        use crate::data::rng::Rng;
+        let classes: [&'static str; 3] = ["a", "b", "c"];
+        let mut rng = Rng::new(41);
+        for case in 0..60 {
+            let mut q: ClassQueues<Prio> = ClassQueues::with_capacity(0);
+            let mut model: Vec<VecDeque<u8>> =
+                (0..classes.len()).map(|_| VecDeque::new()).collect();
+            for step in 0..200 {
+                let c = rng.below(classes.len());
+                if rng.below(3) < 2 {
+                    let p = rng.below(10) as u8;
+                    q.push(Prio(step as u32, classes[c], p)).unwrap();
+                    model[c].push_back(p);
+                } else {
+                    let take = 1 + rng.below(4);
+                    let popped = q.pop_batch(&classes[c], take);
+                    for item in &popped {
+                        assert_eq!(model[c].pop_front(), Some(item.2), "case {case} step {step}");
+                    }
+                }
+                // every front's cached priority == recomputed max of the model
+                for f in q.fronts() {
+                    let c = classes.iter().position(|k| *k == f.class).unwrap();
+                    let expect = model[c].iter().copied().max().unwrap_or(0);
+                    assert_eq!(
+                        f.priority, expect,
+                        "case {case} step {step}: cache diverged for class {:?}",
+                        f.class
+                    );
+                    assert_eq!(f.depth, model[c].len(), "case {case} step {step}");
+                }
+            }
+        }
+    }
+
+    // --- admission control --------------------------------------------
+
+    #[test]
+    fn token_bucket_burst_then_refill() {
+        let mut b = TokenBucket::new(2.0, 3.0, Duration::ZERO);
+        // burst: the full capacity is available immediately
+        assert!(b.try_take(Duration::ZERO));
+        assert!(b.try_take(Duration::ZERO));
+        assert!(b.try_take(Duration::ZERO));
+        assert!(!b.try_take(Duration::ZERO), "capacity 3 admits exactly 3 at t=0");
+        // refill at 2 tokens/s: after 1s exactly 2 more fit
+        assert!(b.try_take(Duration::from_secs(1)));
+        assert!(b.try_take(Duration::from_secs(1)));
+        assert!(!b.try_take(Duration::from_secs(1)));
+        // tokens cap at capacity no matter how long the idle stretch
+        b.refill(Duration::from_secs(100));
+        assert!(b.tokens() <= 3.0 + 1e-9);
+    }
+
+    #[test]
+    fn token_bucket_ignores_rewound_clock() {
+        let mut b = TokenBucket::new(1.0, 1.0, Duration::from_secs(10));
+        assert!(b.try_take(Duration::from_secs(10)));
+        // a reading from the past must neither refill nor drain
+        let before = b.tokens();
+        b.refill(Duration::from_secs(5));
+        assert_eq!(b.tokens(), before);
+        // and the bucket still refills correctly from its high-water mark
+        assert!(b.try_take(Duration::from_secs(11)));
+    }
+
+    #[test]
+    fn admission_disabled_policy_admits_everything() {
+        let mut adm = Admission::new(TenantPolicy::default());
+        for i in 0..1000 {
+            assert_eq!(adm.admit(Some("t"), Duration::from_millis(i)), Ok(()));
+        }
+        assert_eq!(adm.inflight(Some("t")), 0, "no bookkeeping without limits");
+    }
+
+    #[test]
+    fn admission_inflight_cap_releases_on_completion() {
+        let mut adm =
+            Admission::new(TenantPolicy { rate: 0.0, burst: 0.0, inflight: 2 });
+        let now = Duration::ZERO;
+        assert_eq!(adm.admit(Some("t"), now), Ok(()));
+        assert_eq!(adm.admit(Some("t"), now), Ok(()));
+        assert_eq!(adm.admit(Some("t"), now), Err(Rejection::TenantCap));
+        // a different tenant has its own cap
+        assert_eq!(adm.admit(Some("u"), now), Ok(()));
+        // release exactly one slot -> exactly one more admission
+        adm.release(Some("t"));
+        assert_eq!(adm.inflight(Some("t")), 1);
+        assert_eq!(adm.admit(Some("t"), now), Ok(()));
+        assert_eq!(adm.admit(Some("t"), now), Err(Rejection::TenantCap));
+    }
+
+    #[test]
+    fn admission_capped_tenant_keeps_its_rate_tokens() {
+        // the in-flight check runs before the token spend, so a blocked
+        // tenant does not drain its own bucket
+        let mut adm =
+            Admission::new(TenantPolicy { rate: 1.0, burst: 2.0, inflight: 1 });
+        let now = Duration::ZERO;
+        assert_eq!(adm.admit(Some("t"), now), Ok(()));
+        for _ in 0..5 {
+            assert_eq!(adm.admit(Some("t"), now), Err(Rejection::TenantCap));
+        }
+        assert_eq!(adm.tokens(Some("t")), Some(1.0), "cap rejections must not spend tokens");
+        adm.release(Some("t"));
+        assert_eq!(adm.admit(Some("t"), now), Ok(()));
+    }
+
+    #[test]
+    fn sub_token_burst_clamps_to_one_whole_token() {
+        // a burst in (0, 1) must degrade to "at least one job per window",
+        // never to a bucket that can mathematically never admit anything
+        let policy = TenantPolicy { rate: 5.0, burst: 0.5, inflight: 0 };
+        assert_eq!(policy.capacity(), 1.0);
+        let mut adm = Admission::new(policy);
+        assert_eq!(adm.admit(Some("t"), Duration::ZERO), Ok(()), "clamped burst must admit");
+        assert_eq!(adm.admit(Some("t"), Duration::ZERO), Err(Rejection::RateLimited));
+        assert_eq!(adm.admit(Some("t"), Duration::from_secs(1)), Ok(()), "and refill");
+    }
+
+    #[test]
+    fn label_cycling_folds_into_shared_overflow_state() {
+        // beyond TENANT_STATE_CAP distinct labels, new labels share one
+        // bucket — cycling fresh labels cannot mint fresh burst budgets
+        let mut adm =
+            Admission::new(TenantPolicy { rate: 1.0, burst: 2.0, inflight: 0 });
+        for i in 0..TENANT_STATE_CAP {
+            assert_eq!(adm.admit(Some(&format!("t{i}")), Duration::ZERO), Ok(()));
+        }
+        // the map is full: fresh labels now drain the one overflow bucket
+        assert_eq!(adm.admit(Some("fresh-a"), Duration::ZERO), Ok(()));
+        assert_eq!(adm.admit(Some("fresh-b"), Duration::ZERO), Ok(()));
+        assert_eq!(
+            adm.admit(Some("fresh-c"), Duration::ZERO),
+            Err(Rejection::RateLimited),
+            "a label-cycling flood must be throttled collectively"
+        );
+        // established labels keep their own untouched state
+        assert_eq!(adm.admit(Some("t0"), Duration::ZERO), Ok(()));
+        // and overflow releases pair up under the shared key
+        adm.release(Some("fresh-a"));
+        assert_eq!(adm.inflight(Some("fresh-z")), adm.inflight(Some("fresh-b")));
+    }
+
+    #[test]
+    fn admission_meters_anonymous_as_one_tenant() {
+        let mut adm =
+            Admission::new(TenantPolicy { rate: 0.0, burst: 0.0, inflight: 1 });
+        assert_eq!(adm.admit(None, Duration::ZERO), Ok(()));
+        assert_eq!(
+            adm.admit(None, Duration::ZERO),
+            Err(Rejection::TenantCap),
+            "unlabeled jobs must not route around the quotas"
+        );
+        adm.release(None);
+        assert_eq!(adm.admit(None, Duration::ZERO), Ok(()));
     }
 }

@@ -1,0 +1,103 @@
+//! Time injection for the serving layer.
+//!
+//! Admission control (token-bucket refill) and latency accounting both
+//! need a notion of "now".  Production uses [`WallClock`] (monotonic wall
+//! time); the deterministic stress/soak suite injects a [`VirtualClock`]
+//! it advances explicitly, so rate-limit refills and latency measurements
+//! are exactly reproducible with **no wall-time sleeps anywhere in the
+//! tests** (`tests/serving_stress.rs`).
+//!
+//! The trait deliberately exposes a single monotonic reading —
+//! [`Clock::now`], a [`Duration`] since the clock's own epoch — rather
+//! than calendar time: every consumer only ever subtracts two readings.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// A monotonic time source for the serving layer.
+///
+/// Implementations must be monotone (a later call never returns a smaller
+/// `Duration`); consumers additionally guard with `saturating_sub` so a
+/// misbehaving clock degrades to "no time passed" instead of panicking.
+pub trait Clock: Send + Sync {
+    /// Monotonic time elapsed since this clock's epoch.
+    fn now(&self) -> Duration;
+}
+
+/// Production clock: monotonic wall time since construction.
+#[derive(Debug)]
+pub struct WallClock {
+    origin: Instant,
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        Self { origin: Instant::now() }
+    }
+}
+
+impl Clock for WallClock {
+    fn now(&self) -> Duration {
+        self.origin.elapsed()
+    }
+}
+
+/// Test clock: time advances only when [`advance`](Self::advance) is
+/// called, so token-bucket refills and latency readings are deterministic.
+/// Shared across threads (the service holds an `Arc<dyn Clock>`).
+#[derive(Debug, Default)]
+pub struct VirtualClock {
+    nanos: AtomicU64,
+}
+
+impl VirtualClock {
+    /// A virtual clock at its epoch (now() == 0).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Advance the clock by `d`.  Never moves time backwards.
+    pub fn advance(&self, d: Duration) {
+        self.nanos.fetch_add(d.as_nanos() as u64, Ordering::SeqCst);
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now(&self) -> Duration {
+        Duration::from_nanos(self.nanos.load(Ordering::SeqCst))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wall_clock_is_monotone() {
+        let c = WallClock::default();
+        let a = c.now();
+        let b = c.now();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn virtual_clock_advances_only_on_demand() {
+        let c = VirtualClock::new();
+        assert_eq!(c.now(), Duration::ZERO);
+        assert_eq!(c.now(), Duration::ZERO, "time must not pass by itself");
+        c.advance(Duration::from_millis(250));
+        assert_eq!(c.now(), Duration::from_millis(250));
+        c.advance(Duration::from_secs(1));
+        assert_eq!(c.now(), Duration::from_millis(1250));
+    }
+
+    #[test]
+    fn virtual_clock_is_shared_across_threads() {
+        let c = std::sync::Arc::new(VirtualClock::new());
+        let c2 = std::sync::Arc::clone(&c);
+        std::thread::spawn(move || c2.advance(Duration::from_secs(2)))
+            .join()
+            .unwrap();
+        assert_eq!(c.now(), Duration::from_secs(2));
+    }
+}

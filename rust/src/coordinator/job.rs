@@ -43,6 +43,12 @@ impl JobRequest {
         Self { kind, problem, fixed_iters: Some(iters), priority: 0, tenant: None }
     }
 
+    /// Attach a tenant label (admission quotas + per-tenant metrics key).
+    pub fn for_tenant(mut self, tenant: impl Into<String>) -> Self {
+        self.tenant = Some(tenant.into());
+        self
+    }
+
     /// The shape class this request batches (and homes) under.
     pub fn class(&self) -> ClassKey {
         class_of(self.problem.n, self.problem.m, self.problem.d)
@@ -72,8 +78,10 @@ pub struct JobResponse {
 pub struct Job {
     /// The request as submitted.
     pub request: JobRequest,
-    /// Submission instant, for service-side latency accounting.
-    pub submitted: std::time::Instant,
+    /// Submission timestamp — a reading of the service's
+    /// [`Clock`](crate::coordinator::clock::Clock), for latency accounting
+    /// that stays deterministic under an injected virtual clock.
+    pub submitted: std::time::Duration,
     /// Completion channel: the executing actor sends exactly one response.
     pub done: std::sync::mpsc::SyncSender<anyhow::Result<JobResponse>>,
 }

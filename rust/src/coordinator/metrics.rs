@@ -14,23 +14,58 @@
 //! * **per-class** — a live queue-depth gauge per shape class, registered
 //!   on first admission and kept at an explicit 0 after the class drains.
 //! * **per-tenant** — a latency histogram per tenant label on the request
-//!   (jobs without a label only feed the anonymous aggregate).
+//!   (jobs without a label only feed the anonymous aggregate) plus
+//!   admission counters (admitted, rejections by [`Rejection`] kind),
+//!   registered at explicit zeros the first time a tenant submits — a
+//!   tenant that was only ever rejected still has a full series.
+//!
+//! The admission-control layer adds global rejection counters (one per
+//! [`Rejection`] kind) and the elasticity supervisor adds resize counters
+//! (`resizes_grow` / `resizes_park`) and the `active_actors` /
+//! `parked_actors` gauge pair — set at spawn, before any traffic, so the
+//! absent-vs-zero contract extends to the new series.
 //!
 //! Metric names as exposed by [`Snapshot`] (documented for scrapers in the
 //! README's "Serving & scaling" section): `jobs_ok`, `jobs_failed`,
 //! `batches`, `batched_jobs`, `queue_depth`, `sinkhorn_iters`, `steals`,
+//! `admitted`, `rejected_{queue_full,rate_limited,tenant_cap}`,
+//! `resizes_{grow,park}`, `active_actors`, `parked_actors`,
 //! `actors[i].{jobs,batches,steals,queue_depth}`,
-//! `class_depths[(n,m,d)]`, `tenants[label].{jobs,mean_ms,p99_ms,max_ms}`,
-//! `latency_{mean,p99,max}_ms`.
+//! `class_depths[(n,m,d)]`,
+//! `tenants[label].{jobs,admitted,rejected_*,mean_ms,p50_ms,p99_ms,max_ms}`,
+//! `latency_{mean,p50,p99,max}_ms`.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
+use super::batcher::Rejection;
 use super::router::{shard_of, ClassKey};
 
 const BUCKETS: usize = 16; // 2^0 .. 2^15 ms
+
+/// Max distinct per-tenant metric series.  Beyond this, new labels are
+/// tracked by the global counters only — a client cycling unique labels
+/// must not grow the maps (or the snapshot cost) without bound.  Mirrors
+/// `batcher::TENANT_STATE_CAP` on the admission side.
+pub const MAX_TENANT_SERIES: usize = 1024;
+
+/// `map.entry(label)` bounded by [`MAX_TENANT_SERIES`]: existing series
+/// always update (allocation-free — this runs under the scheduler lock
+/// on every submission); new ones register only while the map has room.
+fn tenant_entry<'m, V: Default>(
+    map: &'m mut BTreeMap<String, V>,
+    label: &str,
+) -> Option<&'m mut V> {
+    if map.contains_key(label) {
+        return map.get_mut(label);
+    }
+    if map.len() < MAX_TENANT_SERIES {
+        return Some(map.entry(label.to_string()).or_default());
+    }
+    None
+}
 
 /// Per-actor counters (one slot per actor thread, fixed at construction).
 #[derive(Default)]
@@ -61,12 +96,40 @@ pub struct Metrics {
     pub sinkhorn_iters: AtomicU64,
     /// Jobs run by a non-home actor (work stealing), across all actors.
     pub steals: AtomicU64,
+    /// Jobs accepted past admission control (queued or running).
+    pub admitted: AtomicU64,
+    /// Submissions refused because the global queue was at capacity.
+    pub rejected_queue_full: AtomicU64,
+    /// Submissions refused by a tenant's token bucket.
+    pub rejected_rate_limited: AtomicU64,
+    /// Submissions refused by a tenant's in-flight cap.
+    pub rejected_tenant_cap: AtomicU64,
+    /// Supervisor grow events (one new actor activated each).
+    pub resizes_grow: AtomicU64,
+    /// Supervisor park events (one actor drained to parked each).
+    pub resizes_park: AtomicU64,
+    /// Actors currently eligible to pick work.
+    active_actors: AtomicU64,
+    /// Actor slots currently parked (`slots - active`).
+    parked_actors: AtomicU64,
     actors: Vec<ActorMetrics>,
     /// Live queue depth per shape class.  Entries persist at 0 after a
     /// class drains so scrapers see explicit zeros, not absence.
     class_depths: Mutex<BTreeMap<ClassKey, u64>>,
     latency: Mutex<Histogram>,
     tenants: Mutex<BTreeMap<String, Histogram>>,
+    /// Per-tenant admission counters, registered (at zeros) on first
+    /// submission attempt — before any outcome.
+    tenant_admission: Mutex<BTreeMap<String, TenantAdmission>>,
+}
+
+/// Per-tenant admission counters (see [`Metrics::on_rejected`]).
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+struct TenantAdmission {
+    admitted: u64,
+    queue_full: u64,
+    rate_limited: u64,
+    tenant_cap: u64,
 }
 
 impl Default for Metrics {
@@ -130,10 +193,20 @@ impl Metrics {
             queue_depth: AtomicU64::new(0),
             sinkhorn_iters: AtomicU64::new(0),
             steals: AtomicU64::new(0),
+            admitted: AtomicU64::new(0),
+            rejected_queue_full: AtomicU64::new(0),
+            rejected_rate_limited: AtomicU64::new(0),
+            rejected_tenant_cap: AtomicU64::new(0),
+            resizes_grow: AtomicU64::new(0),
+            resizes_park: AtomicU64::new(0),
+            // until the service reports otherwise, every slot is active
+            active_actors: AtomicU64::new(actors as u64),
+            parked_actors: AtomicU64::new(0),
             actors: (0..actors).map(|_| ActorMetrics::default()).collect(),
             class_depths: Mutex::new(BTreeMap::new()),
             latency: Mutex::new(Histogram::default()),
             tenants: Mutex::new(BTreeMap::new()),
+            tenant_admission: Mutex::new(BTreeMap::new()),
         }
     }
 
@@ -173,8 +246,73 @@ impl Metrics {
         self.latency.lock().unwrap_or_else(|e| e.into_inner()).record(ms);
         if let Some(t) = tenant {
             let mut tenants = self.tenants.lock().unwrap_or_else(|e| e.into_inner());
-            tenants.entry(t.to_string()).or_default().record(ms);
+            if let Some(h) = tenant_entry(&mut tenants, t) {
+                h.record(ms);
+            }
         }
+    }
+
+    /// Register a tenant's full metric series (admission counters and
+    /// latency histogram) at explicit zeros.  Called on the first
+    /// submission attempt, *before* its outcome is known, so a tenant
+    /// whose every job was rejected still reports a complete series.
+    /// Anonymous submissions (`None`) feed only the global aggregates,
+    /// and labels beyond [`MAX_TENANT_SERIES`] stop registering (the
+    /// global counters keep counting them).
+    pub fn on_tenant_seen(&self, tenant: Option<&str>) {
+        let Some(t) = tenant else { return };
+        tenant_entry(
+            &mut self.tenant_admission.lock().unwrap_or_else(|e| e.into_inner()),
+            t,
+        );
+        tenant_entry(&mut self.tenants.lock().unwrap_or_else(|e| e.into_inner()), t);
+    }
+
+    /// Count one admission (global + per-tenant).
+    pub fn on_admitted(&self, tenant: Option<&str>) {
+        self.admitted.fetch_add(1, Ordering::Relaxed);
+        if let Some(t) = tenant {
+            let mut adm = self.tenant_admission.lock().unwrap_or_else(|e| e.into_inner());
+            if let Some(entry) = tenant_entry(&mut adm, t) {
+                entry.admitted += 1;
+            }
+        }
+    }
+
+    /// Count one rejection, attributed by kind (global + per-tenant).
+    pub fn on_rejected(&self, tenant: Option<&str>, rejection: Rejection) {
+        match rejection {
+            Rejection::QueueFull => &self.rejected_queue_full,
+            Rejection::RateLimited => &self.rejected_rate_limited,
+            Rejection::TenantCap => &self.rejected_tenant_cap,
+        }
+        .fetch_add(1, Ordering::Relaxed);
+        if let Some(t) = tenant {
+            let mut adm = self.tenant_admission.lock().unwrap_or_else(|e| e.into_inner());
+            let Some(entry) = tenant_entry(&mut adm, t) else { return };
+            match rejection {
+                Rejection::QueueFull => entry.queue_full += 1,
+                Rejection::RateLimited => entry.rate_limited += 1,
+                Rejection::TenantCap => entry.tenant_cap += 1,
+            }
+        }
+    }
+
+    /// Publish the actor-pool size gauges (active / parked slots).  Called
+    /// at spawn — before any traffic — and on every resize.
+    pub fn set_pool_size(&self, active: usize, parked: usize) {
+        self.active_actors.store(active as u64, Ordering::Relaxed);
+        self.parked_actors.store(parked as u64, Ordering::Relaxed);
+    }
+
+    /// Count one supervisor resize and publish the new gauge pair.
+    pub fn on_resize(&self, grew: bool, active: usize, parked: usize) {
+        if grew {
+            self.resizes_grow.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.resizes_park.fetch_add(1, Ordering::Relaxed);
+        }
+        self.set_pool_size(active, parked);
     }
 
     /// A consistent point-in-time copy of every counter and gauge.
@@ -205,17 +343,31 @@ impl Metrics {
                     .sum(),
             })
             .collect();
-        let tenants: Vec<TenantSnapshot> = self
-            .tenants
-            .lock()
-            .unwrap_or_else(|e| e.into_inner())
-            .iter()
-            .map(|(name, th)| TenantSnapshot {
-                tenant: name.clone(),
-                jobs: th.n,
-                latency_mean_ms: th.mean(),
-                latency_p99_ms: th.quantile(0.99),
-                latency_max_ms: th.max_ms,
+        // union of the latency and admission maps: a tenant appears with a
+        // full series whether it ever completed a job, was only rejected,
+        // or both (on_tenant_seen registers both sides at zeros anyway)
+        let lat = self.tenants.lock().unwrap_or_else(|e| e.into_inner()).clone();
+        let adm = self.tenant_admission.lock().unwrap_or_else(|e| e.into_inner()).clone();
+        let mut names: Vec<String> = lat.keys().chain(adm.keys()).cloned().collect();
+        names.sort();
+        names.dedup();
+        let tenants: Vec<TenantSnapshot> = names
+            .into_iter()
+            .map(|name| {
+                let th = lat.get(&name).cloned().unwrap_or_default();
+                let ta = adm.get(&name).cloned().unwrap_or_default();
+                TenantSnapshot {
+                    jobs: th.n,
+                    admitted: ta.admitted,
+                    rejected_queue_full: ta.queue_full,
+                    rejected_rate_limited: ta.rate_limited,
+                    rejected_tenant_cap: ta.tenant_cap,
+                    latency_mean_ms: th.mean(),
+                    latency_p50_ms: th.quantile(0.5),
+                    latency_p99_ms: th.quantile(0.99),
+                    latency_max_ms: th.max_ms,
+                    tenant: name,
+                }
             })
             .collect();
         Snapshot {
@@ -226,10 +378,19 @@ impl Metrics {
             queue_depth: self.queue_depth.load(Ordering::Relaxed),
             sinkhorn_iters: self.sinkhorn_iters.load(Ordering::Relaxed),
             steals: self.steals.load(Ordering::Relaxed),
+            admitted: self.admitted.load(Ordering::Relaxed),
+            rejected_queue_full: self.rejected_queue_full.load(Ordering::Relaxed),
+            rejected_rate_limited: self.rejected_rate_limited.load(Ordering::Relaxed),
+            rejected_tenant_cap: self.rejected_tenant_cap.load(Ordering::Relaxed),
+            resizes_grow: self.resizes_grow.load(Ordering::Relaxed),
+            resizes_park: self.resizes_park.load(Ordering::Relaxed),
+            active_actors: self.active_actors.load(Ordering::Relaxed),
+            parked_actors: self.parked_actors.load(Ordering::Relaxed),
             actors: actor_snaps,
             class_depths,
             tenants,
             latency_mean_ms: h.mean(),
+            latency_p50_ms: h.quantile(0.5),
             latency_p99_ms: h.quantile(0.99),
             latency_max_ms: h.max_ms,
         }
@@ -251,15 +412,25 @@ pub struct ActorSnapshot {
     pub queue_depth: u64,
 }
 
-/// Point-in-time latency summary for one tenant label.
+/// Point-in-time latency + admission summary for one tenant label.
 #[derive(Debug, Clone)]
 pub struct TenantSnapshot {
     /// The tenant label as submitted on the request.
     pub tenant: String,
     /// Jobs completed under this label.
     pub jobs: u64,
+    /// Jobs accepted past admission control under this label.
+    pub admitted: u64,
+    /// Submissions refused: global queue at capacity.
+    pub rejected_queue_full: u64,
+    /// Submissions refused: this tenant's token bucket was empty.
+    pub rejected_rate_limited: u64,
+    /// Submissions refused: this tenant's in-flight cap was reached.
+    pub rejected_tenant_cap: u64,
     /// Mean end-to-end latency (queue + execution), milliseconds.
     pub latency_mean_ms: f64,
+    /// Coarse p50 latency upper bound, milliseconds.
+    pub latency_p50_ms: f64,
     /// Coarse p99 latency upper bound, milliseconds.
     pub latency_p99_ms: f64,
     /// Worst observed latency, milliseconds.
@@ -284,15 +455,33 @@ pub struct Snapshot {
     pub sinkhorn_iters: u64,
     /// Jobs run by a non-home actor (work stealing).
     pub steals: u64,
+    /// Jobs accepted past admission control.
+    pub admitted: u64,
+    /// Rejections: global queue at capacity (backpressure).
+    pub rejected_queue_full: u64,
+    /// Rejections: a tenant's token bucket was empty (throttling).
+    pub rejected_rate_limited: u64,
+    /// Rejections: a tenant's in-flight cap was reached.
+    pub rejected_tenant_cap: u64,
+    /// Supervisor grow events.
+    pub resizes_grow: u64,
+    /// Supervisor park events.
+    pub resizes_park: u64,
+    /// Actors currently eligible to pick work (always present).
+    pub active_actors: u64,
+    /// Actor slots currently parked (always present; `slots - active`).
+    pub parked_actors: u64,
     /// One entry per actor, present (as zeros) before any job has run.
     pub actors: Vec<ActorSnapshot>,
     /// Live queue depth per shape class seen so far (explicit zeros after
     /// a class drains).
     pub class_depths: Vec<(ClassKey, u64)>,
-    /// Latency summaries per tenant label seen so far.
+    /// Latency + admission summaries per tenant label seen so far.
     pub tenants: Vec<TenantSnapshot>,
     /// Mean end-to-end latency, milliseconds.
     pub latency_mean_ms: f64,
+    /// Coarse p50 latency upper bound, milliseconds.
+    pub latency_p50_ms: f64,
     /// Coarse p99 latency upper bound, milliseconds.
     pub latency_p99_ms: f64,
     /// Worst observed latency, milliseconds.
@@ -303,7 +492,7 @@ impl std::fmt::Display for Snapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "jobs ok={} failed={} batches={} (avg size {:.2}) queue={} iters={} steals={} latency mean={:.1}ms p99<={:.0}ms max={:.1}ms",
+            "jobs ok={} failed={} batches={} (avg size {:.2}) queue={} iters={} steals={} latency mean={:.1}ms p50<={:.0}ms p99<={:.0}ms max={:.1}ms",
             self.jobs_ok,
             self.jobs_failed,
             self.batches,
@@ -312,8 +501,22 @@ impl std::fmt::Display for Snapshot {
             self.sinkhorn_iters,
             self.steals,
             self.latency_mean_ms,
+            self.latency_p50_ms,
             self.latency_p99_ms,
             self.latency_max_ms
+        )?;
+        write!(
+            f,
+            "\n  admission: admitted={} rejected queue_full={} rate_limited={} tenant_cap={}",
+            self.admitted,
+            self.rejected_queue_full,
+            self.rejected_rate_limited,
+            self.rejected_tenant_cap
+        )?;
+        write!(
+            f,
+            "\n  pool: active={} parked={} resizes grow={} park={}",
+            self.active_actors, self.parked_actors, self.resizes_grow, self.resizes_park
         )?;
         for a in &self.actors {
             write!(
@@ -325,8 +528,17 @@ impl std::fmt::Display for Snapshot {
         for t in &self.tenants {
             write!(
                 f,
-                "\n  tenant {}: jobs={} latency mean={:.1}ms p99<={:.0}ms max={:.1}ms",
-                t.tenant, t.jobs, t.latency_mean_ms, t.latency_p99_ms, t.latency_max_ms
+                "\n  tenant {}: jobs={} admitted={} rejected={}/{}/{} latency mean={:.1}ms p50<={:.0}ms p99<={:.0}ms max={:.1}ms",
+                t.tenant,
+                t.jobs,
+                t.admitted,
+                t.rejected_queue_full,
+                t.rejected_rate_limited,
+                t.rejected_tenant_cap,
+                t.latency_mean_ms,
+                t.latency_p50_ms,
+                t.latency_p99_ms,
+                t.latency_max_ms
             )?;
         }
         Ok(())
@@ -413,5 +625,132 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.actors[home].queue_depth, 1);
         assert_eq!(s.actors[1 - home].queue_depth, 0);
+    }
+
+    // --- admission + elasticity series (the absent-vs-zero contract
+    // extended to the new gauges; the PR 3 regression must stay pinned) --
+
+    #[test]
+    fn admission_and_resize_series_register_explicit_zeros_up_front() {
+        let m = Metrics::with_actors(4);
+        m.set_pool_size(2, 2);
+        let s = m.snapshot();
+        // every new global series is present — at zero — before traffic
+        assert_eq!(s.admitted, 0);
+        assert_eq!(
+            (s.rejected_queue_full, s.rejected_rate_limited, s.rejected_tenant_cap),
+            (0, 0, 0)
+        );
+        assert_eq!((s.resizes_grow, s.resizes_park), (0, 0));
+        // the gauge pair reflects what the service published, not absence
+        assert_eq!(s.active_actors, 2);
+        assert_eq!(s.parked_actors, 2);
+        // ...and a Display render must carry them even now
+        let text = s.to_string();
+        assert!(text.contains("admitted=0"), "admission line missing: {text}");
+        assert!(text.contains("active=2 parked=2"), "pool line missing: {text}");
+    }
+
+    #[test]
+    fn tenant_series_register_on_first_sight_before_any_outcome() {
+        let m = Metrics::with_actors(1);
+        m.on_tenant_seen(Some("acme"));
+        let s = m.snapshot();
+        assert_eq!(s.tenants.len(), 1, "seen tenant must appear immediately");
+        let t = &s.tenants[0];
+        assert_eq!(t.tenant, "acme");
+        assert_eq!(
+            (t.jobs, t.admitted, t.rejected_queue_full, t.rejected_rate_limited, t.rejected_tenant_cap),
+            (0, 0, 0, 0, 0),
+            "explicit zeros, never absence: {t:?}"
+        );
+        // anonymous submissions register nothing per-tenant
+        m.on_tenant_seen(None);
+        assert_eq!(m.snapshot().tenants.len(), 1);
+    }
+
+    #[test]
+    fn rejections_attribute_to_kind_and_tenant() {
+        let m = Metrics::with_actors(1);
+        m.on_rejected(Some("hog"), Rejection::RateLimited);
+        m.on_rejected(Some("hog"), Rejection::RateLimited);
+        m.on_rejected(Some("hog"), Rejection::TenantCap);
+        m.on_rejected(None, Rejection::QueueFull); // anonymous: global only
+        m.on_admitted(Some("good"));
+        m.on_admitted(None);
+        let s = m.snapshot();
+        assert_eq!(s.rejected_rate_limited, 2);
+        assert_eq!(s.rejected_tenant_cap, 1);
+        assert_eq!(s.rejected_queue_full, 1);
+        assert_eq!(s.admitted, 2);
+        let hog = s.tenants.iter().find(|t| t.tenant == "hog").unwrap();
+        assert_eq!(hog.rejected_rate_limited, 2);
+        assert_eq!(hog.rejected_tenant_cap, 1);
+        assert_eq!(hog.rejected_queue_full, 0);
+        assert_eq!(hog.admitted, 0);
+        let good = s.tenants.iter().find(|t| t.tenant == "good").unwrap();
+        assert_eq!(good.admitted, 1);
+        assert_eq!(good.rejected_rate_limited, 0);
+    }
+
+    #[test]
+    fn resize_events_count_by_direction_and_update_gauges() {
+        let m = Metrics::with_actors(8);
+        m.set_pool_size(1, 7);
+        m.on_resize(true, 2, 6);
+        m.on_resize(true, 3, 5);
+        m.on_resize(false, 2, 6);
+        let s = m.snapshot();
+        assert_eq!(s.resizes_grow, 2);
+        assert_eq!(s.resizes_park, 1);
+        assert_eq!(s.active_actors, 2);
+        assert_eq!(s.parked_actors, 6);
+    }
+
+    #[test]
+    fn tenant_series_are_bounded_by_the_cardinality_cap() {
+        // label cycling past the cap must not grow the maps; established
+        // labels keep attributing, and the global counters never miss
+        let m = Metrics::with_actors(1);
+        for i in 0..MAX_TENANT_SERIES {
+            m.on_tenant_seen(Some(&format!("t{i}")));
+        }
+        m.on_tenant_seen(Some("straggler"));
+        m.on_rejected(Some("straggler"), Rejection::RateLimited);
+        m.on_admitted(Some("t0"));
+        let s = m.snapshot();
+        assert_eq!(s.tenants.len(), MAX_TENANT_SERIES, "cap exceeded");
+        assert!(!s.tenants.iter().any(|t| t.tenant == "straggler"));
+        assert_eq!(s.rejected_rate_limited, 1, "global counters still count");
+        assert_eq!(s.tenants.iter().find(|t| t.tenant == "t0").unwrap().admitted, 1);
+    }
+
+    #[test]
+    fn p50_present_and_ordered_with_p99() {
+        let m = Metrics::default();
+        for ms in [1u64, 2, 4, 8, 100, 500] {
+            m.record_latency(Some("t"), Duration::from_millis(ms));
+        }
+        let s = m.snapshot();
+        assert!(s.latency_p50_ms > 0.0);
+        assert!(s.latency_p50_ms <= s.latency_p99_ms);
+        let t = &s.tenants[0];
+        assert!(t.latency_p50_ms <= t.latency_p99_ms);
+    }
+
+    #[test]
+    fn tenant_union_merges_latency_and_admission_sides() {
+        // a tenant that only completed jobs and one that was only rejected
+        // both appear, each with the other side's counters at zero
+        let m = Metrics::with_actors(1);
+        m.record_latency(Some("worker"), Duration::from_millis(3));
+        m.on_rejected(Some("blocked"), Rejection::TenantCap);
+        let s = m.snapshot();
+        let names: Vec<&str> = s.tenants.iter().map(|t| t.tenant.as_str()).collect();
+        assert_eq!(names, vec!["blocked", "worker"]);
+        let blocked = &s.tenants[0];
+        assert_eq!((blocked.jobs, blocked.rejected_tenant_cap), (0, 1));
+        let worker = &s.tenants[1];
+        assert_eq!((worker.jobs, worker.rejected_tenant_cap), (1, 0));
     }
 }

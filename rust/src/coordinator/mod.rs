@@ -11,14 +11,22 @@
 //! -inf, contributing exp(-inf) = 0 to every reduction; see
 //! `python/compile/kernels/flash.py` and the padding-invariance tests).
 //!
-//! Above routing sits the serving stack: requests are classified by shape
-//! ([`router::class_of`]), admitted into per-class FIFO queues
-//! ([`batcher::ClassQueues`]), and drained by a pool of backend actors
-//! ([`service::spawn`]) that prefer their home classes
-//! ([`router::shard_of`]) and steal across classes when idle, so
-//! multi-tenant bursts never serialize behind one large solve.
+//! Above routing sits the serving stack: requests pass per-tenant
+//! admission control ([`batcher::Admission`] — token-bucket rate limits
+//! and in-flight caps, refusals typed as [`batcher::Rejection`]), are
+//! classified by shape ([`router::class_of`]), admitted into per-class
+//! FIFO queues ([`batcher::ClassQueues`]), and drained by an *adaptive*
+//! pool of backend actors ([`service::spawn`]) that prefer their home
+//! classes ([`router::shard_of`]), steal across classes when idle, and
+//! grow/park between `service.actors_min` and `actors_max` as queue depth
+//! demands — so multi-tenant bursts never serialize behind one large
+//! solve and an idle deployment does not burn threads.  Time enters the
+//! layer only through [`clock::Clock`], so the whole stack is
+//! deterministic under an injected virtual clock
+//! (`tests/serving_stress.rs`).
 
 pub mod batcher;
+pub mod clock;
 pub mod job;
 pub mod metrics;
 pub mod router;

@@ -20,7 +20,11 @@ use crate::runtime::{Manifest, Tensor};
 /// service: the power-of-two bucket envelope `(n, m, d)` a request rounds
 /// up into.  Two requests with the same class batch together (executable /
 /// cache affinity) and share the same *home actor* in the sharded service
-/// (see [`shard_of`] and `coordinator::service`).
+/// (see [`shard_of`] and `coordinator::service`).  Class queue depths are
+/// also the elasticity signal: the service's supervisor grows the actor
+/// pool when a class stays at/over the high-water mark and parks actors
+/// when every class drains (see `coordinator::batcher` for the admission
+/// layer in front of the queues).
 pub type ClassKey = (usize, usize, usize);
 
 /// Classify a request shape into its [`ClassKey`]: each extent rounds up

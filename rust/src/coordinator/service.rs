@@ -1,34 +1,63 @@
-//! The OT job service: a cloneable client handle in front of a pool of
-//! backend actor threads sharded by shape class.
+//! The OT job service: a cloneable client handle in front of an
+//! *adaptive* pool of backend actor threads sharded by shape class, with
+//! per-tenant admission control in front of the queues.
 //!
 //! ## Sharded actor pool
 //!
-//! `spawn` starts `config.service.actors` actor threads (default 1 — the
-//! original single-actor service).  Each actor builds its *own* backend
-//! inside the thread (PJRT handles are `!Send`); for the native backend
-//! the actors receive disjoint slices of the kernel-thread budget
-//! ([`crate::native::pool::partitioned`]), so N actors together own
-//! about as many kernel threads as one actor on the global pool would —
-//! sharding multiplies concurrent solves, not threads.
+//! `spawn` starts `actors_max` actor threads (default: `service.actors`,
+//! i.e. the static pool; 1 = the original single-actor service).  Each
+//! actor builds its *own* backend inside the thread (PJRT handles are
+//! `!Send`); for the native backend each actor owns a private kernel pool
+//! of its slice width ([`crate::native::pool::partition_widths`] over the
+//! *active* actor count), so N actors together own about as many kernel
+//! threads as one actor on the global pool would — sharding multiplies
+//! concurrent solves, not threads.
 //!
-//! Admission goes through per-class FIFO queues
-//! ([`super::batcher::ClassQueues`]): a job is classified by its shape
-//! class ([`super::router::class_of`] — the same key the router's
+//! ## Admission
+//!
+//! Submission passes three gates under one lock, each with a typed
+//! [`Rejection`] so callers can tell backpressure from throttling:
+//!
+//! 1. **queue capacity** — the bounded [`ClassQueues`] admission cap
+//!    ([`Rejection::QueueFull`]: the *service* is saturated);
+//! 2. **tenant rate** — a per-tenant token bucket
+//!    ([`Rejection::RateLimited`]: the *tenant* is over budget; tokens
+//!    refill at `service.tenant_rate`/s up to `tenant_burst`);
+//! 3. **tenant in-flight cap** — at most `service.tenant_inflight`
+//!    admitted-but-incomplete jobs per tenant ([`Rejection::TenantCap`];
+//!    the slot frees exactly when a job completes).
+//!
+//! An admitted job is classified by its shape class
+//! ([`super::router::class_of`] — the same key the router's
 //! exact-fit/bucketed selection coalesces under) and queued behind its
-//! class-mates.  The queue bound is the backpressure knob: a full queue
-//! rejects at submission, never silently drops.
+//! class-mates.  Each class has a deterministic *home actor*
+//! ([`super::router::shard_of`] over the `actors_max` slots); an idle
+//! actor drains its home classes first and **steals the oldest queued
+//! class from anyone else** when its own are empty — a burst of small
+//! solves can never starve behind one large solve while an idle actor
+//! exists.  Within a class, jobs keep FIFO order; across classes the
+//! highest priority queued in the class, then the front job's age,
+//! decides.
 //!
-//! Each class has a deterministic *home actor*
-//! ([`super::router::shard_of`]); an idle actor drains its home classes
-//! first (executable/cache affinity) and **steals the oldest queued class
-//! from anyone else** when its own are empty — a burst of small solves can
-//! never starve behind one large solve while an idle actor exists.  Within
-//! a class, jobs keep FIFO order; across classes the highest priority
-//! queued in the class, then the front job's age, decides.  Because every
-//! solve runs the same deterministic
-//! kernels regardless of which actor (and pool width) executes it, results
-//! are bitwise identical across actor counts — `tests/coordinator_sharding.rs`
-//! pins 1-actor vs N-actor equality.
+//! ## Elasticity
+//!
+//! With `service.actors_min < actors_max` the pool breathes: a supervisor
+//! tick ([`ServiceHandle::supervise_once`], driven by a background thread
+//! under [`spawn`] or explicitly by deterministic tests under
+//! [`spawn_with_clock`]) grows the active set by one when some class
+//! queue has stayed at or above a high-water mark (`service.max_batch`)
+//! for consecutive ticks, and parks one actor after consecutive
+//! all-empty ticks.  Parking *drains*: a parked actor finishes the batch
+//! it holds and simply stops picking new work — no job is ever dropped,
+//! re-queued or duplicated by a resize.  Every resize repartitions the
+//! native kernel-thread budget over the new active set
+//! ([`crate::native::pool::partition_widths`]), so the machine stays
+//! saturated at every pool size; actors rebind to their new slice at the
+//! next batch boundary.  Because the native kernels are
+//! bitwise-deterministic across pool widths, *which* actor (and how wide
+//! a slice) runs a solve cannot change its bits — results are bitwise
+//! identical at every pool size and across resizes
+//! (`tests/coordinator_sharding.rs`, `tests/serving_stress.rs`).
 //!
 //! (The async-runtime facade was dropped in the offline build: submission
 //! is blocking or fire-and-forget over std channels; see DESIGN.md
@@ -37,20 +66,28 @@
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{sync_channel, Receiver};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
-use crate::config::Config;
+use crate::config::{Config, ServiceSection};
 use crate::native::pool;
 use crate::ot::solver::{Schedule, SinkhornSolver, SolverConfig};
 use crate::ot::Transport;
 use crate::runtime::ComputeBackend;
 
-use super::batcher::{ClassQueues, Keyed};
+use super::batcher::{Admission, ClassQueues, Keyed, Rejection, TenantPolicy};
+use super::clock::{Clock, WallClock};
 use super::job::{Job, JobKind, JobRequest, JobResponse};
 use super::metrics::{Metrics, Snapshot};
 use super::router::{shard_of, ClassKey};
+
+/// Consecutive over-high-water supervisor ticks before growing by one.
+const GROW_AFTER_TICKS: u32 = 2;
+/// Consecutive all-empty supervisor ticks before parking one actor.
+const PARK_AFTER_TICKS: u32 = 2;
+/// Background supervisor cadence under [`spawn`] (wall clock).
+const SUPERVISOR_TICK: Duration = Duration::from_millis(25);
 
 impl Keyed for Job {
     type Key = ClassKey;
@@ -68,12 +105,69 @@ fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|e| e.into_inner())
 }
 
+/// Why [`ServiceHandle::try_submit`] refused a job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Every handle was dropped; the service is shutting down.
+    Stopped,
+    /// Admission control refused the job (see [`Rejection`] for which
+    /// gate: backpressure vs rate throttling vs in-flight cap).
+    Rejected(Rejection),
+}
+
+impl SubmitError {
+    /// The typed rejection, if admission control refused the job.
+    pub fn rejection(&self) -> Option<Rejection> {
+        match self {
+            SubmitError::Rejected(r) => Some(*r),
+            SubmitError::Stopped => None,
+        }
+    }
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Stopped => write!(f, "service stopped"),
+            SubmitError::Rejected(r) => write!(f, "{r}"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// A supervisor resize decision (the new active-actor count).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Resize {
+    /// One more actor was activated.
+    Grew(usize),
+    /// One actor was told to drain and park.
+    Parked(usize),
+}
+
 /// Scheduler state shared by every client handle and actor.
 struct State {
     queues: ClassQueues<Job>,
+    admission: Admission,
     /// Live `ServiceHandle` count; the last drop initiates shutdown.
     handles: usize,
     shutdown: bool,
+    /// Actors `0..active` may pick work; slots `active..` are parked
+    /// (they still help drain at shutdown).
+    active: usize,
+    /// Kernel-slice *width* per actor slot under the current partition
+    /// (meaningful only when `kernel_total > 0`; parked slots hold 1).
+    /// Widths, not pools: each slice belongs to exactly one actor, and the
+    /// actor builds its own `WorkerPool` outside the scheduler lock when
+    /// it rebinds — a resize never spawns threads under this mutex.
+    assign: Vec<usize>,
+    /// Bumped on every repartition; actors rebind as soon as they are
+    /// idle, parked, or at their next batch boundary.
+    pool_gen: u64,
+    /// Consecutive supervisor ticks with a class at/over high water.
+    busy_ticks: u32,
+    /// Consecutive supervisor ticks with every queue empty.
+    idle_ticks: u32,
 }
 
 struct Shared {
@@ -84,7 +178,18 @@ struct Shared {
     /// How long a partial batch waits for same-class batch-mates before
     /// dispatch (the classic dynamic-batching knob, `service.max_wait_ms`).
     max_wait: Duration,
+    /// Actor *slots* (== `actors_max`); metric vectors and shard homes
+    /// are fixed over this count for the service's lifetime.
     actors: usize,
+    /// The supervisor never parks below this.
+    actors_min: usize,
+    /// Total kernel-thread budget repartitioned on resize (0 = no
+    /// repartitioning: non-native backend or a single actor slot).
+    kernel_total: usize,
+    /// True iff any tenant limit is configured — the per-job completion
+    /// path skips the state lock entirely when quotas are off.
+    admission_enabled: bool,
+    clock: Arc<dyn Clock>,
 }
 
 /// Cloneable client handle; dropping every handle shuts the actors down
@@ -132,19 +237,40 @@ impl Pending {
 
 impl ServiceHandle {
     /// Enqueue a job; returns a `Pending` ticket (submission itself never
-    /// blocks -- a full queue is an immediate backpressure error).
-    pub fn submit(&self, request: JobRequest) -> Result<Pending> {
+    /// blocks) or a typed refusal: [`SubmitError::Rejected`] carries
+    /// which admission gate fired, so callers can tell whole-service
+    /// backpressure from per-tenant throttling.
+    pub fn try_submit(&self, request: JobRequest) -> Result<Pending, SubmitError> {
         let (done, rx) = sync_channel(1);
-        let job = Job { request, submitted: Instant::now(), done };
+        let now = self.shared.clock.now();
+        let job = Job { request, submitted: now, done };
         let class = job.bucket_hint();
+        let tenant = job.request.tenant.clone();
         {
             let mut st = lock(&self.shared.state);
             if st.shutdown {
-                return Err(anyhow!("service stopped"));
+                return Err(SubmitError::Stopped);
+            }
+            // registration precedes the verdict: a tenant whose first job
+            // is rejected still gets a full metric series (explicit zeros)
+            self.metrics.on_tenant_seen(tenant.as_deref());
+            let verdict = if st.queues.has_capacity() {
+                st.admission.admit(tenant.as_deref(), now)
+            } else {
+                Err(Rejection::QueueFull)
+            };
+            if let Err(rejection) = verdict {
+                self.metrics.on_rejected(tenant.as_deref(), rejection);
+                return Err(SubmitError::Rejected(rejection));
             }
             if st.queues.push(job).is_err() {
-                return Err(anyhow!("service queue full (backpressure)"));
+                // unreachable (capacity checked under this same lock), but
+                // never leak the admission slot if it ever fires
+                st.admission.release(tenant.as_deref());
+                self.metrics.on_rejected(tenant.as_deref(), Rejection::QueueFull);
+                return Err(SubmitError::Rejected(Rejection::QueueFull));
             }
+            self.metrics.on_admitted(tenant.as_deref());
             // gauge bump under the same lock as the push: an already-awake
             // actor dequeues under this lock too, so its matching
             // on_dequeue can never run before this increment.
@@ -152,6 +278,12 @@ impl ServiceHandle {
         }
         self.shared.work_cv.notify_all();
         Ok(Pending { rx })
+    }
+
+    /// [`try_submit`](Self::try_submit) with the refusal flattened into an
+    /// `anyhow` error (the original, message-only submission API).
+    pub fn submit(&self, request: JobRequest) -> Result<Pending> {
+        self.try_submit(request).map_err(|e| anyhow!("{e}"))
     }
 
     /// Submit and wait.
@@ -164,10 +296,72 @@ impl ServiceHandle {
         self.metrics.snapshot()
     }
 
-    /// Number of backend actors this service runs.
+    /// Number of backend actor *slots* this service runs (== `actors_max`;
+    /// the currently active subset is [`active_actors`](Self::active_actors)).
     pub fn actors(&self) -> usize {
         self.shared.actors
     }
+
+    /// Actors currently eligible to pick work.
+    pub fn active_actors(&self) -> usize {
+        lock(&self.shared.state).active
+    }
+
+    /// The `(actors_min, actors_max)` bounds the supervisor works within.
+    pub fn actor_range(&self) -> (usize, usize) {
+        (self.shared.actors_min, self.shared.actors)
+    }
+
+    /// One supervisor tick: grow by one after two consecutive ticks with
+    /// some class at/over the high-water mark (`service.max_batch` queued
+    /// in one class), park one after two consecutive all-empty ticks
+    /// (`GROW_AFTER_TICKS` / `PARK_AFTER_TICKS`).  Exposed so
+    /// deterministic tests (and embedders with their own control loops)
+    /// can drive elasticity explicitly; [`spawn`] runs it from a
+    /// background thread every 25 ms.
+    pub fn supervise_once(&self) -> Option<Resize> {
+        let mut st = lock(&self.shared.state);
+        if st.shutdown {
+            return None;
+        }
+        supervise_tick(&self.shared, &self.metrics, &mut st)
+    }
+
+    /// Manually set the active-actor count (clamped to
+    /// `[actors_min, actors_max]`); returns the applied value.  The same
+    /// drain-to-park / repartition path the supervisor uses — an
+    /// operational override and the deterministic-test lever.
+    pub fn resize_to(&self, target: usize) -> usize {
+        let shared = &self.shared;
+        let mut st = lock(&shared.state);
+        let target = target.clamp(shared.actors_min, shared.actors);
+        if target != st.active && !st.shutdown {
+            resize(shared, &self.metrics, &mut st, target);
+        }
+        st.active
+    }
+}
+
+/// Apply a resize under the state lock: set the active count, repartition
+/// the native kernel budget over the new active set, publish the gauges
+/// and wake everyone (newly active actors start picking work; newly
+/// parked ones finish their current batch and stop).
+fn resize(shared: &Shared, metrics: &Metrics, st: &mut State, target: usize) {
+    let grew = target > st.active;
+    st.active = target;
+    st.busy_ticks = 0;
+    st.idle_ticks = 0;
+    if shared.kernel_total > 0 {
+        // widths only — the pools themselves are built by each actor,
+        // outside this lock, when it observes the new generation
+        let widths = pool::partition_widths(shared.kernel_total, target);
+        for (slot, w) in st.assign.iter_mut().enumerate() {
+            *w = widths.get(slot).copied().unwrap_or(1);
+        }
+        st.pool_gen += 1;
+    }
+    metrics.on_resize(grew, target, shared.actors - target);
+    shared.work_cv.notify_all();
 }
 
 /// Pick the class actor `index` should drain next, if any: home classes
@@ -191,37 +385,92 @@ fn pick_class(queues: &ClassQueues<Job>, index: usize, actors: usize) -> Option<
     best_of(false).map(|class| (class, true))
 }
 
-/// Spawn the backend actor pool and return the handle.  Fails fast if any
+/// Resolve the `(actors_min, actors_max)` pair from the service section:
+/// both default to the static `actors` count when unset (0), and
+/// `max >= min >= 1` always holds.
+pub fn actor_range_of(svc: &ServiceSection) -> (usize, usize) {
+    let static_n = svc.actors.max(1);
+    let min = if svc.actors_min == 0 { static_n } else { svc.actors_min };
+    let max = if svc.actors_max == 0 { static_n.max(min) } else { svc.actors_max.max(min) };
+    (min, max)
+}
+
+/// Spawn the backend actor pool (wall clock, background supervisor when
+/// `actors_min < actors_max`) and return the handle.  Fails fast if any
 /// configured backend cannot be constructed (e.g. `pjrt` with missing
 /// artifacts); actors that did start are shut down again on failure.
 pub fn spawn(config: Config) -> Result<ServiceHandle> {
-    let actors = config.service.actors.max(1);
+    spawn_inner(config, Arc::new(WallClock::default()), true)
+}
+
+/// [`spawn`] with an injected [`Clock`] and **no background supervisor**:
+/// admission refills and latency readings follow the injected clock, and
+/// the caller drives elasticity explicitly via
+/// [`ServiceHandle::supervise_once`] / [`ServiceHandle::resize_to`].
+/// This is the deterministic-test constructor (`tests/serving_stress.rs`).
+pub fn spawn_with_clock(config: Config, clock: Arc<dyn Clock>) -> Result<ServiceHandle> {
+    spawn_inner(config, clock, false)
+}
+
+fn spawn_inner(
+    config: Config,
+    clock: Arc<dyn Clock>,
+    background_supervisor: bool,
+) -> Result<ServiceHandle> {
+    let (actors_min, actors_max) = actor_range_of(&config.service);
+    let actors = actors_max;
     let metrics = Arc::new(Metrics::with_actors(actors));
+    metrics.set_pool_size(actors_min, actors - actors_min);
+    let policy = TenantPolicy {
+        rate: config.service.tenant_rate,
+        burst: config.service.tenant_burst,
+        inflight: config.service.tenant_inflight,
+    };
+
+    // Per-actor kernel budgets: partition the configured private width
+    // (threads knob) or the global width into disjoint private pools, so
+    // N actors never oversubscribe the machine.  The budget is
+    // repartitioned over the active set on every resize; non-native
+    // backends get no assignment (they manage their own resources).
+    let kernel_total = if actors > 1 && matches!(config.backend.as_str(), "" | "native") {
+        if config.threads > 0 {
+            config.threads
+        } else {
+            pool::configured_threads()
+        }
+    } else {
+        0
+    };
+    let assign: Vec<usize> = if kernel_total > 0 {
+        let mut v = pool::partition_widths(kernel_total, actors_min);
+        v.resize(actors, 1); // parked slots run inline until activated
+        v
+    } else {
+        vec![0; actors]
+    };
+
     let shared = Arc::new(Shared {
         state: Mutex::new(State {
             queues: ClassQueues::with_capacity(config.service.queue_cap),
+            admission: Admission::new(policy),
             handles: 1,
             shutdown: false,
+            active: actors_min,
+            assign,
+            pool_gen: 0,
+            busy_ticks: 0,
+            idle_ticks: 0,
         }),
         work_cv: Condvar::new(),
         max_batch: config.service.max_batch.max(1),
         max_wait: Duration::from_millis(config.service.max_wait_ms),
         actors,
+        actors_min,
+        kernel_total,
+        admission_enabled: policy.any_limit(),
+        clock,
     });
     let solver_cfg = SolverConfig::from_section(&config.solver);
-
-    // Per-actor kernel budgets: partition the configured private width
-    // (threads knob) or the global width into disjoint private pools, so
-    // N actors never oversubscribe the machine.  Non-native backends get
-    // an empty list (they manage their own execution resources).
-    let pools: Vec<Arc<pool::WorkerPool>> =
-        if actors > 1 && matches!(config.backend.as_str(), "" | "native") {
-            let total =
-                if config.threads > 0 { config.threads } else { pool::configured_threads() };
-            pool::partitioned(total, actors)
-        } else {
-            Vec::new()
-        };
 
     // Shut everything down (actors drain and exit) and report the error.
     let fail = |e: anyhow::Error| -> anyhow::Error {
@@ -237,14 +486,14 @@ pub fn spawn(config: Config) -> Result<ServiceHandle> {
         let config = config.clone();
         let solver_cfg = solver_cfg.clone();
         let ready_tx = ready_tx.clone();
-        let actor_pool = pools.get(index).cloned();
+        let actor_width = lock(&shared.state).assign.get(index).copied().unwrap_or(0);
         let spawned = std::thread::Builder::new()
             .name(format!("ot-engine-{index}"))
             .spawn(move || {
                 // Build the backend *inside* the thread (PJRT handles are
                 // !Send).  Single-actor services keep the exact
                 // pre-sharding construction path, pool sharing included.
-                let backend = match actor_backend(&config, actors, actor_pool) {
+                let backend = match actor_backend(&config, shared_a.actors, actor_width) {
                     Ok(b) => {
                         let _ = ready_tx.send(Ok(()));
                         b
@@ -254,7 +503,7 @@ pub fn spawn(config: Config) -> Result<ServiceHandle> {
                         return;
                     }
                 };
-                actor_loop(&shared_a, &metrics, backend.as_ref(), &solver_cfg, index);
+                actor_loop(&shared_a, &metrics, backend, &solver_cfg, index);
             });
         if let Err(e) = spawned {
             // release the actors that did start before propagating
@@ -268,58 +517,151 @@ pub fn spawn(config: Config) -> Result<ServiceHandle> {
             return Err(fail(e));
         }
     }
+
+    if background_supervisor && actors_min < actors {
+        let handle = ServiceHandle { shared: Arc::clone(&shared), metrics: Arc::clone(&metrics) };
+        // The supervisor holds no ServiceHandle (it must not keep the
+        // service alive); it watches the shared state directly and exits
+        // as soon as shutdown is flagged.
+        let sup_shared = Arc::clone(&shared);
+        let sup_metrics = Arc::clone(&metrics);
+        std::thread::Builder::new()
+            .name("ot-supervisor".into())
+            .spawn(move || loop {
+                std::thread::sleep(SUPERVISOR_TICK);
+                let mut st = lock(&sup_shared.state);
+                if st.shutdown {
+                    return;
+                }
+                supervise_tick(&sup_shared, &sup_metrics, &mut st);
+            })
+            .map_err(|e| fail(anyhow!("spawning supervisor thread: {e}")))?;
+        return Ok(handle);
+    }
+
     Ok(ServiceHandle { shared, metrics })
 }
 
-/// Construct the backend for one actor.  With a single actor this is
-/// exactly [`crate::backend_from_config`]; with several, native actors are
-/// bound to their slice of the partitioned kernel pool and other backends
-/// are built per actor by name.
+/// The policy body shared by [`ServiceHandle::supervise_once`] and the
+/// background supervisor thread (which holds no handle).
+fn supervise_tick(shared: &Shared, metrics: &Metrics, st: &mut State) -> Option<Resize> {
+    let high_water = shared.max_batch.max(1);
+    let over = st.queues.max_class_depth() >= high_water;
+    let empty = st.queues.is_empty();
+    st.busy_ticks = if over { st.busy_ticks + 1 } else { 0 };
+    st.idle_ticks = if empty { st.idle_ticks + 1 } else { 0 };
+    if over && st.busy_ticks >= GROW_AFTER_TICKS && st.active < shared.actors {
+        let target = st.active + 1;
+        resize(shared, metrics, st, target);
+        return Some(Resize::Grew(target));
+    }
+    if empty && st.idle_ticks >= PARK_AFTER_TICKS && st.active > shared.actors_min {
+        let target = st.active - 1;
+        resize(shared, metrics, st, target);
+        return Some(Resize::Parked(target));
+    }
+    None
+}
+
+/// Construct the backend for one actor.  With a single actor slot this is
+/// exactly [`crate::backend_from_config`]; with several, native actors
+/// own a private pool of their assigned slice width (parked slots start
+/// at width 1 — inline — and rebind on first activation) and other
+/// backends are built per actor by name.
 fn actor_backend(
     config: &Config,
     actors: usize,
-    actor_pool: Option<Arc<pool::WorkerPool>>,
+    width: usize,
 ) -> Result<Box<dyn ComputeBackend>> {
     if actors <= 1 {
         return crate::backend_from_config(config);
     }
-    match (config.backend.as_str(), actor_pool) {
-        ("" | "native", Some(p)) => Ok(Box::new(crate::native::NativeBackend::with_pool(p))),
-        ("" | "native", None) => Ok(Box::new(crate::native::NativeBackend::default())),
+    match (config.backend.as_str(), width) {
+        ("" | "native", w) => Ok(Box::new(sliced_backend(w))),
         (name, _) => crate::backend_by_name(name),
     }
 }
 
-/// One actor: drain home classes, steal when idle, exit when shut down
-/// *and* drained (queued jobs always complete).
+/// A native backend bound to a private kernel pool of `width` claimants
+/// (1 = inline, no threads).  Built on the owning actor's thread — never
+/// under the scheduler lock.
+fn sliced_backend(width: usize) -> crate::native::NativeBackend {
+    crate::native::NativeBackend::with_pool(Arc::new(pool::WorkerPool::new(width.max(1))))
+}
+
+/// What an actor decided to do after inspecting the shared state.
+enum Step {
+    /// Run a popped batch (optionally rebinding to a new slice first).
+    Work { class: ClassKey, batch: Vec<Job>, stolen: bool, rebind: Option<(u64, usize)> },
+    /// No work, but the kernel budget was repartitioned: shed the stale
+    /// slice (and its worker threads) now rather than holding it while
+    /// idle or parked — the active set must truly own the whole budget.
+    Rebind { gen: u64, width: usize },
+    /// Shut down and fully drained.
+    Exit,
+}
+
+/// One actor: drain home classes, steal when idle, park when deactivated,
+/// rebind to repartitioned kernel slices as soon as it is idle/parked or
+/// at its next batch boundary, exit when shut down *and* drained (queued
+/// jobs always complete).
 fn actor_loop(
     shared: &Shared,
     metrics: &Metrics,
-    backend: &dyn ComputeBackend,
+    mut backend: Box<dyn ComputeBackend>,
     solver_cfg: &SolverConfig,
     index: usize,
 ) {
-    let solver = SinkhornSolver::new(backend, solver_cfg.clone());
+    // the pool generation this actor's backend was built against
+    let mut bound_gen = 0u64;
     loop {
-        let picked = {
+        let step = {
             let mut st = lock(&shared.state);
             loop {
-                if let Some((class, stolen)) = pick_class(&st.queues, index, shared.actors) {
-                    let batch = st.queues.pop_batch(&class, shared.max_batch);
-                    break Some((class, batch, stolen));
+                // parked actors (index >= active) pick no new work — except
+                // at shutdown, where every slot helps drain the queues
+                if index < st.active || st.shutdown {
+                    if let Some((class, stolen)) = pick_class(&st.queues, index, shared.actors) {
+                        let batch = st.queues.pop_batch(&class, shared.max_batch);
+                        let rebind = (shared.kernel_total > 0 && st.pool_gen != bound_gen)
+                            .then(|| (st.pool_gen, st.assign[index]));
+                        break Step::Work { class, batch, stolen, rebind };
+                    }
                 }
                 if st.shutdown {
-                    break None;
+                    break Step::Exit;
+                }
+                if shared.kernel_total > 0 && st.pool_gen != bound_gen {
+                    break Step::Rebind { gen: st.pool_gen, width: st.assign[index] };
                 }
                 st = shared.work_cv.wait(st).unwrap_or_else(|e| e.into_inner());
             }
         };
-        let Some((class, mut batch, stolen)) = picked else { return };
+        let (class, mut batch, stolen, rebind) = match step {
+            Step::Exit => return,
+            Step::Rebind { gen, width } => {
+                // built (and the old slice's threads joined) outside the
+                // scheduler lock, on this actor's own time
+                backend = Box::new(sliced_backend(width));
+                bound_gen = gen;
+                continue;
+            }
+            Step::Work { class, batch, stolen, rebind } => (class, batch, stolen, rebind),
+        };
+        // A resize repartitioned the kernel budget since this backend was
+        // built: rebind to the new slice before touching the batch.  (The
+        // kernels are bitwise-deterministic across pool widths, so the
+        // rebind cannot change any job's result.)
+        if let Some((gen, width)) = rebind {
+            backend = Box::new(sliced_backend(width));
+            bound_gen = gen;
+        }
+        let solver = SinkhornSolver::new(backend.as_ref(), solver_cfg.clone());
         // Top-up phase: a partial batch waits up to `max_wait` for
         // same-class batch-mates (the classic dynamic-batching lever;
         // other actors keep draining other classes meanwhile).
         if batch.len() < shared.max_batch && !shared.max_wait.is_zero() {
-            let deadline = Instant::now() + shared.max_wait;
+            let deadline = std::time::Instant::now() + shared.max_wait;
             let mut st = lock(&shared.state);
             loop {
                 let extra = st.queues.pop_batch(&class, shared.max_batch - batch.len());
@@ -327,7 +669,7 @@ fn actor_loop(
                 if batch.len() >= shared.max_batch || st.shutdown {
                     break;
                 }
-                let now = Instant::now();
+                let now = std::time::Instant::now();
                 if now >= deadline {
                     break;
                 }
@@ -347,7 +689,7 @@ fn actor_loop(
             metrics.actor(index).steals.fetch_add(batch.len() as u64, Ordering::Relaxed);
         }
         for job in batch {
-            let result = run_job(backend, &solver, solver_cfg, &job.request);
+            let result = run_job(backend.as_ref(), &solver, solver_cfg, &job.request);
             match &result {
                 Ok(resp) => {
                     metrics.jobs_ok.fetch_add(1, Ordering::Relaxed);
@@ -358,11 +700,19 @@ fn actor_loop(
                 }
             }
             metrics.actor(index).jobs.fetch_add(1, Ordering::Relaxed);
-            metrics.record_latency(job.request.tenant.as_deref(), job.submitted.elapsed());
+            let elapsed = shared.clock.now().saturating_sub(job.submitted);
+            metrics.record_latency(job.request.tenant.as_deref(), elapsed);
             let result = result.map(|mut r| {
-                r.service_time = job.submitted.elapsed();
+                r.service_time = elapsed;
                 r
             });
+            // the in-flight slot frees exactly on completion (failed jobs
+            // completed too) — and *before* the response is delivered, so
+            // a client that resubmits the moment `recv()` returns can
+            // never race the release into a spurious TenantCap
+            if shared.admission_enabled {
+                lock(&shared.state).admission.release(job.request.tenant.as_deref());
+            }
             let _ = job.done.send(result);
         }
     }

@@ -40,7 +40,11 @@ COMMANDS:
   profile  [--n 10000] [--d 64] [--iters 10]
   otdd     [--n 400] [--d 64]
   regress  [--n 512] [--eps 0.1] [--steps 60]
-  serve    [--jobs 64] [--actors N]   (N defaults to config/FLASH_SINKHORN_ACTORS, else 1)
+  serve    [--jobs 64] [--actors N] [--actors-min A] [--actors-max B]
+           [--tenant-rate R] [--tenant-burst C] [--tenant-inflight K]
+           (N defaults to config/FLASH_SINKHORN_ACTORS, else 1; A < B turns
+            the adaptive pool on; tenant quotas default off, env
+            FLASH_SINKHORN_TENANT_{RATE,BURST,INFLIGHT})
   trajectory [append|check|show] [--baseline BENCH_native.json]
              [--current BENCH_native.json] [--file BENCH_trajectory.jsonl]
              [--max-regress 0.15]
@@ -170,15 +174,34 @@ fn main() -> Result<()> {
             );
         }
         "serve" => {
-            args.ensure_known(&["jobs", "actors"])?;
+            args.ensure_known(&[
+                "jobs",
+                "actors",
+                "actors-min",
+                "actors-max",
+                "tenant-rate",
+                "tenant-burst",
+                "tenant-inflight",
+            ])?;
             let jobs = args.usize("jobs", 64)?;
-            // precedence: CLI flag > config key > FLASH_SINKHORN_ACTORS env
-            // (the env default is folded into Config::default already)
+            // precedence: CLI flag > config key > FLASH_SINKHORN_* env
+            // (the env defaults are folded into Config::default already)
             let mut cfg = cfg.clone();
             let actors = args.usize("actors", cfg.service.actors)?;
             cfg.service.actors = actors.max(1);
+            cfg.service.actors_min = args.usize("actors-min", cfg.service.actors_min)?;
+            cfg.service.actors_max = args.usize("actors-max", cfg.service.actors_max)?;
+            cfg.service.tenant_rate = args.f64("tenant-rate", cfg.service.tenant_rate)?;
+            cfg.service.tenant_burst = args.f64("tenant-burst", cfg.service.tenant_burst)?;
+            cfg.service.tenant_inflight =
+                args.usize("tenant-inflight", cfg.service.tenant_inflight)?;
             let handle = service::spawn(cfg)?;
-            println!("service up: {} actor(s)", handle.actors());
+            let (lo, hi) = handle.actor_range();
+            if lo < hi {
+                println!("service up: {hi} actor slot(s), adaptive {lo}..{hi}");
+            } else {
+                println!("service up: {} actor(s)", handle.actors());
+            }
             let t0 = std::time::Instant::now();
             let pendings: Vec<_> = (0..jobs)
                 .map(|i| {
@@ -192,7 +215,11 @@ fn main() -> Result<()> {
                         0.1,
                     )
                     .unwrap();
-                    handle.submit(JobRequest::with_fixed_iters(JobKind::Solve, prob, 10))
+                    // labeled round-robin so the per-tenant admission and
+                    // latency series show up in the closing metrics block
+                    let req = JobRequest::with_fixed_iters(JobKind::Solve, prob, 10)
+                        .for_tenant(format!("tenant-{}", i % 4));
+                    handle.submit(req)
                 })
                 .collect();
             let mut ok = 0;

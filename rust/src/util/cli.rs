@@ -57,6 +57,15 @@ impl Args {
         }
     }
 
+    /// Full-precision variant: an absent flag returns `default` untouched
+    /// (no lossy round-trip through f32 for pass-through config values).
+    pub fn f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name}: expected float, got '{v}'")),
+        }
+    }
+
     pub fn string(&self, name: &str, default: &str) -> String {
         self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
     }
@@ -95,6 +104,15 @@ mod tests {
         let a = parse(&[], &[]);
         assert_eq!(a.usize("n", 42).unwrap(), 42);
         assert_eq!(a.string("schedule", "auto"), "auto");
+    }
+
+    #[test]
+    fn f64_passes_absent_defaults_through_bit_exact() {
+        let a = parse(&["--tenant-rate", "0.25"], &[]);
+        assert_eq!(a.f64("tenant-rate", 0.0).unwrap(), 0.25);
+        // an absent flag must not perturb the configured value (no f32 trip)
+        assert_eq!(a.f64("absent", 0.1).unwrap(), 0.1);
+        assert!(parse(&["--x", "fast"], &[]).f64("x", 0.0).is_err());
     }
 
     #[test]

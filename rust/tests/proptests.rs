@@ -3,8 +3,13 @@
 //! offline build; DESIGN.md section 2).  Each property runs across many
 //! random cases and prints the failing seed on assertion failure.
 
-use flash_sinkhorn::coordinator::batcher::{Batcher, ClassQueues, Keyed};
+use std::time::Duration;
+
+use flash_sinkhorn::coordinator::batcher::{
+    Admission, Batcher, ClassQueues, Keyed, Rejection, TenantPolicy, TokenBucket,
+};
 use flash_sinkhorn::coordinator::router::{pad_points, pad_vec, Bucket, BucketCtx, Router};
+use flash_sinkhorn::native::pool::partition_widths;
 use flash_sinkhorn::data::clouds::{random_simplex, uniform_cloud};
 use flash_sinkhorn::data::rng::Rng;
 use flash_sinkhorn::iomodel::device::A100;
@@ -163,6 +168,164 @@ fn prop_class_queues_never_drop_never_reorder_within_class() {
             let orig: Vec<u64> = admitted.iter().filter(|i| i.1 == key).map(|i| i.0).collect();
             let got: Vec<u64> = seen.iter().filter(|i| i.1 == key).map(|i| i.0).collect();
             assert_eq!(orig, got, "case {case}: reorder within class {key}");
+        }
+    }
+}
+
+// ---------- admission-control invariants ----------------------------------
+
+#[test]
+fn prop_token_bucket_never_admits_above_rate_window_plus_burst() {
+    // over any window W, admissions <= burst + rate * W — no interleaving
+    // of takes and idle stretches can beat the budget
+    let mut rng = Rng::new(11);
+    for case in 0..200 {
+        let rate = 0.5 + rng.f64() * 20.0;
+        let burst = 1.0 + rng.f64() * 10.0;
+        let mut bucket = TokenBucket::new(rate, burst, Duration::ZERO);
+        let mut now = Duration::ZERO;
+        let mut admitted = 0u64;
+        for _ in 0..300 {
+            if rng.below(3) == 0 {
+                // idle stretch (sometimes zero-length)
+                now += Duration::from_millis(rng.below(400) as u64);
+            }
+            if bucket.try_take(now) {
+                admitted += 1;
+            }
+        }
+        let window = now.as_secs_f64();
+        assert!(
+            admitted as f64 <= burst + rate * window + 1e-6,
+            "case {case}: {admitted} admitted > {burst} + {rate} * {window}"
+        );
+        assert!(bucket.tokens() <= burst + 1e-9, "case {case}: tokens above capacity");
+        assert!(bucket.tokens() >= 0.0, "case {case}: negative tokens");
+    }
+}
+
+#[test]
+fn prop_token_bucket_refill_is_monotone() {
+    // advancing time never removes tokens; a rewound clock changes nothing
+    let mut rng = Rng::new(12);
+    for case in 0..200 {
+        let rate = 0.1 + rng.f64() * 10.0;
+        let burst = 1.0 + rng.f64() * 8.0;
+        let mut bucket = TokenBucket::new(rate, burst, Duration::from_secs(5));
+        let mut now = Duration::from_secs(5);
+        for step in 0..100 {
+            // random takes drain between refills
+            if rng.below(2) == 0 {
+                bucket.try_take(now);
+            }
+            let before = bucket.tokens();
+            if rng.below(4) == 0 {
+                // rewound reading: strictly in the past
+                bucket.refill(now.saturating_sub(Duration::from_millis(1 + rng.below(5000) as u64)));
+                assert_eq!(
+                    bucket.tokens(),
+                    before,
+                    "case {case} step {step}: a rewound clock moved tokens"
+                );
+            } else {
+                now += Duration::from_millis(rng.below(2000) as u64);
+                bucket.refill(now);
+                assert!(
+                    bucket.tokens() >= before - 1e-12,
+                    "case {case} step {step}: refill lost tokens"
+                );
+            }
+            assert!(bucket.tokens() <= burst + 1e-9, "case {case} step {step}");
+        }
+    }
+}
+
+#[test]
+fn prop_tenant_cap_releases_exactly_on_completion() {
+    // random admit/release traffic vs a shadow per-tenant in-flight model:
+    // TenantCap fires iff the model is at the cap, and one release frees
+    // exactly one slot
+    let mut rng = Rng::new(13);
+    for case in 0..100 {
+        let cap = 1 + rng.below(5);
+        let mut adm = Admission::new(TenantPolicy { rate: 0.0, burst: 0.0, inflight: cap });
+        let tenants = ["a", "b", "c"];
+        let mut model = [0usize; 3];
+        for step in 0..400 {
+            let t = rng.below(tenants.len());
+            if rng.below(3) < 2 {
+                let got = adm.admit(Some(tenants[t]), Duration::ZERO);
+                if model[t] < cap {
+                    assert_eq!(got, Ok(()), "case {case} step {step}: spurious rejection");
+                    model[t] += 1;
+                } else {
+                    assert_eq!(
+                        got,
+                        Err(Rejection::TenantCap),
+                        "case {case} step {step}: cap not enforced"
+                    );
+                }
+            } else if model[t] > 0 {
+                adm.release(Some(tenants[t]));
+                model[t] -= 1;
+            }
+            assert_eq!(
+                adm.inflight(Some(tenants[t])),
+                model[t],
+                "case {case} step {step}: in-flight accounting diverged"
+            );
+            assert!(model[t] <= cap, "case {case} step {step}");
+        }
+    }
+}
+
+#[test]
+fn prop_grow_park_partitions_stay_disjoint_and_covering() {
+    // a random grow/park walk over [min, max] active actors: at every pool
+    // size the kernel-thread partition is a disjoint cover — every part
+    // >= 1 claimant, contiguous slices tile [0, sum) with no overlap, and
+    // the budget is never oversubscribed beyond the one-per-part minimum
+    let mut rng = Rng::new(14);
+    for case in 0..200 {
+        let total = 1 + rng.below(64);
+        let min = 1 + rng.below(4);
+        let max = min + rng.below(8);
+        let mut active = min + rng.below(max - min + 1);
+        for step in 0..60 {
+            // random supervisor decision: grow, park, or hold
+            match rng.below(3) {
+                0 if active < max => active += 1,
+                1 if active > min => active -= 1,
+                _ => {}
+            }
+            let widths = partition_widths(total, active);
+            assert_eq!(widths.len(), active, "case {case} step {step}");
+            assert!(widths.iter().all(|&w| w >= 1), "case {case} step {step}: empty slice");
+            assert_eq!(
+                widths.iter().sum::<usize>(),
+                total.max(active),
+                "case {case} step {step}: partition does not cover the budget"
+            );
+            // contiguous prefix-sum slices: disjoint by construction iff
+            // each slice starts exactly where the previous one ended
+            let mut offset = 0usize;
+            let slices: Vec<(usize, usize)> = widths
+                .iter()
+                .map(|&w| {
+                    let s = (offset, offset + w);
+                    offset += w;
+                    s
+                })
+                .collect();
+            for (i, a) in slices.iter().enumerate() {
+                for b in slices.iter().skip(i + 1) {
+                    assert!(
+                        a.1 <= b.0 || b.1 <= a.0,
+                        "case {case} step {step}: slices {a:?} and {b:?} overlap"
+                    );
+                }
+            }
+            assert_eq!(offset, total.max(active), "case {case} step {step}: gap in cover");
         }
     }
 }

@@ -1,0 +1,463 @@
+//! Deterministic serving stress/soak suite for the adaptive actor pool and
+//! per-tenant admission control.
+//!
+//! Determinism strategy (no wall-time sleeps anywhere):
+//!
+//! * every workload is generated from the in-repo seeded RNG;
+//! * the service runs under an injected [`VirtualClock`]
+//!   (`service::spawn_with_clock`), so token-bucket refills happen exactly
+//!   when a test advances the clock, and latency readings are virtual;
+//! * the clock advances either at *quiescent points* (all admitted jobs
+//!   received) or while a known long "pacer" job pins the only actor, so
+//!   every job's virtual latency is a deterministic value;
+//! * elasticity is driven explicitly through `resize_to` /
+//!   `supervise_once` — `spawn_with_clock` starts no background
+//!   supervisor thread.
+//!
+//! The `soak_*` tests are the heavy ones; CI runs them in a dedicated
+//! `stress` job (`cargo test -q --release --test serving_stress`) and
+//! skips them (`--skip soak_`) in the main test job.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use flash_sinkhorn::config::Config;
+use flash_sinkhorn::coordinator::batcher::Rejection;
+use flash_sinkhorn::coordinator::clock::{Clock, VirtualClock};
+use flash_sinkhorn::coordinator::job::{JobKind, JobRequest};
+use flash_sinkhorn::coordinator::service::{self, ServiceHandle, SubmitError};
+use flash_sinkhorn::data::clouds::uniform_cloud;
+use flash_sinkhorn::data::rng::Rng;
+use flash_sinkhorn::ot::problem::OtProblem;
+
+/// Hermetic config: native backend, no batch top-up waits (dispatch
+/// immediately — nothing in the suite depends on wall time).
+fn config(actors_min: usize, actors_max: usize) -> Config {
+    let mut cfg = Config::default();
+    cfg.backend = "native".into();
+    cfg.service.actors = 1;
+    cfg.service.actors_min = actors_min;
+    cfg.service.actors_max = actors_max;
+    cfg.service.max_batch = 4;
+    cfg.service.max_wait_ms = 0;
+    cfg.service.queue_cap = 4096;
+    cfg
+}
+
+/// The M shape classes the multi-tenant mixes are skewed over.
+const SHAPES: [(usize, usize); 4] = [(24, 24), (48, 40), (96, 96), (150, 120)];
+
+fn request(shape: (usize, usize), seed: u64, iters: usize, tenant: &str) -> JobRequest {
+    let (n, m) = shape;
+    let prob = OtProblem::uniform(
+        uniform_cloud(n, 16, seed),
+        uniform_cloud(m, 16, seed + 999),
+        n,
+        m,
+        16,
+        0.1,
+    )
+    .unwrap();
+    JobRequest::with_fixed_iters(JobKind::Solve, prob, iters).for_tenant(tenant)
+}
+
+/// One deterministic multi-tenant soak trace: N tenants with skewed
+/// request mixes over the shape classes, submitted in rounds with a
+/// quiescent point (and, when `drive` is set, explicit resizes and
+/// supervisor ticks) between rounds.  Returns per-job cost bits in
+/// submission order.
+fn run_soak(handle: &ServiceHandle, clock: &VirtualClock, drive: bool) -> Vec<u64> {
+    const TENANTS: usize = 4;
+    const ROUNDS: usize = 8;
+    const JOBS_PER_ROUND: usize = 12;
+    // walk the pool up and down while traffic flows (clamped to the
+    // service's own [min, max], so the same trace works on a static pool)
+    let resize_walk = [1usize, 4, 8, 2, 8, 1, 5, 3];
+    let mut rng = Rng::new(2026);
+    let mut bits = Vec::new();
+    let mut seed = 0u64;
+    for round in 0..ROUNDS {
+        if drive {
+            handle.resize_to(resize_walk[round % resize_walk.len()]);
+        }
+        let mut pendings = Vec::with_capacity(JOBS_PER_ROUND);
+        for _ in 0..JOBS_PER_ROUND {
+            let tenant = rng.below(TENANTS);
+            // skewed mix: each tenant strongly prefers "its" class but
+            // occasionally crosses over
+            let shape = if rng.below(4) < 3 {
+                SHAPES[tenant % SHAPES.len()]
+            } else {
+                SHAPES[rng.below(SHAPES.len())]
+            };
+            let iters = 2 + rng.below(4);
+            seed += 1;
+            let req = request(shape, seed, iters, &format!("tenant-{tenant}"));
+            pendings.push((iters, handle.try_submit(req).expect("quotas off: must admit")));
+        }
+        if drive {
+            // organic elasticity coverage: ticks interleave with live
+            // traffic (outcomes are load-dependent; invariants are not)
+            handle.supervise_once();
+        }
+        for (iters, p) in pendings {
+            let resp = p.recv().expect("admitted jobs must complete");
+            assert_eq!(resp.iters, iters, "round {round}: wrong iteration budget");
+            assert!(resp.cost.is_finite());
+            bits.push(resp.cost.to_bits());
+        }
+        // quiescent point: nothing in flight while the clock moves
+        clock.advance(Duration::from_millis(100 + rng.below(400) as u64));
+        if drive {
+            handle.supervise_once();
+        }
+    }
+    bits
+}
+
+/// The acceptance gate: an adaptive 1..8 pool resized up and down mid-soak
+/// produces **bitwise identical** per-solve outputs to a static 8-actor
+/// pool, and no job is dropped or duplicated by any resize.
+#[test]
+fn soak_adaptive_pool_bitwise_identical_to_static_max_pool() {
+    // adaptive run, resized while serving
+    let clock_a = Arc::new(VirtualClock::new());
+    let adaptive = service::spawn_with_clock(config(1, 8), Arc::clone(&clock_a) as Arc<dyn Clock>).unwrap();
+    assert_eq!(adaptive.actors(), 8, "slots == actors_max");
+    assert_eq!(adaptive.active_actors(), 1, "adaptive pools start at actors_min");
+    let bits_adaptive = run_soak(&adaptive, &clock_a, true);
+
+    // static max-size run of the *same* trace (resize calls clamp to 8)
+    let clock_s = Arc::new(VirtualClock::new());
+    let mut static_cfg = config(8, 8);
+    static_cfg.service.actors = 8;
+    let static_pool = service::spawn_with_clock(static_cfg, Arc::clone(&clock_s) as Arc<dyn Clock>).unwrap();
+    assert_eq!(static_pool.actor_range(), (8, 8));
+    let bits_static = run_soak(&static_pool, &clock_s, false);
+
+    assert_eq!(bits_adaptive.len(), bits_static.len());
+    for (i, (a, s)) in bits_adaptive.iter().zip(&bits_static).enumerate() {
+        assert_eq!(a, s, "job {i}: adaptive pool changed the result bits");
+    }
+
+    // resize accounting: the walk forced both directions, and no resize
+    // dropped or duplicated a job
+    let m = adaptive.metrics();
+    assert!(m.resizes_grow >= 1, "the walk must have grown the pool: {m}");
+    assert!(m.resizes_park >= 1, "the walk must have parked actors: {m}");
+    assert_eq!(m.jobs_ok as usize, bits_adaptive.len(), "every admitted job exactly once");
+    assert_eq!(m.jobs_failed, 0);
+    assert_eq!(m.admitted as usize, bits_adaptive.len());
+    let per_actor: u64 = m.actors.iter().map(|a| a.jobs).sum();
+    assert_eq!(per_actor, m.jobs_ok, "each job ran on exactly one actor");
+    assert_eq!(m.queue_depth, 0, "soak must drain");
+    assert!(m.class_depths.iter().all(|&(_, d)| d == 0), "class gauges drained: {m}");
+    let active = adaptive.active_actors();
+    let (lo, hi) = adaptive.actor_range();
+    assert!(active >= lo && active <= hi, "active {active} outside [{lo}, {hi}]");
+}
+
+/// No tenant starves: under a skewed multi-tenant mix on an adaptive pool,
+/// every tenant's admitted jobs all complete, and the per-tenant
+/// accounting agrees with what each client observed.
+#[test]
+fn soak_no_tenant_starves_under_skewed_mix() {
+    let clock = Arc::new(VirtualClock::new());
+    let handle = service::spawn_with_clock(config(1, 6), Arc::clone(&clock) as Arc<dyn Clock>).unwrap();
+    const TENANTS: usize = 5;
+    let mut rng = Rng::new(7);
+    let mut submitted = [0usize; TENANTS];
+    let mut completed = [0usize; TENANTS];
+    let mut seed = 50_000u64;
+    for round in 0..6 {
+        handle.resize_to([2, 6, 1, 4, 6, 1][round]);
+        let mut pendings = Vec::new();
+        for _ in 0..20 {
+            // heavy skew: tenant 0 submits half of all traffic
+            let tenant = if rng.below(2) == 0 { 0 } else { 1 + rng.below(TENANTS - 1) };
+            let shape = SHAPES[tenant % SHAPES.len()];
+            seed += 1;
+            let req = request(shape, seed, 3, &format!("t{tenant}"));
+            pendings.push((tenant, handle.try_submit(req).unwrap()));
+            submitted[tenant] += 1;
+        }
+        handle.supervise_once();
+        for (tenant, p) in pendings {
+            p.recv().expect("no admitted job may starve");
+            completed[tenant] += 1;
+        }
+        clock.advance(Duration::from_millis(250));
+    }
+    assert_eq!(submitted, completed, "every tenant's admitted jobs completed");
+    let m = handle.metrics();
+    for (i, &n) in submitted.iter().enumerate() {
+        let t = m
+            .tenants
+            .iter()
+            .find(|t| t.tenant == format!("t{i}"))
+            .unwrap_or_else(|| panic!("tenant t{i} series missing"));
+        assert_eq!(t.jobs as usize, n, "tenant t{i} completion accounting");
+        assert_eq!(t.admitted as usize, n, "tenant t{i} admission accounting");
+        assert_eq!(
+            t.rejected_queue_full + t.rejected_rate_limited + t.rejected_tenant_cap,
+            0,
+            "quotas are off: tenant t{i} must see zero rejections"
+        );
+    }
+    assert_eq!(m.jobs_ok as usize, submitted.iter().sum::<usize>());
+}
+
+/// Run one rate-limited round schedule; returns the p50 virtual-clock
+/// completion latency per polite tenant, in tenant order.
+///
+/// Latencies are *nonzero and deterministic*: each round submits a long
+/// "pacer" job first, pinning the single actor; every other job queues
+/// behind it, the clock advances exactly one second while the pacer is
+/// still executing, and only then is anything received — so every job in
+/// every round completes at a virtual latency of exactly one second in
+/// both the hog and the control run.  (The pacer executes for ≥ tens of
+/// milliseconds of wall time while the submissions and the advance take
+/// microseconds — the same practical-determinism argument as the
+/// in-flight-cap test below.)
+fn rate_limit_rounds(with_hog: bool) -> (Vec<f64>, Option<(u64, u64, u64, u64)>) {
+    const ROUNDS: u64 = 5;
+    let clock = Arc::new(VirtualClock::new());
+    let mut cfg = config(1, 1);
+    cfg.service.tenant_rate = 4.0; // 4 jobs/s refill...
+    cfg.service.tenant_burst = 4.0; // ...and at most 4 banked
+    let handle = service::spawn_with_clock(cfg, Arc::clone(&clock) as Arc<dyn Clock>).unwrap();
+    let polite = ["alpha", "beta"];
+    for round in 0..ROUNDS {
+        let mut pendings = Vec::new();
+        // the pacer occupies the only actor for this round (1 job/round
+        // against its own 4-token budget: never throttled itself)
+        let pacer = handle
+            .try_submit(request((256, 256), 6_000 + round, 400, "pacer"))
+            .expect("pacer within its own budget");
+        if with_hog {
+            // 9 submissions against a budget of exactly 4: the virtual
+            // clock makes the split 4 admitted / 5 throttled *exactly*,
+            // every round
+            let mut admitted = 0;
+            let mut throttled = 0;
+            for i in 0..9u64 {
+                let req = request((32, 32), 7_000 + round * 100 + i, 2, "hog");
+                match handle.try_submit(req) {
+                    Ok(p) => {
+                        admitted += 1;
+                        pendings.push(p);
+                    }
+                    Err(SubmitError::Rejected(Rejection::RateLimited)) => throttled += 1,
+                    Err(e) => panic!("round {round}: unexpected refusal {e:?}"),
+                }
+            }
+            assert_eq!((admitted, throttled), (4, 5), "round {round}: bucket math drifted");
+        }
+        for (t, tenant) in polite.iter().enumerate() {
+            for i in 0..2u64 {
+                // 2 jobs/round vs a 4-token budget: never throttled
+                let req =
+                    request(SHAPES[t], 9_000 + round * 100 + t as u64 * 10 + i, 2, tenant);
+                pendings.push(handle.try_submit(req).unwrap_or_else(|e| {
+                    panic!("round {round}: polite tenant {tenant} refused: {e:?}")
+                }));
+            }
+        }
+        // one second passes (virtually) while everything queues behind
+        // the pacer: every completion this round lands at latency = 1 s,
+        // and every bucket refills one second's worth of tokens
+        clock.advance(Duration::from_secs(1));
+        pacer.recv().unwrap();
+        for p in pendings {
+            p.recv().unwrap();
+        }
+    }
+    let m = handle.metrics();
+    let p50s = polite
+        .iter()
+        .map(|name| {
+            let t = m.tenants.iter().find(|t| t.tenant == *name).unwrap();
+            assert_eq!(t.jobs, ROUNDS * 2);
+            assert_eq!(
+                t.rejected_rate_limited + t.rejected_tenant_cap + t.rejected_queue_full,
+                0,
+                "polite tenant {name} must never be rejected"
+            );
+            t.latency_p50_ms
+        })
+        .collect();
+    let hog = m.tenants.iter().find(|t| t.tenant == "hog").map(|t| {
+        (t.admitted, t.rejected_rate_limited, t.rejected_tenant_cap, t.rejected_queue_full)
+    });
+    (p50s, hog)
+}
+
+/// The quota acceptance gate: a quota-exhausted tenant collects exactly
+/// its `RateLimited` rejections while the polite tenants' p50 completion
+/// latency (virtual clock, nonzero by construction) is bit-for-bit what
+/// it is without the hog.
+#[test]
+fn rate_limited_hog_does_not_move_polite_p50_latency() {
+    let (p50_with_hog, hog) = rate_limit_rounds(true);
+    let (p50_without_hog, none) = rate_limit_rounds(false);
+    assert!(none.is_none(), "control run has no hog series");
+    let (admitted, rate_limited, tenant_cap, queue_full) = hog.expect("hog series registered");
+    assert_eq!(admitted, 5 * 4, "4 admissions per round, 5 rounds");
+    assert_eq!(rate_limited, 5 * 5, "5 throttles per round, 5 rounds");
+    assert_eq!((tenant_cap, queue_full), (0, 0), "over-rate must map to RateLimited only");
+    assert!(
+        p50_with_hog.iter().all(|&p| p > 0.0),
+        "p50 must be a real (nonzero) measurement, not the all-zero histogram: {p50_with_hog:?}"
+    );
+    assert_eq!(
+        p50_with_hog, p50_without_hog,
+        "a throttled hog must not move polite tenants' p50 latency"
+    );
+}
+
+/// `TenantCap` service path: the in-flight slot frees exactly on
+/// completion.  A single-actor service is pinned by a long-running
+/// foreign job, so the capped tenant's queued job cannot complete while
+/// we probe the cap.
+#[test]
+fn inflight_cap_enforces_and_releases_on_completion() {
+    let clock = Arc::new(VirtualClock::new());
+    let mut cfg = config(1, 1);
+    cfg.service.tenant_inflight = 1;
+    let handle = service::spawn_with_clock(cfg, Arc::clone(&clock) as Arc<dyn Clock>).unwrap();
+    // occupy the only actor with a long job from a *different* tenant
+    // (anonymous jobs are metered as the "" tenant, so the blocker needs
+    // its own label to keep the capped tenant's quota untouched)
+    let blocker = handle
+        .submit(request((256, 256), 1, 400, "blocker"))
+        .expect("blocker admitted");
+    // the capped tenant's first job is admitted (and queued behind the
+    // blocker on the single actor)
+    let first = handle.try_submit(request((24, 24), 2, 2, "capped")).expect("cap has room");
+    // while it is in flight, every further submission is TenantCap
+    for i in 0..8u64 {
+        match handle.try_submit(request((24, 24), 10 + i, 2, "capped")) {
+            Err(SubmitError::Rejected(Rejection::TenantCap)) => {}
+            other => panic!("expected TenantCap while a job is in flight, got {other:?}"),
+        }
+    }
+    blocker.recv().unwrap();
+    first.recv().unwrap();
+    // completion released the slot: the very next submission is admitted
+    let again = handle.try_submit(request((24, 24), 99, 2, "capped")).expect("slot released");
+    again.recv().unwrap();
+    let m = handle.metrics();
+    let t = m.tenants.iter().find(|t| t.tenant == "capped").unwrap();
+    assert_eq!(t.admitted, 2);
+    assert_eq!(t.rejected_tenant_cap, 8);
+    assert_eq!(t.rejected_rate_limited, 0);
+    // the cap never throttled the *other* tenant
+    let b = m.tenants.iter().find(|t| t.tenant == "blocker").unwrap();
+    assert_eq!(b.rejected_tenant_cap, 0);
+}
+
+/// Typed refusals: a full queue is `QueueFull` (backpressure), not a
+/// tenant-quota signal, and `submit`'s legacy message is preserved.
+#[test]
+fn queue_full_is_backpressure_not_throttling() {
+    let clock = Arc::new(VirtualClock::new());
+    let mut cfg = config(1, 1);
+    cfg.service.queue_cap = 2;
+    let handle = service::spawn_with_clock(cfg, Arc::clone(&clock) as Arc<dyn Clock>).unwrap();
+    // flood a single actor; the bounded queue must refuse some with the
+    // typed QueueFull, never a tenant rejection (quotas are off)
+    let mut pendings = Vec::new();
+    let mut queue_full = 0;
+    for i in 0..64u64 {
+        match handle.try_submit(request((200, 200), i, 30, "flood")) {
+            Ok(p) => pendings.push(p),
+            Err(SubmitError::Rejected(Rejection::QueueFull)) => queue_full += 1,
+            Err(e) => panic!("unexpected refusal {e:?}"),
+        }
+    }
+    assert!(queue_full > 0, "a cap-2 queue must refuse part of a 64-job flood");
+    for p in pendings {
+        p.recv().unwrap();
+    }
+    let m = handle.metrics();
+    assert_eq!(m.rejected_queue_full, queue_full);
+    assert_eq!((m.rejected_rate_limited, m.rejected_tenant_cap), (0, 0));
+    let t = m.tenants.iter().find(|t| t.tenant == "flood").unwrap();
+    assert_eq!(t.rejected_queue_full, queue_full);
+    // the legacy string API still reads as backpressure
+    let mut cfg2 = config(1, 1);
+    cfg2.service.queue_cap = 1;
+    let h2 = service::spawn_with_clock(cfg2, Arc::new(VirtualClock::new())).unwrap();
+    let hold = h2.submit(request((200, 200), 900, 50, "x")).unwrap();
+    let mut legacy = None;
+    for i in 0..32u64 {
+        if let Err(e) = h2.submit(request((200, 200), 901 + i, 50, "x")) {
+            legacy = Some(e.to_string());
+            break;
+        }
+    }
+    assert_eq!(legacy.as_deref(), Some("service queue full (backpressure)"));
+    hold.recv().unwrap();
+}
+
+/// Shutdown drains an adaptive pool: parked slots help, queued jobs
+/// complete, nothing is dropped.
+#[test]
+fn shutdown_drains_adaptive_pool() {
+    let clock = Arc::new(VirtualClock::new());
+    let handle = service::spawn_with_clock(config(1, 4), Arc::clone(&clock) as Arc<dyn Clock>).unwrap();
+    let pendings: Vec<_> = (0..24u64)
+        .map(|i| handle.try_submit(request((64, 64), i, 3, "t")).unwrap())
+        .collect();
+    drop(handle);
+    for (i, p) in pendings.into_iter().enumerate() {
+        let resp = p.recv().unwrap_or_else(|e| panic!("job {i} dropped in shutdown: {e}"));
+        assert!(resp.cost.is_finite());
+        assert_eq!(resp.iters, 3);
+    }
+}
+
+/// The supervisor policy itself: a sustained deep queue grows the pool,
+/// a sustained empty one parks it back to `actors_min` — driven tick by
+/// tick, no background thread, no sleeps.
+#[test]
+fn supervisor_grows_under_depth_and_parks_when_idle() {
+    let clock = Arc::new(VirtualClock::new());
+    let handle = service::spawn_with_clock(config(1, 3), Arc::clone(&clock) as Arc<dyn Clock>).unwrap();
+    assert_eq!(handle.active_actors(), 1);
+    // sustained load: keep the queues over the high-water mark (max_batch
+    // = 4 queued in one class) across ticks until the supervisor grows.
+    // Jobs are long enough that the single active actor cannot drain the
+    // backlog between our ticks on any realistic machine; the loop feeds
+    // the queue again before each tick regardless, so growth is the only
+    // fixed point.
+    let mut pendings = Vec::new();
+    let mut grew = false;
+    let mut seed = 0;
+    for _ in 0..40 {
+        while handle.metrics().queue_depth < 8 {
+            seed += 1;
+            pendings.push(handle.try_submit(request((256, 256), seed, 60, "t")).unwrap());
+        }
+        if handle.supervise_once().is_some() || handle.active_actors() > 1 {
+            grew = true;
+            break;
+        }
+    }
+    assert!(grew, "sustained depth must grow the pool");
+    assert!(handle.active_actors() >= 2);
+    for p in pendings {
+        p.recv().unwrap();
+    }
+    // sustained idleness: with everything drained, ticks park back down
+    // to actors_min — and never below it
+    for _ in 0..20 {
+        handle.supervise_once();
+    }
+    assert_eq!(handle.active_actors(), 1, "idle pool must park to actors_min");
+    let m = handle.metrics();
+    assert!(m.resizes_grow >= 1);
+    assert!(m.resizes_park >= 1);
+    assert_eq!(m.active_actors, 1);
+    assert_eq!(m.parked_actors, 2);
+}
