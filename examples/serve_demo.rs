@@ -63,6 +63,7 @@ fn main() -> Result<()> {
                         fixed_iters: Some(10),
                         priority: 0,
                         tenant: Some(format!("client-{c}")),
+                        strategy: None,
                     })?;
                     assert!(resp.cost.is_finite());
                     if kind == JobKind::Grad {

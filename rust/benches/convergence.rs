@@ -1,0 +1,22 @@
+//! Bench: iterations-to-tolerance for the solve-strategy layer (plain vs
+//! warm-started vs annealed).  Counts iterations, not wall-clock, so the
+//! output is machine-independent; the derived speedup ratios are gated by
+//! `repro trajectory check` in CI via the `--smoke` record of the
+//! `speedup` bench.
+
+use flash_sinkhorn::bench::convergence;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let quick = !args.iter().any(|a| a == "--full");
+    let backend = flash_sinkhorn::default_backend().expect("backend");
+    let table =
+        convergence::convergence_table(backend.as_ref(), quick).expect("convergence table");
+    println!("{table}");
+    let rows = convergence::smoke(backend.as_ref()).expect("convergence smoke");
+    for key in ["gauss", "1d", "anneal"] {
+        if let Some(sp) = convergence::speedup_vs_plain(&rows, key) {
+            println!("{key:>7}: {sp:.2}x fewer iterations than plain");
+        }
+    }
+}

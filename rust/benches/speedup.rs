@@ -9,6 +9,7 @@
 use std::time::Instant;
 
 use flash_sinkhorn::bench;
+use flash_sinkhorn::bench::convergence;
 use flash_sinkhorn::bench::trajectory;
 use flash_sinkhorn::config::Config;
 use flash_sinkhorn::coordinator::job::{JobKind, JobRequest};
@@ -107,6 +108,29 @@ fn serve_microbench() -> f64 {
     SERVE_JOBS as f64 / t0.elapsed().as_secs_f64()
 }
 
+/// `BENCH_*.json` key for a strategy's iteration count.  Static strings
+/// because [`obj`] borrows its keys.
+fn iters_key(stem: &str) -> &'static str {
+    match stem {
+        "plain" => "conv_plain_iters",
+        "gauss" => "conv_gauss_iters",
+        "1d" => "conv_1d_iters",
+        "anneal" => "conv_anneal_iters",
+        other => panic!("unmapped convergence key stem '{other}'"),
+    }
+}
+
+/// `BENCH_*.json` key for a strategy's iterations-to-tolerance speedup
+/// over plain (the CI-gated ratios).
+fn speedup_key(stem: &str) -> &'static str {
+    match stem {
+        "gauss" => "conv_gauss_speedup",
+        "1d" => "conv_1d_speedup",
+        "anneal" => "conv_anneal_speedup",
+        other => panic!("unmapped convergence key stem '{other}'"),
+    }
+}
+
 fn smoke(backend: &dyn ComputeBackend) {
     let (n, m, d, eps) = (512usize, 512usize, 16usize, 0.1f32);
     let iters = 10usize;
@@ -134,7 +158,21 @@ fn smoke(backend: &dyn ComputeBackend) {
     let (lse_simd_s, lse_scalar_s) = lse_microbench();
     let serve_jobs_per_s = serve_microbench();
 
-    let out = obj(vec![
+    // solve-strategy race: iterations-to-tolerance per strategy on the
+    // fixed anisotropic problem (machine-independent; gated in CI)
+    let conv_rows = convergence::smoke(backend).expect("convergence smoke");
+    let mut conv_fields: Vec<(&str, flash_sinkhorn::util::json::Json)> = Vec::new();
+    for row in &conv_rows {
+        assert!(row.converged, "strategy '{}' did not converge in smoke", row.spec);
+        conv_fields.push((iters_key(row.key), num(row.iters as f64)));
+    }
+    for key in ["gauss", "1d", "anneal"] {
+        let speedup = convergence::speedup_vs_plain(&conv_rows, key)
+            .expect("plain row present in convergence smoke");
+        conv_fields.push((speedup_key(key), num(speedup)));
+    }
+
+    let mut out_fields = vec![
         ("backend", s(backend.name())),
         ("n", num(n as f64)),
         ("m", num(m as f64)),
@@ -162,7 +200,11 @@ fn smoke(backend: &dyn ComputeBackend) {
             "threads",
             num(std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1) as f64),
         ),
-    ]);
+    ];
+    // convergence keys ride at the end of the record:
+    // conv_<strategy>_iters (counts) + conv_<strategy>_speedup (gated)
+    out_fields.extend(conv_fields);
+    let out = obj(out_fields);
     let path = workspace_path(&format!("BENCH_{}.json", backend.name()));
     let text = out.to_string_compact();
     std::fs::write(&path, &text).expect("writing bench smoke json");

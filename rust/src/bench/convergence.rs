@@ -1,0 +1,180 @@
+//! Iterations-to-tolerance benchmark for the solve-strategy layer.
+//!
+//! Machine-independent by construction: the gated quantity is the
+//! *iteration count* to a fixed tolerance, not wall-clock, so the numbers
+//! are stable across CI runners (modulo f32 reduction-order noise of a
+//! couple of iterations, far inside the trajectory gate's 15% band).
+//!
+//! The workload is deliberately anisotropic: the target cloud is a
+//! per-axis affine image of a uniform cloud (axis scales 0.3..1.0, axis
+//! shifts 0..1.4 at d = 8).  On an isotropic same-law pair the Gaussian
+//! initializer's transport is near-identity and every strategy ties; the
+//! affine mismatch is exactly what the moment-matching initializers are
+//! built to absorb, so the benchmark separates them.
+
+use anyhow::Result;
+
+use crate::data::clouds::uniform_cloud;
+use crate::ot::problem::OtProblem;
+use crate::ot::solver::{Schedule, SinkhornSolver, SolverConfig};
+use crate::ot::strategy::SolveStrategy;
+use crate::runtime::ComputeBackend;
+
+/// Regularization strength of the benchmark problem (low enough that
+/// warm starts matter, high enough that plain Sinkhorn converges in
+/// budget).
+pub const CONV_EPS: f32 = 0.05;
+
+/// Convergence tolerance (sup-norm potential delta).
+pub const CONV_TOL: f32 = 1e-4;
+
+/// Iteration budget; plain Sinkhorn at [`CONV_EPS`] sits well inside it.
+pub const CONV_MAX_ITERS: usize = 20_000;
+
+/// Benchmark problem size (`smoke` and the full table's first row).
+pub const CONV_N: usize = 512;
+
+/// Benchmark dimension.
+pub const CONV_D: usize = 8;
+
+/// The strategies the benchmark races: (json key stem, spec).
+pub const CONV_STRATEGIES: &[(&str, &str)] =
+    &[("plain", "plain"), ("gauss", "gauss"), ("1d", "1d"), ("anneal", "gauss+anneal:4")];
+
+/// The benchmark instance: `x` uniform on the unit cube, `y` a per-axis
+/// affine image of an independent uniform cloud.
+pub fn conv_problem(n: usize, d: usize) -> Result<OtProblem> {
+    let x = uniform_cloud(n, d, 41);
+    let mut y = uniform_cloud(n, d, 42);
+    for j in 0..n {
+        for k in 0..d {
+            let s = 0.3 + 0.1 * k as f32;
+            let t = 0.2 * k as f32;
+            y[j * d + k] = y[j * d + k] * s + t;
+        }
+    }
+    OtProblem::uniform(x, y, n, n, d, CONV_EPS)
+}
+
+/// Unfused alternating config: every solver iteration is exactly one
+/// Sinkhorn iteration, so `report.iters` is the comparable quantity.
+fn conv_config(spec: &str) -> Result<SolverConfig> {
+    Ok(SolverConfig {
+        max_iters: CONV_MAX_ITERS,
+        tol: CONV_TOL,
+        schedule: Schedule::Alternating,
+        use_fused: false,
+        anneal_factor: 1.0,
+        prepared: true,
+        strategy: SolveStrategy::parse(spec)?,
+    })
+}
+
+/// One strategy's run on one problem.
+#[derive(Debug, Clone)]
+pub struct ConvRow {
+    /// Key stem used in `BENCH_native.json` (`conv_<key>_iters`).
+    pub key: &'static str,
+    /// The strategy spec raced.
+    pub spec: &'static str,
+    /// Iterations to [`CONV_TOL`] (all stages summed).
+    pub iters: usize,
+    /// Whether the tolerance was reached in budget.
+    pub converged: bool,
+    /// The regularized OT cost at exit (strategies must agree here).
+    pub cost: f64,
+    /// Number of stages the solve traversed.
+    pub stages: usize,
+}
+
+/// Race every [`CONV_STRATEGIES`] entry on the `n` x `n` benchmark
+/// problem.
+pub fn race(backend: &dyn ComputeBackend, n: usize, d: usize) -> Result<Vec<ConvRow>> {
+    let prob = conv_problem(n, d)?;
+    CONV_STRATEGIES
+        .iter()
+        .map(|&(key, spec)| {
+            let solver = SinkhornSolver::new(backend, conv_config(spec)?);
+            let (_, report) = solver.solve(&prob)?;
+            Ok(ConvRow {
+                key,
+                spec,
+                iters: report.iters,
+                converged: report.converged,
+                cost: report.cost,
+                stages: report.stages.len(),
+            })
+        })
+        .collect()
+}
+
+/// The `repro bench conv` table: iterations-to-tolerance per strategy at
+/// two problem sizes (one in quick mode).
+pub fn convergence_table(backend: &dyn ComputeBackend, quick: bool) -> Result<String> {
+    let sizes: &[usize] = if quick { &[256] } else { &[256, CONV_N] };
+    let mut out = String::from(
+        "Iterations to tol (sup-norm delta) by solve strategy\n\
+         eps = 0.05, tol = 1e-4, alternating, unfused\n\n\
+         | n | strategy | iters | stages | converged | OT_eps |\n\
+         |---|----------|-------|--------|-----------|--------|\n",
+    );
+    for &n in sizes {
+        for row in race(backend, n, CONV_D)? {
+            out.push_str(&format!(
+                "| {n} | {} | {} | {} | {} | {:.6} |\n",
+                row.spec, row.iters, row.stages, row.converged, row.cost
+            ));
+        }
+    }
+    Ok(out)
+}
+
+/// The smoke rows joining `BENCH_native.json` (fixed size [`CONV_N`]).
+pub fn smoke(backend: &dyn ComputeBackend) -> Result<Vec<ConvRow>> {
+    race(backend, CONV_N, CONV_D)
+}
+
+/// `plain_iters / strat_iters` for a smoke row set: > 1 means the
+/// strategy reached tolerance in fewer iterations than zero-init.
+pub fn speedup_vs_plain(rows: &[ConvRow], key: &str) -> Option<f64> {
+    let plain = rows.iter().find(|r| r.key == "plain")?;
+    let row = rows.iter().find(|r| r.key == key)?;
+    if row.iters == 0 {
+        return None;
+    }
+    Some(plain.iters as f64 / row.iters as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::native::NativeBackend;
+
+    #[test]
+    fn race_runs_and_strategies_agree_on_cost() {
+        let backend = NativeBackend::default();
+        let rows = race(&backend, 96, CONV_D).unwrap();
+        assert_eq!(rows.len(), CONV_STRATEGIES.len());
+        let plain = &rows[0];
+        assert!(plain.converged, "plain did not converge: {plain:?}");
+        for row in &rows {
+            assert!(row.converged, "{row:?}");
+            // all strategies solve the same problem to the same tolerance:
+            // costs agree to a loose bound (final delta 1e-4, cost O(1))
+            assert!(
+                (row.cost - plain.cost).abs() < 5e-3,
+                "cost mismatch: {row:?} vs plain {plain:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn speedup_helper_reads_rows() {
+        let rows = vec![
+            ConvRow { key: "plain", spec: "plain", iters: 100, converged: true, cost: 1.0, stages: 1 },
+            ConvRow { key: "gauss", spec: "gauss", iters: 50, converged: true, cost: 1.0, stages: 1 },
+        ];
+        assert_eq!(speedup_vs_plain(&rows, "gauss"), Some(2.0));
+        assert_eq!(speedup_vs_plain(&rows, "missing"), None);
+    }
+}

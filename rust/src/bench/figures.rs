@@ -131,6 +131,7 @@ pub fn figure5_8(engine: &dyn ComputeBackend, quick: bool) -> Result<String> {
         use_fused: true,
         anneal_factor: 0.9,
         prepared: true,
+        ..SolverConfig::default()
     };
     let cfg = SaddleConfig {
         max_steps: if quick { 12 } else { 60 },

@@ -128,7 +128,15 @@ pub fn table15_16(engine: &dyn ComputeBackend, quick: bool) -> Result<String> {
             let prob = OtProblem::uniform(x, y, n, n, d, 0.1)?;
             let solver = SinkhornSolver::new(
                 engine,
-                SolverConfig { max_iters: 100, tol: 1e-5, schedule: Schedule::Alternating, use_fused: true, anneal_factor: 1.0, prepared: true },
+                SolverConfig {
+                    max_iters: 100,
+                    tol: 1e-5,
+                    schedule: Schedule::Alternating,
+                    use_fused: true,
+                    anneal_factor: 1.0,
+                    prepared: true,
+                    ..SolverConfig::default()
+                },
             );
             let (pot, _) = solver.solve(&prob)?;
             let oracle = HvpOracle::new(engine, &router, &prob, &pot, 1e-5, 1e-6, 50)?;

@@ -130,6 +130,7 @@ pub fn table21(engine: &dyn ComputeBackend, quick: bool) -> Result<String> {
             use_fused: true,
             anneal_factor: 1.0,
             prepared: true,
+            ..SolverConfig::default()
         };
         let solver = SinkhornSolver::new(engine, cfg);
         let t0 = std::time::Instant::now();

@@ -3,6 +3,7 @@
 //! `repro bench` CLI and the criterion benches.
 
 pub mod ablation;
+pub mod convergence;
 pub mod figures;
 pub mod hvp_tables;
 pub mod low_eps;
@@ -40,6 +41,7 @@ pub fn run_table(engine: &dyn ComputeBackend, id: &str, out_dir: &str, quick: bo
         "fig5" | "fig8" => figures::figure5_8(engine, quick),
         "perf" => perf::perf_table(engine, quick),
         "ablation" => ablation::ablation_table(engine, quick),
+        "conv" => convergence::convergence_table(engine, quick),
         other => anyhow::bail!("unknown table/figure id '{other}'"),
     }?;
     let path = format!("{out_dir}/table_{id}.md");
@@ -49,5 +51,5 @@ pub fn run_table(engine: &dyn ComputeBackend, id: &str, out_dir: &str, quick: bo
 
 pub const ALL_IDS: &[&str] = &[
     "2", "3", "6", "8", "10", "12", "14", "15", "17", "19", "20", "21", "22", "23", "fig3",
-    "fig4", "fig5", "perf", "ablation",
+    "fig4", "fig5", "perf", "ablation", "conv",
 ];

@@ -17,6 +17,13 @@
 //! The regression metric is deliberately the *speedup ratio*, not wall
 //! time: CI runners vary wildly in absolute speed, but SIMD-vs-scalar in
 //! the same process on the same data cancels the machine out.
+//!
+//! The same gate covers the solve-strategy convergence metrics
+//! (`conv_*_speedup`: plain-vs-strategy iterations-to-tolerance ratios,
+//! see [`super::convergence`]).  Those are iteration *counts*, so they are
+//! machine-independent outright; a key present in the baseline must not
+//! degrade past `max_regress`, while keys absent from an older baseline
+//! are skipped (forward compatibility).
 
 use anyhow::{bail, Context, Result};
 
@@ -31,6 +38,10 @@ pub const DEFAULT_TRAJECTORY: &str = "BENCH_trajectory.jsonl";
 /// Default allowed relative degradation of `lse_simd_speedup` (15%).
 pub const DEFAULT_MAX_REGRESS: f64 = 0.15;
 
+/// Convergence ratio keys the gate watches when the baseline has them.
+pub const CONV_GATED_KEYS: &[&str] =
+    &["conv_gauss_speedup", "conv_1d_speedup", "conv_anneal_speedup"];
+
 /// Outcome of a baseline comparison.
 #[derive(Debug, Clone)]
 pub struct Comparison {
@@ -38,6 +49,8 @@ pub struct Comparison {
     pub current_speedup: f64,
     pub baseline_ms: f64,
     pub current_ms: f64,
+    /// Per-key convergence-gate results: (key, baseline, current, regressed).
+    pub conv: Vec<(String, f64, f64, bool)>,
     pub regressed: bool,
     pub summary: String,
 }
@@ -94,19 +107,44 @@ pub fn compare(baseline: &Json, current: &Json, max_regress: f64) -> Result<Comp
     if !(0.0..1.0).contains(&max_regress) {
         bail!("max_regress must be in [0, 1), got {max_regress}");
     }
-    let regressed = current_speedup < baseline_speedup * (1.0 - max_regress);
-    let summary = format!(
+    let lse_regressed = current_speedup < baseline_speedup * (1.0 - max_regress);
+    let mut summary = format!(
         "LSE microkernel: baseline {baseline_ms:.1} ms ({baseline_speedup:.2}x vs scalar), \
          current {current_ms:.1} ms ({current_speedup:.2}x vs scalar), \
          allowed regression {:.0}% -> {}",
         max_regress * 100.0,
-        if regressed { "REGRESSED" } else { "ok" }
+        if lse_regressed { "REGRESSED" } else { "ok" }
     );
+    // convergence ratios: gate every key the baseline carries; a current
+    // record missing a baselined key is itself a regression (the metric
+    // silently disappearing must not pass)
+    let mut conv = Vec::new();
+    for &key in CONV_GATED_KEYS {
+        let Some(base_v) = baseline.get(key) else { continue };
+        let base_v = base_v.as_f64()?;
+        if !(base_v.is_finite() && base_v > 0.0) {
+            bail!("bad baseline {key}: {base_v}");
+        }
+        let (cur_v, key_regressed) = match current.get(key) {
+            None => (f64::NAN, true),
+            Some(v) => {
+                let cur_v = v.as_f64()?;
+                (cur_v, !(cur_v.is_finite() && cur_v >= base_v * (1.0 - max_regress)))
+            }
+        };
+        summary.push_str(&format!(
+            "\n{key}: baseline {base_v:.2}x, current {cur_v:.2}x -> {}",
+            if key_regressed { "REGRESSED" } else { "ok" }
+        ));
+        conv.push((key.to_string(), base_v, cur_v, key_regressed));
+    }
+    let regressed = lse_regressed || conv.iter().any(|(_, _, _, r)| *r);
     Ok(Comparison {
         baseline_speedup,
         current_speedup,
         baseline_ms,
         current_ms,
+        conv,
         regressed,
         summary,
     })
@@ -147,6 +185,39 @@ mod tests {
         let c = compare(&base, &record(1.5, 133.0), 0.15).unwrap();
         assert!(c.regressed);
         assert!(c.summary.contains("REGRESSED"), "{}", c.summary);
+    }
+
+    fn record_with_conv(speedup: f64, ms: f64, conv_gauss: f64) -> Json {
+        obj(vec![
+            ("lse_simd_speedup", num(speedup)),
+            ("lse_simd_ms", num(ms)),
+            ("conv_gauss_speedup", num(conv_gauss)),
+        ])
+    }
+
+    #[test]
+    fn conv_keys_gate_when_baselined() {
+        let base = record_with_conv(2.0, 100.0, 3.0);
+        // inside the band
+        let c = compare(&base, &record_with_conv(2.0, 100.0, 2.7), 0.15).unwrap();
+        assert!(!c.regressed, "{}", c.summary);
+        assert_eq!(c.conv.len(), 1);
+        // conv ratio collapsed: regressed even though LSE is fine
+        let c = compare(&base, &record_with_conv(2.0, 100.0, 1.0), 0.15).unwrap();
+        assert!(c.regressed);
+        assert!(c.summary.contains("conv_gauss_speedup"), "{}", c.summary);
+        // key vanished from the current record: regressed
+        let c = compare(&base, &record(2.0, 100.0), 0.15).unwrap();
+        assert!(c.regressed, "{}", c.summary);
+    }
+
+    #[test]
+    fn conv_keys_skip_when_baseline_lacks_them() {
+        // old baseline without conv keys gates only the LSE pair, even if
+        // the current record carries them (forward compatibility)
+        let c = compare(&record(2.0, 100.0), &record_with_conv(2.0, 100.0, 3.0), 0.15).unwrap();
+        assert!(!c.regressed);
+        assert!(c.conv.is_empty());
     }
 
     #[test]

@@ -40,6 +40,12 @@ pub struct SolverSection {
     pub use_fused: bool,
     /// eps-annealing factor in (0, 1]; 1.0 disables (section H.4: 0.9).
     pub anneal_factor: f32,
+    /// Solve-strategy spec, e.g. "plain", "gauss", "1d+anneal:4",
+    /// "gauss+anneal+newton:1e-2" (see `ot::strategy`).  Defaults from
+    /// `FLASH_SINKHORN_STRATEGY` (unset = "plain"); the config keys
+    /// (top-level `"strategy"` or `solver.strategy`) and the
+    /// `repro solve --strategy` flag override it, in that order.
+    pub strategy: String,
 }
 
 #[derive(Debug, Clone)]
@@ -109,6 +115,8 @@ impl Default for Config {
                 schedule: "auto".into(),
                 use_fused: true,
                 anneal_factor: 1.0,
+                strategy: std::env::var("FLASH_SINKHORN_STRATEGY")
+                    .unwrap_or_else(|_| "plain".into()),
             },
             service: ServiceSection {
                 max_batch: 16,
@@ -169,6 +177,11 @@ impl Config {
         if let Some(v) = j.get("artifact_dir") {
             cfg.artifact_dir = v.as_str()?.to_string();
         }
+        // top-level "strategy" is shorthand for solver.strategy (the
+        // nested key, when also present, wins)
+        if let Some(v) = j.get("strategy") {
+            cfg.solver.strategy = v.as_str()?.to_string();
+        }
         if let Some(s) = j.get("solver") {
             upd_usize(s, "max_iters", &mut cfg.solver.max_iters)?;
             upd_f32(s, "tol", &mut cfg.solver.tol)?;
@@ -179,7 +192,13 @@ impl Config {
                 cfg.solver.use_fused = v.as_bool()?;
             }
             upd_f32(s, "anneal_factor", &mut cfg.solver.anneal_factor)?;
+            if let Some(v) = s.get("strategy") {
+                cfg.solver.strategy = v.as_str()?.to_string();
+            }
         }
+        // fail at load time, not mid-solve
+        crate::ot::strategy::SolveStrategy::parse(&cfg.solver.strategy)
+            .with_context(|| format!("config key 'strategy' = {:?}", cfg.solver.strategy))?;
         if let Some(s) = j.get("service") {
             upd_usize(s, "max_batch", &mut cfg.service.max_batch)?;
             if let Some(v) = s.get("max_wait_ms") {
@@ -284,6 +303,24 @@ mod tests {
         assert_eq!(cfg.service.tenant_inflight, 3);
         assert!(Config::from_json(r#"{"service": {"actors_min": -1}}"#).is_err());
         assert!(Config::from_json(r#"{"service": {"tenant_rate": "fast"}}"#).is_err());
+    }
+
+    #[test]
+    fn strategy_key_parses_at_both_levels_and_validates() {
+        // (FLASH_SINKHORN_STRATEGY is not set in the test environment)
+        assert_eq!(Config::from_json("{}").unwrap().solver.strategy, "plain");
+        let top = Config::from_json(r#"{"strategy": "gauss+anneal:3"}"#).unwrap();
+        assert_eq!(top.solver.strategy, "gauss+anneal:3");
+        // the nested key wins over the top-level shorthand
+        let both = Config::from_json(
+            r#"{"strategy": "gauss", "solver": {"strategy": "1d+newton"}}"#,
+        )
+        .unwrap();
+        assert_eq!(both.solver.strategy, "1d+newton");
+        // bad specs fail at load time
+        let err = Config::from_json(r#"{"strategy": "warp"}"#).unwrap_err().to_string();
+        assert!(err.contains("strategy"), "{err}");
+        assert!(Config::from_json(r#"{"solver": {"strategy": "anneal:0"}}"#).is_err());
     }
 
     #[test]

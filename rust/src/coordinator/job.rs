@@ -29,23 +29,34 @@ pub struct JobRequest {
     /// (`Metrics::snapshot().tenants`).  `None` folds into the anonymous
     /// aggregate only.
     pub tenant: Option<String>,
+    /// Override the service's solve strategy for this job (a spec string,
+    /// see [`crate::ot::strategy::SolveStrategy::parse`]).  `None` uses
+    /// the service config's `solver.strategy`.
+    pub strategy: Option<String>,
 }
 
 impl JobRequest {
     /// A plain request with default scheduling (priority 0, no tenant, the
     /// solver's own iteration budget).
     pub fn new(kind: JobKind, problem: OtProblem) -> Self {
-        Self { kind, problem, fixed_iters: None, priority: 0, tenant: None }
+        Self { kind, problem, fixed_iters: None, priority: 0, tenant: None, strategy: None }
     }
 
     /// Same, with the iteration budget pinned (paper benchmarks fix 10).
     pub fn with_fixed_iters(kind: JobKind, problem: OtProblem, iters: usize) -> Self {
-        Self { kind, problem, fixed_iters: Some(iters), priority: 0, tenant: None }
+        Self { fixed_iters: Some(iters), ..Self::new(kind, problem) }
     }
 
     /// Attach a tenant label (admission quotas + per-tenant metrics key).
     pub fn for_tenant(mut self, tenant: impl Into<String>) -> Self {
         self.tenant = Some(tenant.into());
+        self
+    }
+
+    /// Attach a per-job solve-strategy override (spec string, validated
+    /// when the job runs).
+    pub fn with_strategy(mut self, spec: impl Into<String>) -> Self {
+        self.strategy = Some(spec.into());
         self
     }
 

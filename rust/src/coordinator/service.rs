@@ -73,6 +73,7 @@ use anyhow::{anyhow, Result};
 use crate::config::{Config, ServiceSection};
 use crate::native::pool;
 use crate::ot::solver::{Schedule, SinkhornSolver, SolverConfig};
+use crate::ot::strategy::SolveStrategy;
 use crate::ot::Transport;
 use crate::runtime::ComputeBackend;
 
@@ -470,7 +471,7 @@ fn spawn_inner(
         admission_enabled: policy.any_limit(),
         clock,
     });
-    let solver_cfg = SolverConfig::from_section(&config.solver);
+    let solver_cfg = SolverConfig::from_section(&config.solver)?;
 
     // Shut everything down (actors drain and exit) and report the error.
     let fail = |e: anyhow::Error| -> anyhow::Error {
@@ -724,13 +725,21 @@ fn run_job(
     base_cfg: &SolverConfig,
     req: &JobRequest,
 ) -> Result<JobResponse> {
-    let (pot, report) = match req.fixed_iters {
-        Some(k) => {
-            let cfg = SolverConfig { max_iters: k, tol: 0.0, ..base_cfg.clone() };
-            let s = SinkhornSolver::new(backend, cfg);
-            s.solve(&req.problem)?
+    // per-job overrides: iteration budget and/or solve strategy.  Only
+    // build a fresh solver when the job actually deviates from the
+    // service-wide config.
+    let (pot, report) = if req.fixed_iters.is_some() || req.strategy.is_some() {
+        let mut cfg = base_cfg.clone();
+        if let Some(k) = req.fixed_iters {
+            cfg.max_iters = k;
+            cfg.tol = 0.0;
         }
-        None => solver.solve(&req.problem)?,
+        if let Some(spec) = &req.strategy {
+            cfg.strategy = SolveStrategy::parse(spec)?;
+        }
+        SinkhornSolver::new(backend, cfg).solve(&req.problem)?
+    } else {
+        solver.solve(&req.problem)?
     };
     let grad = match req.kind {
         JobKind::Solve => None,

@@ -63,6 +63,7 @@ pub mod prelude {
     pub use crate::native::NativeBackend;
     pub use crate::ot::problem::OtProblem;
     pub use crate::ot::solver::{Potentials, Schedule, SinkhornSolver, SolverConfig};
+    pub use crate::ot::strategy::SolveStrategy;
     #[cfg(feature = "pjrt")]
     pub use crate::runtime::engine::Engine;
     pub use crate::runtime::tensor::Tensor;

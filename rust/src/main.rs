@@ -24,6 +24,7 @@ use flash_sinkhorn::iomodel::plans::{Pass, Workload};
 use flash_sinkhorn::iomodel::profile::ncu_style_table;
 use flash_sinkhorn::ot::problem::OtProblem;
 use flash_sinkhorn::ot::solver::{Schedule, SinkhornSolver, SolverConfig};
+use flash_sinkhorn::ot::strategy::SolveStrategy;
 use flash_sinkhorn::otdd;
 use flash_sinkhorn::regression::{run_saddle_escape, SaddleConfig, ShuffledRegression};
 use flash_sinkhorn::runtime::ComputeBackend;
@@ -36,6 +37,9 @@ USAGE: repro [--config path.json] <command> [flags]
 
 COMMANDS:
   solve    [--n 500] [--m 600] [--d 16] [--eps 0.1] [--schedule alternating]
+           [--strategy plain|gauss|1d[+anneal[:K]][+newton[:T]]]
+           (strategy precedence: flag > config \"strategy\"/solver.strategy
+            > FLASH_SINKHORN_STRATEGY env > plain)
   bench    [id | all] [--quick]        regenerate paper tables/figures
   profile  [--n 10000] [--d 64] [--iters 10]
   otdd     [--n 400] [--d 64]
@@ -75,7 +79,7 @@ fn main() -> Result<()> {
 
     match cmd.as_str() {
         "solve" => {
-            args.ensure_known(&["n", "m", "d", "eps", "schedule"])?;
+            args.ensure_known(&["n", "m", "d", "eps", "schedule", "strategy"])?;
             let (n, m, d) = (args.usize("n", 500)?, args.usize("m", 600)?, args.usize("d", 16)?);
             let eps = args.f32("eps", 0.1)?;
             let backend = flash_sinkhorn::backend_from_config(&cfg)?;
@@ -87,19 +91,41 @@ fn main() -> Result<()> {
                 d,
                 eps,
             )?;
-            let mut scfg = SolverConfig::from_section(&cfg.solver);
+            let mut scfg = SolverConfig::from_section(&cfg.solver)?;
             scfg.schedule = Schedule::parse(&args.string("schedule", "alternating"));
+            // precedence: CLI flag > config key / env (already folded into
+            // cfg.solver.strategy by Config)
+            scfg.strategy =
+                SolveStrategy::parse(&args.string("strategy", &cfg.solver.strategy))?;
+            let strategy = scfg.strategy.clone();
             let solver = SinkhornSolver::new(backend.as_ref(), scfg);
             let (_, report) = solver.solve(&prob)?;
             println!(
-                "OT_eps = {:.6}  iters = {}  delta = {:.2e}  converged = {}  bucket = {:?}  wall = {:?}",
+                "OT_eps = {:.6}  iters = {}  delta = {:.2e}  converged = {}  bucket = {:?}  wall = {:?}  strategy = {}",
                 report.cost,
                 report.iters,
                 report.final_delta,
                 report.converged,
                 report.bucket,
-                report.wall
+                report.wall,
+                strategy,
             );
+            if report.stages.len() > 1 {
+                for (i, st) in report.stages.iter().enumerate() {
+                    println!(
+                        "  stage {i}: {:<8} eps = {:<10.4} iters = {:<5} exit = {:.2e}{}",
+                        st.kind,
+                        st.eps,
+                        st.iters,
+                        st.final_delta,
+                        if st.cg_iters > 0 {
+                            format!("  cg = {}", st.cg_iters)
+                        } else {
+                            String::new()
+                        },
+                    );
+                }
+            }
         }
         "bench" => {
             let backend = flash_sinkhorn::backend_from_config(&cfg)?;
@@ -146,7 +172,7 @@ fn main() -> Result<()> {
             let (workload, w_star) = ShuffledRegression::synthetic(n, eps, 0.05, 7);
             let solver_cfg = SolverConfig {
                 anneal_factor: 0.9,
-                ..SolverConfig::from_section(&cfg.solver)
+                ..SolverConfig::from_section(&cfg.solver)?
             };
             let mut rng = flash_sinkhorn::data::rng::Rng::new(3);
             let w0: Vec<f32> =
@@ -271,7 +297,7 @@ fn main() -> Result<()> {
                     let cmp = trajectory::check(&baseline, &current, max_regress)?;
                     println!("{}", cmp.summary);
                     if cmp.regressed {
-                        bail!("LSE microkernel perf regression vs {baseline}");
+                        bail!("perf/convergence trajectory regression vs {baseline}");
                     }
                 }
                 "show" => {

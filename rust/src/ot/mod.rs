@@ -7,7 +7,9 @@ pub mod cost;
 pub mod divergence;
 pub mod problem;
 pub mod solver;
+pub mod strategy;
 
 pub use apply::Transport;
 pub use problem::OtProblem;
-pub use solver::{Potentials, Schedule, SinkhornSolver, SolveReport, SolverConfig};
+pub use solver::{Potentials, Schedule, SinkhornSolver, SolveReport, SolverConfig, StageTrace};
+pub use strategy::SolveStrategy;

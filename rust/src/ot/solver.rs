@@ -5,6 +5,11 @@
 //! convergence control, and the prepared-call hot path.  The loop is
 //! backend-agnostic: the same driver runs on the native tiled-LSE backend
 //! and (with `--features pjrt`) on precompiled HLO artifacts.
+//!
+//! On top of the loop sits the composable policy layer
+//! ([`super::strategy::SolveStrategy`]): dual initializers, staged epsilon
+//! annealing and the truncated-Newton switch-over.  The default `plain`
+//! strategy runs the legacy loop bit-for-bit.
 
 use std::time::Instant;
 
@@ -15,6 +20,7 @@ use crate::runtime::{ComputeBackend, PreparedCall, Tensor};
 
 use super::cost::dual_cost;
 use super::problem::OtProblem;
+use super::strategy::{anneal, newton, SolveStrategy};
 
 /// Update schedule (paper eq. 2-3 vs eq. 4-5).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -73,7 +79,7 @@ impl Schedule {
 /// Iteration-loop configuration for [`SinkhornSolver`].
 #[derive(Debug, Clone)]
 pub struct SolverConfig {
-    /// Maximum Sinkhorn iterations (per eps level when annealing).
+    /// Maximum Sinkhorn iterations (total across all annealing stages).
     pub max_iters: usize,
     /// Stop when the sup-norm potential change drops below this.
     pub tol: f32,
@@ -83,12 +89,18 @@ pub struct SolverConfig {
     /// from tolerance.
     pub use_fused: bool,
     /// Epsilon annealing factor in (0, 1]; 1.0 disables (section H.4: 0.9).
+    /// This is the legacy one-iteration-per-level ladder; it is superseded
+    /// (and ignored) when the strategy carries a staged [`anneal`] schedule.
     pub anneal_factor: f32,
     /// Hot-path optimization: freeze the static inputs (points, weights)
     /// in a [`PreparedCall`] once per solve so the iteration loop streams
     /// only the evolving potentials.  `false` selects the naive
     /// rebuild-every-iteration path (kept for before/after measurement).
     pub prepared: bool,
+    /// The solve policy: dual init + staged annealing + Newton hand-off.
+    /// [`SolveStrategy::plain`] (the default) is the legacy loop,
+    /// bit-for-bit.
+    pub strategy: SolveStrategy,
 }
 
 impl Default for SolverConfig {
@@ -100,21 +112,24 @@ impl Default for SolverConfig {
             use_fused: true,
             anneal_factor: 1.0,
             prepared: true,
+            strategy: SolveStrategy::plain(),
         }
     }
 }
 
 impl SolverConfig {
-    /// Build from the launcher's JSON `solver` section.
-    pub fn from_section(s: &crate::config::SolverSection) -> Self {
-        Self {
+    /// Build from the launcher's JSON `solver` section.  Errors when the
+    /// section's strategy spec does not parse.
+    pub fn from_section(s: &crate::config::SolverSection) -> Result<Self> {
+        Ok(Self {
             max_iters: s.max_iters,
             tol: s.tol,
             schedule: Schedule::parse(&s.schedule),
             use_fused: s.use_fused,
             anneal_factor: s.anneal_factor,
             prepared: true,
-        }
+            strategy: SolveStrategy::parse(&s.strategy)?,
+        })
     }
 
     /// A budget-pinned config: exactly `iters` iterations, no tolerance
@@ -133,16 +148,37 @@ pub struct Potentials {
     pub ghat: Vec<f32>,
 }
 
+/// One entry of a solve's per-stage trajectory ([`SolveReport::stages`]).
+#[derive(Debug, Clone)]
+pub struct StageTrace {
+    /// `"sinkhorn"` or `"newton"`.
+    pub kind: &'static str,
+    /// Regularization strength this stage ran at.
+    pub eps: f32,
+    /// Iterations (Sinkhorn) or accepted outer steps (Newton) spent here.
+    pub iters: usize,
+    /// Sup-norm potential delta (Sinkhorn) or L1 marginal error (Newton)
+    /// at stage exit.
+    pub final_delta: f32,
+    /// Total CG iterations (Newton stages; 0 otherwise).
+    pub cg_iters: usize,
+}
+
 /// What a solve did: iterations, convergence, cost, timing, routing.
 #[derive(Debug, Clone)]
 pub struct SolveReport {
-    /// Sinkhorn iterations actually run.
+    /// Iterations actually run (Sinkhorn iterations + Newton outer steps,
+    /// summed across all stages).
     pub iters: usize,
-    /// Last sup-norm potential change observed.
+    /// Last convergence measure observed: the sup-norm potential change
+    /// for Sinkhorn-final solves, the L1 marginal error when a Newton
+    /// polish converged the solve.
     pub final_delta: f32,
     /// The regularized OT cost `OT_eps` (dual objective).
     pub cost: f64,
-    /// True when `final_delta` dropped below the tolerance in budget.
+    /// True when the solve reached its tolerance in budget (Sinkhorn
+    /// delta below `tol`, or the Newton polish below its marginal
+    /// tolerance).
     pub converged: bool,
     /// Wall-clock time of the solve.
     pub wall: std::time::Duration,
@@ -150,6 +186,10 @@ pub struct SolveReport {
     pub schedule: Schedule,
     /// The (n, m, d) bucket the problem routed into.
     pub bucket: (usize, usize, usize),
+    /// Per-stage trajectory: one entry per annealing stage, plus the
+    /// Newton polish and any post-fallback Sinkhorn resume.  Plain solves
+    /// have exactly one entry.
+    pub stages: Vec<StageTrace>,
 }
 
 /// The L3 iteration-loop driver: schedules backend step ops, controls
@@ -212,10 +252,13 @@ impl<'e> SinkhornSolver<'e> {
         let t0 = Instant::now();
         let schedule = self.cfg.schedule.resolve(prob.n, prob.m, prob.d);
         let k_fused = self.backend.k_fused();
+        let strategy = &self.cfg.strategy;
 
-        // init = unshifted f = g = 0  =>  fhat = -alpha, ghat = -beta.
-        let mut f = Tensor::vector(neg_padded(&ctx.alpha, ctx.bucket.n));
-        let mut g = Tensor::vector(neg_padded(&ctx.beta, ctx.bucket.m));
+        // dual init: zeros (unshifted f = g = 0 => fhat = -alpha,
+        // ghat = -beta) or a strategy warm start
+        let (fhat0, ghat0) = strategy.init.shifted_duals(prob);
+        let mut f = Tensor::vector(padded(&fhat0, ctx.bucket.n));
+        let mut g = Tensor::vector(padded(&ghat0, ctx.bucket.m));
 
         let step_key = ctx.key(schedule.step_op());
         let fused_key = ctx.key(&schedule.fused_op(k_fused));
@@ -269,9 +312,32 @@ impl<'e> SinkhornSolver<'e> {
 
         let mut iters = 0usize;
         let mut delta = f32::INFINITY;
+        let mut stages: Vec<StageTrace> = Vec::new();
 
-        // epsilon annealing ladder (one iteration per level).
-        if self.cfg.anneal_factor < 1.0 {
+        // one Sinkhorn stage at a fixed eps, sharing the global budget
+        let sinkhorn_stage =
+            |eps_s: f32, tol_s: f32, f: &mut Tensor, g: &mut Tensor, iters: &mut usize| -> Result<f32> {
+                let mut delta = f32::INFINITY;
+                while *iters < self.cfg.max_iters && delta > tol_s {
+                    if let (Some(fused), true) =
+                        (&fused_call, self.cfg.max_iters - *iters >= k_fused)
+                    {
+                        delta = run(fused, f, g, eps_s)?;
+                        *iters += k_fused;
+                    } else {
+                        delta = run(&step_call, f, g, eps_s)?;
+                        *iters += 1;
+                    }
+                }
+                Ok(delta)
+            };
+
+        // Stage ladder: [prob.eps] unless the strategy anneals.  The
+        // legacy one-iteration-per-level H.4 ladder only runs when staged
+        // annealing is off, so `anneal:1` stays bitwise `plain`.
+        let eps_levels = strategy.eps_stages(prob);
+        let n_levels = eps_levels.len();
+        if n_levels == 1 && self.cfg.anneal_factor < 1.0 {
             let mut eps_level = prob.sq_diameter().max(prob.eps);
             while eps_level > prob.eps && iters < self.cfg.max_iters {
                 run(&step_call, &mut f, &mut g, eps_level)?;
@@ -279,17 +345,60 @@ impl<'e> SinkhornSolver<'e> {
                 iters += 1;
             }
         }
+        for (si, &eps_s) in eps_levels.iter().enumerate() {
+            let last = si + 1 == n_levels;
+            let mut tol_s = if last { self.cfg.tol } else { anneal::stage_tol(self.cfg.tol) };
+            if last {
+                // with a Newton hand-off configured, the final Sinkhorn
+                // stage only has to reach the switch-over point
+                if let Some(np) = &strategy.newton {
+                    tol_s = tol_s.max(np.switch_at);
+                }
+            }
+            let start = iters;
+            delta = sinkhorn_stage(eps_s, tol_s, &mut f, &mut g, &mut iters)?;
+            stages.push(StageTrace {
+                kind: "sinkhorn",
+                eps: eps_s,
+                iters: iters - start,
+                final_delta: delta,
+                cg_iters: 0,
+            });
+        }
 
-        // main loop at target eps.
-        while iters < self.cfg.max_iters && delta > self.cfg.tol {
-            if let (Some(fused), true) =
-                (&fused_call, self.cfg.max_iters - iters >= k_fused)
-            {
-                delta = run(fused, &mut f, &mut g, prob.eps)?;
-                iters += k_fused;
+        // Newton polish at target eps, with a Sinkhorn resume on fallback.
+        let mut newton_converged = false;
+        if let Some(np) = &strategy.newton {
+            let mut pot = Potentials {
+                fhat: f.as_f32()?[..prob.n].to_vec(),
+                ghat: g.as_f32()?[..prob.m].to_vec(),
+            };
+            let out = newton::polish(self.backend, ctx, &mut pot, np)?;
+            iters += out.steps;
+            stages.push(StageTrace {
+                kind: "newton",
+                eps: prob.eps,
+                iters: out.steps,
+                final_delta: out.final_marginal_err,
+                cg_iters: out.cg_iters,
+            });
+            f = Tensor::vector(padded(&pot.fhat, ctx.bucket.n));
+            g = Tensor::vector(padded(&pot.ghat, ctx.bucket.m));
+            if out.converged {
+                newton_converged = true;
+                delta = out.final_marginal_err;
             } else {
-                delta = run(&step_call, &mut f, &mut g, prob.eps)?;
-                iters += 1;
+                // clean fallback: finish with plain Sinkhorn on whatever
+                // budget remains
+                let start = iters;
+                delta = sinkhorn_stage(prob.eps, self.cfg.tol, &mut f, &mut g, &mut iters)?;
+                stages.push(StageTrace {
+                    kind: "sinkhorn",
+                    eps: prob.eps,
+                    iters: iters - start,
+                    final_delta: delta,
+                    cg_iters: 0,
+                });
             }
         }
 
@@ -302,20 +411,20 @@ impl<'e> SinkhornSolver<'e> {
             iters,
             final_delta: delta,
             cost,
-            converged: delta <= self.cfg.tol,
+            converged: delta <= self.cfg.tol || newton_converged,
             wall: t0.elapsed(),
             schedule,
             bucket: (ctx.bucket.n, ctx.bucket.m, ctx.bucket.d),
+            stages,
         };
         Ok((pot, report))
     }
 }
 
-fn neg_padded(v: &[f32], len: usize) -> Vec<f32> {
+/// Copy `v` into a zero-padded vector of length `len`.
+fn padded(v: &[f32], len: usize) -> Vec<f32> {
     let mut out = vec![0.0f32; len];
-    for (o, &x) in out.iter_mut().zip(v) {
-        *o = -x;
-    }
+    out[..v.len()].copy_from_slice(v);
     out
 }
 
@@ -334,8 +443,8 @@ mod tests {
     }
 
     #[test]
-    fn neg_padded_layout() {
-        assert_eq!(neg_padded(&[1.0, 2.0], 4), vec![-1.0, -2.0, 0.0, 0.0]);
+    fn padded_layout() {
+        assert_eq!(padded(&[1.0, -2.0], 4), vec![1.0, -2.0, 0.0, 0.0]);
     }
 
     #[test]
@@ -343,6 +452,7 @@ mod tests {
         let cfg = SolverConfig::fixed_iters(10, Schedule::Symmetric);
         assert_eq!(cfg.max_iters, 10);
         assert_eq!(cfg.tol, 0.0);
+        assert!(cfg.strategy.is_plain());
     }
 
     #[test]
@@ -364,5 +474,10 @@ mod tests {
         assert_eq!(pot.ghat.len(), 50);
         assert_eq!(report.bucket, (40, 50, 3));
         assert!(report.cost.is_finite());
+        // plain solves report exactly one Sinkhorn stage
+        assert_eq!(report.stages.len(), 1);
+        assert_eq!(report.stages[0].kind, "sinkhorn");
+        assert_eq!(report.stages[0].iters, report.iters);
+        assert_eq!(report.stages[0].eps, 0.2);
     }
 }

@@ -1,0 +1,247 @@
+//! Composable solve strategies: the policy layer above the Sinkhorn loop.
+//!
+//! A [`SolveStrategy`] bundles three orthogonal convergence levers, all of
+//! them backend-agnostic (they drive [`crate::runtime::ComputeBackend`] ops
+//! and never touch kernel internals):
+//!
+//! * **Dual initialization** ([`init::Initializer`]): where the iteration
+//!   starts.  Besides the default zeros, the Thornton-Cuturi Gaussian
+//!   approximation and 1-D projection initializers build warm duals from
+//!   streaming per-marginal reductions (linear memory, one pass over the
+//!   points).
+//! * **Epsilon annealing** ([`anneal::AnnealSchedule`]): a geometric ladder
+//!   of intermediate regularization strengths from a diameter-scaled start
+//!   down to the target, duals carried across stages (safe since PR 2's
+//!   explicit zero-weight masking ignores stale duals on empty support).
+//! * **Newton switch-over** ([`newton::NewtonPolicy`]): once the Sinkhorn
+//!   phase reaches a coarse threshold, hand off to a truncated-Newton
+//!   polish on the dual system, reusing the existing Schur/CG machinery
+//!   ([`crate::ot::apply::SchurOp`], [`crate::hvp::cg`]).  Falls back to
+//!   plain Sinkhorn iterations when the inner solve does not converge.
+//!
+//! Strategies parse from a compact `+`-separated spec (config key
+//! `solver.strategy`, env `FLASH_SINKHORN_STRATEGY`, CLI `--strategy`):
+//!
+//! ```text
+//! plain                 the legacy solver, bit-for-bit
+//! gauss                 Gaussian-approximation dual init
+//! 1d                    1-D projection dual init
+//! gauss+anneal:4        Gaussian init + 4-stage epsilon ladder
+//! zeros+anneal          zero init + default ladder (4 stages)
+//! gauss+newton:1e-2     Gaussian init + Newton hand-off at delta 1e-2
+//! gauss+anneal+newton   all three composed
+//! ```
+//!
+//! The `plain` strategy is the identity policy: the driver runs the exact
+//! legacy code path, so results are bitwise identical to the pre-strategy
+//! solver.  `anneal:1` degenerates to the same single-stage loop and is
+//! likewise bitwise `plain` (covered by tests).
+
+pub mod anneal;
+pub mod init;
+pub mod newton;
+
+use anyhow::{bail, Result};
+
+pub use anneal::AnnealSchedule;
+pub use init::Initializer;
+pub use newton::NewtonPolicy;
+
+use super::problem::OtProblem;
+
+/// A composed solve policy: initialization + annealing + Newton hand-off.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SolveStrategy {
+    /// Where the dual iteration starts.
+    pub init: Initializer,
+    /// Optional epsilon ladder run before the target-eps stage.
+    pub anneal: Option<AnnealSchedule>,
+    /// Optional truncated-Newton polish after the Sinkhorn phase.
+    pub newton: Option<NewtonPolicy>,
+}
+
+impl Default for SolveStrategy {
+    fn default() -> Self {
+        Self::plain()
+    }
+}
+
+impl SolveStrategy {
+    /// The identity policy: zero init, no annealing, no Newton -- the
+    /// legacy solver, bit-for-bit.
+    pub fn plain() -> Self {
+        Self { init: Initializer::Zeros, anneal: None, newton: None }
+    }
+
+    /// True when this strategy changes nothing about the legacy loop.
+    pub fn is_plain(&self) -> bool {
+        self.init == Initializer::Zeros && self.anneal.is_none() && self.newton.is_none()
+    }
+
+    /// Parse a `+`-separated spec; see the module docs for the grammar.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let spec = spec.trim().to_ascii_lowercase();
+        if spec.is_empty() || spec == "plain" {
+            return Ok(Self::plain());
+        }
+        let mut out = Self::plain();
+        let mut init_seen = false;
+        for token in spec.split('+').map(str::trim) {
+            let (head, arg) = match token.split_once(':') {
+                Some((h, a)) => (h, Some(a)),
+                None => (token, None),
+            };
+            let mut set_init = |i: Initializer| -> Result<()> {
+                if init_seen {
+                    bail!("strategy '{spec}': more than one initializer");
+                }
+                init_seen = true;
+                out.init = i;
+                Ok(())
+            };
+            match head {
+                "zeros" => set_init(Initializer::Zeros)?,
+                "gauss" | "gaussian" => set_init(Initializer::Gauss)?,
+                "1d" | "proj1d" => set_init(Initializer::Proj1d)?,
+                "anneal" => {
+                    if out.anneal.is_some() {
+                        bail!("strategy '{spec}': 'anneal' given twice");
+                    }
+                    let stages = match arg {
+                        None => anneal::DEFAULT_STAGES,
+                        Some(a) => a
+                            .parse::<usize>()
+                            .ok()
+                            .filter(|&k| k >= 1)
+                            .ok_or_else(|| {
+                                anyhow::anyhow!("strategy '{spec}': anneal stage count '{a}' must be an integer >= 1")
+                            })?,
+                    };
+                    out.anneal = Some(AnnealSchedule::new(stages));
+                }
+                "newton" => {
+                    if out.newton.is_some() {
+                        bail!("strategy '{spec}': 'newton' given twice");
+                    }
+                    let switch_at = match arg {
+                        None => newton::DEFAULT_SWITCH_AT,
+                        Some(a) => a
+                            .parse::<f32>()
+                            .ok()
+                            .filter(|t| t.is_finite() && *t > 0.0)
+                            .ok_or_else(|| {
+                                anyhow::anyhow!("strategy '{spec}': newton threshold '{a}' must be a positive float")
+                            })?,
+                    };
+                    out.newton = Some(NewtonPolicy::with_switch_at(switch_at));
+                }
+                "plain" => {
+                    bail!("strategy '{spec}': 'plain' cannot be combined with other tokens")
+                }
+                other => bail!(
+                    "unknown strategy token '{other}' in '{spec}' \
+                     (grammar: plain | zeros | gauss | 1d [+anneal[:K]] [+newton[:T]])"
+                ),
+            }
+        }
+        Ok(out)
+    }
+
+    /// The epsilon ladder this strategy solves through; always ends at
+    /// `prob.eps`.  `[prob.eps]` when annealing is off (or degenerate).
+    pub fn eps_stages(&self, prob: &OtProblem) -> Vec<f32> {
+        match &self.anneal {
+            Some(a) => a.stages_for(prob.sq_diameter().max(prob.eps), prob.eps),
+            None => vec![prob.eps],
+        }
+    }
+}
+
+impl std::fmt::Display for SolveStrategy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.is_plain() {
+            return write!(f, "plain");
+        }
+        write!(f, "{}", self.init.name())?;
+        if let Some(a) = &self.anneal {
+            write!(f, "+anneal:{}", a.stages)?;
+        }
+        if let Some(n) = &self.newton {
+            write!(f, "+newton:{}", n.switch_at)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_plain_and_empty() {
+        assert!(SolveStrategy::parse("plain").unwrap().is_plain());
+        assert!(SolveStrategy::parse("").unwrap().is_plain());
+        assert!(SolveStrategy::parse("  PLAIN ").unwrap().is_plain());
+        assert!(SolveStrategy::parse("zeros").unwrap().is_plain());
+    }
+
+    #[test]
+    fn parses_composed_specs() {
+        let s = SolveStrategy::parse("gauss+anneal:3+newton:0.05").unwrap();
+        assert_eq!(s.init, Initializer::Gauss);
+        assert_eq!(s.anneal.as_ref().unwrap().stages, 3);
+        assert!((s.newton.as_ref().unwrap().switch_at - 0.05).abs() < 1e-9);
+
+        let s = SolveStrategy::parse("1d+anneal").unwrap();
+        assert_eq!(s.init, Initializer::Proj1d);
+        assert_eq!(s.anneal.as_ref().unwrap().stages, anneal::DEFAULT_STAGES);
+        assert!(s.newton.is_none());
+
+        let s = SolveStrategy::parse("newton").unwrap();
+        assert_eq!(s.init, Initializer::Zeros);
+        assert_eq!(s.newton.as_ref().unwrap().switch_at, newton::DEFAULT_SWITCH_AT);
+    }
+
+    #[test]
+    fn display_roundtrips_through_parse() {
+        for spec in ["plain", "gauss", "1d+anneal:4", "gauss+anneal:2+newton:0.01"] {
+            let s = SolveStrategy::parse(spec).unwrap();
+            assert_eq!(SolveStrategy::parse(&s.to_string()).unwrap(), s, "spec {spec}");
+        }
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        for bad in [
+            "gauss+1d",          // two initializers
+            "plain+anneal",      // plain does not compose
+            "anneal:0",          // stages must be >= 1
+            "anneal+anneal",     // duplicate
+            "newton:-1",         // threshold must be positive
+            "newton:zzz",        // not a float
+            "warp",              // unknown token
+        ] {
+            assert!(SolveStrategy::parse(bad).is_err(), "should reject '{bad}'");
+        }
+    }
+
+    #[test]
+    fn eps_stages_end_at_target() {
+        let prob = OtProblem::uniform(
+            crate::data::clouds::uniform_cloud(20, 3, 1),
+            crate::data::clouds::uniform_cloud(25, 3, 2),
+            20,
+            25,
+            3,
+            0.05,
+        )
+        .unwrap();
+        let plain = SolveStrategy::plain();
+        assert_eq!(plain.eps_stages(&prob), vec![0.05]);
+        let ann = SolveStrategy::parse("anneal:4").unwrap();
+        let stages = ann.eps_stages(&prob);
+        assert_eq!(stages.len(), 4);
+        assert_eq!(*stages.last().unwrap(), 0.05);
+        assert!(stages.windows(2).all(|w| w[0] > w[1]), "{stages:?}");
+    }
+}

@@ -1,0 +1,84 @@
+//! Epsilon-annealing schedules: a geometric ladder of regularization
+//! strengths, duals carried across stages.
+//!
+//! Unlike the per-iteration H.4 ladder baked into the legacy loop (one
+//! iteration per level, `anneal_factor`), a staged schedule runs each
+//! intermediate level to a loose tolerance before shrinking eps, which is
+//! what actually transfers a warm dual: at each level the iterate lands in
+//! the contraction basin of the next, so the expensive low-eps stage starts
+//! close to its fixed point.
+
+/// Default number of ladder stages for `anneal` with no explicit count.
+pub const DEFAULT_STAGES: usize = 4;
+
+/// Intermediate stages stop at this multiple of the final tolerance:
+/// warm-up levels only need to reach the next level's basin, not converge.
+pub const STAGE_TOL_FACTOR: f32 = 10.0;
+
+/// Tolerance for a non-final annealing stage.
+pub fn stage_tol(final_tol: f32) -> f32 {
+    final_tol * STAGE_TOL_FACTOR
+}
+
+/// A geometric epsilon ladder with a fixed number of stages; the last
+/// stage is always exactly the target eps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AnnealSchedule {
+    /// Total number of stages (>= 1); 1 degenerates to the plain solver.
+    pub stages: usize,
+}
+
+impl AnnealSchedule {
+    pub fn new(stages: usize) -> Self {
+        Self { stages: stages.max(1) }
+    }
+
+    /// The eps values of each stage, strictly decreasing from `eps_start`
+    /// down to exactly `eps_target`.  Degenerates to `[eps_target]` when
+    /// one stage is requested or the start is not above the target.
+    pub fn stages_for(&self, eps_start: f32, eps_target: f32) -> Vec<f32> {
+        if self.stages <= 1 || eps_start <= eps_target {
+            return vec![eps_target];
+        }
+        let k = self.stages;
+        // eps_i = eps_start * rho^i with rho solved so eps_{k-1} = target
+        let rho = (eps_target as f64 / eps_start as f64).powf(1.0 / (k - 1) as f64);
+        let mut out: Vec<f32> = (0..k)
+            .map(|i| (eps_start as f64 * rho.powi(i as i32)) as f32)
+            .collect();
+        out[k - 1] = eps_target; // exact target, no float drift
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ladder_is_geometric_and_lands_on_target() {
+        let s = AnnealSchedule::new(4).stages_for(8.0, 0.1);
+        assert_eq!(s.len(), 4);
+        assert_eq!(s[0], 8.0);
+        assert_eq!(s[3], 0.1);
+        assert!(s.windows(2).all(|w| w[0] > w[1]), "{s:?}");
+        // geometric: roughly constant ratio between consecutive levels
+        let r0 = s[1] / s[0];
+        let r1 = s[2] / s[1];
+        assert!((r0 - r1).abs() < 1e-3, "{s:?}");
+    }
+
+    #[test]
+    fn degenerate_ladders_collapse_to_target() {
+        assert_eq!(AnnealSchedule::new(1).stages_for(8.0, 0.1), vec![0.1]);
+        assert_eq!(AnnealSchedule::new(0).stages, 1);
+        // start at or below target: nothing to anneal
+        assert_eq!(AnnealSchedule::new(5).stages_for(0.1, 0.1), vec![0.1]);
+        assert_eq!(AnnealSchedule::new(5).stages_for(0.05, 0.1), vec![0.1]);
+    }
+
+    #[test]
+    fn stage_tol_loosens_intermediate_stages() {
+        assert_eq!(stage_tol(1e-4), 1e-3);
+    }
+}

@@ -1,0 +1,372 @@
+//! Dual initializers (Thornton & Cuturi, "Rethinking Initialization of the
+//! Sinkhorn Algorithm"): closed-form warm starts for the dual potentials,
+//! built from streaming per-marginal reductions -- O(n d + m d) time,
+//! O(d) or O(d^2) memory, embarrassingly parallel, never a full cost
+//! matrix.
+//!
+//! Both non-trivial initializers approximate the *unregularized* dual pair
+//! of a simple surrogate transport and seed Sinkhorn with it; the
+//! iteration then only has to correct the surrogate error plus the
+//! entropic smoothing, instead of travelling from zero.
+//!
+//! Everything here returns **shifted** potentials (Prop. 1 convention:
+//! `fhat = f - |x|^2`, `ghat = g - |y|^2`), matching what the backend step
+//! ops consume.  Zero-weight rows get the zero-init value so warm starts
+//! stay finite on empty support (the kernels mask those entries anyway).
+
+use super::super::problem::{sqnorms, OtProblem};
+
+/// Clamp for per-axis scale ratios: degenerate (near-constant) axes must
+/// not blow the surrogate map up.
+const SCALE_CLAMP: f32 = 1e4;
+
+/// Variance floor (an axis can be exactly constant).
+const VAR_FLOOR: f64 = 1e-12;
+
+/// Power-iteration count for the principal-axis fallback of [`Initializer::Proj1d`].
+const POWER_ITERS: usize = 32;
+
+/// Where the dual iteration starts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Initializer {
+    /// Unshifted f = g = 0, i.e. `fhat = -|x|^2`, `ghat = -|y|^2` -- the
+    /// legacy default.
+    #[default]
+    Zeros,
+    /// Diagonal-Gaussian approximation: fit axis-aligned Gaussians to both
+    /// marginals, use the closed-form Gaussian transport's dual pair.
+    Gauss,
+    /// 1-D projection: project both clouds on one direction, solve the
+    /// projected transport exactly (north-west corner walk), lift the 1-D
+    /// duals back.
+    Proj1d,
+}
+
+impl Initializer {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Initializer::Zeros => "zeros",
+            Initializer::Gauss => "gauss",
+            Initializer::Proj1d => "1d",
+        }
+    }
+
+    /// Shifted dual seeds `(fhat, ghat)` of real lengths (n, m).
+    pub fn shifted_duals(&self, prob: &OtProblem) -> (Vec<f32>, Vec<f32>) {
+        match self {
+            Initializer::Zeros => zeros_init(prob),
+            Initializer::Gauss => gauss_init(prob),
+            Initializer::Proj1d => proj1d_init(prob),
+        }
+    }
+}
+
+/// `fhat = -alpha`, `ghat = -beta`: the zero unshifted duals.
+fn zeros_init(prob: &OtProblem) -> (Vec<f32>, Vec<f32>) {
+    let neg = |v: Vec<f32>| v.into_iter().map(|x| -x).collect();
+    (neg(prob.alpha()), neg(prob.beta()))
+}
+
+/// Weighted per-axis mean and variance in one streaming pass pair.
+/// Weights are assumed to sum to 1 (the [`OtProblem`] invariant).
+fn moments(pts: &[f32], w: &[f32], n: usize, d: usize) -> (Vec<f64>, Vec<f64>) {
+    let mut mean = vec![0.0f64; d];
+    for i in 0..n {
+        let wi = w[i] as f64;
+        for (k, &v) in pts[i * d..(i + 1) * d].iter().enumerate() {
+            mean[k] += wi * v as f64;
+        }
+    }
+    let mut var = vec![0.0f64; d];
+    for i in 0..n {
+        let wi = w[i] as f64;
+        for (k, &v) in pts[i * d..(i + 1) * d].iter().enumerate() {
+            let c = v as f64 - mean[k];
+            var[k] += wi * c * c;
+        }
+    }
+    (mean, var)
+}
+
+/// Diagonal-Gaussian dual init.  Fit N(mx, diag(vx)) and N(my, diag(vy))
+/// to the marginals; the optimal Gaussian-to-Gaussian map is the diagonal
+/// affine `T(x)_k = s_k x_k + t_k` with `s_k = sqrt(vy_k / vx_k)`,
+/// `t_k = my_k - s_k mx_k`.  Its Brenier potential (for cost
+/// `1/2 |x - y|^2`) is `phi(x) = sum_k s_k x_k^2 / 2 + t_k x_k`, giving
+/// for our cost `|x - y|^2` (twice the Brenier normalization) the shifted
+/// dual pair
+///
+/// ```text
+///   fhat_i = -2 phi(x_i)      = -sum_k (s_k x_ik^2 + 2 t_k x_ik)
+///   ghat_j = -2 phi^*(y_j)    = -sum_k (y_jk - t_k)^2 / s_k
+/// ```
+fn gauss_init(prob: &OtProblem) -> (Vec<f32>, Vec<f32>) {
+    let d = prob.d;
+    let (mx, vx) = moments(&prob.x, &prob.a, prob.n, d);
+    let (my, vy) = moments(&prob.y, &prob.b, prob.m, d);
+    let mut s = vec![0.0f64; d];
+    let mut t = vec![0.0f64; d];
+    for k in 0..d {
+        let ratio = (vy[k].max(VAR_FLOOR) / vx[k].max(VAR_FLOOR)).sqrt();
+        s[k] = ratio.clamp(1.0 / SCALE_CLAMP as f64, SCALE_CLAMP as f64);
+        t[k] = my[k] - s[k] * mx[k];
+    }
+    let fhat = (0..prob.n)
+        .map(|i| {
+            let row = &prob.x[i * d..(i + 1) * d];
+            let phi2: f64 = row
+                .iter()
+                .enumerate()
+                .map(|(k, &v)| {
+                    let v = v as f64;
+                    s[k] * v * v + 2.0 * t[k] * v
+                })
+                .sum();
+            -phi2 as f32
+        })
+        .collect();
+    let ghat = (0..prob.m)
+        .map(|j| {
+            let row = &prob.y[j * d..(j + 1) * d];
+            let conj2: f64 = row
+                .iter()
+                .enumerate()
+                .map(|(k, &v)| {
+                    let c = v as f64 - t[k];
+                    c * c / s[k]
+                })
+                .sum();
+            -conj2 as f32
+        })
+        .collect();
+    (fhat, ghat)
+}
+
+/// Direction for the 1-D projection: the (weighted) mean displacement, or
+/// the principal axis of the pooled covariance when the means coincide.
+fn projection_direction(prob: &OtProblem) -> Vec<f64> {
+    let d = prob.d;
+    let (mx, _) = moments(&prob.x, &prob.a, prob.n, d);
+    let (my, _) = moments(&prob.y, &prob.b, prob.m, d);
+    let mut u: Vec<f64> = (0..d).map(|k| my[k] - mx[k]).collect();
+    let norm = u.iter().map(|v| v * v).sum::<f64>().sqrt();
+    if norm > 1e-9 {
+        for v in &mut u {
+            *v /= norm;
+        }
+        return u;
+    }
+    // Means coincide: use the top eigenvector of the pooled (weighted)
+    // covariance, found by power iteration from a deterministic start.
+    let mut cov = vec![0.0f64; d * d];
+    let mut accumulate = |pts: &[f32], w: &[f32], n: usize, mean: &[f64]| {
+        for i in 0..n {
+            let wi = w[i] as f64;
+            let row = &pts[i * d..(i + 1) * d];
+            for p in 0..d {
+                let cp = row[p] as f64 - mean[p];
+                for q in 0..d {
+                    cov[p * d + q] += wi * cp * (row[q] as f64 - mean[q]);
+                }
+            }
+        }
+    };
+    accumulate(&prob.x, &prob.a, prob.n, &mx);
+    accumulate(&prob.y, &prob.b, prob.m, &my);
+    let mut v: Vec<f64> = (0..d).map(|k| 1.0 / (k + 1) as f64).collect();
+    for _ in 0..POWER_ITERS {
+        let mut next = vec![0.0f64; d];
+        for p in 0..d {
+            next[p] = cov[p * d..(p + 1) * d].iter().zip(&v).map(|(&c, &x)| c * x).sum();
+        }
+        let norm = next.iter().map(|x| x * x).sum::<f64>().sqrt();
+        if norm < 1e-30 {
+            break; // degenerate cloud (all points equal): any direction works
+        }
+        for x in &mut next {
+            *x /= norm;
+        }
+        v = next;
+    }
+    v
+}
+
+/// 1-D projection dual init.  Project both clouds on one direction, solve
+/// the projected 1-D transport exactly via the monotone (north-west
+/// corner) coupling, and read the duals off complementary slackness along
+/// the walk: `f_i + g_j = (px_i - py_j)^2` on the support.  Lifting back,
+/// the projected duals seed the full problem (`fhat_i = f1d_i - alpha_i`).
+/// Zero-weight rows never enter the walk and keep the zero-init value.
+fn proj1d_init(prob: &OtProblem) -> (Vec<f32>, Vec<f32>) {
+    let d = prob.d;
+    let u = projection_direction(prob);
+    let project = |pts: &[f32], rows: usize| -> Vec<f64> {
+        (0..rows)
+            .map(|i| {
+                pts[i * d..(i + 1) * d].iter().zip(&u).map(|(&p, &uk)| p as f64 * uk).sum()
+            })
+            .collect()
+    };
+    let px = project(&prob.x, prob.n);
+    let py = project(&prob.y, prob.m);
+
+    // active (positive-weight) indices sorted by projection, ties by index
+    let sorted_active = |w: &[f32], proj: &[f64]| -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..w.len()).filter(|&i| w[i] > 0.0).collect();
+        idx.sort_by(|&i, &j| proj[i].total_cmp(&proj[j]).then(i.cmp(&j)));
+        idx
+    };
+    let xs = sorted_active(&prob.a, &px);
+    let ys = sorted_active(&prob.b, &py);
+    let (mut fhat, mut ghat) = zeros_init(prob);
+    if xs.is_empty() || ys.is_empty() {
+        return (fhat, ghat); // no support: keep the zero init
+    }
+
+    // North-west corner walk: advance whichever side exhausts its residual
+    // mass, chaining duals through the monotone support (f64 throughout so
+    // chain error does not accumulate over n).
+    let cost = |i: usize, j: usize| {
+        let dl = px[i] - py[j];
+        dl * dl
+    };
+    let mut f1 = vec![0.0f64; prob.n];
+    let mut g1 = vec![0.0f64; prob.m];
+    let (mut i, mut j) = (0usize, 0usize);
+    let mut wa = prob.a[xs[0]] as f64;
+    let mut wb = prob.b[ys[0]] as f64;
+    f1[xs[0]] = 0.0;
+    g1[ys[0]] = cost(xs[0], ys[0]);
+    while i + 1 < xs.len() || j + 1 < ys.len() {
+        // on a tie the source advances first; the next round then advances
+        // the target through a zero-mass boundary cell, which chains duals
+        // consistently
+        let advance_source = i + 1 < xs.len() && (j + 1 >= ys.len() || wa <= wb);
+        if advance_source {
+            wb -= wa;
+            i += 1;
+            wa = prob.a[xs[i]] as f64;
+            f1[xs[i]] = cost(xs[i], ys[j]) - g1[ys[j]];
+        } else {
+            wa -= wb;
+            j += 1;
+            wb = prob.b[ys[j]] as f64;
+            g1[ys[j]] = cost(xs[i], ys[j]) - f1[xs[i]];
+        }
+    }
+    let alpha = sqnorms(&prob.x, prob.n, prob.d);
+    let beta = sqnorms(&prob.y, prob.m, prob.d);
+    for &i in &xs {
+        fhat[i] = (f1[i] - alpha[i] as f64) as f32;
+    }
+    for &j in &ys {
+        ghat[j] = (g1[j] - beta[j] as f64) as f32;
+    }
+    (fhat, ghat)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::clouds::uniform_cloud;
+
+    fn affine_problem(n: usize, m: usize, d: usize, eps: f32) -> OtProblem {
+        let x = uniform_cloud(n, d, 7);
+        let mut y = uniform_cloud(m, d, 8);
+        for (k, v) in y.iter_mut().enumerate() {
+            *v = 0.5 * *v + 0.2 + 0.1 * (k % d) as f32;
+        }
+        OtProblem::uniform(x, y, n, m, d, eps).unwrap()
+    }
+
+    #[test]
+    fn zeros_init_matches_neg_sqnorms() {
+        let p = affine_problem(30, 40, 4, 0.1);
+        let (f, g) = Initializer::Zeros.shifted_duals(&p);
+        assert_eq!(f, p.alpha().iter().map(|v| -v).collect::<Vec<_>>());
+        assert_eq!(g, p.beta().iter().map(|v| -v).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn gauss_init_is_exact_for_matched_affine_points() {
+        // y_j = S x_j + t with diagonal S on *identical* sample weights:
+        // the surrogate map is exact, so the seeded duals must satisfy
+        // fhat_i + ghat_j + 2 <x_i, y_j> = const on the matched pairs
+        // (i = j), i.e. the matched-pair plan exponents are all equal.
+        let (n, d) = (50, 3);
+        let x = uniform_cloud(n, d, 3);
+        let mut y = x.clone();
+        for (k, v) in y.iter_mut().enumerate() {
+            *v = [2.0, 0.5, 1.0][k % d] * *v + [0.3, -0.2, 0.0][k % d];
+        }
+        let p = OtProblem::uniform(x, y, n, n, d, 0.1).unwrap();
+        let (f, g) = Initializer::Gauss.shifted_duals(&p);
+        let exponent = |i: usize| {
+            let dot: f32 = (0..d).map(|k| p.x[i * d + k] * p.y[i * d + k]).sum();
+            f[i] + g[i] + 2.0 * dot
+        };
+        let e0 = exponent(0);
+        for i in 1..n {
+            assert!((exponent(i) - e0).abs() < 1e-3, "pair {i}: {} vs {e0}", exponent(i));
+        }
+    }
+
+    #[test]
+    fn initializers_are_finite_on_zero_weight_rows() {
+        let (n, m, d) = (16, 18, 3);
+        let x = uniform_cloud(n, d, 1);
+        let y = uniform_cloud(m, d, 2);
+        let mut a = vec![1.0 / (n - 2) as f32; n];
+        a[0] = 0.0;
+        a[5] = 0.0;
+        let mut b = vec![1.0 / (m - 1) as f32; m];
+        b[17] = 0.0;
+        let p = OtProblem::new(x, y, a, b, n, m, d, 0.1).unwrap();
+        for init in [Initializer::Zeros, Initializer::Gauss, Initializer::Proj1d] {
+            let (f, g) = init.shifted_duals(&p);
+            assert_eq!(f.len(), n);
+            assert_eq!(g.len(), m);
+            assert!(f.iter().all(|v| v.is_finite()), "{:?}: {f:?}", init);
+            assert!(g.iter().all(|v| v.is_finite()), "{:?}: {g:?}", init);
+        }
+    }
+
+    #[test]
+    fn proj1d_duals_satisfy_slackness_on_sorted_support() {
+        // uniform weights, distinct projections: the monotone coupling is
+        // the sorted pairing, so f1d_i + g1d_j = c(i, j) must hold for the
+        // diagonal pairs after sorting both sides.
+        let n = 8;
+        let x: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let y: Vec<f32> = (0..n).map(|i| 0.5 * i as f32 + 3.0).collect();
+        let p = OtProblem::uniform(x, y, n, n, 1, 0.1).unwrap();
+        let (fhat, ghat) = Initializer::Proj1d.shifted_duals(&p);
+        // undo the shift to recover the raw projected duals
+        let alpha = p.alpha();
+        let beta = p.beta();
+        for i in 0..n {
+            let f1 = fhat[i] + alpha[i];
+            let g1 = ghat[i] + beta[i];
+            let c = (p.x[i] - p.y[i]) * (p.x[i] - p.y[i]);
+            assert!((f1 + g1 - c).abs() < 1e-4, "pair {i}: {f1} + {g1} != {c}");
+        }
+    }
+
+    #[test]
+    fn projection_direction_falls_back_to_principal_axis() {
+        // identical means, variance concentrated on axis 0
+        let n = 40;
+        let mut x = vec![0.0f32; n * 2];
+        let mut y = vec![0.0f32; n * 2];
+        for i in 0..n {
+            let t = (i as f32 / n as f32) - 0.5;
+            x[i * 2] = 2.0 * t;
+            y[i * 2] = -2.0 * t; // same axis, same mean, mirrored
+            x[i * 2 + 1] = 0.01 * t;
+            y[i * 2 + 1] = 0.01 * t;
+        }
+        let p = OtProblem::uniform(x, y, n, n, 2, 0.1).unwrap();
+        let u = projection_direction(&p);
+        assert!(u[0].abs() > 0.99, "principal axis should dominate: {u:?}");
+    }
+}

@@ -1,0 +1,233 @@
+//! Truncated-Newton switch-over (Kemertas et al., "A Truncated Newton
+//! Method for Optimal Transport"): once Sinkhorn gets close, solve the
+//! dual first-order conditions with Newton steps instead of fixed-point
+//! iterations.
+//!
+//! The dual residual is `F(fhat, ghat) = (r - a, c - b)` with the induced
+//! marginals `r = P 1`, `c = P^T 1`.  Its Jacobian is
+//! `(1/eps) [diag(r), P; P^T, diag(c)]`, so the Newton system reads
+//!
+//! ```text
+//!   [diag(r)  P      ] [df]       [a - r]
+//!   [P^T      diag(c)] [dg] = eps [b - c]
+//! ```
+//!
+//! Eliminating `df` leaves the Schur system
+//! `(diag(c) + tau - P^T diag(r)^-1 P) dg = eps (b - c) - P^T u` with
+//! `u_i = eps (a_i - r_i) / r_i` -- exactly the damped operator the HVP
+//! path already exposes as [`crate::ot::apply::SchurOp`], solved matrix-free
+//! by [`crate::hvp::cg::cg_solve`].  Each outer step costs one CG solve
+//! (2 transport applications per CG iteration, Thm. 5) plus a short
+//! backtracking line search on the L1 marginal error.
+//!
+//! The polish **falls back cleanly**: if CG stalls or no damped step
+//! reduces the marginal error, it returns with `fell_back = true` and
+//! untouched-or-improved duals, and the driver resumes plain Sinkhorn.
+
+use anyhow::Result;
+
+use crate::coordinator::router::BucketCtx;
+use crate::hvp::cg::cg_solve;
+use crate::ot::apply::Transport;
+use crate::ot::solver::Potentials;
+use crate::runtime::ComputeBackend;
+
+/// Default Sinkhorn sup-norm delta at which the driver hands off.
+pub const DEFAULT_SWITCH_AT: f32 = 1e-2;
+
+/// When to switch from Sinkhorn to Newton, and how hard to push.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NewtonPolicy {
+    /// Hand off once the Sinkhorn sup-norm potential delta drops here.
+    pub switch_at: f32,
+    /// Tikhonov damping for the Schur system (paper default 1e-5).
+    pub tau: f32,
+    /// CG relative-residual tolerance.
+    pub eta: f64,
+    /// CG iteration cap per Newton step; 0 forces immediate fallback
+    /// (used by the fallback tests).
+    pub max_cg: usize,
+    /// Outer Newton step cap.
+    pub max_steps: usize,
+    /// Stop when the L1 marginal error `|r - a|_1 + |c - b|_1` drops here.
+    pub marginal_tol: f32,
+}
+
+impl Default for NewtonPolicy {
+    fn default() -> Self {
+        Self {
+            switch_at: DEFAULT_SWITCH_AT,
+            tau: 1e-5,
+            eta: 1e-6,
+            max_cg: 50,
+            max_steps: 10,
+            marginal_tol: 1e-4,
+        }
+    }
+}
+
+impl NewtonPolicy {
+    pub fn with_switch_at(switch_at: f32) -> Self {
+        Self { switch_at, ..Self::default() }
+    }
+}
+
+/// What the Newton polish did.
+#[derive(Debug, Clone)]
+pub struct NewtonOutcome {
+    /// Accepted Newton steps.
+    pub steps: usize,
+    /// Total CG iterations across all steps.
+    pub cg_iters: usize,
+    /// True when the marginal error reached `marginal_tol`.
+    pub converged: bool,
+    /// True when the polish stopped because CG stalled or the line search
+    /// found no descent (the driver then resumes Sinkhorn).
+    pub fell_back: bool,
+    /// L1 marginal error at exit.
+    pub final_marginal_err: f32,
+}
+
+fn l1_marginal_err(r: &[f32], c: &[f32], a: &[f32], b: &[f32]) -> f32 {
+    let sum = |u: &[f32], v: &[f32]| -> f64 {
+        u.iter().zip(v).map(|(&x, &y)| (x as f64 - y as f64).abs()).sum()
+    };
+    (sum(r, a) + sum(c, b)) as f32
+}
+
+/// Backtracking step sizes tried per Newton direction.
+const STEPS: [f32; 3] = [1.0, 0.5, 0.25];
+
+/// Newton-polish `pot` in place.  `ctx` is the routed bucket of the
+/// problem the duals belong to; every transport application reuses it.
+pub fn polish(
+    backend: &dyn ComputeBackend,
+    ctx: &BucketCtx,
+    pot: &mut Potentials,
+    policy: &NewtonPolicy,
+) -> Result<NewtonOutcome> {
+    let eps = ctx.eps;
+    let a = ctx.a.as_f32()?[..ctx.n].to_vec();
+    let b = ctx.b.as_f32()?[..ctx.m].to_vec();
+    let mut out = NewtonOutcome {
+        steps: 0,
+        cg_iters: 0,
+        converged: false,
+        fell_back: false,
+        final_marginal_err: f32::INFINITY,
+    };
+    let (mut r, mut c) = Transport::with_ctx(backend, ctx.clone(), pot).marginals()?;
+    let mut err = l1_marginal_err(&r, &c, &a, &b);
+    while out.steps < policy.max_steps && err > policy.marginal_tol {
+        let t = Transport::with_ctx(backend, ctx.clone(), pot);
+        // rhs of the Schur system: eps (b - c) - P^T u,  u_i = eps (a_i - r_i) / r_i
+        let u: Vec<f32> =
+            a.iter().zip(&r).map(|(&ai, &ri)| if ri > 0.0 { eps * (ai - ri) / ri } else { 0.0 }).collect();
+        let (ptu, _) = t.apply_ptu(&u, 1)?;
+        let rhs: Vec<f32> =
+            b.iter().zip(&c).zip(&ptu).map(|((&bj, &cj), &p)| eps * (bj - cj) - p).collect();
+        let schur = t.schur_op(&r, &c, policy.tau)?;
+        let cg = cg_solve(|w| schur.matvec(w), &rhs, policy.eta, policy.max_cg)?;
+        out.cg_iters += cg.iters;
+        if !cg.converged {
+            out.fell_back = true;
+            break;
+        }
+        let dg = cg.x;
+        // back-substitute: df_i = (eps (a_i - r_i) - (P dg)_i) / r_i
+        let (pdg, _) = t.apply_pv(&dg, 1)?;
+        let df: Vec<f32> = a
+            .iter()
+            .zip(&r)
+            .zip(&pdg)
+            .map(|((&ai, &ri), &p)| if ri > 0.0 { (eps * (ai - ri) - p) / ri } else { 0.0 })
+            .collect();
+        // backtracking line search on the L1 marginal error
+        let mut accepted = false;
+        for &s in &STEPS {
+            let trial = Potentials {
+                fhat: pot.fhat.iter().zip(&df).map(|(&f, &d)| f + s * d).collect(),
+                ghat: pot.ghat.iter().zip(&dg).map(|(&g, &d)| g + s * d).collect(),
+            };
+            let (rt, ct) = Transport::with_ctx(backend, ctx.clone(), &trial).marginals()?;
+            let errt = l1_marginal_err(&rt, &ct, &a, &b);
+            if errt.is_finite() && errt < err {
+                *pot = trial;
+                r = rt;
+                c = ct;
+                err = errt;
+                accepted = true;
+                break;
+            }
+        }
+        if !accepted {
+            out.fell_back = true;
+            break;
+        }
+        out.steps += 1;
+    }
+    out.final_marginal_err = err;
+    out.converged = err <= policy.marginal_tol;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::router::BucketCtx;
+    use crate::data::clouds::uniform_cloud;
+    use crate::native::NativeBackend;
+    use crate::ot::problem::OtProblem;
+    use crate::ot::solver::{SinkhornSolver, SolverConfig};
+    use crate::runtime::ComputeBackend as _;
+
+    fn warm_duals(backend: &NativeBackend, prob: &OtProblem, iters: usize) -> Potentials {
+        let cfg = SolverConfig { max_iters: iters, tol: 0.0, ..SolverConfig::default() };
+        SinkhornSolver::new(backend, cfg).solve(prob).unwrap().0
+    }
+
+    #[test]
+    fn polish_reduces_marginal_error() {
+        let backend = NativeBackend::default();
+        let (n, m, d) = (60, 70, 4);
+        let prob = OtProblem::uniform(
+            uniform_cloud(n, d, 1),
+            uniform_cloud(m, d, 2),
+            n,
+            m,
+            d,
+            0.1,
+        )
+        .unwrap();
+        let mut pot = warm_duals(&backend, &prob, 30);
+        let ctx = BucketCtx::new(&backend.router(), &prob).unwrap();
+        let before = {
+            let (r, c) = Transport::with_ctx(&backend, ctx.clone(), &pot).marginals().unwrap();
+            let a = ctx.a.as_f32().unwrap()[..n].to_vec();
+            let b = ctx.b.as_f32().unwrap()[..m].to_vec();
+            l1_marginal_err(&r, &c, &a, &b)
+        };
+        let out = polish(&backend, &ctx, &mut pot, &NewtonPolicy::default()).unwrap();
+        assert!(!out.fell_back, "unexpected fallback: {out:?}");
+        assert!(out.final_marginal_err <= before, "{} > {before}", out.final_marginal_err);
+        assert!(out.converged, "err {}", out.final_marginal_err);
+    }
+
+    #[test]
+    fn zero_cg_budget_falls_back_immediately() {
+        let backend = NativeBackend::default();
+        let (n, d) = (30, 3);
+        let prob =
+            OtProblem::uniform(uniform_cloud(n, d, 3), uniform_cloud(n, d, 4), n, n, d, 0.1)
+                .unwrap();
+        let mut pot = warm_duals(&backend, &prob, 10);
+        let ctx = BucketCtx::new(&backend.router(), &prob).unwrap();
+        // marginal_tol 0 guarantees the loop is entered; max_cg 0 then
+        // makes the very first Schur solve report non-convergence
+        let policy = NewtonPolicy { max_cg: 0, marginal_tol: 0.0, ..NewtonPolicy::default() };
+        let out = polish(&backend, &ctx, &mut pot, &policy).unwrap();
+        assert!(out.fell_back);
+        assert_eq!(out.steps, 0);
+        assert!(!out.converged);
+    }
+}

@@ -34,6 +34,7 @@ pub fn build_w_matrix(
         use_fused: true,
         anneal_factor: 1.0,
         prepared: true,
+        ..SolverConfig::default()
     };
 
     // collect capped class clouds once

@@ -113,6 +113,7 @@ fn eps_annealing_reaches_same_fixed_point() {
         use_fused: true,
         anneal_factor: 1.0,
         prepared: true,
+        ..SolverConfig::default()
     };
     let annealed = SolverConfig { anneal_factor: 0.7, ..base.clone() };
     let (_, r1) = SinkhornSolver::new(&e, base).solve(&prob).unwrap();

@@ -1,0 +1,223 @@
+//! SolveStrategy integration: bitwise plain-equivalence, warm-start
+//! convergence wins, annealing staging, the Newton hand-off (including
+//! its clean fallback), and the service-side per-job strategy override.
+
+use flash_sinkhorn::bench::convergence::conv_problem;
+use flash_sinkhorn::config::Config;
+use flash_sinkhorn::coordinator::job::{JobKind, JobRequest};
+use flash_sinkhorn::coordinator::service;
+use flash_sinkhorn::data::clouds::uniform_cloud;
+use flash_sinkhorn::native::NativeBackend;
+use flash_sinkhorn::ot::problem::OtProblem;
+use flash_sinkhorn::ot::solver::{Potentials, Schedule, SinkhornSolver, SolveReport, SolverConfig};
+use flash_sinkhorn::ot::strategy::{NewtonPolicy, SolveStrategy};
+
+fn solve_with(spec: &str, prob: &OtProblem) -> (Potentials, SolveReport) {
+    let cfg = SolverConfig {
+        max_iters: 20_000,
+        tol: 1e-4,
+        schedule: Schedule::Alternating,
+        use_fused: false,
+        anneal_factor: 1.0,
+        prepared: true,
+        strategy: SolveStrategy::parse(spec).unwrap(),
+    };
+    SinkhornSolver::new(&NativeBackend::default(), cfg).solve(prob).unwrap()
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// `plain`, `zeros`, and a single-stage annealing ladder must all run the
+/// exact legacy code path: identical down to the last bit.
+#[test]
+fn degenerate_strategies_are_bitwise_plain() {
+    let prob = conv_problem(128, 8).unwrap();
+    let (pot_plain, rep_plain) = solve_with("plain", &prob);
+    for spec in ["zeros", "anneal:1"] {
+        let (pot, rep) = solve_with(spec, &prob);
+        assert_eq!(bits(&pot.fhat), bits(&pot_plain.fhat), "fhat diverged for '{spec}'");
+        assert_eq!(bits(&pot.ghat), bits(&pot_plain.ghat), "ghat diverged for '{spec}'");
+        assert_eq!(rep.cost.to_bits(), rep_plain.cost.to_bits(), "cost diverged for '{spec}'");
+        assert_eq!(rep.iters, rep_plain.iters, "iters diverged for '{spec}'");
+    }
+    // the fused default path must be equally unaffected by the layer
+    let fused = |strategy: &str| {
+        let cfg = SolverConfig {
+            strategy: SolveStrategy::parse(strategy).unwrap(),
+            ..SolverConfig::default()
+        };
+        let (pot, rep) =
+            SinkhornSolver::new(&NativeBackend::default(), cfg).solve(&prob).unwrap();
+        (bits(&pot.fhat), bits(&pot.ghat), rep.cost.to_bits())
+    };
+    assert_eq!(fused("plain"), fused("anneal:1"));
+}
+
+/// Warm-start initializers must converge to the same optimum, in fewer
+/// iterations than zero-init on the anisotropic benchmark problem.
+#[test]
+fn initializers_converge_faster_to_the_same_cost() {
+    let prob = conv_problem(256, 8).unwrap();
+    let (_, plain) = solve_with("plain", &prob);
+    assert!(plain.converged);
+    let (_, gauss) = solve_with("gauss", &prob);
+    let (_, p1d) = solve_with("1d", &prob);
+    for (name, rep) in [("gauss", &gauss), ("1d", &p1d)] {
+        assert!(rep.converged, "{name} did not converge");
+        // same tolerance, same problem: costs agree well inside tol-scale
+        assert!(
+            (rep.cost - plain.cost).abs() < 5e-3,
+            "{name} cost {} vs plain {}",
+            rep.cost,
+            plain.cost
+        );
+    }
+    assert!(
+        gauss.iters < plain.iters,
+        "gauss {} iters should beat plain {}",
+        gauss.iters,
+        plain.iters
+    );
+    assert!(
+        p1d.iters < plain.iters,
+        "1d {} iters should beat plain {}",
+        p1d.iters,
+        plain.iters
+    );
+}
+
+/// Annealing traverses the ladder (one trace entry per stage, eps
+/// strictly decreasing into the target) and still reaches the optimum.
+#[test]
+fn annealing_stages_are_traced_and_converge() {
+    let prob = conv_problem(128, 8).unwrap();
+    let (_, plain) = solve_with("plain", &prob);
+    let (_, rep) = solve_with("anneal:4", &prob);
+    assert!(rep.converged);
+    assert_eq!(rep.stages.len(), 4, "{:?}", rep.stages);
+    for w in rep.stages.windows(2) {
+        assert!(w[0].eps > w[1].eps, "{:?}", rep.stages);
+    }
+    assert_eq!(rep.stages.last().unwrap().eps, prob.eps);
+    assert!(rep.stages.iter().all(|s| s.kind == "sinkhorn"));
+    assert_eq!(rep.iters, rep.stages.iter().map(|s| s.iters).sum::<usize>());
+    assert!((rep.cost - plain.cost).abs() < 5e-3, "{} vs {}", rep.cost, plain.cost);
+}
+
+/// The Newton hand-off polishes to its marginal tolerance and agrees with
+/// the plain solver on the cost.
+#[test]
+fn newton_switchover_converges_to_plain_cost() {
+    let prob = conv_problem(128, 8).unwrap();
+    let (_, plain) = solve_with("plain", &prob);
+    let (_, rep) = solve_with("newton:1e-2", &prob);
+    assert!(rep.converged, "{rep:?}");
+    let newton_stage = rep
+        .stages
+        .iter()
+        .find(|s| s.kind == "newton")
+        .expect("newton stage traced");
+    assert!(newton_stage.cg_iters > 0);
+    assert!((rep.cost - plain.cost).abs() < 5e-3, "{} vs {}", rep.cost, plain.cost);
+    // the hand-off happens at a coarse delta, so the combined solve should
+    // not need more Sinkhorn iterations than plain ran in total
+    let sinkhorn_iters: usize =
+        rep.stages.iter().filter(|s| s.kind == "sinkhorn").map(|s| s.iters).sum();
+    assert!(
+        sinkhorn_iters <= plain.iters,
+        "sinkhorn {} of combined solve vs plain {}",
+        sinkhorn_iters,
+        plain.iters
+    );
+}
+
+/// When the inner Schur solve cannot converge (CG budget 0), the driver
+/// falls back to plain Sinkhorn and still finishes the solve.
+#[test]
+fn newton_fallback_resumes_sinkhorn_cleanly() {
+    let prob = conv_problem(96, 8).unwrap();
+    let mut strategy = SolveStrategy::parse("newton:1e-2").unwrap();
+    strategy.newton = Some(NewtonPolicy { max_cg: 0, ..NewtonPolicy::with_switch_at(1e-2) });
+    let cfg = SolverConfig {
+        max_iters: 20_000,
+        tol: 1e-4,
+        schedule: Schedule::Alternating,
+        use_fused: false,
+        anneal_factor: 1.0,
+        prepared: true,
+        strategy,
+    };
+    let (_, rep) = SinkhornSolver::new(&NativeBackend::default(), cfg).solve(&prob).unwrap();
+    assert!(rep.converged, "fallback must still converge: {rep:?}");
+    assert!(rep.final_delta <= 1e-4);
+    // trace shows the aborted newton stage followed by the resume
+    let kinds: Vec<&str> = rep.stages.iter().map(|s| s.kind).collect();
+    assert_eq!(kinds, ["sinkhorn", "newton", "sinkhorn"], "{:?}", rep.stages);
+    assert_eq!(rep.stages[1].iters, 0, "no newton step can be accepted with max_cg = 0");
+    let (_, plain) = solve_with("plain", &prob);
+    assert!((rep.cost - plain.cost).abs() < 5e-3);
+}
+
+/// Zero-weight rows must not poison warm starts (PR 2 masking contract).
+#[test]
+fn initializers_handle_zero_weight_rows_end_to_end() {
+    let (n, m, d) = (40, 50, 4);
+    let x = uniform_cloud(n, d, 5);
+    let y = uniform_cloud(m, d, 6);
+    let mut a = vec![1.0f32 / (n as f32 - 4.0); n];
+    for slot in a.iter_mut().take(4) {
+        *slot = 0.0;
+    }
+    let b = vec![1.0f32 / m as f32; m];
+    let prob = OtProblem::new(x, y, a, b, n, m, d, 0.1).unwrap();
+    for spec in ["gauss", "1d"] {
+        let (pot, rep) = solve_with(spec, &prob);
+        assert!(rep.converged, "{spec}: {rep:?}");
+        assert!(pot.fhat.iter().all(|v| v.is_finite()), "{spec} fhat has non-finite entries");
+        assert!(pot.ghat.iter().all(|v| v.is_finite()), "{spec} ghat has non-finite entries");
+        assert!(rep.cost.is_finite());
+    }
+}
+
+/// The service honors per-job strategy overrides and surfaces bad specs
+/// as job errors (not panics, not service wedges).
+#[test]
+fn service_applies_per_job_strategy_override() {
+    let mut cfg = Config::default();
+    cfg.backend = "native".into();
+    cfg.service.actors = 1;
+    let handle = service::spawn(cfg).unwrap();
+    let prob = |seed: u64| {
+        OtProblem::uniform(
+            uniform_cloud(120, 8, seed),
+            uniform_cloud(120, 8, seed + 999),
+            120,
+            120,
+            8,
+            0.1,
+        )
+        .unwrap()
+    };
+    let ok = handle
+        .submit(JobRequest::new(JobKind::Solve, prob(1)).with_strategy("gauss+anneal:2"))
+        .unwrap()
+        .recv()
+        .unwrap();
+    assert!(ok.cost.is_finite());
+    assert!(ok.iters > 0);
+    // a bad spec fails that job alone...
+    let err = handle
+        .submit(JobRequest::new(JobKind::Solve, prob(2)).with_strategy("warp"))
+        .unwrap()
+        .recv();
+    assert!(err.is_err(), "bogus strategy spec must fail the job");
+    // ...and the service keeps serving afterwards
+    let again = handle
+        .submit(JobRequest::new(JobKind::Solve, prob(3)))
+        .unwrap()
+        .recv()
+        .unwrap();
+    assert!(again.cost.is_finite());
+}

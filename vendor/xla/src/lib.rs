@@ -1,0 +1,315 @@
+//! Minimal offline stand-in for the `xla` FFI crate (PJRT bindings).
+//!
+//! The workspace builds with no network access and no XLA toolchain, so
+//! the real bindings cannot be fetched or linked.  This stub mirrors the
+//! small API surface `runtime::engine` / `runtime::tensor` use, with two
+//! tiers of fidelity:
+//!
+//! * **[`Literal`] is functional**: it really stores host data, so the
+//!   `Tensor <-> Literal` conversions (`vec1`, `reshape`, `array_shape`,
+//!   `to_vec`, `to_tuple`) work and are unit-testable.
+//! * **The PJRT client is compile-only**: [`PjRtClient::cpu`] returns an
+//!   error, so nothing can reach `compile`/`execute` at runtime.  The
+//!   `--features pjrt` build therefore type-checks end to end (the CI
+//!   feature-matrix job) and fails fast with a clear message if actually
+//!   exercised.
+//!
+//! Swap the `vendor/xla` path dependency for the real crate to run
+//! against actual PJRT artifacts; no engine code changes.
+
+use std::fmt;
+
+/// Error type matching the real crate's role; implements
+/// `std::error::Error` so `?` converts it into `anyhow::Error`.
+#[derive(Debug, Clone)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    fn new(msg: impl Into<String>) -> Self {
+        Self { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla stub: {}", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error::new(format!(
+        "{what} is unavailable in the vendored stub (swap vendor/xla for the real `xla` crate \
+         to execute PJRT artifacts)"
+    ))
+}
+
+/// Element types a [`Literal`] can carry.  More variants than the two the
+/// engine decodes, mirroring the real enum (and keeping the engine's
+/// `other =>` match arm reachable).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S32,
+    S64,
+    F32,
+    F64,
+}
+
+/// Scalar types storable in a [`Literal`] (sealed to f32/i32 here).
+pub trait NativeType: Sized + Copy {
+    const TY: ElementType;
+    fn wrap(data: Vec<Self>) -> LiteralData;
+    fn unwrap(data: &LiteralData) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn wrap(data: Vec<Self>) -> LiteralData {
+        LiteralData::F32(data)
+    }
+    fn unwrap(data: &LiteralData) -> Option<Vec<Self>> {
+        match data {
+            LiteralData::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn wrap(data: Vec<Self>) -> LiteralData {
+        LiteralData::I32(data)
+    }
+    fn unwrap(data: &LiteralData) -> Option<Vec<Self>> {
+        match data {
+            LiteralData::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+/// Host-side storage of a [`Literal`].
+#[derive(Debug, Clone)]
+pub enum LiteralData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// A host literal: element data + dims.  Functional (really stores data),
+/// unlike the execution types below.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: LiteralData,
+    dims: Vec<i64>,
+}
+
+/// Shape of an array literal: dims + element type.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+impl Literal {
+    /// A rank-1 literal over a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { dims: vec![data.len() as i64], data: T::wrap(data.to_vec()) }
+    }
+
+    /// A tuple literal (what `return_tuple=True` lowerings produce).
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal { dims: Vec::new(), data: LiteralData::Tuple(parts) }
+    }
+
+    fn element_count(&self) -> usize {
+        match &self.data {
+            LiteralData::F32(v) => v.len(),
+            LiteralData::I32(v) => v.len(),
+            LiteralData::Tuple(_) => 0,
+        }
+    }
+
+    /// Reinterpret with new dims (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        if matches!(self.data, LiteralData::Tuple(_)) {
+            return Err(Error::new("cannot reshape a tuple literal"));
+        }
+        let count: i64 = dims.iter().product();
+        if count < 0 || count as usize != self.element_count() {
+            return Err(Error::new(format!(
+                "reshape to {dims:?} ({count} elements) from {} elements",
+                self.element_count()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// The array shape; errors on tuples (mirroring the real crate).
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        let ty = match &self.data {
+            LiteralData::F32(_) => ElementType::F32,
+            LiteralData::I32(_) => ElementType::S32,
+            LiteralData::Tuple(_) => return Err(Error::new("tuple literal has no array shape")),
+        };
+        Ok(ArrayShape { dims: self.dims.clone(), ty })
+    }
+
+    /// Copy the elements out as `Vec<T>`; errors on a type mismatch.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data)
+            .ok_or_else(|| Error::new(format!("literal is not {:?}", T::TY)))
+    }
+
+    /// Decompose a tuple literal into its parts.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        match &self.data {
+            LiteralData::Tuple(parts) => Ok(parts.clone()),
+            _ => Err(Error::new("literal is not a tuple")),
+        }
+    }
+}
+
+/// Parsed HLO module text.  The stub only records the path; parsing
+/// happens in real XLA.
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    path: String,
+}
+
+impl HloModuleProto {
+    /// "Parse" an HLO text file.  The stub checks the file exists (so the
+    /// artifact-path plumbing is still exercised) and defers real parsing
+    /// to the real crate.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        if !std::path::Path::new(path).exists() {
+            return Err(Error::new(format!("HLO text file not found: {path}")));
+        }
+        Ok(HloModuleProto { path: path.to_string() })
+    }
+
+    pub fn path(&self) -> &str {
+        &self.path
+    }
+}
+
+/// A computation wrapping a parsed module.
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    proto: HloModuleProto,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { proto: proto.clone() }
+    }
+
+    pub fn proto(&self) -> &HloModuleProto {
+        &self.proto
+    }
+}
+
+/// PJRT client handle.  Construction always fails in the stub: nothing
+/// downstream (compile/execute) can be reached at runtime.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// A compiled executable (unreachable in the stub).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// A device buffer (unreachable in the stub).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrips_f32_and_i32() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let lit = lit.reshape(&[2, 2]).unwrap();
+        let shape = lit.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 2]);
+        assert_eq!(shape.ty(), ElementType::F32);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(lit.to_vec::<i32>().is_err());
+
+        let ints = Literal::vec1(&[7i32, 8]);
+        assert_eq!(ints.array_shape().unwrap().ty(), ElementType::S32);
+        assert_eq!(ints.to_vec::<i32>().unwrap(), vec![7, 8]);
+    }
+
+    #[test]
+    fn reshape_validates_element_count() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0]);
+        assert!(lit.reshape(&[2, 2]).is_err());
+        assert!(lit.reshape(&[3]).is_ok());
+    }
+
+    #[test]
+    fn tuples_decompose() {
+        let t = Literal::tuple(vec![Literal::vec1(&[1.0f32]), Literal::vec1(&[2i32])]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert!(t.array_shape().is_err());
+        assert!(t.reshape(&[1]).is_err());
+    }
+
+    #[test]
+    fn client_is_compile_gate_only() {
+        let err = PjRtClient::cpu().unwrap_err().to_string();
+        assert!(err.contains("stub"), "{err}");
+    }
+
+    #[test]
+    fn missing_hlo_file_errors() {
+        assert!(HloModuleProto::from_text_file("/nonexistent/x.hlo.txt").is_err());
+    }
+}
