@@ -108,6 +108,47 @@ fn serve_microbench() -> f64 {
     SERVE_JOBS as f64 / t0.elapsed().as_secs_f64()
 }
 
+/// Warm-start-cache smoke: the convergence benchmark problem served twice
+/// through a cache-enabled 1-actor service, tolerance-driven both times.
+/// The first solve is cold (cache miss, populates the entry); the repeat
+/// hits and restarts from the converged duals.  Iteration counts — not
+/// wall-clock — so the derived `warm_hit_iter_savings` ratio is
+/// machine-independent and CI-gateable like the other conv keys.
+/// Returns (cold_iters, hit_iters).
+fn warm_cache_microbench() -> (usize, usize) {
+    let mut cfg = Config::default();
+    cfg.backend = "native".into();
+    cfg.service.actors = 1;
+    cfg.service.warm_cache_mb = 8;
+    // mirror the convergence race's solver settings (unfused alternating,
+    // same tol/budget) so cold_iters lines up with conv_plain_iters
+    cfg.solver.max_iters = convergence::CONV_MAX_ITERS;
+    cfg.solver.tol = convergence::CONV_TOL;
+    cfg.solver.schedule = "alternating".into();
+    cfg.solver.use_fused = false;
+    cfg.solver.strategy = "plain".into();
+    let handle = service::spawn(cfg).expect("spawning warm-cache bench service");
+    let solve = || {
+        let prob = convergence::conv_problem(convergence::CONV_N, convergence::CONV_D)
+            .expect("conv problem");
+        handle
+            .submit(JobRequest::new(JobKind::Solve, prob))
+            .expect("submitting warm bench job")
+            .recv()
+            .expect("warm bench job failed")
+    };
+    let cold = solve();
+    let warm = solve();
+    let snap = handle.metrics();
+    assert_eq!(
+        (snap.warm_misses, snap.warm_hits),
+        (1, 1),
+        "warm bench must miss once then hit once"
+    );
+    assert!(warm.iters < cold.iters, "hit {} vs cold {}", warm.iters, cold.iters);
+    (cold.iters, warm.iters)
+}
+
 /// `BENCH_*.json` key for a strategy's iteration count.  Static strings
 /// because [`obj`] borrows its keys.
 fn iters_key(stem: &str) -> &'static str {
@@ -157,6 +198,7 @@ fn smoke(backend: &dyn ComputeBackend) {
     let (symmetric_s, _) = time_plan(true, Schedule::Symmetric);
     let (lse_simd_s, lse_scalar_s) = lse_microbench();
     let serve_jobs_per_s = serve_microbench();
+    let (warm_cold_iters, warm_hit_iters) = warm_cache_microbench();
 
     // solve-strategy race: iterations-to-tolerance per strategy on the
     // fixed anisotropic problem (machine-independent; gated in CI)
@@ -204,6 +246,15 @@ fn smoke(backend: &dyn ComputeBackend) {
     // convergence keys ride at the end of the record:
     // conv_<strategy>_iters (counts) + conv_<strategy>_speedup (gated)
     out_fields.extend(conv_fields);
+    // warm-start cache: cold vs repeat-hit iterations-to-tolerance on the
+    // same problem, and their gated ratio (machine-independent like the
+    // conv speedups; higher = better)
+    out_fields.push(("warm_cold_iters", num(warm_cold_iters as f64)));
+    out_fields.push(("warm_hit_iters", num(warm_hit_iters as f64)));
+    out_fields.push((
+        "warm_hit_iter_savings",
+        num(warm_cold_iters as f64 / warm_hit_iters.max(1) as f64),
+    ));
     let out = obj(out_fields);
     let path = workspace_path(&format!("BENCH_{}.json", backend.name()));
     let text = out.to_string_compact();

@@ -67,6 +67,7 @@ fn conv_config(spec: &str) -> Result<SolverConfig> {
         anneal_factor: 1.0,
         prepared: true,
         strategy: SolveStrategy::parse(spec)?,
+        warm_start: None,
     })
 }
 

@@ -38,9 +38,15 @@ pub const DEFAULT_TRAJECTORY: &str = "BENCH_trajectory.jsonl";
 /// Default allowed relative degradation of `lse_simd_speedup` (15%).
 pub const DEFAULT_MAX_REGRESS: f64 = 0.15;
 
-/// Convergence ratio keys the gate watches when the baseline has them.
-pub const CONV_GATED_KEYS: &[&str] =
-    &["conv_gauss_speedup", "conv_1d_speedup", "conv_anneal_speedup"];
+/// Convergence ratio keys the gate watches when the baseline has them
+/// (iterations-to-tolerance ratios, higher = better; this includes the
+/// warm-start cache's hit-vs-cold savings ratio).
+pub const CONV_GATED_KEYS: &[&str] = &[
+    "conv_gauss_speedup",
+    "conv_1d_speedup",
+    "conv_anneal_speedup",
+    "warm_hit_iter_savings",
+];
 
 /// Outcome of a baseline comparison.
 #[derive(Debug, Clone)]
@@ -218,6 +224,28 @@ mod tests {
         let c = compare(&record(2.0, 100.0), &record_with_conv(2.0, 100.0, 3.0), 0.15).unwrap();
         assert!(!c.regressed);
         assert!(c.conv.is_empty());
+    }
+
+    #[test]
+    fn warm_savings_key_gates_like_the_conv_ratios() {
+        let with_warm = |v: f64| {
+            obj(vec![
+                ("lse_simd_speedup", num(2.0)),
+                ("lse_simd_ms", num(100.0)),
+                ("warm_hit_iter_savings", num(v)),
+            ])
+        };
+        let base = with_warm(32.0);
+        // inside the 15% band
+        assert!(!compare(&base, &with_warm(30.0), 0.15).unwrap().regressed);
+        // collapsed savings ratio: regressed
+        let c = compare(&base, &with_warm(10.0), 0.15).unwrap();
+        assert!(c.regressed);
+        assert!(c.summary.contains("warm_hit_iter_savings"), "{}", c.summary);
+        // baselined key vanished from current: regressed...
+        assert!(compare(&base, &record(2.0, 100.0), 0.15).unwrap().regressed);
+        // ...but a pre-warm-cache baseline skips it (forward compat)
+        assert!(!compare(&record(2.0, 100.0), &with_warm(32.0), 0.15).unwrap().regressed);
     }
 
     #[test]

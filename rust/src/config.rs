@@ -81,6 +81,22 @@ pub struct ServiceSection {
     /// Per-tenant cap on admitted-but-incomplete jobs (0 = off).
     /// Defaults from `FLASH_SINKHORN_TENANT_INFLIGHT`.
     pub tenant_inflight: usize,
+    /// Byte budget (MiB) of the per-tenant warm-start dual cache; 0
+    /// (the default) disables it, keeping serving bitwise identical to
+    /// the cacheless solver.  Defaults from
+    /// `FLASH_SINKHORN_WARM_CACHE_MB`; the config key and the
+    /// `repro serve --warm-cache-mb` flag override it, in that order.
+    pub warm_cache_mb: usize,
+    /// Supervisor cadence (ms) for the adaptive actor pool.  Defaults
+    /// from `FLASH_SINKHORN_TICK_MS` (unset or 0 = 25).
+    pub tick_ms: u64,
+    /// Consecutive busy ticks (class depth >= max_batch) before the
+    /// supervisor wakes another actor.  Defaults from
+    /// `FLASH_SINKHORN_GROW_AFTER_TICKS` (unset or 0 = 2).
+    pub grow_after_ticks: u32,
+    /// Consecutive empty ticks before the supervisor parks an actor.
+    /// Defaults from `FLASH_SINKHORN_PARK_AFTER_TICKS` (unset or 0 = 2).
+    pub park_after_ticks: u32,
 }
 
 #[derive(Debug, Clone)]
@@ -135,11 +151,37 @@ impl Default for Config {
                     .ok()
                     .and_then(|v| v.parse::<usize>().ok())
                     .unwrap_or(0),
+                warm_cache_mb: std::env::var("FLASH_SINKHORN_WARM_CACHE_MB")
+                    .ok()
+                    .and_then(|v| v.parse::<usize>().ok())
+                    .unwrap_or(0),
+                tick_ms: env_pos_u64(
+                    "FLASH_SINKHORN_TICK_MS",
+                    crate::coordinator::service::DEFAULT_SUPERVISOR_TICK_MS,
+                ),
+                grow_after_ticks: env_pos_u64(
+                    "FLASH_SINKHORN_GROW_AFTER_TICKS",
+                    u64::from(crate::coordinator::service::DEFAULT_GROW_AFTER_TICKS),
+                ) as u32,
+                park_after_ticks: env_pos_u64(
+                    "FLASH_SINKHORN_PARK_AFTER_TICKS",
+                    u64::from(crate::coordinator::service::DEFAULT_PARK_AFTER_TICKS),
+                ) as u32,
             },
             hvp: HvpSection { tau: 1e-5, eta: 1e-6, max_cg: 200 },
             bench: BenchSection { out_dir: "results".into(), reps: 3, warmup: 1 },
         }
     }
+}
+
+/// Positive u64 from the environment; unset, unparsable or zero reads as
+/// `default` (the supervisor knobs have no meaningful "off").
+fn env_pos_u64(var: &str, default: u64) -> u64 {
+    std::env::var(var)
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .filter(|&v| v > 0)
+        .unwrap_or(default)
 }
 
 /// Non-negative f64 from the environment; unset, unparsable or negative
@@ -215,6 +257,16 @@ impl Config {
                 cfg.service.tenant_burst = v.as_f64()?;
             }
             upd_usize(s, "tenant_inflight", &mut cfg.service.tenant_inflight)?;
+            upd_usize(s, "warm_cache_mb", &mut cfg.service.warm_cache_mb)?;
+            if let Some(v) = s.get("tick_ms") {
+                cfg.service.tick_ms = v.as_usize()? as u64;
+            }
+            if let Some(v) = s.get("grow_after_ticks") {
+                cfg.service.grow_after_ticks = v.as_usize()? as u32;
+            }
+            if let Some(v) = s.get("park_after_ticks") {
+                cfg.service.park_after_ticks = v.as_usize()? as u32;
+            }
         }
         if let Some(s) = j.get("hvp") {
             upd_f32(s, "tau", &mut cfg.hvp.tau)?;
@@ -303,6 +355,28 @@ mod tests {
         assert_eq!(cfg.service.tenant_inflight, 3);
         assert!(Config::from_json(r#"{"service": {"actors_min": -1}}"#).is_err());
         assert!(Config::from_json(r#"{"service": {"tenant_rate": "fast"}}"#).is_err());
+    }
+
+    #[test]
+    fn warm_cache_and_supervisor_knobs_parse_with_current_defaults() {
+        // (FLASH_SINKHORN_WARM_CACHE_MB / _TICK_MS / _*_AFTER_TICKS are
+        // not set in the test environment)
+        let d = Config::from_json("{}").unwrap();
+        assert_eq!(d.service.warm_cache_mb, 0, "cache must default off");
+        assert_eq!(d.service.tick_ms, 25);
+        assert_eq!(d.service.grow_after_ticks, 2);
+        assert_eq!(d.service.park_after_ticks, 2);
+        let cfg = Config::from_json(
+            r#"{"service": {"warm_cache_mb": 64, "tick_ms": 5,
+                 "grow_after_ticks": 3, "park_after_ticks": 7}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.service.warm_cache_mb, 64);
+        assert_eq!(cfg.service.tick_ms, 5);
+        assert_eq!(cfg.service.grow_after_ticks, 3);
+        assert_eq!(cfg.service.park_after_ticks, 7);
+        assert!(Config::from_json(r#"{"service": {"warm_cache_mb": -1}}"#).is_err());
+        assert!(Config::from_json(r#"{"service": {"tick_ms": "fast"}}"#).is_err());
     }
 
     #[test]

@@ -25,14 +25,24 @@
 //! `parked_actors` gauge pair — set at spawn, before any traffic, so the
 //! absent-vs-zero contract extends to the new series.
 //!
+//! The warm-start cache adds a counter triple
+//! (`warm_hits` / `warm_misses` / `warm_evictions`) and an
+//! iterations-saved histogram — all registered at zeros up front like
+//! every other series, and all staying at zero while the cache is off
+//! (the default).  The admission layer additionally exposes each
+//! tenant's *remaining* token budget ([`TenantSnapshot::rate_tokens`],
+//! `None` when rate limiting is off) so operators can see headroom
+//! before the rejections start, not only after.
+//!
 //! Metric names as exposed by [`Snapshot`] (documented for scrapers in the
 //! README's "Serving & scaling" section): `jobs_ok`, `jobs_failed`,
 //! `batches`, `batched_jobs`, `queue_depth`, `sinkhorn_iters`, `steals`,
 //! `admitted`, `rejected_{queue_full,rate_limited,tenant_cap}`,
 //! `resizes_{grow,park}`, `active_actors`, `parked_actors`,
+//! `warm_{hits,misses,evictions}`, `warm_saved_iters_{mean,p50,max}`,
 //! `actors[i].{jobs,batches,steals,queue_depth}`,
 //! `class_depths[(n,m,d)]`,
-//! `tenants[label].{jobs,admitted,rejected_*,mean_ms,p50_ms,p99_ms,max_ms}`,
+//! `tenants[label].{jobs,admitted,rejected_*,mean_ms,p50_ms,p99_ms,max_ms,rate_tokens}`,
 //! `latency_{mean,p50,p99,max}_ms`.
 
 use std::collections::BTreeMap;
@@ -108,6 +118,12 @@ pub struct Metrics {
     pub resizes_grow: AtomicU64,
     /// Supervisor park events (one actor drained to parked each).
     pub resizes_park: AtomicU64,
+    /// Warm-start cache hits (cached duals injected into a solve).
+    pub warm_hits: AtomicU64,
+    /// Warm-start cache misses (cache consulted, no usable entry).
+    pub warm_misses: AtomicU64,
+    /// Warm-cache entries evicted by the LRU byte budget.
+    pub warm_evictions: AtomicU64,
     /// Actors currently eligible to pick work.
     active_actors: AtomicU64,
     /// Actor slots currently parked (`slots - active`).
@@ -116,6 +132,9 @@ pub struct Metrics {
     /// Live queue depth per shape class.  Entries persist at 0 after a
     /// class drains so scrapers see explicit zeros, not absence.
     class_depths: Mutex<BTreeMap<ClassKey, u64>>,
+    /// Iterations saved per warm hit vs that entry's cold solve
+    /// (histogram buckets double as powers of two of iterations here).
+    warm_saved: Mutex<Histogram>,
     latency: Mutex<Histogram>,
     tenants: Mutex<BTreeMap<String, Histogram>>,
     /// Per-tenant admission counters, registered (at zeros) on first
@@ -199,11 +218,15 @@ impl Metrics {
             rejected_tenant_cap: AtomicU64::new(0),
             resizes_grow: AtomicU64::new(0),
             resizes_park: AtomicU64::new(0),
+            warm_hits: AtomicU64::new(0),
+            warm_misses: AtomicU64::new(0),
+            warm_evictions: AtomicU64::new(0),
             // until the service reports otherwise, every slot is active
             active_actors: AtomicU64::new(actors as u64),
             parked_actors: AtomicU64::new(0),
             actors: (0..actors).map(|_| ActorMetrics::default()).collect(),
             class_depths: Mutex::new(BTreeMap::new()),
+            warm_saved: Mutex::new(Histogram::default()),
             latency: Mutex::new(Histogram::default()),
             tenants: Mutex::new(BTreeMap::new()),
             tenant_admission: Mutex::new(BTreeMap::new()),
@@ -298,6 +321,23 @@ impl Metrics {
         }
     }
 
+    /// Count one warm-cache hit and the iterations it saved (that
+    /// entry's cold solve minus this solve's iterations).
+    pub fn on_warm_hit(&self, saved_iters: u64) {
+        self.warm_hits.fetch_add(1, Ordering::Relaxed);
+        self.warm_saved.lock().unwrap_or_else(|e| e.into_inner()).record(saved_iters as f64);
+    }
+
+    /// Count one warm-cache miss (cache enabled and consulted, no entry).
+    pub fn on_warm_miss(&self) {
+        self.warm_misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count `n` entries evicted by the cache's LRU byte budget.
+    pub fn on_warm_evictions(&self, n: u64) {
+        self.warm_evictions.fetch_add(n, Ordering::Relaxed);
+    }
+
     /// Publish the actor-pool size gauges (active / parked slots).  Called
     /// at spawn — before any traffic — and on every resize.
     pub fn set_pool_size(&self, active: usize, parked: usize) {
@@ -318,6 +358,7 @@ impl Metrics {
     /// A consistent point-in-time copy of every counter and gauge.
     pub fn snapshot(&self) -> Snapshot {
         let h = self.latency.lock().unwrap_or_else(|e| e.into_inner()).clone();
+        let ws = self.warm_saved.lock().unwrap_or_else(|e| e.into_inner()).clone();
         let class_depths: Vec<(ClassKey, u64)> = self
             .class_depths
             .lock()
@@ -366,6 +407,9 @@ impl Metrics {
                     latency_p50_ms: th.quantile(0.5),
                     latency_p99_ms: th.quantile(0.99),
                     latency_max_ms: th.max_ms,
+                    // the service overlays the live bucket balance (the
+                    // Metrics struct does not know the admission state)
+                    rate_tokens: None,
                     tenant: name,
                 }
             })
@@ -384,6 +428,12 @@ impl Metrics {
             rejected_tenant_cap: self.rejected_tenant_cap.load(Ordering::Relaxed),
             resizes_grow: self.resizes_grow.load(Ordering::Relaxed),
             resizes_park: self.resizes_park.load(Ordering::Relaxed),
+            warm_hits: self.warm_hits.load(Ordering::Relaxed),
+            warm_misses: self.warm_misses.load(Ordering::Relaxed),
+            warm_evictions: self.warm_evictions.load(Ordering::Relaxed),
+            warm_saved_iters_mean: ws.mean(),
+            warm_saved_iters_p50: ws.quantile(0.5),
+            warm_saved_iters_max: ws.max_ms,
             active_actors: self.active_actors.load(Ordering::Relaxed),
             parked_actors: self.parked_actors.load(Ordering::Relaxed),
             actors: actor_snaps,
@@ -435,6 +485,11 @@ pub struct TenantSnapshot {
     pub latency_p99_ms: f64,
     /// Worst observed latency, milliseconds.
     pub latency_max_ms: f64,
+    /// Remaining token-bucket balance (whole+fractional jobs) as of the
+    /// last refill — the budget headroom before `rejected_rate_limited`
+    /// starts counting.  `None` when rate limiting is off or the label
+    /// has no bucket yet.
+    pub rate_tokens: Option<f64>,
 }
 
 /// Point-in-time copy of every service counter and gauge.
@@ -467,6 +522,18 @@ pub struct Snapshot {
     pub resizes_grow: u64,
     /// Supervisor park events.
     pub resizes_park: u64,
+    /// Warm-start cache hits (0 while the cache is off, never absent).
+    pub warm_hits: u64,
+    /// Warm-start cache misses.
+    pub warm_misses: u64,
+    /// Warm-cache entries evicted by the LRU byte budget.
+    pub warm_evictions: u64,
+    /// Mean Sinkhorn iterations saved per warm hit.
+    pub warm_saved_iters_mean: f64,
+    /// Coarse p50 upper bound on iterations saved per warm hit.
+    pub warm_saved_iters_p50: f64,
+    /// Largest iterations-saved observed on a single warm hit.
+    pub warm_saved_iters_max: f64,
     /// Actors currently eligible to pick work (always present).
     pub active_actors: u64,
     /// Actor slots currently parked (always present; `slots - active`).
@@ -518,6 +585,16 @@ impl std::fmt::Display for Snapshot {
             "\n  pool: active={} parked={} resizes grow={} park={}",
             self.active_actors, self.parked_actors, self.resizes_grow, self.resizes_park
         )?;
+        write!(
+            f,
+            "\n  warm cache: hits={} misses={} evictions={} saved iters mean={:.1} p50<={:.0} max={:.0}",
+            self.warm_hits,
+            self.warm_misses,
+            self.warm_evictions,
+            self.warm_saved_iters_mean,
+            self.warm_saved_iters_p50,
+            self.warm_saved_iters_max
+        )?;
         for a in &self.actors {
             write!(
                 f,
@@ -540,6 +617,9 @@ impl std::fmt::Display for Snapshot {
                 t.latency_p99_ms,
                 t.latency_max_ms
             )?;
+            if let Some(tokens) = t.rate_tokens {
+                write!(f, " tokens={tokens:.2}")?;
+            }
         }
         Ok(())
     }
@@ -736,6 +816,38 @@ mod tests {
         assert!(s.latency_p50_ms <= s.latency_p99_ms);
         let t = &s.tenants[0];
         assert!(t.latency_p50_ms <= t.latency_p99_ms);
+    }
+
+    #[test]
+    fn warm_series_register_zeros_up_front_and_accumulate() {
+        let m = Metrics::with_actors(1);
+        // absent-vs-zero: the warm series exist before (and without) any
+        // cache activity — and thus read zero for cache-off deployments
+        let s = m.snapshot();
+        assert_eq!((s.warm_hits, s.warm_misses, s.warm_evictions), (0, 0, 0));
+        assert_eq!(s.warm_saved_iters_mean, 0.0);
+        assert_eq!(s.warm_saved_iters_max, 0.0);
+        assert!(s.to_string().contains("warm cache: hits=0 misses=0 evictions=0"));
+        m.on_warm_miss();
+        m.on_warm_hit(30);
+        m.on_warm_hit(10);
+        m.on_warm_evictions(3);
+        let s = m.snapshot();
+        assert_eq!((s.warm_hits, s.warm_misses, s.warm_evictions), (2, 1, 3));
+        assert_eq!(s.warm_saved_iters_mean, 20.0);
+        assert_eq!(s.warm_saved_iters_max, 30.0);
+        assert!(s.warm_saved_iters_p50 >= 10.0);
+    }
+
+    #[test]
+    fn rate_tokens_default_to_none_and_render_when_set() {
+        let m = Metrics::with_actors(1);
+        m.on_tenant_seen(Some("acme"));
+        let mut s = m.snapshot();
+        assert_eq!(s.tenants[0].rate_tokens, None, "metrics alone cannot know budgets");
+        assert!(!s.to_string().contains("tokens="));
+        s.tenants[0].rate_tokens = Some(2.5);
+        assert!(s.to_string().contains("tokens=2.50"));
     }
 
     #[test]

@@ -20,8 +20,10 @@
 //! classes ([`router::shard_of`]), steal across classes when idle, and
 //! grow/park between `service.actors_min` and `actors_max` as queue depth
 //! demands — so multi-tenant bursts never serialize behind one large
-//! solve and an idle deployment does not burn threads.  Time enters the
-//! layer only through [`clock::Clock`], so the whole stack is
+//! solve and an idle deployment does not burn threads.  A per-tenant
+//! warm-start cache ([`warm::WarmCache`], off by default) reuses
+//! converged duals across repeated solves of the same instance.  Time
+//! enters the layer only through [`clock::Clock`], so the whole stack is
 //! deterministic under an injected virtual clock
 //! (`tests/serving_stress.rs`).
 
@@ -31,5 +33,6 @@ pub mod job;
 pub mod metrics;
 pub mod router;
 pub mod service;
+pub mod warm;
 
 pub use router::{class_of, shard_of, Bucket, BucketCtx, ClassKey, Router};

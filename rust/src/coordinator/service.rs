@@ -39,6 +39,20 @@
 //! highest priority queued in the class, then the front job's age,
 //! decides.
 //!
+//! ## Warm-start cache
+//!
+//! With `service.warm_cache_mb > 0`, every tolerance-driven solve's dual
+//! potentials are kept in a per-tenant, LRU-byte-bounded
+//! [`super::warm::WarmCache`], and a repeat solve of the same instance
+//! (same points/weights/eps bits, [`super::warm::fingerprint`]) starts
+//! from them instead of the strategy initializer — typically converging
+//! in a small fraction of the cold iteration count
+//! (`warm_hits`/`warm_misses`/`warm_evictions` counters plus an
+//! iterations-saved histogram in the metrics snapshot).  Fixed-budget
+//! jobs (`fixed_iters`) bypass the cache; with the knob at its default 0
+//! no cache exists and serving stays bitwise identical to the cacheless
+//! solver (`tests/serving_stress.rs` pins both contracts).
+//!
 //! ## Elasticity
 //!
 //! With `service.actors_min < actors_max` the pool breathes: a supervisor
@@ -82,13 +96,17 @@ use super::clock::{Clock, WallClock};
 use super::job::{Job, JobKind, JobRequest, JobResponse};
 use super::metrics::{Metrics, Snapshot};
 use super::router::{shard_of, ClassKey};
+use super::warm::{self, WarmCache};
 
-/// Consecutive over-high-water supervisor ticks before growing by one.
-const GROW_AFTER_TICKS: u32 = 2;
-/// Consecutive all-empty supervisor ticks before parking one actor.
-const PARK_AFTER_TICKS: u32 = 2;
-/// Background supervisor cadence under [`spawn`] (wall clock).
-const SUPERVISOR_TICK: Duration = Duration::from_millis(25);
+/// Default consecutive over-high-water supervisor ticks before growing by
+/// one (`service.grow_after_ticks`).
+pub const DEFAULT_GROW_AFTER_TICKS: u32 = 2;
+/// Default consecutive all-empty supervisor ticks before parking one
+/// actor (`service.park_after_ticks`).
+pub const DEFAULT_PARK_AFTER_TICKS: u32 = 2;
+/// Default background supervisor cadence under [`spawn`], milliseconds
+/// (`service.tick_ms`).
+pub const DEFAULT_SUPERVISOR_TICK_MS: u64 = 25;
 
 impl Keyed for Job {
     type Key = ClassKey;
@@ -190,6 +208,18 @@ struct Shared {
     /// True iff any tenant limit is configured — the per-job completion
     /// path skips the state lock entirely when quotas are off.
     admission_enabled: bool,
+    /// Consecutive busy ticks before the supervisor grows by one
+    /// (`service.grow_after_ticks`).
+    grow_after: u32,
+    /// Consecutive empty ticks before the supervisor parks one
+    /// (`service.park_after_ticks`).
+    park_after: u32,
+    /// Background supervisor cadence (`service.tick_ms`).
+    tick: Duration,
+    /// Cross-request warm-start dual cache (`service.warm_cache_mb`;
+    /// `None` = off, the default — serving stays bitwise identical to
+    /// the cacheless solver).
+    warm_cache: Option<WarmCache>,
     clock: Arc<dyn Clock>,
 }
 
@@ -292,9 +322,20 @@ impl ServiceHandle {
         self.submit(request)?.recv()
     }
 
-    /// Point-in-time copy of the service counters and gauges.
+    /// Point-in-time copy of the service counters and gauges, with each
+    /// tenant's remaining token-bucket balance
+    /// ([`super::metrics::TenantSnapshot::rate_tokens`]) overlaid from
+    /// the live admission state — operators see rate headroom before the
+    /// first rejection, not only after.
     pub fn metrics(&self) -> Snapshot {
-        self.metrics.snapshot()
+        let mut snap = self.metrics.snapshot();
+        if self.shared.admission_enabled && !snap.tenants.is_empty() {
+            let st = lock(&self.shared.state);
+            for t in &mut snap.tenants {
+                t.rate_tokens = st.admission.tokens(Some(&t.tenant));
+            }
+        }
+        snap
     }
 
     /// Number of backend actor *slots* this service runs (== `actors_max`;
@@ -313,13 +354,14 @@ impl ServiceHandle {
         (self.shared.actors_min, self.shared.actors)
     }
 
-    /// One supervisor tick: grow by one after two consecutive ticks with
-    /// some class at/over the high-water mark (`service.max_batch` queued
-    /// in one class), park one after two consecutive all-empty ticks
-    /// (`GROW_AFTER_TICKS` / `PARK_AFTER_TICKS`).  Exposed so
-    /// deterministic tests (and embedders with their own control loops)
-    /// can drive elasticity explicitly; [`spawn`] runs it from a
-    /// background thread every 25 ms.
+    /// One supervisor tick: grow by one after `service.grow_after_ticks`
+    /// consecutive ticks with some class at/over the high-water mark
+    /// (`service.max_batch` queued in one class), park one after
+    /// `service.park_after_ticks` consecutive all-empty ticks (both
+    /// default to 2).  Exposed so deterministic tests (and embedders with
+    /// their own control loops) can drive elasticity explicitly;
+    /// [`spawn`] runs it from a background thread every `service.tick_ms`
+    /// milliseconds (default 25).
     pub fn supervise_once(&self) -> Option<Resize> {
         let mut st = lock(&self.shared.state);
         if st.shutdown {
@@ -469,6 +511,10 @@ fn spawn_inner(
         actors_min,
         kernel_total,
         admission_enabled: policy.any_limit(),
+        grow_after: config.service.grow_after_ticks.max(1),
+        park_after: config.service.park_after_ticks.max(1),
+        tick: Duration::from_millis(config.service.tick_ms.max(1)),
+        warm_cache: WarmCache::from_mb(config.service.warm_cache_mb),
         clock,
     });
     let solver_cfg = SolverConfig::from_section(&config.solver)?;
@@ -529,7 +575,7 @@ fn spawn_inner(
         std::thread::Builder::new()
             .name("ot-supervisor".into())
             .spawn(move || loop {
-                std::thread::sleep(SUPERVISOR_TICK);
+                std::thread::sleep(sup_shared.tick);
                 let mut st = lock(&sup_shared.state);
                 if st.shutdown {
                     return;
@@ -551,12 +597,12 @@ fn supervise_tick(shared: &Shared, metrics: &Metrics, st: &mut State) -> Option<
     let empty = st.queues.is_empty();
     st.busy_ticks = if over { st.busy_ticks + 1 } else { 0 };
     st.idle_ticks = if empty { st.idle_ticks + 1 } else { 0 };
-    if over && st.busy_ticks >= GROW_AFTER_TICKS && st.active < shared.actors {
+    if over && st.busy_ticks >= shared.grow_after && st.active < shared.actors {
         let target = st.active + 1;
         resize(shared, metrics, st, target);
         return Some(Resize::Grew(target));
     }
-    if empty && st.idle_ticks >= PARK_AFTER_TICKS && st.active > shared.actors_min {
+    if empty && st.idle_ticks >= shared.park_after && st.active > shared.actors_min {
         let target = st.active - 1;
         resize(shared, metrics, st, target);
         return Some(Resize::Parked(target));
@@ -690,7 +736,14 @@ fn actor_loop(
             metrics.actor(index).steals.fetch_add(batch.len() as u64, Ordering::Relaxed);
         }
         for job in batch {
-            let result = run_job(backend.as_ref(), &solver, solver_cfg, &job.request);
+            let result = run_job(
+                backend.as_ref(),
+                &solver,
+                solver_cfg,
+                &job.request,
+                shared.warm_cache.as_ref(),
+                metrics,
+            );
             match &result {
                 Ok(resp) => {
                     metrics.jobs_ok.fetch_add(1, Ordering::Relaxed);
@@ -724,11 +777,24 @@ fn run_job(
     solver: &SinkhornSolver,
     base_cfg: &SolverConfig,
     req: &JobRequest,
+    warm_cache: Option<&WarmCache>,
+    metrics: &Metrics,
 ) -> Result<JobResponse> {
-    // per-job overrides: iteration budget and/or solve strategy.  Only
-    // build a fresh solver when the job actually deviates from the
-    // service-wide config.
-    let (pot, report) = if req.fixed_iters.is_some() || req.strategy.is_some() {
+    // Fixed-budget jobs bypass the warm cache entirely: their contract is
+    // exactly-k-iterations from the configured initializer (that is what
+    // the soak/bench bitwise pins rely on), and "iterations saved" is
+    // meaningless when the iteration count is the input.
+    let warm_cache = warm_cache.filter(|_| req.fixed_iters.is_none());
+    let tenant = req.tenant.as_deref();
+    let consulted = warm_cache.map(|cache| {
+        let fp = warm::fingerprint(&req.problem);
+        (fp, cache.lookup(tenant, fp))
+    });
+    let hit = consulted.as_ref().and_then(|(_, h)| h.as_ref());
+    // per-job overrides: iteration budget, solve strategy and/or cached
+    // warm-start duals.  Only build a fresh solver when the job actually
+    // deviates from the service-wide config.
+    let (pot, report) = if req.fixed_iters.is_some() || req.strategy.is_some() || hit.is_some() {
         let mut cfg = base_cfg.clone();
         if let Some(k) = req.fixed_iters {
             cfg.max_iters = k;
@@ -737,10 +803,25 @@ fn run_job(
         if let Some(spec) = &req.strategy {
             cfg.strategy = SolveStrategy::parse(spec)?;
         }
+        if let Some(h) = hit {
+            cfg.warm_start = Some(h.duals.clone());
+        }
         SinkhornSolver::new(backend, cfg).solve(&req.problem)?
     } else {
         solver.solve(&req.problem)?
     };
+    if let (Some(cache), Some((fp, looked))) = (warm_cache, &consulted) {
+        match looked {
+            Some(h) => metrics.on_warm_hit(h.cold_iters.saturating_sub(report.iters) as u64),
+            None => metrics.on_warm_miss(),
+        }
+        // insert on hit too: refreshed duals (and recency) under the
+        // entry's original cold-iteration baseline
+        let evicted = cache.insert(tenant, *fp, &pot, report.iters);
+        if evicted > 0 {
+            metrics.on_warm_evictions(evicted as u64);
+        }
+    }
     let grad = match req.kind {
         JobKind::Solve => None,
         JobKind::Grad => {

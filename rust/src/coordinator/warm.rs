@@ -1,0 +1,369 @@
+//! Cross-request warm-start cache for dual potentials.
+//!
+//! Production OT traffic is repetitive: OTDD sweeps re-solve overlapping
+//! dataset pairs and gradient flows re-solve slowly drifting clouds.  The
+//! duals of a finished solve are the best possible initializer for the
+//! next solve of the same instance — warm starts are where the end-to-end
+//! wins live — so the serving layer keeps them: the actor loop inserts
+//! every tolerance-driven solve's [`Potentials`] here and consults the
+//! cache before solving, injecting a hit through
+//! [`SolverConfig::warm_start`](crate::ot::solver::SolverConfig) ahead of
+//! whatever `zeros`/`gauss`/`1d` initializer the strategy configured.
+//!
+//! ## Keying
+//!
+//! Entries are keyed by `(tenant scope, fingerprint)`:
+//!
+//! * the **fingerprint** ([`fingerprint`]) is a 64-bit FNV-1a hash over
+//!   the problem's defining bytes — the exact f32 bit patterns of the
+//!   point clouds and weights, the eps bits, the exact `(n, m, d)` and
+//!   the [`class_of`] shape class the router coalesces under.  A
+//!   fingerprint **collision is harmless by construction**: warm duals
+//!   only move the Sinkhorn starting point, never its fixed point, so the
+//!   worst a stale or colliding entry can cost is iterations — PR 2's
+//!   explicit zero-weight masking (NEG_INF bias at the kernel boundary)
+//!   is what makes feeding foreign duals back in safe;
+//! * the **tenant scope** reuses the admission layer's discipline:
+//!   unlabeled jobs share the anonymous `""` scope (an unlabeled client
+//!   cannot read a labeled tenant's duals), and one tenant's entries are
+//!   never returned to another.  Distinct scopes are capped
+//!   ([`WARM_TENANT_CAP`]); past the cap, *new* labels simply stop
+//!   caching — unlike admission there is no shared overflow scope,
+//!   because folding strangers into one scope would hand tenant A's
+//!   duals to tenant B.
+//!
+//! ## Eviction and determinism
+//!
+//! The cache is bounded by an **LRU byte budget**
+//! (`service.warm_cache_mb`; an entry costs `(n + m) * 4` bytes of duals
+//! plus bookkeeping).  Recency is a monotone counter, not wall time, so
+//! eviction order is deterministic under test.  The budget `0` disables
+//! the cache entirely — the default, which keeps `strategy = "plain"`
+//! serving results bitwise identical to the pre-cache solver.  With the
+//! cache enabled, a *cold* solve is still bitwise identical; only a *hit*
+//! changes iteration counts, and its contract is convergence (final
+//! delta <= tol, cost agreement within tolerance), not bitwise equality
+//! (`tests/serving_stress.rs`).
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::ot::problem::OtProblem;
+use crate::ot::solver::Potentials;
+
+use super::router::class_of;
+
+/// Max distinct tenant scopes holding cache entries, mirroring
+/// `batcher::TENANT_STATE_CAP` / `metrics::MAX_TENANT_SERIES`: cycling
+/// fresh labels must not grow the cache's key space without bound.  The
+/// count is of scopes *currently present*, so it self-heals as entries
+/// evict.
+pub const WARM_TENANT_CAP: usize = 1024;
+
+/// Bookkeeping estimate per entry (key, map node, recency stamp) added to
+/// the dual-vector payload when charging the byte budget.
+const ENTRY_OVERHEAD: usize = 160;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn mix_u32(h: &mut u64, word: u32) {
+    for b in word.to_le_bytes() {
+        *h = (*h ^ u64::from(b)).wrapping_mul(FNV_PRIME);
+    }
+}
+
+fn mix_u64(h: &mut u64, word: u64) {
+    mix_u32(h, word as u32);
+    mix_u32(h, (word >> 32) as u32);
+}
+
+/// Dataset fingerprint of an EOT instance: FNV-1a over the exact f32 bit
+/// patterns of points and weights, the eps bits, the `(n, m, d)` extents
+/// and the [`class_of`] shape class.  Bit-exact inputs — the repetitive
+/// workloads the cache targets re-submit the same buffers — hash equal;
+/// any perturbed input hashes (essentially always) elsewhere.
+pub fn fingerprint(prob: &OtProblem) -> u64 {
+    let mut h = FNV_OFFSET;
+    let class = class_of(prob.n, prob.m, prob.d);
+    for dim in [prob.n, prob.m, prob.d, class.0, class.1, class.2] {
+        mix_u64(&mut h, dim as u64);
+    }
+    mix_u32(&mut h, prob.eps.to_bits());
+    for v in prob.x.iter().chain(&prob.y).chain(&prob.a).chain(&prob.b) {
+        mix_u32(&mut h, v.to_bits());
+    }
+    h
+}
+
+/// What a successful [`WarmCache::lookup`] hands back.
+#[derive(Debug, Clone)]
+pub struct WarmHit {
+    /// The cached shifted duals, ready for
+    /// [`SolverConfig::warm_start`](crate::ot::solver::SolverConfig).
+    pub duals: Potentials,
+    /// Iteration count of the cold solve that first created the entry —
+    /// the baseline the iterations-saved histogram measures hits against.
+    pub cold_iters: usize,
+}
+
+struct Entry {
+    duals: Potentials,
+    /// Baseline iterations of the entry's *first* (miss-path) solve.
+    /// Hit-path refreshes update the duals but keep this, so "iterations
+    /// saved" always compares against a genuinely cold solve.
+    cold_iters: usize,
+    /// Monotone recency stamp (bumped on insert and hit).
+    last_used: u64,
+}
+
+fn entry_bytes(pot: &Potentials) -> usize {
+    (pot.fhat.len() + pot.ghat.len()) * std::mem::size_of::<f32>() + ENTRY_OVERHEAD
+}
+
+struct Inner {
+    entries: BTreeMap<(String, u64), Entry>,
+    /// Entry count per scope currently present (bounds scope cardinality).
+    scopes: BTreeMap<String, usize>,
+    bytes: usize,
+    budget: usize,
+    tick: u64,
+}
+
+/// A per-tenant, LRU-byte-bounded map from dataset fingerprints to the
+/// duals of the last solve of that instance.  Interior-mutexed: the
+/// service shares one cache across all actors.
+pub struct WarmCache {
+    inner: Mutex<Inner>,
+}
+
+impl WarmCache {
+    /// A cache bounded to `budget` bytes (dual payload + per-entry
+    /// bookkeeping).  Entries larger than the whole budget are never
+    /// admitted.
+    pub fn with_budget(budget: usize) -> Self {
+        Self {
+            inner: Mutex::new(Inner {
+                entries: BTreeMap::new(),
+                scopes: BTreeMap::new(),
+                bytes: 0,
+                budget,
+                tick: 0,
+            }),
+        }
+    }
+
+    /// The config-facing constructor: `service.warm_cache_mb` MiB of
+    /// budget, `None` when `mb == 0` (cache off — the default, keeping
+    /// the serving path bitwise identical to the pre-cache solver).
+    pub fn from_mb(mb: usize) -> Option<Self> {
+        (mb > 0).then(|| Self::with_budget(mb << 20))
+    }
+
+    /// Unlabeled jobs share the anonymous scope, exactly like admission
+    /// metering — an unlabeled client gets its own pool, not a tenant's.
+    fn scope(tenant: Option<&str>) -> &str {
+        tenant.unwrap_or("")
+    }
+
+    /// Cached duals for `tenant`'s instance `fp`, bumping its recency.
+    /// Only `tenant`'s own scope is consulted — a hit can never cross
+    /// tenant boundaries.
+    pub fn lookup(&self, tenant: Option<&str>, fp: u64) -> Option<WarmHit> {
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        inner.tick += 1;
+        let stamp = inner.tick;
+        let key = (Self::scope(tenant).to_string(), fp);
+        let e = inner.entries.get_mut(&key)?;
+        e.last_used = stamp;
+        Some(WarmHit { duals: e.duals.clone(), cold_iters: e.cold_iters })
+    }
+
+    /// Insert (or refresh) the duals a solve of instance `fp` produced,
+    /// then evict least-recently-used entries until the byte budget
+    /// holds.  Returns how many entries were evicted (for the
+    /// `warm_evictions` counter).  A refresh keeps the entry's original
+    /// cold-iteration baseline; a brand-new label past
+    /// [`WARM_TENANT_CAP`] scopes is dropped rather than folded into a
+    /// shared scope.
+    pub fn insert(
+        &self,
+        tenant: Option<&str>,
+        fp: u64,
+        duals: &Potentials,
+        iters: usize,
+    ) -> usize {
+        let cost = entry_bytes(duals);
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        if cost > inner.budget {
+            return 0; // can never fit, not even alone
+        }
+        inner.tick += 1;
+        let stamp = inner.tick;
+        let scope = Self::scope(tenant);
+        let key = (scope.to_string(), fp);
+        if let Some(e) = inner.entries.get_mut(&key) {
+            let old = entry_bytes(&e.duals);
+            e.duals = duals.clone();
+            e.last_used = stamp;
+            inner.bytes = inner.bytes - old + cost;
+        } else {
+            if !inner.scopes.contains_key(scope) && inner.scopes.len() >= WARM_TENANT_CAP {
+                return 0;
+            }
+            *inner.scopes.entry(scope.to_string()).or_insert(0) += 1;
+            inner.entries.insert(
+                key,
+                Entry { duals: duals.clone(), cold_iters: iters, last_used: stamp },
+            );
+            inner.bytes += cost;
+        }
+        // LRU eviction: the fresh entry carries the max stamp, so it is
+        // considered last — and fits alone (cost <= budget), so the loop
+        // always terminates with it resident.
+        let mut evicted = 0;
+        while inner.bytes > inner.budget {
+            let Some(victim) = inner
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone())
+            else {
+                break;
+            };
+            let gone = inner.entries.remove(&victim).expect("victim key just observed");
+            inner.bytes -= entry_bytes(&gone.duals);
+            if let Some(count) = inner.scopes.get_mut(&victim.0) {
+                *count -= 1;
+                if *count == 0 {
+                    inner.scopes.remove(&victim.0);
+                }
+            }
+            evicted += 1;
+        }
+        evicted
+    }
+
+    /// Live entry count (tests / introspection).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).entries.len()
+    }
+
+    /// True when no entry is cached.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Bytes currently charged against the budget.
+    pub fn bytes(&self) -> usize {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn prob(seed: u64) -> OtProblem {
+        let x = crate::data::clouds::uniform_cloud(8, 3, seed);
+        let y = crate::data::clouds::uniform_cloud(6, 3, seed + 100);
+        OtProblem::uniform(x, y, 8, 6, 3, 0.1).unwrap()
+    }
+
+    fn pot(n: usize, m: usize, fill: f32) -> Potentials {
+        Potentials { fhat: vec![fill; n], ghat: vec![fill; m] }
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_input_sensitive() {
+        let a = prob(1);
+        assert_eq!(fingerprint(&a), fingerprint(&prob(1)), "same bytes, same fp");
+        assert_ne!(fingerprint(&a), fingerprint(&prob(2)), "different cloud");
+        let mut eps = prob(1);
+        eps.eps = 0.2;
+        assert_ne!(fingerprint(&a), fingerprint(&eps), "eps is part of the key");
+        let mut w = prob(1);
+        w.a[0] += 1e-3;
+        assert_ne!(fingerprint(&a), fingerprint(&w), "weights are part of the key");
+    }
+
+    #[test]
+    fn lookup_roundtrips_and_bumps_recency() {
+        let cache = WarmCache::with_budget(1 << 16);
+        assert!(cache.lookup(Some("acme"), 7).is_none());
+        assert_eq!(cache.insert(Some("acme"), 7, &pot(4, 4, 1.5), 30), 0);
+        let hit = cache.lookup(Some("acme"), 7).expect("inserted entry must hit");
+        assert_eq!(hit.duals.fhat, vec![1.5; 4]);
+        assert_eq!(hit.cold_iters, 30);
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn tenants_are_isolated_and_anonymous_has_its_own_scope() {
+        let cache = WarmCache::with_budget(1 << 16);
+        cache.insert(Some("a"), 7, &pot(4, 4, 1.0), 10);
+        assert!(cache.lookup(Some("b"), 7).is_none(), "tenant b must not see a's duals");
+        assert!(cache.lookup(None, 7).is_none(), "anonymous must not see a's duals");
+        cache.insert(None, 7, &pot(4, 4, 2.0), 11);
+        assert_eq!(cache.lookup(None, 7).unwrap().duals.fhat[0], 2.0);
+        assert_eq!(cache.lookup(Some("a"), 7).unwrap().duals.fhat[0], 1.0);
+    }
+
+    #[test]
+    fn lru_evicts_oldest_under_byte_budget() {
+        let one = entry_bytes(&pot(4, 4, 0.0));
+        let cache = WarmCache::with_budget(2 * one);
+        assert_eq!(cache.insert(Some("t"), 1, &pot(4, 4, 1.0), 5), 0);
+        assert_eq!(cache.insert(Some("t"), 2, &pot(4, 4, 2.0), 5), 0);
+        // touch 1 so 2 becomes the LRU victim
+        cache.lookup(Some("t"), 1).unwrap();
+        assert_eq!(cache.insert(Some("t"), 3, &pot(4, 4, 3.0), 5), 1);
+        assert!(cache.lookup(Some("t"), 2).is_none(), "LRU entry must be gone");
+        assert!(cache.lookup(Some("t"), 1).is_some());
+        assert!(cache.lookup(Some("t"), 3).is_some());
+        assert!(cache.bytes() <= 2 * one);
+    }
+
+    #[test]
+    fn oversized_entries_are_never_admitted() {
+        let cache = WarmCache::with_budget(8);
+        assert_eq!(cache.insert(Some("t"), 1, &pot(64, 64, 0.0), 5), 0);
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn refresh_keeps_the_cold_baseline() {
+        let cache = WarmCache::with_budget(1 << 16);
+        cache.insert(Some("t"), 9, &pot(4, 4, 1.0), 40);
+        // a hit-path re-insert: fresher duals, same baseline
+        cache.insert(Some("t"), 9, &pot(4, 4, 7.0), 2);
+        let hit = cache.lookup(Some("t"), 9).unwrap();
+        assert_eq!(hit.duals.fhat[0], 7.0, "duals refresh");
+        assert_eq!(hit.cold_iters, 40, "baseline survives the refresh");
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn scope_cardinality_is_capped_without_an_overflow_scope() {
+        let one = entry_bytes(&pot(2, 2, 0.0));
+        let cache = WarmCache::with_budget((WARM_TENANT_CAP + 8) * one);
+        for i in 0..WARM_TENANT_CAP {
+            cache.insert(Some(&format!("t{i}")), 1, &pot(2, 2, 0.0), 1);
+        }
+        assert_eq!(cache.len(), WARM_TENANT_CAP);
+        // a fresh label past the cap is dropped, not folded into a shared
+        // scope (that would leak duals across tenants)
+        cache.insert(Some("straggler"), 1, &pot(2, 2, 9.0), 1);
+        assert!(cache.lookup(Some("straggler"), 1).is_none());
+        assert_eq!(cache.len(), WARM_TENANT_CAP);
+        // established labels keep caching
+        cache.insert(Some("t0"), 2, &pot(2, 2, 1.0), 1);
+        assert!(cache.lookup(Some("t0"), 2).is_some());
+    }
+
+    #[test]
+    fn from_mb_zero_is_off() {
+        assert!(WarmCache::from_mb(0).is_none());
+        assert!(WarmCache::from_mb(1).is_some());
+    }
+}

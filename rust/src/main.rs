@@ -46,9 +46,13 @@ COMMANDS:
   regress  [--n 512] [--eps 0.1] [--steps 60]
   serve    [--jobs 64] [--actors N] [--actors-min A] [--actors-max B]
            [--tenant-rate R] [--tenant-burst C] [--tenant-inflight K]
+           [--warm-cache-mb MB] [--tick-ms MS] [--grow-after G] [--park-after P]
            (N defaults to config/FLASH_SINKHORN_ACTORS, else 1; A < B turns
             the adaptive pool on; tenant quotas default off, env
-            FLASH_SINKHORN_TENANT_{RATE,BURST,INFLIGHT})
+            FLASH_SINKHORN_TENANT_{RATE,BURST,INFLIGHT}; warm-start dual
+            cache defaults off (0 MB), env FLASH_SINKHORN_WARM_CACHE_MB;
+            supervisor cadence/marks default 25 ms / 2 / 2, env
+            FLASH_SINKHORN_{TICK_MS,GROW_AFTER_TICKS,PARK_AFTER_TICKS})
   trajectory [append|check|show] [--baseline BENCH_native.json]
              [--current BENCH_native.json] [--file BENCH_trajectory.jsonl]
              [--max-regress 0.15]
@@ -208,6 +212,10 @@ fn main() -> Result<()> {
                 "tenant-rate",
                 "tenant-burst",
                 "tenant-inflight",
+                "warm-cache-mb",
+                "tick-ms",
+                "grow-after",
+                "park-after",
             ])?;
             let jobs = args.usize("jobs", 64)?;
             // precedence: CLI flag > config key > FLASH_SINKHORN_* env
@@ -221,6 +229,13 @@ fn main() -> Result<()> {
             cfg.service.tenant_burst = args.f64("tenant-burst", cfg.service.tenant_burst)?;
             cfg.service.tenant_inflight =
                 args.usize("tenant-inflight", cfg.service.tenant_inflight)?;
+            cfg.service.warm_cache_mb =
+                args.usize("warm-cache-mb", cfg.service.warm_cache_mb)?;
+            cfg.service.tick_ms = args.usize("tick-ms", cfg.service.tick_ms as usize)? as u64;
+            cfg.service.grow_after_ticks =
+                args.usize("grow-after", cfg.service.grow_after_ticks as usize)? as u32;
+            cfg.service.park_after_ticks =
+                args.usize("park-after", cfg.service.park_after_ticks as usize)? as u32;
             let handle = service::spawn(cfg)?;
             let (lo, hi) = handle.actor_range();
             if lo < hi {

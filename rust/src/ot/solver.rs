@@ -101,6 +101,13 @@ pub struct SolverConfig {
     /// [`SolveStrategy::plain`] (the default) is the legacy loop,
     /// bit-for-bit.
     pub strategy: SolveStrategy,
+    /// Externally supplied starting duals (shifted, lengths n / m),
+    /// taking precedence over the strategy's initializer when present.
+    /// This is how the serving layer's warm-start cache injects the
+    /// previous solve of the same instance; `None` (the default) leaves
+    /// the solve bitwise identical to the pre-cache path.  Mismatched
+    /// lengths are ignored, falling back to the strategy initializer.
+    pub warm_start: Option<Potentials>,
 }
 
 impl Default for SolverConfig {
@@ -113,6 +120,7 @@ impl Default for SolverConfig {
             anneal_factor: 1.0,
             prepared: true,
             strategy: SolveStrategy::plain(),
+            warm_start: None,
         }
     }
 }
@@ -129,6 +137,7 @@ impl SolverConfig {
             anneal_factor: s.anneal_factor,
             prepared: true,
             strategy: SolveStrategy::parse(&s.strategy)?,
+            warm_start: None,
         })
     }
 
@@ -254,9 +263,15 @@ impl<'e> SinkhornSolver<'e> {
         let k_fused = self.backend.k_fused();
         let strategy = &self.cfg.strategy;
 
-        // dual init: zeros (unshifted f = g = 0 => fhat = -alpha,
-        // ghat = -beta) or a strategy warm start
-        let (fhat0, ghat0) = strategy.init.shifted_duals(prob);
+        // dual init: an externally injected warm start (the serving
+        // layer's cache) wins; otherwise zeros (unshifted f = g = 0 =>
+        // fhat = -alpha, ghat = -beta) or a strategy warm start
+        let (fhat0, ghat0) = match &self.cfg.warm_start {
+            Some(w) if w.fhat.len() == prob.n && w.ghat.len() == prob.m => {
+                (w.fhat.clone(), w.ghat.clone())
+            }
+            _ => strategy.init.shifted_duals(prob),
+        };
         let mut f = Tensor::vector(padded(&fhat0, ctx.bucket.n));
         let mut g = Tensor::vector(padded(&ghat0, ctx.bucket.m));
 
@@ -479,5 +494,64 @@ mod tests {
         assert_eq!(report.stages[0].kind, "sinkhorn");
         assert_eq!(report.stages[0].iters, report.iters);
         assert_eq!(report.stages[0].eps, 0.2);
+    }
+
+    #[test]
+    fn warm_start_beats_cold_and_meets_the_contract() {
+        let backend = crate::native::NativeBackend::default();
+        let prob = OtProblem::uniform(
+            crate::data::clouds::uniform_cloud(48, 4, 7),
+            crate::data::clouds::uniform_cloud(40, 4, 8),
+            48,
+            40,
+            4,
+            0.1,
+        )
+        .unwrap();
+        let cold_solver = SinkhornSolver::new(&backend, SolverConfig::default());
+        let (pot, cold) = cold_solver.solve(&prob).unwrap();
+        assert!(cold.converged);
+
+        let warm_cfg = SolverConfig { warm_start: Some(pot), ..SolverConfig::default() };
+        let warm_solver = SinkhornSolver::new(&backend, warm_cfg);
+        let (_, warm) = warm_solver.solve(&prob).unwrap();
+        // contract: converged (final sup-norm delta <= tol) at strictly
+        // fewer iterations, cost agreeing with the cold solve
+        assert!(warm.converged, "warm delta {}", warm.final_delta);
+        assert!(warm.final_delta <= warm_solver.cfg.tol);
+        assert!(
+            warm.iters < cold.iters,
+            "warm {} vs cold {} iterations",
+            warm.iters,
+            cold.iters
+        );
+        assert!(
+            (warm.cost - cold.cost).abs() <= 1e-4 * cold.cost.abs().max(1.0),
+            "warm cost {} vs cold {}",
+            warm.cost,
+            cold.cost
+        );
+    }
+
+    #[test]
+    fn mismatched_warm_start_lengths_fall_back_to_the_initializer() {
+        let backend = crate::native::NativeBackend::default();
+        let prob = OtProblem::uniform(
+            crate::data::clouds::uniform_cloud(32, 3, 3),
+            crate::data::clouds::uniform_cloud(24, 3, 4),
+            32,
+            24,
+            3,
+            0.2,
+        )
+        .unwrap();
+        let plain = SinkhornSolver::new(&backend, SolverConfig::default());
+        let (_, base) = plain.solve(&prob).unwrap();
+        // wrong-shape duals (stale bucket, foreign problem) must be ignored
+        let bogus = Potentials { fhat: vec![0.0; 5], ghat: vec![0.0; 7] };
+        let cfg = SolverConfig { warm_start: Some(bogus), ..SolverConfig::default() };
+        let (_, report) = SinkhornSolver::new(&backend, cfg).solve(&prob).unwrap();
+        assert_eq!(report.iters, base.iters, "fallback must match the cold path exactly");
+        assert_eq!(report.cost.to_bits(), base.cost.to_bits());
     }
 }

@@ -29,6 +29,7 @@ use flash_sinkhorn::coordinator::service::{self, ServiceHandle, SubmitError};
 use flash_sinkhorn::data::clouds::uniform_cloud;
 use flash_sinkhorn::data::rng::Rng;
 use flash_sinkhorn::ot::problem::OtProblem;
+use flash_sinkhorn::ot::solver::{SinkhornSolver, SolverConfig};
 
 /// Hermetic config: native backend, no batch top-up waits (dispatch
 /// immediately — nothing in the suite depends on wall time).
@@ -59,6 +60,24 @@ fn request(shape: (usize, usize), seed: u64, iters: usize, tenant: &str) -> JobR
     )
     .unwrap();
     JobRequest::with_fixed_iters(JobKind::Solve, prob, iters).for_tenant(tenant)
+}
+
+/// A tolerance-driven request (no fixed iteration budget): the shape the
+/// warm-start cache serves.  Same seeds => bit-identical problem bytes =>
+/// same cache fingerprint.  `d = 4` keeps `eps = 0.1` well-conditioned so
+/// cold solves converge comfortably inside the default iteration budget.
+fn tol_request(shape: (usize, usize), seed: u64, tenant: &str) -> JobRequest {
+    let (n, m) = shape;
+    let prob = OtProblem::uniform(
+        uniform_cloud(n, 4, seed),
+        uniform_cloud(m, 4, seed + 999),
+        n,
+        m,
+        4,
+        0.1,
+    )
+    .unwrap();
+    JobRequest::new(JobKind::Solve, prob).for_tenant(tenant)
 }
 
 /// One deterministic multi-tenant soak trace: N tenants with skewed
@@ -460,4 +479,131 @@ fn supervisor_grows_under_depth_and_parks_when_idle() {
     assert!(m.resizes_park >= 1);
     assert_eq!(m.active_actors, 1);
     assert_eq!(m.parked_actors, 2);
+}
+
+/// The warm-cache hit contract: a repeated tolerance-driven solve from the
+/// same tenant restarts from the cached duals — strictly fewer iterations,
+/// still a tolerance exit, and a cost that agrees with the cold solve to
+/// within the solve tolerance.  Deliberately NOT bitwise: a warm start
+/// changes the iterate path by design.
+#[test]
+fn warm_cache_hit_meets_contract_and_saves_iterations() {
+    let clock = Arc::new(VirtualClock::new());
+    let mut cfg = config(1, 1);
+    cfg.service.warm_cache_mb = 8;
+    let budget = cfg.solver.max_iters;
+    let handle = service::spawn_with_clock(cfg, Arc::clone(&clock) as Arc<dyn Clock>).unwrap();
+    let cold = handle.try_submit(tol_request((48, 40), 7, "acme")).unwrap().recv().unwrap();
+    let warm = handle.try_submit(tol_request((48, 40), 7, "acme")).unwrap().recv().unwrap();
+    // finishing inside the iteration budget means both were tolerance exits,
+    // i.e. the warm solve still meets the marginal-error contract
+    assert!(cold.iters < budget, "cold solve must converge ({} iters)", cold.iters);
+    assert!(warm.iters < budget, "warm solve must converge ({} iters)", warm.iters);
+    assert!(
+        warm.iters < cold.iters,
+        "a cache hit must save iterations: warm {} vs cold {}",
+        warm.iters,
+        cold.iters
+    );
+    let rel = (warm.cost - cold.cost).abs() / cold.cost.abs().max(1.0);
+    assert!(rel < 1e-4, "hit/miss costs must agree within tolerance (rel {rel:.3e})");
+    let m = handle.metrics();
+    assert_eq!((m.warm_misses, m.warm_hits, m.warm_evictions), (1, 1, 0));
+    assert!(m.warm_saved_iters_mean >= 1.0, "the savings histogram must see the hit");
+}
+
+/// Tenant isolation: tenant B submitting tenant A's exact problem must miss
+/// — cached duals never leak across tenant scopes.  Both solves are
+/// therefore cold, and cold solves stay bitwise reproducible.
+#[test]
+fn warm_cache_is_isolated_per_tenant() {
+    let clock = Arc::new(VirtualClock::new());
+    let mut cfg = config(1, 1);
+    cfg.service.warm_cache_mb = 8;
+    let handle = service::spawn_with_clock(cfg, Arc::clone(&clock) as Arc<dyn Clock>).unwrap();
+    let a = handle.try_submit(tol_request((48, 40), 3, "tenant-a")).unwrap().recv().unwrap();
+    let b = handle.try_submit(tol_request((48, 40), 3, "tenant-b")).unwrap().recv().unwrap();
+    let m = handle.metrics();
+    assert_eq!((m.warm_misses, m.warm_hits), (2, 0), "cross-tenant reuse is forbidden");
+    assert_eq!(a.cost.to_bits(), b.cost.to_bits(), "two cold solves stay bitwise equal");
+    assert_eq!(a.iters, b.iters);
+}
+
+/// With the cache off (the default), serving is bitwise identical to
+/// running the solver directly — the warm-start layer must not perturb the
+/// pinned plain path — and no warm series ever move.
+#[test]
+fn warm_cache_off_stays_bitwise_identical_to_the_direct_solver() {
+    let clock = Arc::new(VirtualClock::new());
+    let mut cfg = config(1, 1);
+    cfg.solver.max_iters = 50; // keep the debug-mode sweep quick; bitwise either way
+    assert_eq!(cfg.service.warm_cache_mb, 0, "the cache must default to off");
+    let backend = flash_sinkhorn::backend_from_config(&cfg).unwrap();
+    let solver_cfg = SolverConfig::from_section(&cfg.solver).unwrap();
+    let handle = service::spawn_with_clock(cfg, Arc::clone(&clock) as Arc<dyn Clock>).unwrap();
+    for (i, &shape) in SHAPES.iter().enumerate() {
+        // submit the same instance twice: with no cache, the repeat must be
+        // exactly as cold as the first submission
+        for _ in 0..2 {
+            let req = tol_request(shape, 40 + i as u64, "t");
+            let prob = req.problem.clone();
+            let served = handle.try_submit(req).unwrap().recv().unwrap();
+            let (_, direct) =
+                SinkhornSolver::new(backend.as_ref(), solver_cfg.clone()).solve(&prob).unwrap();
+            assert_eq!(
+                served.cost.to_bits(),
+                direct.cost.to_bits(),
+                "cache-off serving diverged from the direct solver on {shape:?}"
+            );
+            assert_eq!(served.iters, direct.iters);
+        }
+    }
+    let m = handle.metrics();
+    assert_eq!((m.warm_hits, m.warm_misses, m.warm_evictions), (0, 0, 0));
+    assert_eq!(m.warm_saved_iters_mean, 0.0);
+}
+
+/// LRU under a byte budget, end to end through the service: a 1 MiB cache
+/// holds ~246 of these entries, so a 300-instance sweep must evict; the
+/// most recent instance still hits, the first (evicted) one misses.
+#[test]
+fn soak_warm_cache_lru_evicts_under_byte_budget() {
+    let clock = Arc::new(VirtualClock::new());
+    let mut cfg = config(1, 1);
+    cfg.service.warm_cache_mb = 1;
+    // cache bookkeeping is the subject here, not convergence: cap the solve
+    // cost so 300 distinct 512x512 instances stay cheap
+    cfg.solver.max_iters = 2;
+    let handle = service::spawn_with_clock(cfg, Arc::clone(&clock) as Arc<dyn Clock>).unwrap();
+    // entry cost = (512 + 512) * 4 B of duals + overhead ~= 4.3 KB
+    let probe = |seed: u64| {
+        let prob = OtProblem::uniform(
+            uniform_cloud(512, 4, seed),
+            uniform_cloud(512, 4, seed + 7000),
+            512,
+            512,
+            4,
+            0.1,
+        )
+        .unwrap();
+        JobRequest::new(JobKind::Solve, prob).for_tenant("lru")
+    };
+    const SWEEP: u64 = 300;
+    for seed in 0..SWEEP {
+        handle.try_submit(probe(seed)).unwrap().recv().unwrap();
+    }
+    let after_sweep = handle.metrics();
+    assert_eq!(after_sweep.warm_misses, SWEEP, "all sweep instances are distinct");
+    assert_eq!(after_sweep.warm_hits, 0);
+    assert!(
+        after_sweep.warm_evictions > 0,
+        "300 entries x 4.3 KB must not fit a 1 MiB budget"
+    );
+    // the newest entry survived the sweep...
+    handle.try_submit(probe(SWEEP - 1)).unwrap().recv().unwrap();
+    // ...and the oldest was evicted long ago
+    handle.try_submit(probe(0)).unwrap().recv().unwrap();
+    let m = handle.metrics();
+    assert_eq!(m.warm_hits, 1, "the most recently inserted entry must still be cached");
+    assert_eq!(m.warm_misses, SWEEP + 1, "the LRU victim must miss on resubmission");
 }

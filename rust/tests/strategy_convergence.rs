@@ -21,6 +21,7 @@ fn solve_with(spec: &str, prob: &OtProblem) -> (Potentials, SolveReport) {
         anneal_factor: 1.0,
         prepared: true,
         strategy: SolveStrategy::parse(spec).unwrap(),
+        warm_start: None,
     };
     SinkhornSolver::new(&NativeBackend::default(), cfg).solve(prob).unwrap()
 }
@@ -148,6 +149,7 @@ fn newton_fallback_resumes_sinkhorn_cleanly() {
         anneal_factor: 1.0,
         prepared: true,
         strategy,
+        warm_start: None,
     };
     let (_, rep) = SinkhornSolver::new(&NativeBackend::default(), cfg).solve(&prob).unwrap();
     assert!(rep.converged, "fallback must still converge: {rep:?}");
