@@ -15,8 +15,13 @@ use flash_sinkhorn::config::Config;
 use flash_sinkhorn::coordinator::job::{JobKind, JobRequest};
 use flash_sinkhorn::coordinator::service;
 use flash_sinkhorn::data::clouds::uniform_cloud;
+use flash_sinkhorn::iomodel::device::A100;
+use flash_sinkhorn::iomodel::plans::{Pass, Workload};
+use flash_sinkhorn::iomodel::profile::io_model_error;
 use flash_sinkhorn::native::kernels::{lse_update, lse_update_scalar, TileCfg};
 use flash_sinkhorn::native::pool::WorkerPool;
+use flash_sinkhorn::native::NativeBackend;
+use flash_sinkhorn::obs::IoStats;
 use flash_sinkhorn::ot::problem::OtProblem;
 use flash_sinkhorn::ot::solver::{Schedule, SinkhornSolver, SolverConfig};
 use flash_sinkhorn::runtime::ComputeBackend;
@@ -149,6 +154,51 @@ fn warm_cache_microbench() -> (usize, usize) {
     (cold.iters, warm.iters)
 }
 
+/// Observability smoke: the same fixed-iteration solve timed on a
+/// counters-on vs a counters-off native backend (best of 3 each, explicit
+/// [`NativeBackend::with_counters`] so the process-wide `FLASH_SINKHORN_OBS`
+/// default can't mask the off side).  Returns
+///
+/// * `obs_overhead_pct` — counter cost as a percentage of the off-side
+///   time.  Charging is analytic per kernel call, so this sits at noise
+///   level (often negative); the CI gate only bounds it with an absolute
+///   ceiling ([`trajectory::OVERHEAD_GATED_KEYS`]).
+/// * `io_model_error` — measured read bytes over the analytic Flash-plan
+///   prediction on the same workload.  A deterministic drift canary (CPU
+///   tiling vs A100 SRAM model, so far from 1 by design): the measured
+///   side is counted, not timed, hence bitwise-stable run to run.
+fn obs_microbench() -> (f64, f64) {
+    let (n, m, d, eps, iters) = (512usize, 512usize, 16usize, 0.1f32, 10usize);
+    let prob = OtProblem::uniform(uniform_cloud(n, d, 21), uniform_cloud(m, d, 22), n, m, d, eps)
+        .unwrap();
+    let time_with = |counters: bool| -> (f64, IoStats) {
+        let backend = NativeBackend::default().with_counters(counters);
+        let cfg = SolverConfig::fixed_iters(iters, Schedule::Alternating);
+        let solver = SinkhornSolver::new(&backend, cfg);
+        solver.solve(&prob).unwrap(); // warm
+        let mut best = f64::INFINITY;
+        let mut io = IoStats::default();
+        for _ in 0..3 {
+            let t0 = Instant::now();
+            let (_, report) = solver.solve(&prob).unwrap();
+            best = best.min(t0.elapsed().as_secs_f64());
+            io = report.io;
+        }
+        (best, io)
+    };
+    let (on_s, io) = time_with(true);
+    let (off_s, off_io) = time_with(false);
+    // pool busy/idle nanos are pool-wide wall time and leak through the
+    // per-instance gate; the deterministic counters must stay zero
+    assert_eq!(
+        (off_io.read_bytes(), off_io.tiles, off_io.lse_evals, off_io.flops),
+        (0, 0, 0, 0),
+        "counters-off backend must not measure"
+    );
+    let wl = Workload { n, m, d, iters, pass: Pass::Forward };
+    ((on_s - off_s) / off_s * 100.0, io_model_error(&wl, &A100, &io))
+}
+
 /// `BENCH_*.json` key for a strategy's iteration count.  Static strings
 /// because [`obj`] borrows its keys.
 fn iters_key(stem: &str) -> &'static str {
@@ -199,6 +249,7 @@ fn smoke(backend: &dyn ComputeBackend) {
     let (lse_simd_s, lse_scalar_s) = lse_microbench();
     let serve_jobs_per_s = serve_microbench();
     let (warm_cold_iters, warm_hit_iters) = warm_cache_microbench();
+    let (obs_overhead_pct, io_model_err) = obs_microbench();
 
     // solve-strategy race: iterations-to-tolerance per strategy on the
     // fixed anisotropic problem (machine-independent; gated in CI)
@@ -255,6 +306,11 @@ fn smoke(backend: &dyn ComputeBackend) {
         "warm_hit_iter_savings",
         num(warm_cold_iters as f64 / warm_hit_iters.max(1) as f64),
     ));
+    // observability: counter-instrumentation cost (ceiling-gated in CI) and
+    // the measured-vs-Flash-model read-byte ratio (deterministic canary,
+    // emitted for trend-watching)
+    out_fields.push(("obs_overhead_pct", num(obs_overhead_pct)));
+    out_fields.push(("io_model_error", num(io_model_err)));
     let out = obj(out_fields);
     let path = workspace_path(&format!("BENCH_{}.json", backend.name()));
     let text = out.to_string_compact();

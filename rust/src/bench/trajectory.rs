@@ -24,6 +24,10 @@
 //! machine-independent outright; a key present in the baseline must not
 //! degrade past `max_regress`, while keys absent from an older baseline
 //! are skipped (forward compatibility).
+//!
+//! Observability overhead (`obs_overhead_pct`, see [`OVERHEAD_GATED_KEYS`])
+//! is gated differently: an absolute ceiling rather than a relative band,
+//! because the value sits at measurement-noise level around zero.
 
 use anyhow::{bail, Context, Result};
 
@@ -47,6 +51,13 @@ pub const CONV_GATED_KEYS: &[&str] = &[
     "conv_anneal_speedup",
     "warm_hit_iter_savings",
 ];
+
+/// Overhead keys the gate bounds with an *absolute ceiling* (in percent)
+/// when the baseline carries them (forward-compat skip otherwise).  These
+/// sit at noise level around zero — `obs_overhead_pct` is legitimately
+/// negative on a quiet run — so the relative band the speedup ratios use
+/// would be meaningless; the gate only refuses a blow-up past the ceiling.
+pub const OVERHEAD_GATED_KEYS: &[(&str, f64)] = &[("obs_overhead_pct", 10.0)];
 
 /// Outcome of a baseline comparison.
 #[derive(Debug, Clone)]
@@ -140,6 +151,24 @@ pub fn compare(baseline: &Json, current: &Json, max_regress: f64) -> Result<Comp
         };
         summary.push_str(&format!(
             "\n{key}: baseline {base_v:.2}x, current {cur_v:.2}x -> {}",
+            if key_regressed { "REGRESSED" } else { "ok" }
+        ));
+        conv.push((key.to_string(), base_v, cur_v, key_regressed));
+    }
+    // overhead percentages: ceiling-gated once the baseline carries them;
+    // like the conv keys, a baselined key vanishing is itself a regression
+    for &(key, ceiling) in OVERHEAD_GATED_KEYS {
+        let Some(base_v) = baseline.get(key) else { continue };
+        let base_v = base_v.as_f64()?;
+        let (cur_v, key_regressed) = match current.get(key) {
+            None => (f64::NAN, true),
+            Some(v) => {
+                let cur_v = v.as_f64()?;
+                (cur_v, !(cur_v.is_finite() && cur_v <= ceiling))
+            }
+        };
+        summary.push_str(&format!(
+            "\n{key}: baseline {base_v:.2}%, current {cur_v:.2}% (ceiling {ceiling:.0}%) -> {}",
             if key_regressed { "REGRESSED" } else { "ok" }
         ));
         conv.push((key.to_string(), base_v, cur_v, key_regressed));
@@ -246,6 +275,29 @@ mod tests {
         assert!(compare(&base, &record(2.0, 100.0), 0.15).unwrap().regressed);
         // ...but a pre-warm-cache baseline skips it (forward compat)
         assert!(!compare(&record(2.0, 100.0), &with_warm(32.0), 0.15).unwrap().regressed);
+    }
+
+    #[test]
+    fn obs_overhead_gates_on_an_absolute_ceiling() {
+        let with_obs = |v: f64| {
+            obj(vec![
+                ("lse_simd_speedup", num(2.0)),
+                ("lse_simd_ms", num(100.0)),
+                ("obs_overhead_pct", num(v)),
+            ])
+        };
+        let base = with_obs(0.4);
+        // noise around zero -- including negative -- is fine
+        assert!(!compare(&base, &with_obs(2.0), 0.15).unwrap().regressed);
+        assert!(!compare(&base, &with_obs(-1.3), 0.15).unwrap().regressed);
+        // past the ceiling: regressed
+        let c = compare(&base, &with_obs(25.0), 0.15).unwrap();
+        assert!(c.regressed);
+        assert!(c.summary.contains("obs_overhead_pct"), "{}", c.summary);
+        // baselined key vanished from current: regressed...
+        assert!(compare(&base, &record(2.0, 100.0), 0.15).unwrap().regressed);
+        // ...but a pre-obs baseline skips it (forward compat)
+        assert!(!compare(&record(2.0, 100.0), &with_obs(0.4), 0.15).unwrap().regressed);
     }
 
     #[test]

@@ -97,6 +97,11 @@ pub struct ServiceSection {
     /// Consecutive empty ticks before the supervisor parks an actor.
     /// Defaults from `FLASH_SINKHORN_PARK_AFTER_TICKS` (unset or 0 = 2).
     pub park_after_ticks: u32,
+    /// Observability mode: "off", "counters" (default — cheap atomic
+    /// IO/work counters only), "trace" or "trace:N" (counters plus a
+    /// bounded job-lifecycle trace ring of N events; see `obs::ObsMode`).
+    /// Defaults from `FLASH_SINKHORN_OBS`; the config key overrides it.
+    pub obs: String,
 }
 
 #[derive(Debug, Clone)]
@@ -167,6 +172,8 @@ impl Default for Config {
                     "FLASH_SINKHORN_PARK_AFTER_TICKS",
                     u64::from(crate::coordinator::service::DEFAULT_PARK_AFTER_TICKS),
                 ) as u32,
+                obs: std::env::var("FLASH_SINKHORN_OBS")
+                    .unwrap_or_else(|_| "counters".into()),
             },
             hvp: HvpSection { tau: 1e-5, eta: 1e-6, max_cg: 200 },
             bench: BenchSection { out_dir: "results".into(), reps: 3, warmup: 1 },
@@ -267,7 +274,13 @@ impl Config {
             if let Some(v) = s.get("park_after_ticks") {
                 cfg.service.park_after_ticks = v.as_usize()? as u32;
             }
+            if let Some(v) = s.get("obs") {
+                cfg.service.obs = v.as_str()?.to_string();
+            }
         }
+        // fail at load time, not at service spawn
+        crate::obs::ObsMode::parse(&cfg.service.obs)
+            .with_context(|| format!("config key 'service.obs' = {:?}", cfg.service.obs))?;
         if let Some(s) = j.get("hvp") {
             upd_f32(s, "tau", &mut cfg.hvp.tau)?;
             if let Some(v) = s.get("eta") {
@@ -377,6 +390,19 @@ mod tests {
         assert_eq!(cfg.service.park_after_ticks, 7);
         assert!(Config::from_json(r#"{"service": {"warm_cache_mb": -1}}"#).is_err());
         assert!(Config::from_json(r#"{"service": {"tick_ms": "fast"}}"#).is_err());
+    }
+
+    #[test]
+    fn obs_knob_parses_and_validates_at_load_time() {
+        // (FLASH_SINKHORN_OBS is not set in the test environment)
+        assert_eq!(Config::from_json("{}").unwrap().service.obs, "counters");
+        let cfg = Config::from_json(r#"{"service": {"obs": "trace:128"}}"#).unwrap();
+        assert_eq!(cfg.service.obs, "trace:128");
+        assert_eq!(Config::from_json(r#"{"service": {"obs": "off"}}"#).unwrap().service.obs, "off");
+        let err = Config::from_json(r#"{"service": {"obs": "verbose"}}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("service.obs"), "{err}");
     }
 
     #[test]

@@ -89,6 +89,11 @@ pub struct JobResponse {
 pub struct Job {
     /// The request as submitted.
     pub request: JobRequest,
+    /// Admission order within this service instance (0-based, assigned
+    /// under the scheduler lock).  Used to correlate a job's lifecycle
+    /// trace events ([`crate::obs::TraceEvent`]) across threads; stable
+    /// and deterministic under the virtual clock.
+    pub seq: u64,
     /// Submission timestamp — a reading of the service's
     /// [`Clock`](crate::coordinator::clock::Clock), for latency accounting
     /// that stays deterministic under an injected virtual clock.

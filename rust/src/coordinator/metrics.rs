@@ -34,6 +34,13 @@
 //! `None` when rate limiting is off) so operators can see headroom
 //! before the rejections start, not only after.
 //!
+//! The observability layer (PR 8) splits end-to-end latency into a
+//! `queue_wait` / `service` histogram pair (global and per-tenant — the
+//! original end-to-end `latency` histogram is untouched, keeping its p50
+//! pins), and folds each solve's measured IO/work counters
+//! ([`crate::obs::IoStats`], via `SolveReport::io`) into a service-wide
+//! accumulator — zeros while counters are gated off, never absent.
+//!
 //! Metric names as exposed by [`Snapshot`] (documented for scrapers in the
 //! README's "Serving & scaling" section): `jobs_ok`, `jobs_failed`,
 //! `batches`, `batched_jobs`, `queue_depth`, `sinkhorn_iters`, `steals`,
@@ -42,8 +49,17 @@
 //! `warm_{hits,misses,evictions}`, `warm_saved_iters_{mean,p50,max}`,
 //! `actors[i].{jobs,batches,steals,queue_depth}`,
 //! `class_depths[(n,m,d)]`,
-//! `tenants[label].{jobs,admitted,rejected_*,mean_ms,p50_ms,p99_ms,max_ms,rate_tokens}`,
-//! `latency_{mean,p50,p99,max}_ms`.
+//! `tenants[label].{jobs,admitted,rejected_*,mean_ms,p50_ms,p99_ms,max_ms,rate_tokens,queue_wait_{mean,p50}_ms,service_{mean,p50}_ms}`,
+//! `latency_{mean,p50,p99,max}_ms`, `queue_wait_{mean,p50,p99,max}_ms`,
+//! `service_{mean,p50,p99,max}_ms`,
+//! `io_{x_bytes,y_bytes,dual_bytes,tiles,lse_evals,flops}`,
+//! `pool_{busy,idle,steal}_nanos`.
+//!
+//! For machine scraping, [`Snapshot::render_prometheus`] emits the
+//! Prometheus text format (every name in [`DOCUMENTED_SERIES`] on every
+//! render) and [`Snapshot::to_json`] a JSON object mirror; both are
+//! served by `repro serve --metrics-addr` and printed one-shot by
+//! `repro metrics`.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -52,6 +68,8 @@ use std::time::Duration;
 
 use super::batcher::Rejection;
 use super::router::{shard_of, ClassKey};
+use crate::obs::{AtomicIoStats, IoStats};
+use crate::util::json::{self, Json};
 
 const BUCKETS: usize = 16; // 2^0 .. 2^15 ms
 
@@ -136,7 +154,17 @@ pub struct Metrics {
     /// (histogram buckets double as powers of two of iterations here).
     warm_saved: Mutex<Histogram>,
     latency: Mutex<Histogram>,
+    /// Time queued awaiting dispatch (submission to dequeue); together
+    /// with `service` this splits the end-to-end `latency` histogram.
+    queue_wait: Mutex<Histogram>,
+    /// Time on an actor (dequeue to completion).
+    service: Mutex<Histogram>,
+    /// Measured backend IO/work folded in per completed solve
+    /// ([`Metrics::on_io`]); explicit zeros while counters are off.
+    io: AtomicIoStats,
     tenants: Mutex<BTreeMap<String, Histogram>>,
+    tenant_queue_wait: Mutex<BTreeMap<String, Histogram>>,
+    tenant_service: Mutex<BTreeMap<String, Histogram>>,
     /// Per-tenant admission counters, registered (at zeros) on first
     /// submission attempt — before any outcome.
     tenant_admission: Mutex<BTreeMap<String, TenantAdmission>>,
@@ -228,7 +256,12 @@ impl Metrics {
             class_depths: Mutex::new(BTreeMap::new()),
             warm_saved: Mutex::new(Histogram::default()),
             latency: Mutex::new(Histogram::default()),
+            queue_wait: Mutex::new(Histogram::default()),
+            service: Mutex::new(Histogram::default()),
+            io: AtomicIoStats::default(),
             tenants: Mutex::new(BTreeMap::new()),
+            tenant_queue_wait: Mutex::new(BTreeMap::new()),
+            tenant_service: Mutex::new(BTreeMap::new()),
             tenant_admission: Mutex::new(BTreeMap::new()),
         }
     }
@@ -275,6 +308,48 @@ impl Metrics {
         }
     }
 
+    /// Record the same completed job's latency *split*: `queue_wait`
+    /// (submission to dequeue) and `service` (dequeue to completion),
+    /// attributed per tenant like [`Metrics::record_latency`] — whose
+    /// end-to-end histogram this complements but does not replace.
+    pub fn record_latency_split(
+        &self,
+        tenant: Option<&str>,
+        queue_wait: Duration,
+        service: Duration,
+    ) {
+        let qw = queue_wait.as_secs_f64() * 1e3;
+        let sv = service.as_secs_f64() * 1e3;
+        self.queue_wait.lock().unwrap_or_else(|e| e.into_inner()).record(qw);
+        self.service.lock().unwrap_or_else(|e| e.into_inner()).record(sv);
+        if let Some(t) = tenant {
+            let mut map = self.tenant_queue_wait.lock().unwrap_or_else(|e| e.into_inner());
+            if let Some(h) = tenant_entry(&mut map, t) {
+                h.record(qw);
+            }
+            drop(map);
+            let mut map = self.tenant_service.lock().unwrap_or_else(|e| e.into_inner());
+            if let Some(h) = tenant_entry(&mut map, t) {
+                h.record(sv);
+            }
+        }
+    }
+
+    /// Fold one solve's measured IO delta (`SolveReport::io`) into the
+    /// service-wide accumulator.  All-zero deltas (counters gated off, or
+    /// a non-measuring backend) are skipped inside
+    /// [`AtomicIoStats::add`], so the off path stays free.
+    pub fn on_io(&self, io: &IoStats) {
+        self.io.add(io);
+    }
+
+    /// Add service-measured stolen-batch execution time.  The kernel pool
+    /// cannot tell stolen work from home work, so the actor loop times
+    /// stolen batches and attributes them here.
+    pub fn on_steal_nanos(&self, nanos: u64) {
+        self.io.add(&IoStats { pool_steal_nanos: nanos, ..IoStats::default() });
+    }
+
     /// Register a tenant's full metric series (admission counters and
     /// latency histogram) at explicit zeros.  Called on the first
     /// submission attempt, *before* its outcome is known, so a tenant
@@ -289,6 +364,8 @@ impl Metrics {
             t,
         );
         tenant_entry(&mut self.tenants.lock().unwrap_or_else(|e| e.into_inner()), t);
+        tenant_entry(&mut self.tenant_queue_wait.lock().unwrap_or_else(|e| e.into_inner()), t);
+        tenant_entry(&mut self.tenant_service.lock().unwrap_or_else(|e| e.into_inner()), t);
     }
 
     /// Count one admission (global + per-tenant).
@@ -358,6 +435,8 @@ impl Metrics {
     /// A consistent point-in-time copy of every counter and gauge.
     pub fn snapshot(&self) -> Snapshot {
         let h = self.latency.lock().unwrap_or_else(|e| e.into_inner()).clone();
+        let qw = self.queue_wait.lock().unwrap_or_else(|e| e.into_inner()).clone();
+        let sv = self.service.lock().unwrap_or_else(|e| e.into_inner()).clone();
         let ws = self.warm_saved.lock().unwrap_or_else(|e| e.into_inner()).clone();
         let class_depths: Vec<(ClassKey, u64)> = self
             .class_depths
@@ -388,6 +467,8 @@ impl Metrics {
         // full series whether it ever completed a job, was only rejected,
         // or both (on_tenant_seen registers both sides at zeros anyway)
         let lat = self.tenants.lock().unwrap_or_else(|e| e.into_inner()).clone();
+        let tqw = self.tenant_queue_wait.lock().unwrap_or_else(|e| e.into_inner()).clone();
+        let tsv = self.tenant_service.lock().unwrap_or_else(|e| e.into_inner()).clone();
         let adm = self.tenant_admission.lock().unwrap_or_else(|e| e.into_inner()).clone();
         let mut names: Vec<String> = lat.keys().chain(adm.keys()).cloned().collect();
         names.sort();
@@ -397,6 +478,8 @@ impl Metrics {
             .map(|name| {
                 let th = lat.get(&name).cloned().unwrap_or_default();
                 let ta = adm.get(&name).cloned().unwrap_or_default();
+                let tq = tqw.get(&name).cloned().unwrap_or_default();
+                let ts = tsv.get(&name).cloned().unwrap_or_default();
                 TenantSnapshot {
                     jobs: th.n,
                     admitted: ta.admitted,
@@ -407,6 +490,10 @@ impl Metrics {
                     latency_p50_ms: th.quantile(0.5),
                     latency_p99_ms: th.quantile(0.99),
                     latency_max_ms: th.max_ms,
+                    queue_wait_mean_ms: tq.mean(),
+                    queue_wait_p50_ms: tq.quantile(0.5),
+                    service_mean_ms: ts.mean(),
+                    service_p50_ms: ts.quantile(0.5),
                     // the service overlays the live bucket balance (the
                     // Metrics struct does not know the admission state)
                     rate_tokens: None,
@@ -443,6 +530,15 @@ impl Metrics {
             latency_p50_ms: h.quantile(0.5),
             latency_p99_ms: h.quantile(0.99),
             latency_max_ms: h.max_ms,
+            queue_wait_mean_ms: qw.mean(),
+            queue_wait_p50_ms: qw.quantile(0.5),
+            queue_wait_p99_ms: qw.quantile(0.99),
+            queue_wait_max_ms: qw.max_ms,
+            service_mean_ms: sv.mean(),
+            service_p50_ms: sv.quantile(0.5),
+            service_p99_ms: sv.quantile(0.99),
+            service_max_ms: sv.max_ms,
+            io: self.io.snapshot(),
         }
     }
 }
@@ -485,6 +581,14 @@ pub struct TenantSnapshot {
     pub latency_p99_ms: f64,
     /// Worst observed latency, milliseconds.
     pub latency_max_ms: f64,
+    /// Mean time queued awaiting dispatch, milliseconds.
+    pub queue_wait_mean_ms: f64,
+    /// Coarse p50 queue-wait upper bound, milliseconds.
+    pub queue_wait_p50_ms: f64,
+    /// Mean time on an actor (dequeue to completion), milliseconds.
+    pub service_mean_ms: f64,
+    /// Coarse p50 service-time upper bound, milliseconds.
+    pub service_p50_ms: f64,
     /// Remaining token-bucket balance (whole+fractional jobs) as of the
     /// last refill — the budget headroom before `rejected_rate_limited`
     /// starts counting.  `None` when rate limiting is off or the label
@@ -553,6 +657,442 @@ pub struct Snapshot {
     pub latency_p99_ms: f64,
     /// Worst observed latency, milliseconds.
     pub latency_max_ms: f64,
+    /// Mean time queued awaiting dispatch, milliseconds.
+    pub queue_wait_mean_ms: f64,
+    /// Coarse p50 queue-wait upper bound, milliseconds.
+    pub queue_wait_p50_ms: f64,
+    /// Coarse p99 queue-wait upper bound, milliseconds.
+    pub queue_wait_p99_ms: f64,
+    /// Worst observed queue wait, milliseconds.
+    pub queue_wait_max_ms: f64,
+    /// Mean time on an actor (dequeue to completion), milliseconds.
+    pub service_mean_ms: f64,
+    /// Coarse p50 service-time upper bound, milliseconds.
+    pub service_p50_ms: f64,
+    /// Coarse p99 service-time upper bound, milliseconds.
+    pub service_p99_ms: f64,
+    /// Worst observed service time, milliseconds.
+    pub service_max_ms: f64,
+    /// Measured backend IO/work summed over completed solves, plus the
+    /// kernel pool's busy/idle/steal wall time.  Explicit zeros while the
+    /// counter gate (`FLASH_SINKHORN_OBS=off`) is closed or the backend
+    /// does not measure.
+    pub io: IoStats,
+}
+
+/// Every metric family [`Snapshot::render_prometheus`] emits on *every*
+/// render, traffic or not — the exposition side of the absent-vs-zero
+/// contract.  Per-class and per-tenant labelled series additionally appear
+/// for whatever labels the service has seen; the per-actor families below
+/// always carry at least `actor="0"`.  `repro metrics --check` and the
+/// golden exposition test both validate against this list, so renaming a
+/// series is an explicit, test-visible act.
+pub const DOCUMENTED_SERIES: &[&str] = &[
+    "flashsinkhorn_jobs_ok",
+    "flashsinkhorn_jobs_failed",
+    "flashsinkhorn_batches",
+    "flashsinkhorn_batched_jobs",
+    "flashsinkhorn_queue_depth",
+    "flashsinkhorn_sinkhorn_iters",
+    "flashsinkhorn_steals",
+    "flashsinkhorn_admitted",
+    "flashsinkhorn_rejected",
+    "flashsinkhorn_resizes",
+    "flashsinkhorn_active_actors",
+    "flashsinkhorn_parked_actors",
+    "flashsinkhorn_warm_hits",
+    "flashsinkhorn_warm_misses",
+    "flashsinkhorn_warm_evictions",
+    "flashsinkhorn_warm_saved_iters",
+    "flashsinkhorn_latency_ms",
+    "flashsinkhorn_queue_wait_ms",
+    "flashsinkhorn_service_ms",
+    "flashsinkhorn_io_x_bytes",
+    "flashsinkhorn_io_y_bytes",
+    "flashsinkhorn_io_dual_bytes",
+    "flashsinkhorn_io_tiles",
+    "flashsinkhorn_io_lse_evals",
+    "flashsinkhorn_io_flops",
+    "flashsinkhorn_pool_busy_nanos",
+    "flashsinkhorn_pool_idle_nanos",
+    "flashsinkhorn_pool_steal_nanos",
+    "flashsinkhorn_actor_jobs",
+    "flashsinkhorn_actor_batches",
+    "flashsinkhorn_actor_steals",
+    "flashsinkhorn_actor_queue_depth",
+];
+
+/// Escape a label value per the Prometheus text format (backslash, quote
+/// and newline).
+fn prom_escape(label: &str) -> String {
+    let mut out = String::with_capacity(label.len());
+    for c in label.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+/// `n256_m256_d16` — a shape class as a Prometheus label value.
+fn class_label(class: &ClassKey) -> String {
+    format!("n{}_m{}_d{}", class.0, class.1, class.2)
+}
+
+impl Snapshot {
+    /// Render in the Prometheus text exposition format (version 0.0.4).
+    /// Every family in [`DOCUMENTED_SERIES`] appears in every render —
+    /// explicit zeros, never absence — plus labelled per-class and
+    /// per-tenant series for labels this service has seen.  Histograms are
+    /// exposed as their summary statistics (`stat="mean"|"p50"|"p99"|"max"`,
+    /// matching the coarse log-scale buckets the service keeps), not as
+    /// native Prometheus histograms — the repo has no client library and
+    /// the status line quotes the same four numbers.
+    pub fn render_prometheus(&self) -> String {
+        use std::fmt::Write as _;
+        let mut o = String::with_capacity(8 << 10);
+        let counters: [(&str, &str, u64); 11] = [
+            ("flashsinkhorn_jobs_ok", "Jobs completed successfully.", self.jobs_ok),
+            ("flashsinkhorn_jobs_failed", "Jobs that returned an error.", self.jobs_failed),
+            ("flashsinkhorn_batches", "Class batches dispatched.", self.batches),
+            ("flashsinkhorn_batched_jobs", "Jobs dispatched inside batches.", self.batched_jobs),
+            ("flashsinkhorn_sinkhorn_iters", "Total Sinkhorn iterations run.", self.sinkhorn_iters),
+            ("flashsinkhorn_steals", "Jobs run by a non-home actor.", self.steals),
+            ("flashsinkhorn_admitted", "Jobs accepted past admission control.", self.admitted),
+            ("flashsinkhorn_warm_hits", "Warm-start cache hits.", self.warm_hits),
+            ("flashsinkhorn_warm_misses", "Warm-start cache misses.", self.warm_misses),
+            (
+                "flashsinkhorn_warm_evictions",
+                "Warm-cache entries evicted by the LRU byte budget.",
+                self.warm_evictions,
+            ),
+            ("flashsinkhorn_queue_depth", "Jobs queued awaiting dispatch.", self.queue_depth),
+        ];
+        for (name, help, v) in counters {
+            let typ = if name.ends_with("_depth") { "gauge" } else { "counter" };
+            let _ = writeln!(o, "# HELP {name} {help}\n# TYPE {name} {typ}\n{name} {v}");
+        }
+        let _ = writeln!(
+            o,
+            "# HELP flashsinkhorn_rejected Submissions refused, by admission-control reason.\n# TYPE flashsinkhorn_rejected counter"
+        );
+        for (reason, v) in [
+            ("queue_full", self.rejected_queue_full),
+            ("rate_limited", self.rejected_rate_limited),
+            ("tenant_cap", self.rejected_tenant_cap),
+        ] {
+            let _ = writeln!(o, "flashsinkhorn_rejected{{reason=\"{reason}\"}} {v}");
+        }
+        let _ = writeln!(
+            o,
+            "# HELP flashsinkhorn_resizes Supervisor actor-pool resizes, by direction.\n# TYPE flashsinkhorn_resizes counter"
+        );
+        for (dir, v) in [("grow", self.resizes_grow), ("park", self.resizes_park)] {
+            let _ = writeln!(o, "flashsinkhorn_resizes{{direction=\"{dir}\"}} {v}");
+        }
+        for (name, help, v) in [
+            (
+                "flashsinkhorn_active_actors",
+                "Actors currently eligible to pick work.",
+                self.active_actors,
+            ),
+            ("flashsinkhorn_parked_actors", "Actor slots currently parked.", self.parked_actors),
+        ] {
+            let _ = writeln!(o, "# HELP {name} {help}\n# TYPE {name} gauge\n{name} {v}");
+        }
+        // histogram summaries: stat-labelled gauges
+        let _ = writeln!(
+            o,
+            "# HELP flashsinkhorn_warm_saved_iters Sinkhorn iterations saved per warm hit.\n# TYPE flashsinkhorn_warm_saved_iters gauge"
+        );
+        for (stat, v) in [
+            ("mean", self.warm_saved_iters_mean),
+            ("p50", self.warm_saved_iters_p50),
+            ("max", self.warm_saved_iters_max),
+        ] {
+            let _ = writeln!(o, "flashsinkhorn_warm_saved_iters{{stat=\"{stat}\"}} {v}");
+        }
+        let splits: [(&str, &str, [f64; 4]); 3] = [
+            (
+                "flashsinkhorn_latency_ms",
+                "End-to-end job latency (queue + execution), milliseconds.",
+                [self.latency_mean_ms, self.latency_p50_ms, self.latency_p99_ms, self.latency_max_ms],
+            ),
+            (
+                "flashsinkhorn_queue_wait_ms",
+                "Time queued awaiting dispatch, milliseconds.",
+                [
+                    self.queue_wait_mean_ms,
+                    self.queue_wait_p50_ms,
+                    self.queue_wait_p99_ms,
+                    self.queue_wait_max_ms,
+                ],
+            ),
+            (
+                "flashsinkhorn_service_ms",
+                "Time on an actor (dequeue to completion), milliseconds.",
+                [
+                    self.service_mean_ms,
+                    self.service_p50_ms,
+                    self.service_p99_ms,
+                    self.service_max_ms,
+                ],
+            ),
+        ];
+        for (name, help, stats) in splits {
+            let _ = writeln!(o, "# HELP {name} {help}\n# TYPE {name} gauge");
+            for (stat, v) in ["mean", "p50", "p99", "max"].iter().zip(stats) {
+                let _ = writeln!(o, "{name}{{stat=\"{stat}\"}} {v}");
+            }
+        }
+        // measured IO/work (zeros while counters are gated off)
+        let io: [(&str, &str, u64); 9] = [
+            ("flashsinkhorn_io_x_bytes", "Source-point bytes read by kernels.", self.io.x_bytes),
+            (
+                "flashsinkhorn_io_y_bytes",
+                "Target-point bytes read by kernels (tiling-model traffic).",
+                self.io.y_bytes,
+            ),
+            ("flashsinkhorn_io_dual_bytes", "Dual-potential bytes read by kernels.", self.io.dual_bytes),
+            ("flashsinkhorn_io_tiles", "SRAM tiles visited by kernels.", self.io.tiles),
+            ("flashsinkhorn_io_lse_evals", "Streaming LSE cell evaluations.", self.io.lse_evals),
+            ("flashsinkhorn_io_flops", "Floating-point operations (tiling-model count).", self.io.flops),
+            (
+                "flashsinkhorn_pool_busy_nanos",
+                "Kernel-pool wall time inside parallel regions, nanoseconds.",
+                self.io.pool_busy_nanos,
+            ),
+            (
+                "flashsinkhorn_pool_idle_nanos",
+                "Kernel-pool wall time between parallel regions, nanoseconds.",
+                self.io.pool_idle_nanos,
+            ),
+            (
+                "flashsinkhorn_pool_steal_nanos",
+                "Actor wall time executing stolen batches, nanoseconds.",
+                self.io.pool_steal_nanos,
+            ),
+        ];
+        for (name, help, v) in io {
+            let _ = writeln!(o, "# HELP {name} {help}\n# TYPE {name} counter\n{name} {v}");
+        }
+        // per-actor series (at least actor="0" always exists)
+        let actor_families: [(&str, &str); 4] = [
+            ("flashsinkhorn_actor_jobs", "Jobs completed, per actor."),
+            ("flashsinkhorn_actor_batches", "Batches dispatched, per actor."),
+            ("flashsinkhorn_actor_steals", "Stolen jobs run, per actor."),
+            ("flashsinkhorn_actor_queue_depth", "Queued jobs across an actor's home classes."),
+        ];
+        for (i, (name, help)) in actor_families.iter().enumerate() {
+            let typ = if i == 3 { "gauge" } else { "counter" };
+            let _ = writeln!(o, "# HELP {name} {help}\n# TYPE {name} {typ}");
+            for a in &self.actors {
+                let v = match i {
+                    0 => a.jobs,
+                    1 => a.batches,
+                    2 => a.steals,
+                    _ => a.queue_depth,
+                };
+                let _ = writeln!(o, "{name}{{actor=\"{}\"}} {v}", a.actor);
+            }
+        }
+        if !self.class_depths.is_empty() {
+            let _ = writeln!(
+                o,
+                "# HELP flashsinkhorn_class_queue_depth Queued jobs per shape class.\n# TYPE flashsinkhorn_class_queue_depth gauge"
+            );
+            for (class, depth) in &self.class_depths {
+                let _ = writeln!(
+                    o,
+                    "flashsinkhorn_class_queue_depth{{class=\"{}\"}} {depth}",
+                    class_label(class)
+                );
+            }
+        }
+        if !self.tenants.is_empty() {
+            let _ = writeln!(
+                o,
+                "# HELP flashsinkhorn_tenant_jobs Jobs completed, per tenant.\n# TYPE flashsinkhorn_tenant_jobs counter"
+            );
+            for t in &self.tenants {
+                let _ = writeln!(
+                    o,
+                    "flashsinkhorn_tenant_jobs{{tenant=\"{}\"}} {}",
+                    prom_escape(&t.tenant),
+                    t.jobs
+                );
+            }
+            let _ = writeln!(
+                o,
+                "# HELP flashsinkhorn_tenant_admitted Jobs admitted, per tenant.\n# TYPE flashsinkhorn_tenant_admitted counter"
+            );
+            for t in &self.tenants {
+                let _ = writeln!(
+                    o,
+                    "flashsinkhorn_tenant_admitted{{tenant=\"{}\"}} {}",
+                    prom_escape(&t.tenant),
+                    t.admitted
+                );
+            }
+            let _ = writeln!(
+                o,
+                "# HELP flashsinkhorn_tenant_rejected Submissions refused, per tenant and reason.\n# TYPE flashsinkhorn_tenant_rejected counter"
+            );
+            for t in &self.tenants {
+                for (reason, v) in [
+                    ("queue_full", t.rejected_queue_full),
+                    ("rate_limited", t.rejected_rate_limited),
+                    ("tenant_cap", t.rejected_tenant_cap),
+                ] {
+                    let _ = writeln!(
+                        o,
+                        "flashsinkhorn_tenant_rejected{{tenant=\"{}\",reason=\"{reason}\"}} {v}",
+                        prom_escape(&t.tenant)
+                    );
+                }
+            }
+            for (name, help, pick) in [
+                (
+                    "flashsinkhorn_tenant_latency_ms",
+                    "End-to-end latency per tenant, milliseconds.",
+                    0usize,
+                ),
+                (
+                    "flashsinkhorn_tenant_queue_wait_ms",
+                    "Queue wait per tenant, milliseconds.",
+                    1usize,
+                ),
+                (
+                    "flashsinkhorn_tenant_service_ms",
+                    "Actor service time per tenant, milliseconds.",
+                    2usize,
+                ),
+            ] {
+                let _ = writeln!(o, "# HELP {name} {help}\n# TYPE {name} gauge");
+                for t in &self.tenants {
+                    let stats: [(&str, f64); 2] = match pick {
+                        0 => [("mean", t.latency_mean_ms), ("p50", t.latency_p50_ms)],
+                        1 => [("mean", t.queue_wait_mean_ms), ("p50", t.queue_wait_p50_ms)],
+                        _ => [("mean", t.service_mean_ms), ("p50", t.service_p50_ms)],
+                    };
+                    for (stat, v) in stats {
+                        let _ = writeln!(
+                            o,
+                            "{name}{{tenant=\"{}\",stat=\"{stat}\"}} {v}",
+                            prom_escape(&t.tenant)
+                        );
+                    }
+                }
+            }
+        }
+        o
+    }
+
+    /// The snapshot as a JSON object (the `/metrics.json` endpoint and
+    /// `repro metrics --format json`).  Field names match the documented
+    /// snapshot table; u64 counters are carried as JSON numbers (exact up
+    /// to 2^53, far beyond any service lifetime here).
+    pub fn to_json(&self) -> Json {
+        let actors: Vec<Json> = self
+            .actors
+            .iter()
+            .map(|a| {
+                json::obj(vec![
+                    ("actor", json::num(a.actor as f64)),
+                    ("jobs", json::num(a.jobs as f64)),
+                    ("batches", json::num(a.batches as f64)),
+                    ("steals", json::num(a.steals as f64)),
+                    ("queue_depth", json::num(a.queue_depth as f64)),
+                ])
+            })
+            .collect();
+        let classes: Vec<Json> = self
+            .class_depths
+            .iter()
+            .map(|(c, d)| {
+                json::obj(vec![
+                    ("class", json::s(&class_label(c))),
+                    ("depth", json::num(*d as f64)),
+                ])
+            })
+            .collect();
+        let tenants: Vec<Json> = self
+            .tenants
+            .iter()
+            .map(|t| {
+                json::obj(vec![
+                    ("tenant", json::s(&t.tenant)),
+                    ("jobs", json::num(t.jobs as f64)),
+                    ("admitted", json::num(t.admitted as f64)),
+                    ("rejected_queue_full", json::num(t.rejected_queue_full as f64)),
+                    ("rejected_rate_limited", json::num(t.rejected_rate_limited as f64)),
+                    ("rejected_tenant_cap", json::num(t.rejected_tenant_cap as f64)),
+                    ("latency_mean_ms", json::num(t.latency_mean_ms)),
+                    ("latency_p50_ms", json::num(t.latency_p50_ms)),
+                    ("latency_p99_ms", json::num(t.latency_p99_ms)),
+                    ("latency_max_ms", json::num(t.latency_max_ms)),
+                    ("queue_wait_mean_ms", json::num(t.queue_wait_mean_ms)),
+                    ("queue_wait_p50_ms", json::num(t.queue_wait_p50_ms)),
+                    ("service_mean_ms", json::num(t.service_mean_ms)),
+                    ("service_p50_ms", json::num(t.service_p50_ms)),
+                    (
+                        "rate_tokens",
+                        t.rate_tokens.map_or(Json::Null, json::num),
+                    ),
+                ])
+            })
+            .collect();
+        json::obj(vec![
+            ("jobs_ok", json::num(self.jobs_ok as f64)),
+            ("jobs_failed", json::num(self.jobs_failed as f64)),
+            ("batches", json::num(self.batches as f64)),
+            ("batched_jobs", json::num(self.batched_jobs as f64)),
+            ("queue_depth", json::num(self.queue_depth as f64)),
+            ("sinkhorn_iters", json::num(self.sinkhorn_iters as f64)),
+            ("steals", json::num(self.steals as f64)),
+            ("admitted", json::num(self.admitted as f64)),
+            ("rejected_queue_full", json::num(self.rejected_queue_full as f64)),
+            ("rejected_rate_limited", json::num(self.rejected_rate_limited as f64)),
+            ("rejected_tenant_cap", json::num(self.rejected_tenant_cap as f64)),
+            ("resizes_grow", json::num(self.resizes_grow as f64)),
+            ("resizes_park", json::num(self.resizes_park as f64)),
+            ("warm_hits", json::num(self.warm_hits as f64)),
+            ("warm_misses", json::num(self.warm_misses as f64)),
+            ("warm_evictions", json::num(self.warm_evictions as f64)),
+            ("warm_saved_iters_mean", json::num(self.warm_saved_iters_mean)),
+            ("warm_saved_iters_p50", json::num(self.warm_saved_iters_p50)),
+            ("warm_saved_iters_max", json::num(self.warm_saved_iters_max)),
+            ("active_actors", json::num(self.active_actors as f64)),
+            ("parked_actors", json::num(self.parked_actors as f64)),
+            ("latency_mean_ms", json::num(self.latency_mean_ms)),
+            ("latency_p50_ms", json::num(self.latency_p50_ms)),
+            ("latency_p99_ms", json::num(self.latency_p99_ms)),
+            ("latency_max_ms", json::num(self.latency_max_ms)),
+            ("queue_wait_mean_ms", json::num(self.queue_wait_mean_ms)),
+            ("queue_wait_p50_ms", json::num(self.queue_wait_p50_ms)),
+            ("queue_wait_p99_ms", json::num(self.queue_wait_p99_ms)),
+            ("queue_wait_max_ms", json::num(self.queue_wait_max_ms)),
+            ("service_mean_ms", json::num(self.service_mean_ms)),
+            ("service_p50_ms", json::num(self.service_p50_ms)),
+            ("service_p99_ms", json::num(self.service_p99_ms)),
+            ("service_max_ms", json::num(self.service_max_ms)),
+            ("io_x_bytes", json::num(self.io.x_bytes as f64)),
+            ("io_y_bytes", json::num(self.io.y_bytes as f64)),
+            ("io_dual_bytes", json::num(self.io.dual_bytes as f64)),
+            ("io_tiles", json::num(self.io.tiles as f64)),
+            ("io_lse_evals", json::num(self.io.lse_evals as f64)),
+            ("io_flops", json::num(self.io.flops as f64)),
+            ("pool_busy_nanos", json::num(self.io.pool_busy_nanos as f64)),
+            ("pool_idle_nanos", json::num(self.io.pool_idle_nanos as f64)),
+            ("pool_steal_nanos", json::num(self.io.pool_steal_nanos as f64)),
+            ("actors", Json::Arr(actors)),
+            ("class_depths", Json::Arr(classes)),
+            ("tenants", Json::Arr(tenants)),
+        ])
+    }
 }
 
 impl std::fmt::Display for Snapshot {
@@ -571,6 +1111,18 @@ impl std::fmt::Display for Snapshot {
             self.latency_p50_ms,
             self.latency_p99_ms,
             self.latency_max_ms
+        )?;
+        write!(
+            f,
+            "\n  latency split: queue_wait mean={:.1}ms p50<={:.0}ms p99<={:.0}ms max={:.1}ms | service mean={:.1}ms p50<={:.0}ms p99<={:.0}ms max={:.1}ms",
+            self.queue_wait_mean_ms,
+            self.queue_wait_p50_ms,
+            self.queue_wait_p99_ms,
+            self.queue_wait_max_ms,
+            self.service_mean_ms,
+            self.service_p50_ms,
+            self.service_p99_ms,
+            self.service_max_ms
         )?;
         write!(
             f,
@@ -594,6 +1146,17 @@ impl std::fmt::Display for Snapshot {
             self.warm_saved_iters_mean,
             self.warm_saved_iters_p50,
             self.warm_saved_iters_max
+        )?;
+        write!(
+            f,
+            "\n  io: read={}B tiles={} lse_evals={} flops={} pool busy={}ms idle={}ms steal={}ms",
+            self.io.read_bytes(),
+            self.io.tiles,
+            self.io.lse_evals,
+            self.io.flops,
+            self.io.pool_busy_nanos / 1_000_000,
+            self.io.pool_idle_nanos / 1_000_000,
+            self.io.pool_steal_nanos / 1_000_000
         )?;
         for a in &self.actors {
             write!(
@@ -864,5 +1427,98 @@ mod tests {
         assert_eq!((blocked.jobs, blocked.rejected_tenant_cap), (0, 1));
         let worker = &s.tenants[1];
         assert_eq!((worker.jobs, worker.rejected_tenant_cap), (1, 0));
+    }
+
+    // --- observability exposition (PR 8): the golden shape of the
+    // Prometheus render, the latency split, and the IO accumulator -----
+
+    #[test]
+    fn prometheus_render_carries_every_documented_family_at_zeros() {
+        // golden shape: a *fresh* service must already expose every
+        // documented family — explicit zeros, never absence
+        let text = Metrics::with_actors(2).snapshot().render_prometheus();
+        for name in DOCUMENTED_SERIES {
+            assert!(
+                text.contains(&format!("\n# TYPE {name} ")) || text.starts_with(&format!("# HELP {name} ")),
+                "family {name} missing from exposition:\n{text}"
+            );
+        }
+        assert!(!text.contains("NaN"), "NaN leaked into exposition:\n{text}");
+        // spot-check exact sample lines (names + label grammar are API)
+        assert!(text.contains("\nflashsinkhorn_jobs_ok 0\n"));
+        assert!(text.contains("\nflashsinkhorn_rejected{reason=\"rate_limited\"} 0\n"));
+        assert!(text.contains("\nflashsinkhorn_queue_wait_ms{stat=\"p50\"} 0\n"));
+        assert!(text.contains("\nflashsinkhorn_service_ms{stat=\"max\"} 0\n"));
+        assert!(text.contains("\nflashsinkhorn_io_y_bytes 0\n"));
+        assert!(text.contains("\nflashsinkhorn_actor_jobs{actor=\"1\"} 0\n"));
+        // unseen labels stay out; the per-actor families stay in
+        assert!(!text.contains("flashsinkhorn_tenant_jobs{"));
+        assert!(!text.contains("flashsinkhorn_class_queue_depth{"));
+    }
+
+    #[test]
+    fn prometheus_render_labels_tenants_classes_and_escapes() {
+        let m = Metrics::with_actors(1);
+        m.on_tenant_seen(Some("a\"b\\c"));
+        m.on_enqueue(&(64, 128, 8));
+        m.record_latency(Some("a\"b\\c"), Duration::from_millis(4));
+        let text = m.snapshot().render_prometheus();
+        assert!(text.contains("flashsinkhorn_class_queue_depth{class=\"n64_m128_d8\"} 1"));
+        assert!(
+            text.contains("flashsinkhorn_tenant_jobs{tenant=\"a\\\"b\\\\c\"} 1"),
+            "label escaping broken:\n{text}"
+        );
+    }
+
+    #[test]
+    fn latency_split_records_globally_and_per_tenant() {
+        let m = Metrics::with_actors(1);
+        m.on_tenant_seen(Some("acme"));
+        m.record_latency_split(
+            Some("acme"),
+            Duration::from_millis(40),
+            Duration::from_millis(10),
+        );
+        m.record_latency_split(None, Duration::from_millis(2), Duration::from_millis(600));
+        let s = m.snapshot();
+        assert_eq!(s.queue_wait_mean_ms, 21.0);
+        assert!(s.queue_wait_max_ms >= 39.0);
+        assert!(s.service_max_ms >= 599.0);
+        let t = &s.tenants[0];
+        assert_eq!(t.queue_wait_mean_ms, 40.0);
+        assert_eq!(t.service_mean_ms, 10.0);
+        // the split renders on the status line alongside end-to-end latency
+        let line = s.to_string();
+        assert!(line.contains("latency split: queue_wait mean=21.0ms"), "{line}");
+        assert!(line.contains("| service mean="), "{line}");
+    }
+
+    #[test]
+    fn io_accumulator_folds_solve_deltas_and_steal_time() {
+        let m = Metrics::with_actors(1);
+        assert!(m.snapshot().io.is_zero(), "explicit zeros before traffic");
+        m.on_io(&IoStats { y_bytes: 100, tiles: 3, ..IoStats::default() });
+        m.on_io(&IoStats { y_bytes: 50, lse_evals: 7, ..IoStats::default() });
+        m.on_steal_nanos(2_000_000);
+        let s = m.snapshot();
+        assert_eq!(s.io.y_bytes, 150);
+        assert_eq!(s.io.tiles, 3);
+        assert_eq!(s.io.lse_evals, 7);
+        assert_eq!(s.io.pool_steal_nanos, 2_000_000);
+        assert!(s.to_string().contains("io: read=150B"));
+    }
+
+    #[test]
+    fn json_snapshot_parses_and_mirrors_the_counters() {
+        let m = Metrics::with_actors(2);
+        m.jobs_ok.fetch_add(5, Ordering::Relaxed);
+        m.on_io(&IoStats { x_bytes: 64, ..IoStats::default() });
+        let j = m.snapshot().to_json();
+        let text = j.to_string_compact();
+        let back = Json::parse(&text).expect("snapshot JSON must round-trip");
+        assert_eq!(back.get("jobs_ok").unwrap().as_usize().unwrap(), 5);
+        assert_eq!(back.get("io_x_bytes").unwrap().as_usize().unwrap(), 64);
+        assert_eq!(back.get("actors").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(back.get("queue_wait_p99_ms").unwrap().as_f64().unwrap(), 0.0);
     }
 }

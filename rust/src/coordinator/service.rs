@@ -73,19 +73,34 @@
 //! identical at every pool size and across resizes
 //! (`tests/coordinator_sharding.rs`, `tests/serving_stress.rs`).
 //!
+//! ## Observability
+//!
+//! With `service.obs = "trace[:capacity]"` every job's lifecycle
+//! (admitted/rejected, enqueued, batched, dispatched, warm hit/miss,
+//! solver stages, completed) is recorded into a bounded
+//! [`crate::obs::TraceRing`], drained via
+//! [`ServiceHandle::drain_trace`] and exported by `repro trace` as
+//! JSON-lines or chrome-tracing.  Timestamps come only from the service
+//! [`Clock`], so traces are deterministic under a `VirtualClock`.  The
+//! default mode (`"counters"`) keeps only the cheap atomic IO/work
+//! counters; `"off"` gates those too.  Each completed solve's measured
+//! [`crate::obs::IoStats`] delta and the queue-wait/service latency
+//! split are folded into [`Metrics`] regardless of tracing.
+//!
 //! (The async-runtime facade was dropped in the offline build: submission
 //! is blocking or fire-and-forget over std channels; see DESIGN.md
 //! section 2.)
 
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::Duration;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, Context, Result};
 
 use crate::config::{Config, ServiceSection};
 use crate::native::pool;
+use crate::obs::{ObsMode, TraceEvent, TraceKind, TraceRing};
 use crate::ot::solver::{Schedule, SinkhornSolver, SolverConfig};
 use crate::ot::strategy::SolveStrategy;
 use crate::ot::Transport;
@@ -220,7 +235,41 @@ struct Shared {
     /// `None` = off, the default — serving stays bitwise identical to
     /// the cacheless solver).
     warm_cache: Option<WarmCache>,
+    /// Job-lifecycle trace ring (`service.obs = "trace[:N]"`); `None`
+    /// (the default) turns every emission site into a cheap branch.
+    trace: Option<TraceRing>,
+    /// Monotone submission counter — the job correlation id
+    /// ([`Job::seq`]) shared by all of that job's trace events.
+    job_seq: AtomicU64,
     clock: Arc<dyn Clock>,
+}
+
+impl Shared {
+    /// Push a lifecycle event stamped with the service clock's *current*
+    /// reading.  No-op without a trace ring.
+    fn trace(&self, seq: u64, kind: TraceKind) {
+        if let Some(ring) = &self.trace {
+            ring.push(TraceEvent { seq, ts: self.clock.now(), kind });
+        }
+    }
+
+    /// Push a lifecycle event with an explicit timestamp (used by the
+    /// solver-stage events, whose timestamps bracket the solve).
+    fn trace_at(&self, seq: u64, ts: Duration, kind: TraceKind) {
+        if let Some(ring) = &self.trace {
+            ring.push(TraceEvent { seq, ts, kind });
+        }
+    }
+}
+
+/// `"n64_m128_d8"` — a shape class as a trace/exposition label.
+fn class_str(class: &ClassKey) -> String {
+    format!("n{}_m{}_d{}", class.0, class.1, class.2)
+}
+
+/// Tenant label for traces: `"-"` for anonymous jobs.
+fn tenant_str(tenant: Option<&str>) -> String {
+    tenant.unwrap_or("-").to_string()
 }
 
 /// Cloneable client handle; dropping every handle shuts the actors down
@@ -274,7 +323,8 @@ impl ServiceHandle {
     pub fn try_submit(&self, request: JobRequest) -> Result<Pending, SubmitError> {
         let (done, rx) = sync_channel(1);
         let now = self.shared.clock.now();
-        let job = Job { request, submitted: now, done };
+        let seq = self.shared.job_seq.fetch_add(1, Ordering::Relaxed);
+        let job = Job { request, submitted: now, done, seq };
         let class = job.bucket_hint();
         let tenant = job.request.tenant.clone();
         {
@@ -292,6 +342,13 @@ impl ServiceHandle {
             };
             if let Err(rejection) = verdict {
                 self.metrics.on_rejected(tenant.as_deref(), rejection);
+                self.shared.trace(
+                    seq,
+                    TraceKind::Rejected {
+                        tenant: tenant_str(tenant.as_deref()),
+                        reason: rejection.to_string(),
+                    },
+                );
                 return Err(SubmitError::Rejected(rejection));
             }
             if st.queues.push(job).is_err() {
@@ -299,13 +356,31 @@ impl ServiceHandle {
                 // never leak the admission slot if it ever fires
                 st.admission.release(tenant.as_deref());
                 self.metrics.on_rejected(tenant.as_deref(), Rejection::QueueFull);
+                self.shared.trace(
+                    seq,
+                    TraceKind::Rejected {
+                        tenant: tenant_str(tenant.as_deref()),
+                        reason: Rejection::QueueFull.to_string(),
+                    },
+                );
                 return Err(SubmitError::Rejected(Rejection::QueueFull));
             }
             self.metrics.on_admitted(tenant.as_deref());
+            self.shared.trace(
+                seq,
+                TraceKind::Admitted {
+                    tenant: tenant_str(tenant.as_deref()),
+                    class: class_str(&class),
+                },
+            );
             // gauge bump under the same lock as the push: an already-awake
             // actor dequeues under this lock too, so its matching
             // on_dequeue can never run before this increment.
             self.metrics.on_enqueue(&class);
+            self.shared.trace(
+                seq,
+                TraceKind::Enqueued { class: class_str(&class), depth: st.queues.depth(&class) },
+            );
         }
         self.shared.work_cv.notify_all();
         Ok(Pending { rx })
@@ -336,6 +411,21 @@ impl ServiceHandle {
             }
         }
         snap
+    }
+
+    /// Drain the job-lifecycle trace ring (oldest first, leaving it
+    /// empty).  Always empty unless the service was spawned with
+    /// `service.obs = "trace[:capacity]"`.  Export with
+    /// [`crate::obs::trace::render_jsonl`] /
+    /// [`crate::obs::trace::render_chrome`].
+    pub fn drain_trace(&self) -> Vec<TraceEvent> {
+        self.shared.trace.as_ref().map_or_else(Vec::new, TraceRing::drain)
+    }
+
+    /// Events evicted from the trace ring under overflow (0 when tracing
+    /// is off — the ring never existed).
+    pub fn trace_dropped(&self) -> u64 {
+        self.shared.trace.as_ref().map_or(0, TraceRing::dropped)
     }
 
     /// Number of backend actor *slots* this service runs (== `actors_max`;
@@ -462,6 +552,8 @@ fn spawn_inner(
 ) -> Result<ServiceHandle> {
     let (actors_min, actors_max) = actor_range_of(&config.service);
     let actors = actors_max;
+    let obs_mode = ObsMode::parse(&config.service.obs)
+        .with_context(|| format!("service.obs = {:?}", config.service.obs))?;
     let metrics = Arc::new(Metrics::with_actors(actors));
     metrics.set_pool_size(actors_min, actors - actors_min);
     let policy = TenantPolicy {
@@ -515,6 +607,8 @@ fn spawn_inner(
         park_after: config.service.park_after_ticks.max(1),
         tick: Duration::from_millis(config.service.tick_ms.max(1)),
         warm_cache: WarmCache::from_mb(config.service.warm_cache_mb),
+        trace: obs_mode.ring(),
+        job_seq: AtomicU64::new(0),
         clock,
     });
     let solver_cfg = SolverConfig::from_section(&config.solver)?;
@@ -727,6 +821,9 @@ fn actor_loop(
                 st = g;
             }
         }
+        // dispatch timestamp: everything before this is queue wait,
+        // everything after is service time (the latency-split pair)
+        let dispatched_at = shared.clock.now();
         metrics.on_dequeue(&class, batch.len());
         metrics.batches.fetch_add(1, Ordering::Relaxed);
         metrics.batched_jobs.fetch_add(batch.len() as u64, Ordering::Relaxed);
@@ -735,27 +832,45 @@ fn actor_loop(
             metrics.steals.fetch_add(batch.len() as u64, Ordering::Relaxed);
             metrics.actor(index).steals.fetch_add(batch.len() as u64, Ordering::Relaxed);
         }
+        if shared.trace.is_some() {
+            if let Some(first) = batch.first() {
+                shared.trace(
+                    first.seq,
+                    TraceKind::Batched { class: class_str(&class), size: batch.len() },
+                );
+            }
+            for job in &batch {
+                shared.trace(job.seq, TraceKind::Dispatched { actor: index });
+            }
+        }
+        // stolen-batch execution is timed by the actor (the kernel pool
+        // cannot tell stolen work from home work); wall-clock, counters
+        // only — never fed back into scheduling
+        let steal_t0 = (stolen && crate::obs::counters_enabled()).then(std::time::Instant::now);
         for job in batch {
-            let result = run_job(
-                backend.as_ref(),
-                &solver,
-                solver_cfg,
-                &job.request,
-                shared.warm_cache.as_ref(),
-                metrics,
-            );
+            let result = run_job(backend.as_ref(), &solver, solver_cfg, &job, shared, metrics);
             match &result {
                 Ok(resp) => {
                     metrics.jobs_ok.fetch_add(1, Ordering::Relaxed);
                     metrics.sinkhorn_iters.fetch_add(resp.iters as u64, Ordering::Relaxed);
+                    shared.trace(
+                        job.seq,
+                        TraceKind::Completed { iters: resp.iters, cost: resp.cost },
+                    );
                 }
                 Err(_) => {
                     metrics.jobs_failed.fetch_add(1, Ordering::Relaxed);
                 }
             }
             metrics.actor(index).jobs.fetch_add(1, Ordering::Relaxed);
-            let elapsed = shared.clock.now().saturating_sub(job.submitted);
+            let done_at = shared.clock.now();
+            let elapsed = done_at.saturating_sub(job.submitted);
             metrics.record_latency(job.request.tenant.as_deref(), elapsed);
+            metrics.record_latency_split(
+                job.request.tenant.as_deref(),
+                dispatched_at.saturating_sub(job.submitted),
+                done_at.saturating_sub(dispatched_at),
+            );
             let result = result.map(|mut r| {
                 r.service_time = elapsed;
                 r
@@ -769,6 +884,9 @@ fn actor_loop(
             }
             let _ = job.done.send(result);
         }
+        if let Some(t0) = steal_t0 {
+            metrics.on_steal_nanos(t0.elapsed().as_nanos() as u64);
+        }
     }
 }
 
@@ -776,21 +894,23 @@ fn run_job(
     backend: &dyn ComputeBackend,
     solver: &SinkhornSolver,
     base_cfg: &SolverConfig,
-    req: &JobRequest,
-    warm_cache: Option<&WarmCache>,
+    job: &Job,
+    shared: &Shared,
     metrics: &Metrics,
 ) -> Result<JobResponse> {
+    let req = &job.request;
     // Fixed-budget jobs bypass the warm cache entirely: their contract is
     // exactly-k-iterations from the configured initializer (that is what
     // the soak/bench bitwise pins rely on), and "iterations saved" is
     // meaningless when the iteration count is the input.
-    let warm_cache = warm_cache.filter(|_| req.fixed_iters.is_none());
+    let warm_cache = shared.warm_cache.as_ref().filter(|_| req.fixed_iters.is_none());
     let tenant = req.tenant.as_deref();
     let consulted = warm_cache.map(|cache| {
         let fp = warm::fingerprint(&req.problem);
         (fp, cache.lookup(tenant, fp))
     });
     let hit = consulted.as_ref().and_then(|(_, h)| h.as_ref());
+    let solve_start = shared.trace.is_some().then(|| shared.clock.now());
     // per-job overrides: iteration budget, solve strategy and/or cached
     // warm-start duals.  Only build a fresh solver when the job actually
     // deviates from the service-wide config.
@@ -810,16 +930,50 @@ fn run_job(
     } else {
         solver.solve(&req.problem)?
     };
+    // the measured IO delta the backend charged to this solve (explicit
+    // zeros when counters are gated off or the backend does not measure)
+    metrics.on_io(&report.io);
     if let (Some(cache), Some((fp, looked))) = (warm_cache, &consulted) {
         match looked {
-            Some(h) => metrics.on_warm_hit(h.cold_iters.saturating_sub(report.iters) as u64),
-            None => metrics.on_warm_miss(),
+            Some(h) => {
+                let saved = h.cold_iters.saturating_sub(report.iters);
+                metrics.on_warm_hit(saved as u64);
+                shared.trace(job.seq, TraceKind::WarmHit { saved_iters: saved });
+            }
+            None => {
+                metrics.on_warm_miss();
+                shared.trace(job.seq, TraceKind::WarmMiss);
+            }
         }
         // insert on hit too: refreshed duals (and recency) under the
         // entry's original cold-iteration baseline
         let evicted = cache.insert(tenant, *fp, &pot, report.iters);
         if evicted > 0 {
             metrics.on_warm_evictions(evicted as u64);
+        }
+    }
+    // stage events are reconstructed from the report after the fact, so
+    // their timestamps bracket the whole solve (start for every
+    // StageStarted, end for every StageFinished) rather than resolving
+    // per-stage boundaries — the solver does not see the clock.
+    if let Some(start) = solve_start {
+        let end = shared.clock.now();
+        for stage in &report.stages {
+            shared.trace_at(
+                job.seq,
+                start,
+                TraceKind::StageStarted { stage: stage.kind, eps: stage.eps },
+            );
+            shared.trace_at(
+                job.seq,
+                end,
+                TraceKind::StageFinished {
+                    stage: stage.kind,
+                    eps: stage.eps,
+                    iters: stage.iters,
+                    final_delta: stage.final_delta,
+                },
+            );
         }
     }
     let grad = match req.kind {

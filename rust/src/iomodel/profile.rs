@@ -1,7 +1,11 @@
-//! NCU-style profiling report renderer (paper Tables 2 / 5 / 6 / 7).
+//! NCU-style profiling report renderer (paper Tables 2 / 5 / 6 / 7),
+//! plus the measured-vs-predicted comparison ([`measured_table`]) that
+//! puts the native backend's counted IO ([`crate::obs::IoStats`]) next to
+//! the analytic Flash-plan prediction (`repro profile --measured`).
 
 use super::device::DeviceProfile;
 use super::plans::{analyze, IoReport, Plan, Workload};
+use crate::obs::IoStats;
 
 fn fmt_bytes(b: f64) -> String {
     if b >= 1e9 {
@@ -53,6 +57,77 @@ pub fn ncu_style_table(wl: &Workload, dev: &DeviceProfile) -> String {
     out
 }
 
+/// Measured HBM-read bytes over the Flash plan's predicted bytes — the
+/// `io_model_error` ratio emitted into the bench smoke.  This is a
+/// *deterministic drift canary*, not an accuracy claim: the measured side
+/// counts the CPU kernels' traffic under their 32-row tiling geometry,
+/// the predicted side models an A100's SRAM budget, so the ratio is far
+/// from 1 by design — but it is bitwise-stable run to run, and any
+/// unexplained change means the kernels' loop geometry (or the analytic
+/// model) moved.
+pub fn io_model_error(wl: &Workload, dev: &DeviceProfile, measured: &IoStats) -> f64 {
+    let predicted = analyze(Plan::Flash, wl, dev).hbm_read_bytes;
+    if predicted <= 0.0 {
+        return 0.0;
+    }
+    measured.read_bytes() as f64 / predicted
+}
+
+/// Render the measured-vs-predicted IO comparison: the native backend's
+/// counted [`IoStats`] for one solve next to the analytic Flash-plan
+/// prediction on the same workload.  Rows without an analytic counterpart
+/// (tiles, pool time) show the measurement alone.
+pub fn measured_table(wl: &Workload, dev: &DeviceProfile, measured: &IoStats) -> String {
+    let flash = analyze(Plan::Flash, wl, dev);
+    let nm = wl.n as f64 * wl.m as f64;
+    let pred_evals = 2.0 * nm * wl.iters as f64; // two half-steps per iteration
+    let pred_flops = flash.flops_tensor + flash.flops_scalar;
+    let ratio = |meas: f64, pred: f64| {
+        if pred > 0.0 {
+            format!("{:.3}x", meas / pred)
+        } else {
+            "—".into()
+        }
+    };
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Measured vs predicted IO (n={}, m={}, d={}, {} iters; native counters vs {} Flash model)\n\n",
+        wl.n, wl.m, wl.d, wl.iters, dev.name
+    ));
+    out.push_str("| Metric | Measured (native) | Predicted (Flash) | Ratio |\n|---|---|---|---|\n");
+    out.push_str(&format!(
+        "| Read traffic | {} | {} | {} |\n",
+        fmt_bytes(measured.read_bytes() as f64),
+        fmt_bytes(flash.hbm_read_bytes),
+        ratio(measured.read_bytes() as f64, flash.hbm_read_bytes)
+    ));
+    out.push_str(&format!(
+        "| FLOPs (G) | {:.2} | {:.2} | {} |\n",
+        measured.flops as f64 / 1e9,
+        pred_flops / 1e9,
+        ratio(measured.flops as f64, pred_flops)
+    ));
+    out.push_str(&format!(
+        "| LSE cell evals (M) | {:.2} | {:.2} | {} |\n",
+        measured.lse_evals as f64 / 1e6,
+        pred_evals / 1e6,
+        ratio(measured.lse_evals as f64, pred_evals)
+    ));
+    out.push_str(&format!("| SRAM tiles visited | {} | — | — |\n", measured.tiles));
+    out.push_str(&format!(
+        "| Pool busy / idle (ms) | {:.1} / {:.1} | — | — |\n",
+        measured.pool_busy_nanos as f64 / 1e6,
+        measured.pool_idle_nanos as f64 / 1e6
+    ));
+    out.push_str(&format!(
+        "\nio_model_error (measured/predicted read bytes): {:.3} — a drift canary, not an\n\
+         accuracy claim: the measured side is the CPU kernels' 32-row tiling, the\n\
+         prediction an A100 SRAM model.  Bitwise-stable run to run; investigate any change.\n",
+        io_model_error(wl, dev, measured)
+    ));
+    out
+}
+
 /// Launch/tensor-pipe ratio summary (paper Table 6).
 pub fn launch_ratio_table(wl: &Workload, dev: &DeviceProfile) -> String {
     let online = analyze(Plan::OnlineUnfused, wl, dev);
@@ -89,5 +164,28 @@ mod tests {
         }
         let l = launch_ratio_table(&wl, &A100);
         assert!(l.contains("fewer"));
+    }
+
+    #[test]
+    fn measured_table_renders_and_ratio_is_finite() {
+        let wl = Workload { n: 512, m: 512, d: 16, iters: 10, pass: Pass::Forward };
+        let measured = crate::obs::IoStats {
+            x_bytes: 512 * 16 * 4 * 10,
+            y_bytes: 512 * 512 * 16 * 4,
+            dual_bytes: 512 * 512 * 4,
+            tiles: 320,
+            lse_evals: 512 * 512 * 20,
+            flops: 512 * 512 * 36 * 20,
+            ..crate::obs::IoStats::default()
+        };
+        let t = measured_table(&wl, &A100, &measured);
+        for needle in ["Measured", "Predicted", "Read traffic", "io_model_error", "tiles"] {
+            assert!(t.contains(needle), "missing {needle} in:\n{t}");
+        }
+        let err = io_model_error(&wl, &A100, &measured);
+        assert!(err.is_finite() && err > 0.0, "{err}");
+        // zeroed counters (obs off) must not divide by zero or panic
+        let z = io_model_error(&wl, &A100, &crate::obs::IoStats::default());
+        assert!(z == 0.0 || z.is_finite());
     }
 }

@@ -44,6 +44,7 @@ pub mod dense;
 pub mod hvp;
 pub mod iomodel;
 pub mod native;
+pub mod obs;
 pub mod optim;
 pub mod ot;
 pub mod otdd;

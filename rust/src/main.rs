@@ -4,9 +4,15 @@
 //!   solve       one OT solve on synthetic clouds (quick smoke)
 //!   bench       regenerate paper tables/figures (see DESIGN.md section 6)
 //!   profile     IO-model NCU-style profile for a workload
+//!               (--measured: counted native IoStats vs the Flash model)
 //!   otdd        OTDD distance between synthetic labeled datasets
 //!   regress     shuffled-regression saddle-escape run
 //!   serve       start the OT job service and run a demo workload
+//!               (--metrics-addr: Prometheus/JSON exposition listener)
+//!   trace       canned serving run with the lifecycle ring on; print the
+//!               drained trace as JSON-lines or chrome://tracing JSON
+//!   metrics     one-shot Prometheus exposition of a canned serving run
+//!               (--check: validate every documented series, no NaNs)
 //!   trajectory  perf-trajectory bookkeeping (append / check / show)
 //!   info        manifest / artifact summary
 
@@ -16,12 +22,14 @@ use flash_sinkhorn::bench;
 use flash_sinkhorn::bench::trajectory;
 use flash_sinkhorn::config::Config;
 use flash_sinkhorn::coordinator::job::{JobKind, JobRequest};
+use flash_sinkhorn::coordinator::metrics::DOCUMENTED_SERIES;
 use flash_sinkhorn::coordinator::service;
 use flash_sinkhorn::data::clouds::uniform_cloud;
 use flash_sinkhorn::data::labeled::LabeledDataset;
 use flash_sinkhorn::iomodel::device::A100;
 use flash_sinkhorn::iomodel::plans::{Pass, Workload};
-use flash_sinkhorn::iomodel::profile::ncu_style_table;
+use flash_sinkhorn::iomodel::profile::{measured_table, ncu_style_table};
+use flash_sinkhorn::obs;
 use flash_sinkhorn::ot::problem::OtProblem;
 use flash_sinkhorn::ot::solver::{Schedule, SinkhornSolver, SolverConfig};
 use flash_sinkhorn::ot::strategy::SolveStrategy;
@@ -41,18 +49,32 @@ COMMANDS:
            (strategy precedence: flag > config \"strategy\"/solver.strategy
             > FLASH_SINKHORN_STRATEGY env > plain)
   bench    [id | all] [--quick]        regenerate paper tables/figures
-  profile  [--n 10000] [--d 64] [--iters 10]
+  profile  [--n 10000] [--d 64] [--iters 10] [--measured]
+           (--measured runs one native fixed-iteration solve -- the default
+            n drops to 2000 -- and prints the counted IoStats next to the
+            analytic Flash-plan prediction, plus the io_model_error ratio)
   otdd     [--n 400] [--d 64]
   regress  [--n 512] [--eps 0.1] [--steps 60]
   serve    [--jobs 64] [--actors N] [--actors-min A] [--actors-max B]
            [--tenant-rate R] [--tenant-burst C] [--tenant-inflight K]
            [--warm-cache-mb MB] [--tick-ms MS] [--grow-after G] [--park-after P]
+           [--metrics-addr HOST:PORT] [--obs off|counters|trace[:N]]
            (N defaults to config/FLASH_SINKHORN_ACTORS, else 1; A < B turns
             the adaptive pool on; tenant quotas default off, env
             FLASH_SINKHORN_TENANT_{RATE,BURST,INFLIGHT}; warm-start dual
             cache defaults off (0 MB), env FLASH_SINKHORN_WARM_CACHE_MB;
             supervisor cadence/marks default 25 ms / 2 / 2, env
-            FLASH_SINKHORN_{TICK_MS,GROW_AFTER_TICKS,PARK_AFTER_TICKS})
+            FLASH_SINKHORN_{TICK_MS,GROW_AFTER_TICKS,PARK_AFTER_TICKS};
+            --metrics-addr serves GET /metrics (Prometheus text) and
+            /metrics.json; --obs defaults to config/FLASH_SINKHORN_OBS)
+  trace    [--jobs 8] [--format jsonl|chrome] [--capacity 4096]
+           run a canned serving workload with the job-lifecycle trace ring
+           on and print the drained events (JSON-lines, or a chrome://tracing
+           / Perfetto-loadable JSON document)
+  metrics  [--jobs 12] [--check]
+           run a canned serving workload and print one Prometheus exposition
+           to stdout; --check exits nonzero unless every documented series
+           is present with no NaN samples
   trajectory [append|check|show] [--baseline BENCH_native.json]
              [--current BENCH_native.json] [--file BENCH_trajectory.jsonl]
              [--max-regress 0.15]
@@ -79,7 +101,7 @@ fn main() -> Result<()> {
         print!("{USAGE}");
         return Ok(());
     };
-    let args = Args::parse(argv.into_iter().skip(1), &["quick"])?;
+    let args = Args::parse(argv.into_iter().skip(1), &["quick", "measured", "check"])?;
 
     match cmd.as_str() {
         "solve" => {
@@ -144,14 +166,45 @@ fn main() -> Result<()> {
         }
         "profile" => {
             args.ensure_known(&["n", "d", "iters"])?;
+            let measured = args.has("measured");
+            // --measured runs a real solve on this machine, so default to a
+            // size the CPU backend finishes in seconds, not minutes
+            let default_n = if measured { 2_000 } else { 10_000 };
             let wl = Workload {
-                n: args.usize("n", 10_000)?,
-                m: args.usize("n", 10_000)?,
+                n: args.usize("n", default_n)?,
+                m: args.usize("n", default_n)?,
                 d: args.usize("d", 64)?,
                 iters: args.usize("iters", 10)?,
                 pass: Pass::Forward,
             };
-            println!("{}", ncu_style_table(&wl, &A100));
+            if measured {
+                let backend = flash_sinkhorn::backend_from_config(&cfg)?;
+                let prob = OtProblem::uniform(
+                    uniform_cloud(wl.n, wl.d, 1),
+                    uniform_cloud(wl.m, wl.d, 2),
+                    wl.n,
+                    wl.m,
+                    wl.d,
+                    0.1,
+                )?;
+                // pin the iteration count so the measurement covers exactly
+                // the work the analytic prediction is priced on
+                let mut scfg = SolverConfig::from_section(&cfg.solver)?;
+                scfg.max_iters = wl.iters;
+                scfg.tol = 0.0;
+                let solver = SinkhornSolver::new(backend.as_ref(), scfg);
+                let (_, report) = solver.solve(&prob)?;
+                print!("{}", measured_table(&wl, &A100, &report.io));
+                if report.io.read_bytes() == 0 {
+                    println!(
+                        "\n(all counters zero: backend '{}' does not measure IO, \
+                         or FLASH_SINKHORN_OBS=off)",
+                        backend.name()
+                    );
+                }
+            } else {
+                println!("{}", ncu_style_table(&wl, &A100));
+            }
         }
         "otdd" => {
             args.ensure_known(&["n", "d"])?;
@@ -216,6 +269,8 @@ fn main() -> Result<()> {
                 "tick-ms",
                 "grow-after",
                 "park-after",
+                "metrics-addr",
+                "obs",
             ])?;
             let jobs = args.usize("jobs", 64)?;
             // precedence: CLI flag > config key > FLASH_SINKHORN_* env
@@ -236,7 +291,20 @@ fn main() -> Result<()> {
                 args.usize("grow-after", cfg.service.grow_after_ticks as usize)? as u32;
             cfg.service.park_after_ticks =
                 args.usize("park-after", cfg.service.park_after_ticks as usize)? as u32;
+            cfg.service.obs = args.string("obs", &cfg.service.obs);
             let handle = service::spawn(cfg)?;
+            let metrics_addr = args.string("metrics-addr", "");
+            if !metrics_addr.is_empty() {
+                let h = handle.clone();
+                let bound = obs::exporter::spawn(&metrics_addr, move |format| {
+                    let snap = h.metrics();
+                    match format {
+                        obs::MetricsFormat::Prometheus => snap.render_prometheus(),
+                        obs::MetricsFormat::Json => snap.to_json().to_string_compact(),
+                    }
+                })?;
+                println!("metrics exposition on http://{bound}/metrics (and /metrics.json)");
+            }
             let (lo, hi) = handle.actor_range();
             if lo < hi {
                 println!("service up: {hi} actor slot(s), adaptive {lo}..{hi}");
@@ -275,6 +343,55 @@ fn main() -> Result<()> {
                 jobs as f64 / wall,
                 handle.metrics()
             );
+        }
+        "trace" => {
+            args.ensure_known(&["jobs", "format", "capacity"])?;
+            let jobs = args.usize("jobs", 8)?;
+            let format = args.string("format", "jsonl");
+            let mut cfg = cfg.clone();
+            cfg.service.obs = format!("trace:{}", args.usize("capacity", 4096)?);
+            let handle = service::spawn(cfg)?;
+            run_canned_jobs(&handle, jobs, 2)?;
+            let events = handle.drain_trace();
+            match format.as_str() {
+                "jsonl" => print!("{}", obs::trace::render_jsonl(&events)),
+                "chrome" => println!("{}", obs::trace::render_chrome(&events)),
+                other => bail!("unknown trace format '{other}' (jsonl|chrome)"),
+            }
+            let dropped = handle.trace_dropped();
+            if dropped > 0 {
+                eprintln!("# {dropped} event(s) evicted under ring overflow; raise --capacity");
+            }
+        }
+        "metrics" => {
+            args.ensure_known(&["jobs"])?;
+            let jobs = args.usize("jobs", 12)?;
+            let handle = service::spawn(cfg.clone())?;
+            run_canned_jobs(&handle, jobs, 3)?;
+            let text = handle.metrics().render_prometheus();
+            print!("{text}");
+            if args.has("check") {
+                let missing: Vec<&str> = DOCUMENTED_SERIES
+                    .iter()
+                    .copied()
+                    .filter(|name| {
+                        !text.lines().any(|l| {
+                            l.strip_prefix(name)
+                                .is_some_and(|rest| rest.starts_with(' ') || rest.starts_with('{'))
+                        })
+                    })
+                    .collect();
+                if !missing.is_empty() {
+                    bail!("metrics check: documented series missing from exposition: {missing:?}");
+                }
+                if text.contains("NaN") {
+                    bail!("metrics check: exposition contains NaN samples");
+                }
+                eprintln!(
+                    "metrics check OK: all {} documented series present, no NaNs",
+                    DOCUMENTED_SERIES.len()
+                );
+            }
         }
         "trajectory" => {
             args.ensure_known(&["baseline", "current", "file", "max-regress"])?;
@@ -359,6 +476,27 @@ fn main() -> Result<()> {
             print!("{USAGE}");
             bail!("unknown command '{other}'");
         }
+    }
+    Ok(())
+}
+
+/// Submit `jobs` small fixed-iteration solves sequentially (two shape
+/// classes, round-robin tenant labels) so the one-shot observability
+/// commands (`trace`, `metrics`) have a populated surface to export.
+fn run_canned_jobs(handle: &service::ServiceHandle, jobs: usize, tenants: usize) -> Result<()> {
+    for i in 0..jobs {
+        let n = [200, 400][i % 2];
+        let prob = OtProblem::uniform(
+            uniform_cloud(n, 16, i as u64),
+            uniform_cloud(n, 16, (i + 500) as u64),
+            n,
+            n,
+            16,
+            0.1,
+        )?;
+        let req = JobRequest::with_fixed_iters(JobKind::Solve, prob, 5)
+            .for_tenant(format!("tenant-{}", i % tenants.max(1)));
+        handle.submit_blocking(req)?;
     }
     Ok(())
 }

@@ -44,6 +44,7 @@
 //! for every pool width.
 
 use super::pool::WorkerPool;
+use crate::obs::IoStats;
 
 /// log(0) sentinel shared with the Python reference kernels.
 pub const NEG_INF: f32 = -1e30;
@@ -569,6 +570,94 @@ pub fn masked_delta(new: &[f32], old: &[f32], w: &[f32]) -> f32 {
     delta
 }
 
+// ---------------------------------------------------------------------------
+// Analytic IO/work geometry (the measured side of `repro profile --measured`)
+//
+// Each helper mirrors its kernel's loop structure exactly and charges
+// *memory traffic under the tiling model*: data is counted once per loop
+// level that re-streams it, with tile-resident reuse (a y tile across the
+// rows of a block) charged once.  Charging from geometry instead of
+// instrumenting the loops keeps the numeric paths untouched (bitwise
+// determinism) and makes the counters exactly conservative — a fused
+// k-step op charges k times a single step.  The flop figure is an
+// estimate: `2d` dot multiply-adds plus ~4 ops of scale/bias/online-LSE
+// update per score.
+
+const F32_BYTES: u64 = 4;
+
+/// Per-score flop estimate shared by every plan.
+fn score_flops(d: u64) -> u64 {
+    2 * d + 4
+}
+
+/// Geometry of one [`lse_update`] call: row blocks of `block_rows` rows
+/// stream every y tile once per block (cache-resident across the block's
+/// rows), so the column side is charged `ceil(n / block_rows)` times.
+pub fn lse_update_io(n: usize, m: usize, d: usize, cfg: &TileCfg) -> IoStats {
+    let (n64, m64, d64) = (n as u64, m as u64, d as u64);
+    let row_blocks = n64.div_ceil(cfg.block_rows.max(1) as u64);
+    let col_tiles = m64.div_ceil(cfg.block_cols.max(1) as u64);
+    IoStats {
+        x_bytes: n64 * d64 * F32_BYTES,
+        y_bytes: row_blocks * m64 * d64 * F32_BYTES,
+        dual_bytes: row_blocks * m64 * F32_BYTES,
+        tiles: row_blocks * col_tiles,
+        lse_evals: n64 * m64,
+        flops: n64 * m64 * score_flops(d64),
+        ..IoStats::default()
+    }
+}
+
+/// Geometry of one [`lse_update_twopass`] call: the unfused baseline walks
+/// the full column side twice per row (max pass + sum pass), so y and the
+/// bias are charged `2 n m` with no tile amortization.
+pub fn lse_update_twopass_io(n: usize, m: usize, d: usize) -> IoStats {
+    let (n64, m64, d64) = (n as u64, m as u64, d as u64);
+    IoStats {
+        x_bytes: n64 * d64 * F32_BYTES,
+        y_bytes: 2 * n64 * m64 * d64 * F32_BYTES,
+        dual_bytes: 2 * n64 * m64 * F32_BYTES,
+        tiles: 0,
+        lse_evals: 2 * n64 * m64,
+        flops: 2 * n64 * m64 * score_flops(d64),
+        ..IoStats::default()
+    }
+}
+
+/// Geometry of one [`lse_update_dense`] call: every score is computed once
+/// from a per-row y stream (the n x m materialization's own buffer traffic
+/// is not part of the x/y/dual accounting; `tiles == 0` marks the plan).
+pub fn lse_update_dense_io(n: usize, m: usize, d: usize) -> IoStats {
+    let (n64, m64, d64) = (n as u64, m as u64, d as u64);
+    IoStats {
+        x_bytes: n64 * d64 * F32_BYTES,
+        y_bytes: n64 * m64 * d64 * F32_BYTES,
+        dual_bytes: n64 * m64 * F32_BYTES,
+        tiles: 0,
+        lse_evals: n64 * m64,
+        flops: n64 * m64 * score_flops(d64),
+        ..IoStats::default()
+    }
+}
+
+/// Geometry of one [`apply_rows`] call with a width-`p` panel: columns
+/// (y rows plus the streamed `v` panel) are re-streamed per output row —
+/// no row-block amortization — and the row constant adds one `fhat` read
+/// per row.
+pub fn apply_rows_io(n: usize, m: usize, d: usize, p: usize, cfg: &TileCfg) -> IoStats {
+    let (n64, m64, d64, p64) = (n as u64, m as u64, d as u64, p as u64);
+    let col_tiles = m64.div_ceil(cfg.block_cols.max(1) as u64);
+    IoStats {
+        x_bytes: n64 * d64 * F32_BYTES,
+        y_bytes: n64 * m64 * (d64 + p64) * F32_BYTES,
+        dual_bytes: n64 * m64 * F32_BYTES + n64 * F32_BYTES,
+        tiles: n64 * col_tiles,
+        lse_evals: n64 * m64,
+        flops: n64 * m64 * (score_flops(d64) + 2 * p64),
+        ..IoStats::default()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -703,6 +792,34 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn io_geometry_matches_the_tiling_model() {
+        let cfg = TileCfg::default(); // block_rows 32, block_cols 256
+        let (n, m, d) = (64, 512, 8);
+        let flash = lse_update_io(n, m, d, &cfg);
+        // 2 row blocks of 32 rows -> y amortized 2x, 2 * 2 tiles visited
+        assert_eq!(flash.x_bytes, 64 * 8 * 4);
+        assert_eq!(flash.y_bytes, 2 * 512 * 8 * 4);
+        assert_eq!(flash.dual_bytes, 2 * 512 * 4);
+        assert_eq!(flash.tiles, 4);
+        assert_eq!(flash.lse_evals, (64 * 512) as u64);
+        // the unfused baseline streams y twice per row: 64x the flash
+        // traffic here (64 rows per block), and 2x the evaluations
+        let two = lse_update_twopass_io(n, m, d);
+        assert_eq!(two.y_bytes, 2 * 64 * 512 * 8 * 4);
+        assert_eq!(two.lse_evals, 2 * flash.lse_evals);
+        let dense = lse_update_dense_io(n, m, d);
+        assert_eq!(dense.y_bytes, 64 * 512 * 8 * 4);
+        assert_eq!((dense.tiles, two.tiles), (0, 0));
+        // apply_rows streams columns per row and adds the p-panel
+        let apply = apply_rows_io(n, m, d, 2, &cfg);
+        assert_eq!(apply.y_bytes, 64 * 512 * (8 + 2) * 4);
+        assert_eq!(apply.dual_bytes, 64 * 512 * 4 + 64 * 4);
+        assert_eq!(apply.tiles, 64 * 2);
+        // ragged shapes round tile counts up
+        assert_eq!(lse_update_io(33, 257, 1, &cfg).tiles, 2 * 2);
     }
 
     #[test]

@@ -32,12 +32,13 @@ use std::sync::Arc;
 use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::router::Router;
+use crate::obs::{AtomicIoStats, IoStats};
 use crate::runtime::backend::{op_of_key, ComputeBackend};
 use crate::runtime::Tensor;
 
 use kernels::{
-    apply_rows, lse_update, lse_update_dense, lse_update_twopass, masked_delta, safe_ln, TileCfg,
-    NEG_INF,
+    apply_rows, apply_rows_io, lse_update, lse_update_dense, lse_update_dense_io, lse_update_io,
+    lse_update_twopass, lse_update_twopass_io, masked_delta, safe_ln, TileCfg, NEG_INF,
 };
 use pool::WorkerPool;
 
@@ -70,11 +71,26 @@ pub struct NativeBackend {
     /// and every other default-constructed backend in the process, router
     /// path and service actor included — share one set of worker threads.
     pub pool: Arc<WorkerPool>,
+    /// Cumulative measured IO/work counters, charged analytically at the
+    /// call chokepoints (see [`kernels::lse_update_io`] and friends).
+    /// Shared across clones, read through `ComputeBackend::io_stats`.
+    stats: Arc<AtomicIoStats>,
+    /// Whether this instance charges counters.  Defaults from the
+    /// process-wide [`crate::obs::counters_enabled`] gate
+    /// (`FLASH_SINKHORN_OBS`); [`Self::with_counters`] overrides per
+    /// backend so the bench can measure the instrumentation's own cost.
+    counters: bool,
 }
 
 impl Default for NativeBackend {
     fn default() -> Self {
-        Self { k_fused: 10, tile: TileCfg::default(), pool: pool::global() }
+        Self {
+            k_fused: 10,
+            tile: TileCfg::default(),
+            pool: pool::global(),
+            stats: Arc::default(),
+            counters: crate::obs::counters_enabled(),
+        }
     }
 }
 
@@ -133,7 +149,31 @@ impl NativeBackend {
     /// determinism contract).
     pub fn with_pool(pool: Arc<WorkerPool>) -> Self {
         let threads = pool.threads();
-        Self { k_fused: 10, tile: TileCfg { threads, ..TileCfg::default() }, pool }
+        Self {
+            k_fused: 10,
+            tile: TileCfg { threads, ..TileCfg::default() },
+            pool,
+            stats: Arc::default(),
+            counters: crate::obs::counters_enabled(),
+        }
+    }
+
+    /// Override the counter gate for this instance (and its clones keep
+    /// sharing the same accumulator).  `with_counters(false)` is the
+    /// uninstrumented arm of the bench's `obs_overhead_pct` measurement —
+    /// the process-wide env gate is latched once and cannot be toggled
+    /// mid-process.
+    pub fn with_counters(mut self, on: bool) -> Self {
+        self.counters = on;
+        self
+    }
+
+    /// Charge one kernel call's analytic geometry (no-op when counters are
+    /// off for this instance).
+    fn charge(&self, s: IoStats) {
+        if self.counters {
+            self.stats.add(&s);
+        }
     }
 
     /// Column bias `ghat_j / eps + ln w_j` with zero-weight entries masked
@@ -178,6 +218,11 @@ impl NativeBackend {
             Plan::Online => lse_update_twopass(x, y, &bias, n, m, d, eps, scale, out),
             Plan::Dense => lse_update_dense(x, y, &bias, n, m, d, eps, scale, out),
         }
+        self.charge(match plan {
+            Plan::Flash => lse_update_io(n, m, d, &self.tile),
+            Plan::Online => lse_update_twopass_io(n, m, d),
+            Plan::Dense => lse_update_dense_io(n, m, d),
+        });
     }
 
     fn step(
@@ -273,6 +318,7 @@ impl NativeBackend {
             &self.tile,
             out,
         );
+        self.charge(lse_update_io(c.n, c.m, c.d, &self.tile));
     }
 
     /// Label-augmented g-update (rows = y): extra(j, i) = -(lam2/eps) W[li_i, lj_j].
@@ -294,6 +340,7 @@ impl NativeBackend {
             &self.tile,
             out,
         );
+        self.charge(lse_update_io(c.m, c.n, c.d, &self.tile));
     }
 
     /// (P V, r) with V of width p, forward orientation.
@@ -305,6 +352,7 @@ impl NativeBackend {
             &self.pool, c.x, c.y, c.fhat, c.ghat, c.a, c.b, v, p, c.n, c.m, c.d, eps, 2.0 / eps,
             |_, _| 0.0, |_, _| 1.0, &self.tile, &mut pv, &mut r,
         );
+        self.charge(apply_rows_io(c.n, c.m, c.d, p, &self.tile));
         (pv, r)
     }
 
@@ -316,6 +364,7 @@ impl NativeBackend {
             &self.pool, c.y, c.x, c.ghat, c.fhat, c.b, c.a, u, p, c.m, c.n, c.d, eps, 2.0 / eps,
             |_, _| 0.0, |_, _| 1.0, &self.tile, &mut ptu, &mut col,
         );
+        self.charge(apply_rows_io(c.m, c.n, c.d, p, &self.tile));
         (ptu, col)
     }
 }
@@ -340,6 +389,15 @@ impl ComputeBackend for NativeBackend {
     fn has(&self, key: &str) -> bool {
         let op = op_of_key(key);
         NATIVE_OPS.contains(&op) || parse_fused(op).is_some()
+    }
+
+    fn io_stats(&self) -> IoStats {
+        let mut s = self.stats.snapshot();
+        // pool timing is pool-wide (shared with every backend on the same
+        // pool) and wall-clock: utilization signal, never a determinism pin
+        s.pool_busy_nanos = self.pool.busy_nanos();
+        s.pool_idle_nanos = self.pool.idle_nanos();
+        s
     }
 
     fn call(&self, key: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
@@ -392,6 +450,7 @@ impl ComputeBackend for NativeBackend {
                     &mut pv,
                     &mut r,
                 );
+                self.charge(apply_rows_io(c.n, c.m, d, d, &self.tile));
                 Ok(vec![Tensor::matrix(c.n, d, pv), Tensor::vector(r)])
             }
             "grad_x" | "online_grad" | "dense_grad" => {
@@ -471,6 +530,7 @@ impl ComputeBackend for NativeBackend {
                     &mut py,
                     &mut r,
                 );
+                self.charge(apply_rows_io(c.n, c.m, c.d, c.d, &self.tile));
                 let mut grad = vec![0.0f32; c.n * c.d];
                 for i in 0..c.n {
                     for t in 0..c.d {
@@ -714,6 +774,28 @@ mod tests {
         let labeled = b.call("alternating_step_label", &label).unwrap();
         assert_eq!(plain[0].as_f32().unwrap(), labeled[0].as_f32().unwrap());
         assert_eq!(plain[1].as_f32().unwrap(), labeled[1].as_f32().unwrap());
+    }
+
+    #[test]
+    fn io_stats_accumulate_and_respect_the_counter_gate() {
+        let inputs = core_inputs(8, 9, 2, 1);
+        let b = NativeBackend::default().with_counters(true);
+        let base = b.io_stats();
+        b.call("alternating_step", &inputs).unwrap();
+        let d = b.io_stats().delta_since(&base);
+        // one f-update (8 x 9) plus one g-update (9 x 8)
+        assert_eq!(d.lse_evals, 2 * 8 * 9);
+        assert!(d.x_bytes > 0 && d.y_bytes > 0 && d.dual_bytes > 0 && d.tiles > 0);
+        // marginals route through pv + ptu (apply_rows both ways)
+        let base = b.io_stats();
+        b.call("marginals", &inputs).unwrap();
+        assert_eq!(b.io_stats().delta_since(&base).lse_evals, 2 * 8 * 9);
+        // the gate zeroes the deterministic counters entirely
+        let off = NativeBackend::default().with_counters(false);
+        let base = off.io_stats();
+        off.call("alternating_step", &inputs).unwrap();
+        let d0 = off.io_stats().delta_since(&base);
+        assert_eq!((d0.lse_evals, d0.read_bytes(), d0.tiles, d0.flops), (0, 0, 0, 0));
     }
 
     #[test]

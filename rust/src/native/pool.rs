@@ -21,9 +21,10 @@
 //! (unset or 0 = one worker per available core).  Regions are serialized by
 //! a submit lock; concurrent solves queue rather than oversubscribe.
 
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 /// A lifetime-erased parallel-region body: `body(start, end)` processes the
 /// contiguous row range `[start, end)`.
@@ -64,6 +65,13 @@ pub struct WorkerPool {
     /// concurrent solves (service actor + tests + router path) queue here
     /// instead of corrupting the shared cursor.
     submit: Mutex<()>,
+    /// Wall nanos spent inside parallel regions (`obs` utilization
+    /// counter; gated on [`crate::obs::counters_enabled`]).
+    busy_nanos: AtomicU64,
+    /// Wall nanos between consecutive parallel regions.
+    idle_nanos: AtomicU64,
+    /// End instant of the most recent region (idle-gap bookkeeping).
+    last_region_end: Mutex<Option<Instant>>,
 }
 
 impl std::fmt::Debug for WorkerPool {
@@ -141,12 +149,48 @@ impl WorkerPool {
                     .expect("spawning pool worker"),
             );
         }
-        Self { shared, handles, threads, submit: Mutex::new(()) }
+        Self {
+            shared,
+            handles,
+            threads,
+            submit: Mutex::new(()),
+            busy_nanos: AtomicU64::new(0),
+            idle_nanos: AtomicU64::new(0),
+            last_region_end: Mutex::new(None),
+        }
     }
 
     /// Total claimants (submitting thread included).
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Cumulative wall nanos spent inside parallel regions (0 when the
+    /// obs counter gate is off).
+    pub fn busy_nanos(&self) -> u64 {
+        self.busy_nanos.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative wall nanos between consecutive parallel regions.
+    pub fn idle_nanos(&self) -> u64 {
+        self.idle_nanos.load(Ordering::Relaxed)
+    }
+
+    /// Credit one finished region `[t0, now]` to the busy counter and the
+    /// gap since the previous region to the idle counter.
+    fn note_region(&self, t0: Option<Instant>) {
+        let Some(t0) = t0 else { return };
+        let now = Instant::now();
+        self.busy_nanos
+            .fetch_add(now.saturating_duration_since(t0).as_nanos() as u64, Ordering::Relaxed);
+        let mut last = lock(&self.last_region_end);
+        if let Some(prev) = *last {
+            self.idle_nanos.fetch_add(
+                t0.saturating_duration_since(prev).as_nanos() as u64,
+                Ordering::Relaxed,
+            );
+        }
+        *last = Some(now);
     }
 
     /// Run `body(start, end)` over disjoint `chunk`-row pieces of
@@ -164,8 +208,11 @@ impl WorkerPool {
             return;
         }
         let chunk = chunk.max(1);
+        // two Instant reads per region when counters are on; nothing when off
+        let t0 = crate::obs::counters_enabled().then(Instant::now);
         if self.handles.is_empty() {
             body(0, rows);
+            self.note_region(t0);
             return;
         }
         let _region = lock(&self.submit);
@@ -214,6 +261,7 @@ impl WorkerPool {
         if worker_panicked {
             panic!("flash-sinkhorn pool worker panicked inside a parallel region");
         }
+        self.note_region(t0);
     }
 }
 
@@ -384,6 +432,19 @@ mod tests {
                 });
             }
         });
+    }
+
+    #[test]
+    fn region_timing_accumulates_when_counters_are_on() {
+        // (FLASH_SINKHORN_OBS is not set in the test environment, so the
+        // process-wide counter gate defaults on)
+        let pool = WorkerPool::new(2);
+        assert_eq!((pool.busy_nanos(), pool.idle_nanos()), (0, 0));
+        pool.run(2, 1, |_, _| std::thread::sleep(std::time::Duration::from_millis(2)));
+        let busy1 = pool.busy_nanos();
+        assert!(busy1 >= 2_000_000, "busy={busy1}");
+        pool.run(2, 1, |_, _| std::thread::sleep(std::time::Duration::from_millis(1)));
+        assert!(pool.busy_nanos() > busy1);
     }
 
     #[test]

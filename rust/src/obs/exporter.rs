@@ -1,0 +1,124 @@
+//! Minimal hand-rolled HTTP/1.1 exposition listener.
+//!
+//! The workspace is offline (no hyper/axum/tiny-http), and the exposition
+//! contract is tiny: answer `GET /metrics` with Prometheus text format and
+//! `GET /metrics.json` with the JSON snapshot, one short-lived connection
+//! per scrape.  So the listener is ~80 lines of std: accept, read the
+//! request head, route on the path, write a `Content-Length`-framed
+//! response, close.  Renders are produced by a caller-supplied closure so
+//! this layer knows nothing about `coordinator::Metrics`.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+/// Exposition formats the listener can answer with.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetricsFormat {
+    /// Prometheus text exposition format (`/metrics`).
+    Prometheus,
+    /// Compact JSON snapshot (`/metrics.json`).
+    Json,
+}
+
+/// Bind `addr` and serve `render(format)` forever on a background thread.
+///
+/// Returns the bound address (pass port 0 to let the OS pick — used by the
+/// tests).  The thread runs for the life of the process; scrapers poll, so
+/// there is nothing to flush on shutdown.
+pub fn spawn<F>(addr: &str, render: F) -> Result<SocketAddr>
+where
+    F: Fn(MetricsFormat) -> String + Send + Sync + 'static,
+{
+    let listener =
+        TcpListener::bind(addr).with_context(|| format!("binding metrics listener on {addr}"))?;
+    let local = listener.local_addr().context("resolving metrics listener address")?;
+    std::thread::Builder::new()
+        .name("fs-metrics".into())
+        .spawn(move || {
+            for stream in listener.incoming() {
+                if let Ok(mut s) = stream {
+                    let _ = answer(&mut s, &render);
+                }
+            }
+        })
+        .context("spawning metrics exporter thread")?;
+    Ok(local)
+}
+
+/// Read one request head and write one framed response.  Any IO error just
+/// drops the connection — a scraper retries on its next interval.
+fn answer<F>(stream: &mut TcpStream, render: &F) -> std::io::Result<()>
+where
+    F: Fn(MetricsFormat) -> String,
+{
+    stream.set_read_timeout(Some(Duration::from_secs(2)))?;
+    let mut head = Vec::with_capacity(512);
+    let mut buf = [0u8; 512];
+    loop {
+        let k = stream.read(&mut buf)?;
+        if k == 0 {
+            break;
+        }
+        head.extend_from_slice(&buf[..k]);
+        // stop at the end of the header block; cap runaway requests
+        if head.windows(4).any(|w| w == b"\r\n\r\n") || head.len() > 16 * 1024 {
+            break;
+        }
+    }
+    let line = String::from_utf8_lossy(&head);
+    let path = line.split_whitespace().nth(1).unwrap_or("/").to_string();
+    let (status, ctype, body) = match path.as_str() {
+        "/metrics" => (
+            "200 OK",
+            "text/plain; version=0.0.4; charset=utf-8",
+            render(MetricsFormat::Prometheus),
+        ),
+        "/metrics.json" => ("200 OK", "application/json", render(MetricsFormat::Json)),
+        _ => (
+            "404 Not Found",
+            "text/plain; charset=utf-8",
+            "not found: try /metrics or /metrics.json\n".to_string(),
+        ),
+    };
+    write!(
+        stream,
+        "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    )?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn get(addr: SocketAddr, path: &str) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        write!(s, "GET {path} HTTP/1.1\r\nHost: test\r\nConnection: close\r\n\r\n").unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn serves_both_formats_and_404s_elsewhere() {
+        let addr = spawn("127.0.0.1:0", |f| match f {
+            MetricsFormat::Prometheus => "fs_test_series 0\n".to_string(),
+            MetricsFormat::Json => "{\"ok\":true}".to_string(),
+        })
+        .unwrap();
+        let prom = get(addr, "/metrics");
+        assert!(prom.starts_with("HTTP/1.1 200 OK"), "{prom}");
+        assert!(prom.contains("text/plain; version=0.0.4"), "{prom}");
+        assert!(prom.ends_with("fs_test_series 0\n"), "{prom}");
+        let js = get(addr, "/metrics.json");
+        assert!(js.contains("application/json"), "{js}");
+        assert!(js.ends_with("{\"ok\":true}"), "{js}");
+        let miss = get(addr, "/nope");
+        assert!(miss.starts_with("HTTP/1.1 404"), "{miss}");
+    }
+}

@@ -1,0 +1,195 @@
+//! Measured IO / work counters for compute backends.
+//!
+//! [`IoStats`] is the per-call / per-solve value type.  Byte counts are
+//! *memory traffic under the kernels' tiling model* — a y tile is charged
+//! once per row block in `lse_update` (it stays cache-resident across the
+//! block) but once per row in `apply_rows` (which streams columns per
+//! row) — not cache-hit-adjusted hardware counters.  This is the CPU
+//! analogue of the HBM traffic `iomodel::plans::analyze` predicts for a
+//! GPU, and the measured side of `repro profile --measured`.
+//!
+//! Counting is analytic over loop geometry (see
+//! `crate::native::kernels::lse_update_io` and friends), charged at the
+//! call chokepoints in `crate::native::NativeBackend`.  It therefore never
+//! touches the numeric loops (bitwise determinism is unaffected), is itself
+//! deterministic, and is exactly conservative: a fused k-step op charges
+//! exactly k times the stats of a single step (pinned by
+//! `tests/backend_parity.rs`).  The `pool_*_nanos` fields are the one
+//! exception — wall-clock times from the worker pool and the service's
+//! steal path, useful for utilization, never for determinism pins.
+//!
+//! [`AtomicIoStats`] is the interior-mutability accumulator backends thread
+//! through their `&self` call paths.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Measured IO and work counters for one backend call, solve, or actor.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct IoStats {
+    /// Bytes of row-side point coordinates (`x`) read.
+    pub x_bytes: u64,
+    /// Bytes of column-side data read (`y` tiles plus streamed `V`/`U`
+    /// panels).
+    pub y_bytes: u64,
+    /// Bytes of dual-potential / column-bias vectors read.
+    pub dual_bytes: u64,
+    /// Column tiles visited across all row blocks.
+    pub tiles: u64,
+    /// Online-LSE score evaluations (one per `(i, j)` pass).
+    pub lse_evals: u64,
+    /// Estimated floating-point ops (dot multiply-adds plus the LSE /
+    /// accumulator update per score).
+    pub flops: u64,
+    /// Wall nanos the kernel pool spent inside parallel regions.
+    pub pool_busy_nanos: u64,
+    /// Wall nanos elapsed between consecutive parallel regions.
+    pub pool_idle_nanos: u64,
+    /// Wall nanos actors spent executing batches stolen from other actors
+    /// (filled at the service layer, zero for bare backend calls).
+    pub pool_steal_nanos: u64,
+}
+
+impl IoStats {
+    /// Total bytes read (`x + y + dual`) — the measured analogue of the
+    /// analytic model's `hbm_read_bytes`.
+    pub fn read_bytes(&self) -> u64 {
+        self.x_bytes + self.y_bytes + self.dual_bytes
+    }
+
+    /// Counter-wise `self - base` (saturating), turning two cumulative
+    /// snapshots into a per-interval measurement.
+    pub fn delta_since(&self, base: &IoStats) -> IoStats {
+        IoStats {
+            x_bytes: self.x_bytes.saturating_sub(base.x_bytes),
+            y_bytes: self.y_bytes.saturating_sub(base.y_bytes),
+            dual_bytes: self.dual_bytes.saturating_sub(base.dual_bytes),
+            tiles: self.tiles.saturating_sub(base.tiles),
+            lse_evals: self.lse_evals.saturating_sub(base.lse_evals),
+            flops: self.flops.saturating_sub(base.flops),
+            pool_busy_nanos: self.pool_busy_nanos.saturating_sub(base.pool_busy_nanos),
+            pool_idle_nanos: self.pool_idle_nanos.saturating_sub(base.pool_idle_nanos),
+            pool_steal_nanos: self.pool_steal_nanos.saturating_sub(base.pool_steal_nanos),
+        }
+    }
+
+    /// Counter-wise accumulate.
+    pub fn add(&mut self, other: &IoStats) {
+        self.x_bytes += other.x_bytes;
+        self.y_bytes += other.y_bytes;
+        self.dual_bytes += other.dual_bytes;
+        self.tiles += other.tiles;
+        self.lse_evals += other.lse_evals;
+        self.flops += other.flops;
+        self.pool_busy_nanos += other.pool_busy_nanos;
+        self.pool_idle_nanos += other.pool_idle_nanos;
+        self.pool_steal_nanos += other.pool_steal_nanos;
+    }
+
+    /// True when every counter is zero (counters off, or a backend that
+    /// does not measure).
+    pub fn is_zero(&self) -> bool {
+        *self == IoStats::default()
+    }
+}
+
+/// Shared-state accumulator for [`IoStats`]: relaxed atomic adds on the
+/// kernel call path, consistent-enough snapshots for reporting (counters
+/// are monotone; readers tolerate mid-call tearing).
+#[derive(Debug, Default)]
+pub struct AtomicIoStats {
+    x_bytes: AtomicU64,
+    y_bytes: AtomicU64,
+    dual_bytes: AtomicU64,
+    tiles: AtomicU64,
+    lse_evals: AtomicU64,
+    flops: AtomicU64,
+    pool_busy_nanos: AtomicU64,
+    pool_idle_nanos: AtomicU64,
+    pool_steal_nanos: AtomicU64,
+}
+
+impl AtomicIoStats {
+    /// Accumulate one call's worth of counters.
+    pub fn add(&self, s: &IoStats) {
+        // skip the zero adds: most call sites charge only a few fields
+        for (slot, v) in [
+            (&self.x_bytes, s.x_bytes),
+            (&self.y_bytes, s.y_bytes),
+            (&self.dual_bytes, s.dual_bytes),
+            (&self.tiles, s.tiles),
+            (&self.lse_evals, s.lse_evals),
+            (&self.flops, s.flops),
+            (&self.pool_busy_nanos, s.pool_busy_nanos),
+            (&self.pool_idle_nanos, s.pool_idle_nanos),
+            (&self.pool_steal_nanos, s.pool_steal_nanos),
+        ] {
+            if v != 0 {
+                slot.fetch_add(v, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Current cumulative totals.
+    pub fn snapshot(&self) -> IoStats {
+        IoStats {
+            x_bytes: self.x_bytes.load(Ordering::Relaxed),
+            y_bytes: self.y_bytes.load(Ordering::Relaxed),
+            dual_bytes: self.dual_bytes.load(Ordering::Relaxed),
+            tiles: self.tiles.load(Ordering::Relaxed),
+            lse_evals: self.lse_evals.load(Ordering::Relaxed),
+            flops: self.flops.load(Ordering::Relaxed),
+            pool_busy_nanos: self.pool_busy_nanos.load(Ordering::Relaxed),
+            pool_idle_nanos: self.pool_idle_nanos.load(Ordering::Relaxed),
+            pool_steal_nanos: self.pool_steal_nanos.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(k: u64) -> IoStats {
+        IoStats {
+            x_bytes: k,
+            y_bytes: 2 * k,
+            dual_bytes: 3 * k,
+            tiles: 4 * k,
+            lse_evals: 5 * k,
+            flops: 6 * k,
+            pool_busy_nanos: 7 * k,
+            pool_idle_nanos: 8 * k,
+            pool_steal_nanos: 9 * k,
+        }
+    }
+
+    #[test]
+    fn delta_and_add_are_inverse() {
+        let base = sample(10);
+        let mut cur = base;
+        cur.add(&sample(3));
+        assert_eq!(cur.delta_since(&base), sample(3));
+        assert!(sample(0).is_zero());
+        assert!(!sample(1).is_zero());
+    }
+
+    #[test]
+    fn read_bytes_sums_the_three_streams() {
+        assert_eq!(sample(2).read_bytes(), 2 + 4 + 6);
+    }
+
+    #[test]
+    fn delta_saturates_instead_of_wrapping() {
+        // a fresh backend snapshot against a stale larger base must not wrap
+        assert!(sample(1).delta_since(&sample(5)).is_zero());
+    }
+
+    #[test]
+    fn atomic_accumulator_roundtrips() {
+        let acc = AtomicIoStats::default();
+        assert!(acc.snapshot().is_zero());
+        acc.add(&sample(4));
+        acc.add(&sample(1));
+        assert_eq!(acc.snapshot(), sample(5));
+    }
+}

@@ -1,0 +1,152 @@
+//! Deep observability: measured IO accounting, job-lifecycle tracing, and
+//! metrics exposition.
+//!
+//! Three coupled layers, all dependency-free and deterministic where it
+//! matters:
+//!
+//! * **[`iostats`]** — [`IoStats`] counters (x/y/dual bytes read, tiles,
+//!   LSE evaluations, flop estimate, pool busy/idle/steal nanos) charged
+//!   analytically at the native backend's call chokepoints and surfaced
+//!   through `runtime::ComputeBackend::io_stats`, per solve in
+//!   `ot::solver::SolveReport::io`, and per service in
+//!   `coordinator::Metrics`.  The measured counterpart of
+//!   `iomodel::plans::analyze` (`repro profile --measured`).
+//! * **[`trace`]** — a bounded [`TraceRing`] of typed [`TraceEvent`]s
+//!   covering a job's admission → queue → batch → actor → solve-stage →
+//!   completion journey, timestamped only through
+//!   `coordinator::clock::Clock` (deterministic under `VirtualClock`),
+//!   exportable as JSON-lines or chrome-tracing via `repro trace`.
+//! * **[`exporter`]** — a hand-rolled std-only HTTP listener serving
+//!   `Snapshot::render_prometheus()` at `/metrics` and the JSON snapshot
+//!   at `/metrics.json` (`repro serve --metrics-addr`).
+//!
+//! ## The knob
+//!
+//! One spec string, from `service.obs` in the config (which itself
+//! defaults from `FLASH_SINKHORN_OBS`), parsed by [`ObsMode::parse`]:
+//!
+//! | spec | meaning |
+//! |------|---------|
+//! | `"counters"` (default) | IO counters on, tracing off |
+//! | `"off"` | all instrumentation off |
+//! | `"trace"` | counters + lifecycle ring (capacity 4096) |
+//! | `"trace:N"` | counters + lifecycle ring of capacity N |
+//!
+//! Counters never touch the numeric loops (charging is analytic over loop
+//! geometry), so no mode perturbs the bitwise-determinism pins; `"off"`
+//! exists to make the counter overhead itself measurable
+//! (`obs_overhead_pct` in the bench smoke).
+
+pub mod exporter;
+pub mod iostats;
+pub mod trace;
+
+pub use exporter::MetricsFormat;
+pub use iostats::{AtomicIoStats, IoStats};
+pub use trace::{TraceEvent, TraceKind, TraceRing, DEFAULT_TRACE_CAPACITY};
+
+use std::sync::OnceLock;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed observability mode (see the module docs for the spec grammar).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ObsMode {
+    /// All instrumentation off.
+    Off,
+    /// IO/work counters on, lifecycle tracing off (the default).
+    Counters,
+    /// Counters plus a lifecycle trace ring of the given capacity.
+    Trace {
+        /// Ring capacity in events.
+        capacity: usize,
+    },
+}
+
+impl ObsMode {
+    /// Parse an obs spec: `off` | `counters` | `trace` | `trace:N`
+    /// (plus `on`/`1`/`true`/`0`/`false` aliases, and `""` = default).
+    pub fn parse(spec: &str) -> Result<ObsMode> {
+        match spec.trim() {
+            "" | "counters" | "on" | "1" | "true" => Ok(ObsMode::Counters),
+            "off" | "0" | "false" => Ok(ObsMode::Off),
+            "trace" => Ok(ObsMode::Trace { capacity: DEFAULT_TRACE_CAPACITY }),
+            other => match other.strip_prefix("trace:") {
+                Some(num) => {
+                    let capacity = num
+                        .parse::<usize>()
+                        .ok()
+                        .filter(|&c| c > 0)
+                        .ok_or_else(|| {
+                            anyhow!("obs spec '{other}': trace capacity must be a positive integer")
+                        })?;
+                    Ok(ObsMode::Trace { capacity })
+                }
+                None => bail!(
+                    "unknown obs spec '{other}' (expected off | counters | trace[:capacity])"
+                ),
+            },
+        }
+    }
+
+    /// Whether counter instrumentation is on in this mode.
+    pub fn counters(&self) -> bool {
+        !matches!(self, ObsMode::Off)
+    }
+
+    /// Build the trace ring this mode calls for (None = tracing off).
+    pub fn ring(&self) -> Option<TraceRing> {
+        match self {
+            ObsMode::Trace { capacity } => Some(TraceRing::new(*capacity)),
+            _ => None,
+        }
+    }
+}
+
+/// Process-wide default for backend counter instrumentation, read once
+/// from `FLASH_SINKHORN_OBS` (only `off`/`0`/`false` disable; anything
+/// else, including unset, is on).  Backends constructed outside a service
+/// (library users, the CLI solve path) consult this; the bench's overhead
+/// measurement overrides it per backend via
+/// `native::NativeBackend::with_counters`.
+pub fn counters_enabled() -> bool {
+    static ON: OnceLock<bool> = OnceLock::new();
+    *ON.get_or_init(|| {
+        !matches!(
+            std::env::var("FLASH_SINKHORN_OBS").as_deref(),
+            Ok("off") | Ok("0") | Ok("false")
+        )
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn obs_mode_specs_parse() {
+        assert_eq!(ObsMode::parse("").unwrap(), ObsMode::Counters);
+        assert_eq!(ObsMode::parse("counters").unwrap(), ObsMode::Counters);
+        assert_eq!(ObsMode::parse("on").unwrap(), ObsMode::Counters);
+        assert_eq!(ObsMode::parse("off").unwrap(), ObsMode::Off);
+        assert_eq!(ObsMode::parse("0").unwrap(), ObsMode::Off);
+        assert_eq!(
+            ObsMode::parse("trace").unwrap(),
+            ObsMode::Trace { capacity: DEFAULT_TRACE_CAPACITY }
+        );
+        assert_eq!(ObsMode::parse("trace:16").unwrap(), ObsMode::Trace { capacity: 16 });
+        assert!(ObsMode::parse("trace:0").is_err());
+        assert!(ObsMode::parse("trace:-3").is_err());
+        assert!(ObsMode::parse("verbose").is_err());
+    }
+
+    #[test]
+    fn mode_helpers_match_the_spec() {
+        assert!(ObsMode::Counters.counters());
+        assert!(!ObsMode::Off.counters());
+        assert!(ObsMode::Counters.ring().is_none());
+        assert!(ObsMode::Off.ring().is_none());
+        let ring = ObsMode::Trace { capacity: 7 }.ring().unwrap();
+        assert_eq!(ring.capacity(), 7);
+    }
+}

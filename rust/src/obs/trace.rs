@@ -1,0 +1,317 @@
+//! Structured job-lifecycle tracing: a bounded ring of typed events.
+//!
+//! Every event a job emits on its admission → queue → batch → actor →
+//! solve-stage → completion journey is a [`TraceEvent`]: a job correlation
+//! id (`seq`), a timestamp, and a typed [`TraceKind`].  Timestamps come
+//! *only* through `coordinator::clock::Clock`, so a service running on a
+//! `VirtualClock` produces bit-for-bit reproducible traces (pinned by
+//! `tests/serving_stress.rs`).
+//!
+//! The [`TraceRing`] is a fixed-capacity deque behind a mutex: pushes are
+//! O(1), the oldest events are dropped (and counted) under overflow, and
+//! the ring is only ever allocated when tracing is enabled
+//! (`service.obs = "trace[:capacity]"`), so the default serving path pays
+//! nothing.
+//!
+//! Two export formats, both hand-rolled over [`crate::util::json`]:
+//! JSON-lines ([`render_jsonl`], one event object per line, grep-friendly)
+//! and the chrome-tracing / Perfetto `traceEvents` envelope
+//! ([`render_chrome`], instant events keyed by job `seq` as the track id).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::json::{self, Json};
+
+/// Ring capacity used by the bare `"trace"` spec (no `:capacity` suffix).
+pub const DEFAULT_TRACE_CAPACITY: usize = 4096;
+
+/// One job-lifecycle event: which job (`seq`), when (`ts`, from the
+/// service clock), and what happened (`kind`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    /// Job correlation id, assigned at submission.
+    pub seq: u64,
+    /// Service-clock timestamp (deterministic under `VirtualClock`).
+    pub ts: Duration,
+    /// What happened.
+    pub kind: TraceKind,
+}
+
+/// The typed lifecycle stages a job can report.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceKind {
+    /// Passed admission control and entered the service.
+    Admitted {
+        /// Tenant label (`"-"` for anonymous jobs).
+        tenant: String,
+        /// Shape-class key the job batches under.
+        class: String,
+    },
+    /// Turned away at admission (backpressure / rate limit / inflight cap).
+    Rejected {
+        /// Tenant label (`"-"` for anonymous jobs).
+        tenant: String,
+        /// Human-readable rejection reason (the `Rejection` display text).
+        reason: String,
+    },
+    /// Entered its class queue.
+    Enqueued {
+        /// Shape-class key.
+        class: String,
+        /// Queue depth for that class after the push.
+        depth: usize,
+    },
+    /// Popped as part of a same-class batch.
+    Batched {
+        /// Shape-class key.
+        class: String,
+        /// Number of jobs coalesced into the batch.
+        size: usize,
+    },
+    /// Handed to a backend actor for execution.
+    Dispatched {
+        /// Actor slot index executing the batch.
+        actor: usize,
+    },
+    /// Warm-start dual cache produced usable duals.
+    WarmHit {
+        /// Iterations saved vs the cached entry's cold solve.
+        saved_iters: usize,
+    },
+    /// Warm-start dual cache was consulted and missed.
+    WarmMiss,
+    /// A solver stage began (reconstructed from `SolveReport::stages`;
+    /// stage timestamps bracket the whole solve).
+    StageStarted {
+        /// Stage kind (`"anneal"`, `"final"`, ...).
+        stage: &'static str,
+        /// Regularization eps the stage ran at.
+        eps: f32,
+    },
+    /// A solver stage finished.
+    StageFinished {
+        /// Stage kind (`"anneal"`, `"final"`, ...).
+        stage: &'static str,
+        /// Regularization eps the stage ran at.
+        eps: f32,
+        /// Sinkhorn iterations the stage used.
+        iters: usize,
+        /// Sup-norm potential change when the stage stopped.
+        final_delta: f32,
+    },
+    /// The job finished and its response was sent.
+    Completed {
+        /// Total Sinkhorn iterations across stages.
+        iters: usize,
+        /// Entropic OT cost of the solution.
+        cost: f64,
+    },
+}
+
+impl TraceKind {
+    /// Stable event name shared by both export formats.
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceKind::Admitted { .. } => "admitted",
+            TraceKind::Rejected { .. } => "rejected",
+            TraceKind::Enqueued { .. } => "enqueued",
+            TraceKind::Batched { .. } => "batched",
+            TraceKind::Dispatched { .. } => "dispatched",
+            TraceKind::WarmHit { .. } => "warm_hit",
+            TraceKind::WarmMiss => "warm_miss",
+            TraceKind::StageStarted { .. } => "stage_started",
+            TraceKind::StageFinished { .. } => "stage_finished",
+            TraceKind::Completed { .. } => "completed",
+        }
+    }
+
+    /// Per-variant payload fields (the `args` of both export formats).
+    fn args(&self) -> Vec<(&'static str, Json)> {
+        match self {
+            TraceKind::Admitted { tenant, class } => {
+                vec![("tenant", json::s(tenant)), ("class", json::s(class))]
+            }
+            TraceKind::Rejected { tenant, reason } => {
+                vec![("tenant", json::s(tenant)), ("reason", json::s(reason))]
+            }
+            TraceKind::Enqueued { class, depth } => {
+                vec![("class", json::s(class)), ("depth", json::num(*depth as f64))]
+            }
+            TraceKind::Batched { class, size } => {
+                vec![("class", json::s(class)), ("size", json::num(*size as f64))]
+            }
+            TraceKind::Dispatched { actor } => vec![("actor", json::num(*actor as f64))],
+            TraceKind::WarmHit { saved_iters } => {
+                vec![("saved_iters", json::num(*saved_iters as f64))]
+            }
+            TraceKind::WarmMiss => vec![],
+            TraceKind::StageStarted { stage, eps } => {
+                vec![("stage", json::s(stage)), ("eps", json::num(f64::from(*eps)))]
+            }
+            TraceKind::StageFinished { stage, eps, iters, final_delta } => vec![
+                ("stage", json::s(stage)),
+                ("eps", json::num(f64::from(*eps))),
+                ("iters", json::num(*iters as f64)),
+                ("final_delta", json::num(f64::from(*final_delta))),
+            ],
+            TraceKind::Completed { iters, cost } => {
+                vec![("iters", json::num(*iters as f64)), ("cost", json::num(*cost))]
+            }
+        }
+    }
+}
+
+/// Bounded multi-producer event ring: pushes drop the oldest event once
+/// `capacity` is reached (overflow is counted, never blocking).
+#[derive(Debug)]
+pub struct TraceRing {
+    buf: Mutex<VecDeque<TraceEvent>>,
+    capacity: usize,
+    dropped: AtomicU64,
+}
+
+impl TraceRing {
+    /// A ring holding at most `capacity` events (minimum 1).
+    pub fn new(capacity: usize) -> Self {
+        let capacity = capacity.max(1);
+        Self {
+            buf: Mutex::new(VecDeque::with_capacity(capacity)),
+            capacity,
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Append an event, evicting the oldest when full.
+    pub fn push(&self, ev: TraceEvent) {
+        let mut buf = self.buf.lock().unwrap_or_else(|e| e.into_inner());
+        if buf.len() == self.capacity {
+            buf.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        buf.push_back(ev);
+    }
+
+    /// Take every buffered event (oldest first), leaving the ring empty.
+    pub fn drain(&self) -> Vec<TraceEvent> {
+        let mut buf = self.buf.lock().unwrap_or_else(|e| e.into_inner());
+        buf.drain(..).collect()
+    }
+
+    /// Events currently buffered.
+    pub fn len(&self) -> usize {
+        self.buf.lock().unwrap_or_else(|e| e.into_inner()).len()
+    }
+
+    /// True when no events are buffered.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Configured capacity.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Events evicted under overflow since construction.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+}
+
+fn event_json(e: &TraceEvent) -> Json {
+    let mut pairs = vec![
+        ("event", json::s(e.kind.name())),
+        ("seq", json::num(e.seq as f64)),
+        ("ts_us", json::num(e.ts.as_micros() as f64)),
+    ];
+    pairs.extend(e.kind.args());
+    json::obj(pairs)
+}
+
+/// JSON-lines export: one compact event object per line, in ring order.
+pub fn render_jsonl(events: &[TraceEvent]) -> String {
+    let mut out = String::new();
+    for e in events {
+        out.push_str(&event_json(e).to_string_compact());
+        out.push('\n');
+    }
+    out
+}
+
+/// Chrome-tracing (`chrome://tracing` / Perfetto) export: instant events
+/// in a `traceEvents` envelope, one track (`tid`) per job `seq`.
+pub fn render_chrome(events: &[TraceEvent]) -> String {
+    let evs: Vec<Json> = events
+        .iter()
+        .map(|e| {
+            json::obj(vec![
+                ("name", json::s(e.kind.name())),
+                ("ph", json::s("i")),
+                ("ts", json::num(e.ts.as_micros() as f64)),
+                ("pid", json::num(1.0)),
+                ("tid", json::num(e.seq as f64)),
+                ("s", json::s("t")),
+                ("args", json::obj(e.kind.args())),
+            ])
+        })
+        .collect();
+    json::obj(vec![("displayTimeUnit", json::s("ms")), ("traceEvents", Json::Arr(evs))])
+        .to_string_compact()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(seq: u64, us: u64, kind: TraceKind) -> TraceEvent {
+        TraceEvent { seq, ts: Duration::from_micros(us), kind }
+    }
+
+    #[test]
+    fn ring_is_bounded_and_counts_drops() {
+        let ring = TraceRing::new(2);
+        assert!(ring.is_empty());
+        for i in 0..5 {
+            ring.push(ev(i, i * 10, TraceKind::WarmMiss));
+        }
+        assert_eq!((ring.len(), ring.capacity(), ring.dropped()), (2, 2, 3));
+        let drained = ring.drain();
+        assert_eq!(drained.iter().map(|e| e.seq).collect::<Vec<_>>(), vec![3, 4]);
+        assert!(ring.is_empty());
+    }
+
+    #[test]
+    fn jsonl_lines_parse_and_carry_payload() {
+        let events = [
+            ev(1, 5, TraceKind::Admitted { tenant: "t0".into(), class: "n24".into() }),
+            ev(1, 7, TraceKind::Completed { iters: 12, cost: 0.5 }),
+        ];
+        let text = render_jsonl(&events);
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let first = Json::parse(lines[0]).unwrap();
+        assert_eq!(first.req("event").unwrap().as_str().unwrap(), "admitted");
+        assert_eq!(first.req("tenant").unwrap().as_str().unwrap(), "t0");
+        assert_eq!(first.req("ts_us").unwrap().as_usize().unwrap(), 5);
+        let second = Json::parse(lines[1]).unwrap();
+        assert_eq!(second.req("iters").unwrap().as_usize().unwrap(), 12);
+    }
+
+    #[test]
+    fn chrome_envelope_parses_with_one_entry_per_event() {
+        let events = [
+            ev(3, 1, TraceKind::Dispatched { actor: 2 }),
+            ev(3, 2, TraceKind::WarmHit { saved_iters: 8 }),
+        ];
+        let v = Json::parse(&render_chrome(&events)).unwrap();
+        let evs = v.req("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].req("ph").unwrap().as_str().unwrap(), "i");
+        assert_eq!(evs[0].req("tid").unwrap().as_usize().unwrap(), 3);
+        let args = evs[1].req("args").unwrap();
+        assert_eq!(args.req("saved_iters").unwrap().as_usize().unwrap(), 8);
+    }
+}

@@ -199,6 +199,12 @@ pub struct SolveReport {
     /// Newton polish and any post-fallback Sinkhorn resume.  Plain solves
     /// have exactly one entry.
     pub stages: Vec<StageTrace>,
+    /// Measured IO/work counters for this solve (the delta of the
+    /// backend's cumulative [`ComputeBackend::io_stats`] across the
+    /// solve).  All-zeros when the backend does not measure or counters
+    /// are gated off; note the `pool_*` nanos are pool-wide wall time, so
+    /// concurrent solves on a shared pool each see the union interval.
+    pub io: crate::obs::IoStats,
 }
 
 /// The L3 iteration-loop driver: schedules backend step ops, controls
@@ -259,6 +265,7 @@ impl<'e> SinkhornSolver<'e> {
         ctx: &BucketCtx,
     ) -> Result<(Potentials, SolveReport)> {
         let t0 = Instant::now();
+        let io0 = self.backend.io_stats();
         let schedule = self.cfg.schedule.resolve(prob.n, prob.m, prob.d);
         let k_fused = self.backend.k_fused();
         let strategy = &self.cfg.strategy;
@@ -431,6 +438,7 @@ impl<'e> SinkhornSolver<'e> {
             schedule,
             bucket: (ctx.bucket.n, ctx.bucket.m, ctx.bucket.d),
             stages,
+            io: self.backend.io_stats().delta_since(&io0),
         };
         Ok((pot, report))
     }

@@ -54,6 +54,16 @@ pub trait ComputeBackend {
     /// manifest contract (see `python/compile/aot.py` and the op table in
     /// `crate::native`).
     fn call(&self, key: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>>;
+
+    /// Cumulative measured IO/work counters for this backend instance
+    /// (monotone; callers difference two snapshots with
+    /// [`crate::obs::IoStats::delta_since`] to attribute an interval).
+    /// Backends that do not measure — the PJRT engine, stubs — inherit
+    /// this default and report all-zeros, which downstream consumers
+    /// render as explicit zeros rather than absent series.
+    fn io_stats(&self) -> crate::obs::IoStats {
+        crate::obs::IoStats::default()
+    }
 }
 
 /// Strip the `__n{n}_m{m}_d{d}` bucket suffix from an artifact key,

@@ -121,6 +121,43 @@ fn fused_and_single_step_plans_induce_identical_marginals() {
     assert_eq!(err(&rf, &cf), err(&rs, &cs));
 }
 
+/// IO-accounting conservation, the counting mirror of the bitwise parity
+/// above: one fused `k{k}` call must charge exactly the sum of `k` single
+/// steps' counters — the fused plan saves dispatches and HBM round-trips
+/// in the *model*, but the measured per-call accounting is charged per
+/// inner iteration from the same tiling geometry, so nothing may be lost
+/// or double-counted when the solver swaps plans mid-solve.  Pool nanos
+/// are wall-clock and pool-wide, so they are zeroed before comparing.
+#[test]
+fn fused_k_step_io_accounting_equals_sum_of_k_single_steps() {
+    let zero_pool = |mut s: flash_sinkhorn::obs::IoStats| {
+        s.pool_busy_nanos = 0;
+        s.pool_idle_nanos = 0;
+        s.pool_steal_nanos = 0;
+        s
+    };
+    for (k, schedule) in [(3usize, "alternating"), (5, "symmetric")] {
+        let (n, m, d) = (21, 17, 5);
+        let inputs = core_inputs(n, m, d, 500 + k as u64, 0.2);
+
+        let fused_b = NativeBackend::default().with_counters(true);
+        let base = fused_b.io_stats();
+        fused_b.call(&format!("k{k}_{schedule}__n{n}_m{m}_d{d}"), &inputs).unwrap();
+        let fused_io = zero_pool(fused_b.io_stats().delta_since(&base));
+
+        let single_b = NativeBackend::default().with_counters(true);
+        let base = single_b.io_stats();
+        k_single_steps(&single_b, &format!("{schedule}_step"), k, inputs);
+        let single_io = zero_pool(single_b.io_stats().delta_since(&base));
+
+        assert!(!fused_io.is_zero(), "k={k} {schedule}: counters must move");
+        assert_eq!(
+            fused_io, single_io,
+            "k={k} {schedule}: fused accounting diverged from {k} single steps"
+        );
+    }
+}
+
 #[test]
 fn parse_fused_routing_accepts_and_rejects_the_right_keys() {
     let b = NativeBackend::default();

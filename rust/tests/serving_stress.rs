@@ -28,6 +28,7 @@ use flash_sinkhorn::coordinator::job::{JobKind, JobRequest};
 use flash_sinkhorn::coordinator::service::{self, ServiceHandle, SubmitError};
 use flash_sinkhorn::data::clouds::uniform_cloud;
 use flash_sinkhorn::data::rng::Rng;
+use flash_sinkhorn::obs::TraceKind;
 use flash_sinkhorn::ot::problem::OtProblem;
 use flash_sinkhorn::ot::solver::{SinkhornSolver, SolverConfig};
 
@@ -561,6 +562,70 @@ fn warm_cache_off_stays_bitwise_identical_to_the_direct_solver() {
     let m = handle.metrics();
     assert_eq!((m.warm_hits, m.warm_misses, m.warm_evictions), (0, 0, 0));
     assert_eq!(m.warm_saved_iters_mean, 0.0);
+}
+
+/// The job-lifecycle trace ring under the virtual clock: sequential
+/// submissions produce the exact per-job event sequence, every event
+/// stamped with the virtual submission time and correlated by the
+/// admission seq — and the default (counters-only) mode allocates no ring
+/// and records nothing.
+#[test]
+fn trace_ring_is_deterministic_under_the_virtual_clock() {
+    let clock = Arc::new(VirtualClock::new());
+    let mut cfg = config(1, 1);
+    cfg.service.obs = "trace:64".into();
+    let handle = service::spawn_with_clock(cfg, Arc::clone(&clock) as Arc<dyn Clock>).unwrap();
+    clock.advance(Duration::from_millis(10));
+    handle.try_submit(request((24, 24), 1, 2, "acme")).unwrap().recv().unwrap();
+    clock.advance(Duration::from_millis(15));
+    handle.try_submit(request((48, 40), 2, 3, "zeta")).unwrap().recv().unwrap();
+    assert_eq!(handle.trace_dropped(), 0);
+    let events = handle.drain_trace();
+
+    // one actor, sequential submit-then-receive: a strict global order
+    // (Completed is pushed before the response is delivered)
+    const LIFECYCLE: [&str; 7] = [
+        "admitted",
+        "enqueued",
+        "batched",
+        "dispatched",
+        "stage_started",
+        "stage_finished",
+        "completed",
+    ];
+    assert_eq!(events.len(), 2 * LIFECYCLE.len(), "{events:?}");
+    for (job, chunk) in events.chunks(LIFECYCLE.len()).enumerate() {
+        let names: Vec<&str> = chunk.iter().map(|e| e.kind.name()).collect();
+        assert_eq!(names, LIFECYCLE, "job {job} lifecycle");
+        // the clock only moves at quiescent points, so every event of a
+        // job carries its (virtual) submission time — exactly
+        let ts = Duration::from_millis([10, 25][job]);
+        for e in chunk {
+            assert_eq!(e.seq, job as u64, "correlation id: {e:?}");
+            assert_eq!(e.ts, ts, "virtual timestamp: {e:?}");
+        }
+    }
+    match &events[0].kind {
+        TraceKind::Admitted { tenant, class } => {
+            assert_eq!((tenant.as_str(), class.as_str()), ("acme", "n24_m24_d16"));
+        }
+        other => panic!("expected Admitted first, got {other:?}"),
+    }
+    match &events[13].kind {
+        TraceKind::Completed { iters, cost } => {
+            assert_eq!(*iters, 3, "job 1 ran its fixed budget");
+            assert!(cost.is_finite());
+        }
+        other => panic!("expected Completed last, got {other:?}"),
+    }
+    // drain leaves the ring empty until new traffic arrives
+    assert!(handle.drain_trace().is_empty());
+
+    // the default mode records nothing (tracing is strictly opt-in)
+    let plain = service::spawn_with_clock(config(1, 1), Arc::new(VirtualClock::new())).unwrap();
+    plain.try_submit(request((24, 24), 9, 2, "acme")).unwrap().recv().unwrap();
+    assert!(plain.drain_trace().is_empty(), "tracing must default off");
+    assert_eq!(plain.trace_dropped(), 0);
 }
 
 /// LRU under a byte budget, end to end through the service: a 1 MiB cache
