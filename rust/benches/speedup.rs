@@ -23,7 +23,7 @@ use flash_sinkhorn::native::pool::WorkerPool;
 use flash_sinkhorn::native::NativeBackend;
 use flash_sinkhorn::obs::IoStats;
 use flash_sinkhorn::ot::problem::OtProblem;
-use flash_sinkhorn::ot::solver::{Schedule, SinkhornSolver, SolverConfig};
+use flash_sinkhorn::ot::solver::{Potentials, Schedule, SinkhornSolver, SolverConfig};
 use flash_sinkhorn::runtime::ComputeBackend;
 use flash_sinkhorn::util::json::{num, obj, s};
 
@@ -199,6 +199,55 @@ fn obs_microbench() -> (f64, f64) {
     ((on_s - off_s) / off_s * 100.0, io_model_error(&wl, &A100, &io))
 }
 
+/// Batched small-OT smoke: `BATCH_B` tiny same-class problems solved
+/// one-by-one vs one packed [`SinkhornSolver::solve_batch`] dispatch
+/// (identical fixed work on both sides: `tol = 0` runs the full budget,
+/// so the timed difference is pure dispatch/fan-out overhead, not
+/// convergence luck).  Both paths run in the same process on the same
+/// data, so the derived `batched_vs_sequential_speedup` is
+/// machine-relative and CI-gateable like `lse_simd_speedup`.  Returns
+/// (fused jobs/s, sequential_s / fused_s).
+const BATCH_B: usize = 32;
+
+fn batched_microbench(backend: &dyn ComputeBackend) -> (f64, f64) {
+    let (n, m, d, eps) = (24usize, 20usize, 5usize, 0.15f32);
+    let probs: Vec<OtProblem> = (0..BATCH_B)
+        .map(|i| {
+            OtProblem::uniform(
+                uniform_cloud(n, d, 31 + i as u64),
+                uniform_cloud(m, d, 8_100 + i as u64),
+                n,
+                m,
+                d,
+                eps,
+            )
+            .unwrap()
+        })
+        .collect();
+    let refs: Vec<&OtProblem> = probs.iter().collect();
+    let cfg = SolverConfig { max_iters: 50, tol: 0.0, ..SolverConfig::default() };
+    let solver = SinkhornSolver::new(backend, cfg);
+    let warm: Vec<Option<Potentials>> = vec![None; BATCH_B];
+    // warm both paths
+    solver.solve_batch(&refs, &warm).expect("batched bench solve");
+    for p in &probs {
+        solver.solve(p).expect("sequential bench solve");
+    }
+    let (mut seq_s, mut fused_s) = (f64::INFINITY, f64::INFINITY);
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        for p in &probs {
+            solver.solve(p).expect("sequential bench solve");
+        }
+        seq_s = seq_s.min(t0.elapsed().as_secs_f64());
+        let t0 = Instant::now();
+        let results = solver.solve_batch(&refs, &warm).expect("batched bench solve");
+        fused_s = fused_s.min(t0.elapsed().as_secs_f64());
+        assert_eq!(results.len(), BATCH_B);
+    }
+    (BATCH_B as f64 / fused_s, seq_s / fused_s)
+}
+
 /// `BENCH_*.json` key for a strategy's iteration count.  Static strings
 /// because [`obj`] borrows its keys.
 fn iters_key(stem: &str) -> &'static str {
@@ -250,6 +299,7 @@ fn smoke(backend: &dyn ComputeBackend) {
     let serve_jobs_per_s = serve_microbench();
     let (warm_cold_iters, warm_hit_iters) = warm_cache_microbench();
     let (obs_overhead_pct, io_model_err) = obs_microbench();
+    let (batched_jobs_per_s, batched_speedup) = batched_microbench(backend);
 
     // solve-strategy race: iterations-to-tolerance per strategy on the
     // fixed anisotropic problem (machine-independent; gated in CI)
@@ -311,6 +361,12 @@ fn smoke(backend: &dyn ComputeBackend) {
     // emitted for trend-watching)
     out_fields.push(("obs_overhead_pct", num(obs_overhead_pct)));
     out_fields.push(("io_model_error", num(io_model_err)));
+    // batched small-OT path: fused packed dispatch vs one-by-one solves on
+    // the same B tiny problems — throughput for trend-watching, the ratio
+    // gated like the other same-process speedups
+    out_fields.push(("batched_b", num(BATCH_B as f64)));
+    out_fields.push(("batched_small_jobs_per_s", num(batched_jobs_per_s)));
+    out_fields.push(("batched_vs_sequential_speedup", num(batched_speedup)));
     let out = obj(out_fields);
     let path = workspace_path(&format!("BENCH_{}.json", backend.name()));
     let text = out.to_string_compact();

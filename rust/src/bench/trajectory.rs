@@ -50,6 +50,7 @@ pub const CONV_GATED_KEYS: &[&str] = &[
     "conv_1d_speedup",
     "conv_anneal_speedup",
     "warm_hit_iter_savings",
+    "batched_vs_sequential_speedup",
 ];
 
 /// Overhead keys the gate bounds with an *absolute ceiling* (in percent)
@@ -275,6 +276,28 @@ mod tests {
         assert!(compare(&base, &record(2.0, 100.0), 0.15).unwrap().regressed);
         // ...but a pre-warm-cache baseline skips it (forward compat)
         assert!(!compare(&record(2.0, 100.0), &with_warm(32.0), 0.15).unwrap().regressed);
+    }
+
+    #[test]
+    fn batched_speedup_key_gates_like_the_conv_ratios() {
+        let with_batched = |v: f64| {
+            obj(vec![
+                ("lse_simd_speedup", num(2.0)),
+                ("lse_simd_ms", num(100.0)),
+                ("batched_vs_sequential_speedup", num(v)),
+            ])
+        };
+        let base = with_batched(1.25);
+        // inside the 15% band
+        assert!(!compare(&base, &with_batched(1.1), 0.15).unwrap().regressed);
+        // the fused path losing its edge entirely: regressed
+        let c = compare(&base, &with_batched(0.9), 0.15).unwrap();
+        assert!(c.regressed);
+        assert!(c.summary.contains("batched_vs_sequential_speedup"), "{}", c.summary);
+        // baselined key vanished from current: regressed...
+        assert!(compare(&base, &record(2.0, 100.0), 0.15).unwrap().regressed);
+        // ...but a pre-batching baseline skips it (forward compat)
+        assert!(!compare(&record(2.0, 100.0), &with_batched(1.25), 0.15).unwrap().regressed);
     }
 
     #[test]

@@ -87,6 +87,15 @@ pub struct ServiceSection {
     /// `FLASH_SINKHORN_WARM_CACHE_MB`; the config key and the
     /// `repro serve --warm-cache-mb` flag override it, in that order.
     pub warm_cache_mb: usize,
+    /// Shape-class ceiling for the fused many-small-OT path: classes
+    /// whose row envelopes satisfy `max(class_n, class_m) <=
+    /// batch_threshold` have their coalesced jobs solved in **one**
+    /// packed backend dispatch instead of one per job.  0 (the default)
+    /// disables batching, keeping serving bitwise identical to the
+    /// per-job dispatch path.  Defaults from
+    /// `FLASH_SINKHORN_BATCH_THRESHOLD`; the config key and the
+    /// `repro serve --batch-threshold` flag override it, in that order.
+    pub batch_threshold: usize,
     /// Supervisor cadence (ms) for the adaptive actor pool.  Defaults
     /// from `FLASH_SINKHORN_TICK_MS` (unset or 0 = 25).
     pub tick_ms: u64,
@@ -157,6 +166,10 @@ impl Default for Config {
                     .and_then(|v| v.parse::<usize>().ok())
                     .unwrap_or(0),
                 warm_cache_mb: std::env::var("FLASH_SINKHORN_WARM_CACHE_MB")
+                    .ok()
+                    .and_then(|v| v.parse::<usize>().ok())
+                    .unwrap_or(0),
+                batch_threshold: std::env::var("FLASH_SINKHORN_BATCH_THRESHOLD")
                     .ok()
                     .and_then(|v| v.parse::<usize>().ok())
                     .unwrap_or(0),
@@ -265,6 +278,7 @@ impl Config {
             }
             upd_usize(s, "tenant_inflight", &mut cfg.service.tenant_inflight)?;
             upd_usize(s, "warm_cache_mb", &mut cfg.service.warm_cache_mb)?;
+            upd_usize(s, "batch_threshold", &mut cfg.service.batch_threshold)?;
             if let Some(v) = s.get("tick_ms") {
                 cfg.service.tick_ms = v.as_usize()? as u64;
             }
@@ -390,6 +404,20 @@ mod tests {
         assert_eq!(cfg.service.park_after_ticks, 7);
         assert!(Config::from_json(r#"{"service": {"warm_cache_mb": -1}}"#).is_err());
         assert!(Config::from_json(r#"{"service": {"tick_ms": "fast"}}"#).is_err());
+    }
+
+    #[test]
+    fn batch_threshold_parses_and_defaults_off() {
+        // (FLASH_SINKHORN_BATCH_THRESHOLD is not set in the test environment)
+        assert_eq!(
+            Config::from_json("{}").unwrap().service.batch_threshold,
+            0,
+            "batching must default off (bitwise-identical serving)"
+        );
+        let cfg =
+            Config::from_json(r#"{"service": {"batch_threshold": 256}}"#).unwrap();
+        assert_eq!(cfg.service.batch_threshold, 256);
+        assert!(Config::from_json(r#"{"service": {"batch_threshold": -1}}"#).is_err());
     }
 
     #[test]

@@ -116,6 +116,13 @@ pub struct Metrics {
     pub batches: AtomicU64,
     /// Jobs dispatched inside those batches.
     pub batched_jobs: AtomicU64,
+    /// Packed multi-problem backend dispatches (the batched small-OT
+    /// path: one `lse_step_batch`-driven solve covering several jobs).
+    /// Distinct from `batches`, which counts every class dispatch
+    /// whether it ran fused or job-by-job.
+    pub fused_batches: AtomicU64,
+    /// Jobs solved inside those fused dispatches.
+    pub fused_jobs: AtomicU64,
     /// Jobs queued awaiting dispatch (excludes the batch an actor is
     /// currently executing — in-flight work shows up in neither
     /// `queue_depth` nor `jobs_ok` until it completes).
@@ -237,6 +244,8 @@ impl Metrics {
             jobs_failed: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             batched_jobs: AtomicU64::new(0),
+            fused_batches: AtomicU64::new(0),
+            fused_jobs: AtomicU64::new(0),
             queue_depth: AtomicU64::new(0),
             sinkhorn_iters: AtomicU64::new(0),
             steals: AtomicU64::new(0),
@@ -501,11 +510,20 @@ impl Metrics {
                 }
             })
             .collect();
+        let fused_batches = self.fused_batches.load(Ordering::Relaxed);
+        let fused_jobs = self.fused_jobs.load(Ordering::Relaxed);
         Snapshot {
             jobs_ok: self.jobs_ok.load(Ordering::Relaxed),
             jobs_failed: self.jobs_failed.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
             batched_jobs: self.batched_jobs.load(Ordering::Relaxed),
+            fused_batches,
+            fused_jobs,
+            fused_occupancy: if fused_batches > 0 {
+                fused_jobs as f64 / fused_batches as f64
+            } else {
+                0.0
+            },
             queue_depth: self.queue_depth.load(Ordering::Relaxed),
             sinkhorn_iters: self.sinkhorn_iters.load(Ordering::Relaxed),
             steals: self.steals.load(Ordering::Relaxed),
@@ -607,6 +625,14 @@ pub struct Snapshot {
     pub batches: u64,
     /// Jobs dispatched inside those batches.
     pub batched_jobs: u64,
+    /// Packed multi-problem backend dispatches (the batched small-OT
+    /// path); 0 while `service.batch_threshold` is 0.
+    pub fused_batches: u64,
+    /// Jobs solved inside those fused dispatches.
+    pub fused_jobs: u64,
+    /// Mean jobs per fused dispatch (`fused_jobs / fused_batches`; 0.0
+    /// before the first fused dispatch) — the batched-path occupancy.
+    pub fused_occupancy: f64,
     /// Jobs queued awaiting dispatch (global gauge; always present).
     /// Excludes batches currently executing on an actor.
     pub queue_depth: u64,
@@ -692,6 +718,9 @@ pub const DOCUMENTED_SERIES: &[&str] = &[
     "flashsinkhorn_jobs_failed",
     "flashsinkhorn_batches",
     "flashsinkhorn_batched_jobs",
+    "flashsinkhorn_fused_batches",
+    "flashsinkhorn_fused_jobs",
+    "flashsinkhorn_fused_occupancy",
     "flashsinkhorn_queue_depth",
     "flashsinkhorn_sinkhorn_iters",
     "flashsinkhorn_steals",
@@ -754,11 +783,21 @@ impl Snapshot {
     pub fn render_prometheus(&self) -> String {
         use std::fmt::Write as _;
         let mut o = String::with_capacity(8 << 10);
-        let counters: [(&str, &str, u64); 11] = [
+        let counters: [(&str, &str, u64); 13] = [
             ("flashsinkhorn_jobs_ok", "Jobs completed successfully.", self.jobs_ok),
             ("flashsinkhorn_jobs_failed", "Jobs that returned an error.", self.jobs_failed),
             ("flashsinkhorn_batches", "Class batches dispatched.", self.batches),
             ("flashsinkhorn_batched_jobs", "Jobs dispatched inside batches.", self.batched_jobs),
+            (
+                "flashsinkhorn_fused_batches",
+                "Packed multi-problem backend dispatches (batched small-OT path).",
+                self.fused_batches,
+            ),
+            (
+                "flashsinkhorn_fused_jobs",
+                "Jobs solved inside fused dispatches.",
+                self.fused_jobs,
+            ),
             ("flashsinkhorn_sinkhorn_iters", "Total Sinkhorn iterations run.", self.sinkhorn_iters),
             ("flashsinkhorn_steals", "Jobs run by a non-home actor.", self.steals),
             ("flashsinkhorn_admitted", "Jobs accepted past admission control.", self.admitted),
@@ -803,6 +842,11 @@ impl Snapshot {
         ] {
             let _ = writeln!(o, "# HELP {name} {help}\n# TYPE {name} gauge\n{name} {v}");
         }
+        let _ = writeln!(
+            o,
+            "# HELP flashsinkhorn_fused_occupancy Mean jobs per fused dispatch.\n# TYPE flashsinkhorn_fused_occupancy gauge\nflashsinkhorn_fused_occupancy {}",
+            self.fused_occupancy
+        );
         // histogram summaries: stat-labelled gauges
         let _ = writeln!(
             o,
@@ -1050,6 +1094,9 @@ impl Snapshot {
             ("jobs_failed", json::num(self.jobs_failed as f64)),
             ("batches", json::num(self.batches as f64)),
             ("batched_jobs", json::num(self.batched_jobs as f64)),
+            ("fused_batches", json::num(self.fused_batches as f64)),
+            ("fused_jobs", json::num(self.fused_jobs as f64)),
+            ("fused_occupancy", json::num(self.fused_occupancy)),
             ("queue_depth", json::num(self.queue_depth as f64)),
             ("sinkhorn_iters", json::num(self.sinkhorn_iters as f64)),
             ("steals", json::num(self.steals as f64)),
@@ -1139,6 +1186,11 @@ impl std::fmt::Display for Snapshot {
         )?;
         write!(
             f,
+            "\n  batched path: fused_batches={} fused_jobs={} occupancy={:.2}",
+            self.fused_batches, self.fused_jobs, self.fused_occupancy
+        )?;
+        write!(
+            f,
             "\n  warm cache: hits={} misses={} evictions={} saved iters mean={:.1} p50<={:.0} max={:.0}",
             self.warm_hits,
             self.warm_misses,
@@ -1212,6 +1264,24 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.jobs_ok, 3);
         assert_eq!(s.batches, 2);
+    }
+
+    #[test]
+    fn fused_path_series_register_zeros_and_accumulate() {
+        let m = Metrics::default();
+        // absent-vs-zero: the fused-path series exist before any dispatch
+        let s = m.snapshot();
+        assert_eq!((s.fused_batches, s.fused_jobs), (0, 0));
+        assert_eq!(s.fused_occupancy, 0.0, "no-dispatch occupancy must be 0, not NaN");
+        m.fused_batches.fetch_add(2, Ordering::Relaxed);
+        m.fused_jobs.fetch_add(9, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!((s.fused_batches, s.fused_jobs), (2, 9));
+        assert!((s.fused_occupancy - 4.5).abs() < 1e-12);
+        let text = s.to_string();
+        assert!(text.contains("fused_batches=2"), "batched-path line missing: {text}");
+        let prom = s.render_prometheus();
+        assert!(prom.contains("flashsinkhorn_fused_occupancy 4.5"), "{prom}");
     }
 
     #[test]

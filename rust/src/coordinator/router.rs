@@ -34,6 +34,18 @@ pub fn class_of(n: usize, m: usize, d: usize) -> ClassKey {
     (n.next_power_of_two(), m.next_power_of_two(), d.next_power_of_two())
 }
 
+/// The batched small-OT routing predicate: true when a class is small
+/// enough that its coalesced jobs should be solved in one packed backend
+/// dispatch (`ComputeBackend::lse_step_batch`) instead of one per job.
+/// `threshold` bounds the class's **row envelopes** — both the source and
+/// target power-of-two extents must fit; the feature dimension is
+/// unconstrained (packing cost scales with rows, not d).  `threshold = 0`
+/// means the batched path is off, so the predicate is false for every
+/// class and serving stays bitwise identical to per-job dispatch.
+pub fn batches_below(class: &ClassKey, threshold: usize) -> bool {
+    threshold > 0 && class.0.max(class.1) <= threshold
+}
+
 /// Deterministic home shard for a class: the actor that prefers draining
 /// this class's queue.  A splitmix-style mix of the three extents keeps
 /// neighbouring power-of-two classes from all landing on one actor.  Any
@@ -338,6 +350,21 @@ mod tests {
         assert_eq!(class_of(128, 256, 8), (128, 256, 8));
         assert_eq!(class_of(100, 200, 5), class_of(128, 129, 8));
         assert_ne!(class_of(100, 200, 5), class_of(300, 200, 5));
+    }
+
+    #[test]
+    fn batches_below_bounds_row_envelopes_and_zero_is_off() {
+        // threshold 0 = batching off, regardless of class size
+        assert!(!batches_below(&(1, 1, 1), 0));
+        assert!(!batches_below(&(64, 64, 8), 0));
+        // both row envelopes must fit; d is unconstrained
+        assert!(batches_below(&(64, 64, 8), 64));
+        assert!(batches_below(&(64, 32, 4096), 64));
+        assert!(!batches_below(&(128, 64, 8), 64));
+        assert!(!batches_below(&(64, 128, 8), 64));
+        // the predicate sees class envelopes: classify first
+        assert!(batches_below(&class_of(100, 60, 5), 128));
+        assert!(!batches_below(&class_of(100, 60, 5), 64));
     }
 
     #[test]

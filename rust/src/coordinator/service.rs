@@ -53,6 +53,24 @@
 //! no cache exists and serving stays bitwise identical to the cacheless
 //! solver (`tests/serving_stress.rs` pins both contracts).
 //!
+//! ## Batched small-OT path
+//!
+//! With `service.batch_threshold > 0`, a dispatched class batch whose
+//! shape class fits under the threshold ([`super::router::batches_below`])
+//! and whose jobs are all plain solves (no per-job strategy or
+//! fixed-iteration override) is solved in **one** packed backend call
+//! ([`SinkhornSolver::solve_batch`] over
+//! [`crate::runtime::ComputeBackend::lse_step_batch`]) instead of one
+//! solve per job: one pool fan-out per iteration over all packed rows,
+//! NEG_INF bias walls between neighbouring problems.  Results are bitwise
+//! identical to the job-by-job path, and each job keeps its own
+//! `SolveReport` IO, warm-cache consultation, metrics and `Completed`
+//! trace event; the fused dispatch emits a single `Dispatched` event
+//! covering the whole batch.  At the default `batch_threshold = 0` the
+//! branch never runs and serving is bitwise identical to the pre-batching
+//! service.  A batch the backend refuses (e.g. mixed resolved schedules)
+//! falls back to sequential per-job execution.
+//!
 //! ## Elasticity
 //!
 //! With `service.actors_min < actors_max` the pool breathes: a supervisor
@@ -101,7 +119,7 @@ use anyhow::{anyhow, Context, Result};
 use crate::config::{Config, ServiceSection};
 use crate::native::pool;
 use crate::obs::{ObsMode, TraceEvent, TraceKind, TraceRing};
-use crate::ot::solver::{Schedule, SinkhornSolver, SolverConfig};
+use crate::ot::solver::{Potentials, Schedule, SinkhornSolver, SolverConfig};
 use crate::ot::strategy::SolveStrategy;
 use crate::ot::Transport;
 use crate::runtime::ComputeBackend;
@@ -110,7 +128,7 @@ use super::batcher::{Admission, ClassQueues, Keyed, Rejection, TenantPolicy};
 use super::clock::{Clock, WallClock};
 use super::job::{Job, JobKind, JobRequest, JobResponse};
 use super::metrics::{Metrics, Snapshot};
-use super::router::{shard_of, ClassKey};
+use super::router::{batches_below, shard_of, ClassKey};
 use super::warm::{self, WarmCache};
 
 /// Default consecutive over-high-water supervisor ticks before growing by
@@ -235,6 +253,10 @@ struct Shared {
     /// `None` = off, the default — serving stays bitwise identical to
     /// the cacheless solver).
     warm_cache: Option<WarmCache>,
+    /// Shape-class ceiling for the fused many-small-OT dispatch path
+    /// (`service.batch_threshold`; 0 = off, the default — serving stays
+    /// bitwise identical to per-job dispatch).
+    batch_threshold: usize,
     /// Job-lifecycle trace ring (`service.obs = "trace[:N]"`); `None`
     /// (the default) turns every emission site into a cheap branch.
     trace: Option<TraceRing>,
@@ -607,6 +629,7 @@ fn spawn_inner(
         park_after: config.service.park_after_ticks.max(1),
         tick: Duration::from_millis(config.service.tick_ms.max(1)),
         warm_cache: WarmCache::from_mb(config.service.warm_cache_mb),
+        batch_threshold: config.service.batch_threshold,
         trace: obs_mode.ring(),
         job_seq: AtomicU64::new(0),
         clock,
@@ -832,21 +855,41 @@ fn actor_loop(
             metrics.steals.fetch_add(batch.len() as u64, Ordering::Relaxed);
             metrics.actor(index).steals.fetch_add(batch.len() as u64, Ordering::Relaxed);
         }
+        let fuse = batch_eligible(shared, solver_cfg, &class, &batch);
         if shared.trace.is_some() {
             if let Some(first) = batch.first() {
                 shared.trace(
                     first.seq,
                     TraceKind::Batched { class: class_str(&class), size: batch.len() },
                 );
+                if fuse {
+                    // one Dispatched covers the whole fused batch; each
+                    // job still gets its own Completed
+                    shared.trace(first.seq, TraceKind::Dispatched { actor: index });
+                }
             }
-            for job in &batch {
-                shared.trace(job.seq, TraceKind::Dispatched { actor: index });
+            if !fuse {
+                for job in &batch {
+                    shared.trace(job.seq, TraceKind::Dispatched { actor: index });
+                }
             }
         }
         // stolen-batch execution is timed by the actor (the kernel pool
         // cannot tell stolen work from home work); wall-clock, counters
         // only — never fed back into scheduling
         let steal_t0 = (stolen && crate::obs::counters_enabled()).then(std::time::Instant::now);
+        // fused path: one packed backend dispatch for the whole batch; a
+        // refusal (mixed resolved schedules, backend without batch ops)
+        // falls through to the sequential per-job loop below
+        let batch = if fuse {
+            match run_batch(backend.as_ref(), solver_cfg, &batch, shared, metrics, index, dispatched_at)
+            {
+                Ok(()) => Vec::new(),
+                Err(_) => batch,
+            }
+        } else {
+            batch
+        };
         for job in batch {
             let result = run_job(backend.as_ref(), &solver, solver_cfg, &job, shared, metrics);
             match &result {
@@ -888,6 +931,133 @@ fn actor_loop(
             metrics.on_steal_nanos(t0.elapsed().as_nanos() as u64);
         }
     }
+}
+
+/// Whether a dispatched class batch takes the fused packed-solve path:
+/// the class must route under `service.batch_threshold`
+/// ([`batches_below`]), there must be something to fuse (a singleton
+/// gains nothing over the per-job path), the service-wide solve config
+/// must be the plain tolerance-driven loop, and every job must be a plain
+/// solve — per-job strategy or fixed-iteration overrides would break the
+/// batch's shared step cadence.
+fn batch_eligible(shared: &Shared, cfg: &SolverConfig, class: &ClassKey, batch: &[Job]) -> bool {
+    batches_below(class, shared.batch_threshold)
+        && batch.len() > 1
+        && cfg.strategy.is_plain()
+        && cfg.anneal_factor >= 1.0
+        && batch.iter().all(|j| {
+            matches!(j.request.kind, JobKind::Solve)
+                && j.request.strategy.is_none()
+                && j.request.fixed_iters.is_none()
+        })
+}
+
+/// Solve a whole class batch in one packed backend dispatch
+/// ([`SinkhornSolver::solve_batch`]), then unpack per-job results:
+/// each job keeps its own warm-cache consultation, measured IO, metrics,
+/// latency split, admission release and response delivery — exactly the
+/// per-job bookkeeping [`run_job`] + the actor loop would have done, with
+/// only the solve itself fused.  An error before any result is delivered
+/// (packing or backend refusal) leaves every job untouched, so the caller
+/// can fall back to the sequential path.
+fn run_batch(
+    backend: &dyn ComputeBackend,
+    base_cfg: &SolverConfig,
+    batch: &[Job],
+    shared: &Shared,
+    metrics: &Metrics,
+    index: usize,
+    dispatched_at: Duration,
+) -> Result<()> {
+    let solver = SinkhornSolver::new(backend, base_cfg.clone());
+    // eligibility guarantees fixed_iters is None on every job, so the
+    // warm cache (when configured) applies to all of them
+    let warm_cache = shared.warm_cache.as_ref();
+    let consulted: Vec<_> = batch
+        .iter()
+        .map(|job| {
+            warm_cache.map(|cache| {
+                let fp = warm::fingerprint(&job.request.problem);
+                (fp, cache.lookup(job.request.tenant.as_deref(), fp))
+            })
+        })
+        .collect();
+    let warms: Vec<Option<Potentials>> = consulted
+        .iter()
+        .map(|c| c.as_ref().and_then(|(_, h)| h.as_ref()).map(|h| h.duals.clone()))
+        .collect();
+    let probs: Vec<_> = batch.iter().map(|j| &j.request.problem).collect();
+    let solve_start = shared.trace.is_some().then(|| shared.clock.now());
+    let results = solver.solve_batch(&probs, &warms)?;
+    let solve_end = solve_start.map(|_| shared.clock.now());
+    metrics.fused_batches.fetch_add(1, Ordering::Relaxed);
+    metrics.fused_jobs.fetch_add(batch.len() as u64, Ordering::Relaxed);
+    for (job, ((pot, report), consult)) in
+        batch.iter().zip(results.into_iter().zip(consulted.into_iter()))
+    {
+        let tenant = job.request.tenant.as_deref();
+        metrics.on_io(&report.io);
+        if let (Some(cache), Some((fp, looked))) = (warm_cache, &consult) {
+            match looked {
+                Some(h) => {
+                    let saved = h.cold_iters.saturating_sub(report.iters);
+                    metrics.on_warm_hit(saved as u64);
+                    shared.trace(job.seq, TraceKind::WarmHit { saved_iters: saved });
+                }
+                None => {
+                    metrics.on_warm_miss();
+                    shared.trace(job.seq, TraceKind::WarmMiss);
+                }
+            }
+            let evicted = cache.insert(tenant, *fp, &pot, report.iters);
+            if evicted > 0 {
+                metrics.on_warm_evictions(evicted as u64);
+            }
+        }
+        // stage timestamps bracket the fused solve, exactly as the
+        // sequential path brackets each job's own solve
+        if let (Some(start), Some(end)) = (solve_start, solve_end) {
+            for stage in &report.stages {
+                shared.trace_at(
+                    job.seq,
+                    start,
+                    TraceKind::StageStarted { stage: stage.kind, eps: stage.eps },
+                );
+                shared.trace_at(
+                    job.seq,
+                    end,
+                    TraceKind::StageFinished {
+                        stage: stage.kind,
+                        eps: stage.eps,
+                        iters: stage.iters,
+                        final_delta: stage.final_delta,
+                    },
+                );
+            }
+        }
+        metrics.jobs_ok.fetch_add(1, Ordering::Relaxed);
+        metrics.sinkhorn_iters.fetch_add(report.iters as u64, Ordering::Relaxed);
+        shared.trace(job.seq, TraceKind::Completed { iters: report.iters, cost: report.cost });
+        metrics.actor(index).jobs.fetch_add(1, Ordering::Relaxed);
+        let done_at = shared.clock.now();
+        let elapsed = done_at.saturating_sub(job.submitted);
+        metrics.record_latency(tenant, elapsed);
+        metrics.record_latency_split(
+            tenant,
+            dispatched_at.saturating_sub(job.submitted),
+            done_at.saturating_sub(dispatched_at),
+        );
+        if shared.admission_enabled {
+            lock(&shared.state).admission.release(tenant);
+        }
+        let _ = job.done.send(Ok(JobResponse {
+            cost: report.cost,
+            iters: report.iters,
+            grad: None,
+            service_time: elapsed,
+        }));
+    }
+    Ok(())
 }
 
 fn run_job(

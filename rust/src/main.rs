@@ -57,12 +57,16 @@ COMMANDS:
   regress  [--n 512] [--eps 0.1] [--steps 60]
   serve    [--jobs 64] [--actors N] [--actors-min A] [--actors-max B]
            [--tenant-rate R] [--tenant-burst C] [--tenant-inflight K]
-           [--warm-cache-mb MB] [--tick-ms MS] [--grow-after G] [--park-after P]
+           [--warm-cache-mb MB] [--batch-threshold S] [--tick-ms MS]
+           [--grow-after G] [--park-after P]
            [--metrics-addr HOST:PORT] [--obs off|counters|trace[:N]]
            (N defaults to config/FLASH_SINKHORN_ACTORS, else 1; A < B turns
             the adaptive pool on; tenant quotas default off, env
             FLASH_SINKHORN_TENANT_{RATE,BURST,INFLIGHT}; warm-start dual
             cache defaults off (0 MB), env FLASH_SINKHORN_WARM_CACHE_MB;
+            --batch-threshold S fuses same-class solves whose class rows
+            fit under S into one packed backend dispatch, default off (0),
+            env FLASH_SINKHORN_BATCH_THRESHOLD;
             supervisor cadence/marks default 25 ms / 2 / 2, env
             FLASH_SINKHORN_{TICK_MS,GROW_AFTER_TICKS,PARK_AFTER_TICKS};
             --metrics-addr serves GET /metrics (Prometheus text) and
@@ -266,6 +270,7 @@ fn main() -> Result<()> {
                 "tenant-burst",
                 "tenant-inflight",
                 "warm-cache-mb",
+                "batch-threshold",
                 "tick-ms",
                 "grow-after",
                 "park-after",
@@ -286,6 +291,8 @@ fn main() -> Result<()> {
                 args.usize("tenant-inflight", cfg.service.tenant_inflight)?;
             cfg.service.warm_cache_mb =
                 args.usize("warm-cache-mb", cfg.service.warm_cache_mb)?;
+            cfg.service.batch_threshold =
+                args.usize("batch-threshold", cfg.service.batch_threshold)?;
             cfg.service.tick_ms = args.usize("tick-ms", cfg.service.tick_ms as usize)? as u64;
             cfg.service.grow_after_ticks =
                 args.usize("grow-after", cfg.service.grow_after_ticks as usize)? as u32;

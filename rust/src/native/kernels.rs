@@ -127,6 +127,13 @@ impl Default for TileCfg {
 impl TileCfg {
     fn effective_threads(&self, pool: &WorkerPool, rows: usize, cols: usize, d: usize) -> usize {
         let work = rows.saturating_mul(cols).saturating_mul(d.max(1));
+        self.effective_threads_for_work(pool, work, rows)
+    }
+
+    /// Thread count for a region of `work` total score evaluations spread
+    /// over `rows` fan-out rows (the batched kernels sum ragged per-problem
+    /// work instead of one n*m*d product).
+    fn effective_threads_for_work(&self, pool: &WorkerPool, work: usize, rows: usize) -> usize {
         if work < self.par_threshold {
             return 1;
         }
@@ -255,6 +262,228 @@ pub fn lse_update<E>(
                 chunk[i0 - r0 + ii] = -eps * (mx[ii] + acc[ii].ln() as f32);
             }
             i0 += rb;
+        }
+    });
+}
+
+/// Per-axis geometry of a packed batch as one kernel orientation sees it:
+/// `rows` is the fan-out side, `cols` the streamed side.  The g-update
+/// passes the same batch with the two axes swapped.
+///
+/// All slices are per problem (length B) except `row_prob`, which maps
+/// every packed fan-out row to its owning problem
+/// ([`crate::ot::problem::BATCH_WALL`] on wall rows).  `active[p] == false`
+/// freezes problem `p`: its rows are skipped outright and its outputs left
+/// untouched.
+pub struct BatchGeom<'a> {
+    /// Packed fan-out row → owning problem (walls = `BATCH_WALL`).
+    pub row_prob: &'a [u32],
+    /// Packed start row of each problem on the fan-out side.
+    pub row_off: &'a [usize],
+    /// Rows of each problem on the fan-out side.
+    pub row_len: &'a [usize],
+    /// Packed start column of each problem on the streamed side.
+    pub col_off: &'a [usize],
+    /// Columns of each problem on the streamed side.
+    pub col_len: &'a [usize],
+    /// Per-problem regularization strengths.
+    pub eps: &'a [f32],
+    /// Per-problem score scales (`2 / eps` for plain Sinkhorn).
+    pub scale: &'a [f32],
+    /// Per-problem live flags (converged problems freeze in place).
+    pub active: &'a [bool],
+}
+
+impl BatchGeom<'_> {
+    /// Total score evaluations over the active problems (thread sizing).
+    fn work(&self, d: usize) -> usize {
+        (0..self.active.len())
+            .filter(|&p| self.active[p])
+            .map(|p| self.row_len[p].saturating_mul(self.col_len[p]).saturating_mul(d.max(1)))
+            .fold(0usize, usize::saturating_add)
+    }
+}
+
+/// Batched [`lse_update`]: one fan-out over the packed row range solves
+/// every active problem's update at once.  Each packed row's column loop is
+/// restricted to its own problem's segment — base pointers at
+/// `col_off[p]`, local tile boundaries at multiples of `block_cols` from
+/// the segment start, identical summation order to a sequential
+/// [`lse_update`] on that problem alone — so the outputs are
+/// **bitwise identical** to B sequential calls for every pool width and
+/// chunk schedule (`tests/batched_parity.rs`).  Wall rows and frozen
+/// problems are skipped; their `out` entries are left untouched.
+pub fn lse_update_batch(
+    pool: &WorkerPool,
+    x: &[f32],
+    y: &[f32],
+    bias: &[f32],
+    geom: &BatchGeom<'_>,
+    d: usize,
+    cfg: &TileCfg,
+    out: &mut [f32],
+) {
+    let total_rows = geom.row_prob.len();
+    debug_assert_eq!(out.len(), total_rows);
+    let threads = cfg.effective_threads_for_work(pool, geom.work(d), total_rows);
+    let br = cfg.block_rows.max(1);
+    let bc = cfg.block_cols.max(1);
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    run_rows(pool, threads, total_rows, |r0, r1| {
+        let chunk = unsafe { out_ptr.rows(r0, r1, 1) };
+        let mut mx = vec![NEG_INF; br];
+        let mut acc = vec![0.0f64; br];
+        let mut sbuf = vec![0.0f32; bc];
+        let mut i0 = r0;
+        while i0 < r1 {
+            let owner = geom.row_prob[i0];
+            if owner == crate::ot::problem::BATCH_WALL {
+                i0 += 1;
+                continue;
+            }
+            let p = owner as usize;
+            let seg_end = geom.row_off[p] + geom.row_len[p];
+            if !geom.active[p] {
+                i0 = seg_end.min(r1);
+                continue;
+            }
+            // a row block never crosses a problem boundary: rows of
+            // different problems stream different column segments
+            let rb = br.min(r1 - i0).min(seg_end - i0);
+            let (c0, m_p) = (geom.col_off[p], geom.col_len[p]);
+            let (eps_p, scale_p) = (geom.eps[p], geom.scale[p]);
+            let yb = &y[c0 * d..(c0 + m_p) * d];
+            let biasb = &bias[c0..c0 + m_p];
+            mx[..rb].fill(NEG_INF);
+            acc[..rb].fill(0.0);
+            let mut j0 = 0usize;
+            while j0 < m_p {
+                let jb = bc.min(m_p - j0);
+                for ii in 0..rb {
+                    let i = i0 + ii;
+                    let xi = &x[i * d..(i + 1) * d];
+                    for (t, slot) in sbuf[..jb].iter_mut().enumerate() {
+                        let j = j0 + t;
+                        *slot = scale_p * dot(xi, &yb[j * d..(j + 1) * d]) + biasb[j];
+                    }
+                    let (mut mxi, mut acci) = (mx[ii], acc[ii]);
+                    for &s in &sbuf[..jb] {
+                        if s <= mxi {
+                            acci += f64::from(s - mxi).exp();
+                        } else {
+                            acci = acci * f64::from(mxi - s).exp() + 1.0;
+                            mxi = s;
+                        }
+                    }
+                    mx[ii] = mxi;
+                    acc[ii] = acci;
+                }
+                j0 += jb;
+            }
+            for ii in 0..rb {
+                chunk[i0 - r0 + ii] = -eps_p * (mx[ii] + acc[ii].ln() as f32);
+            }
+            i0 += rb;
+        }
+    });
+}
+
+/// Batched [`apply_rows`] (forward orientation, width-`p` panel `v` packed
+/// over the streamed side): one fan-out computes every active problem's
+/// `(P V, r)` rows.  Same per-row restriction to the owning problem's
+/// column segment as [`lse_update_batch`], same single-exp row constant as
+/// [`apply_rows`], so outputs are bitwise identical to B sequential calls.
+/// `bias` is the packed column bias precomputed per problem (walls
+/// `NEG_INF`); wall rows and frozen problems leave `pv`/`r` untouched.
+#[allow(clippy::too_many_arguments)]
+pub fn apply_rows_batch(
+    pool: &WorkerPool,
+    x: &[f32],
+    y: &[f32],
+    fhat: &[f32],
+    a: &[f32],
+    bias: &[f32],
+    v: &[f32],
+    p_width: usize,
+    geom: &BatchGeom<'_>,
+    d: usize,
+    cfg: &TileCfg,
+    pv: &mut [f32],
+    r: &mut [f32],
+) {
+    let total_rows = geom.row_prob.len();
+    debug_assert_eq!(r.len(), total_rows);
+    debug_assert_eq!(pv.len(), total_rows * p_width);
+    let threads =
+        cfg.effective_threads_for_work(pool, geom.work(d + p_width), total_rows);
+    let bc = cfg.block_cols.max(1);
+    let pv_ptr = SendPtr(pv.as_mut_ptr());
+    let r_ptr = SendPtr(r.as_mut_ptr());
+    run_rows(pool, threads, total_rows, |r0, r1| {
+        let pv_chunk = unsafe { pv_ptr.rows(r0, r1, p_width) };
+        let r_chunk = unsafe { r_ptr.rows(r0, r1, 1) };
+        let mut accv = vec![0.0f64; p_width];
+        let mut sbuf = vec![0.0f32; bc];
+        for i in r0..r1 {
+            let owner = geom.row_prob[i];
+            if owner == crate::ot::problem::BATCH_WALL {
+                continue;
+            }
+            let p = owner as usize;
+            if !geom.active[p] {
+                continue;
+            }
+            if a[i] <= 0.0 {
+                r_chunk[i - r0] = 0.0;
+                pv_chunk[(i - r0) * p_width..(i - r0 + 1) * p_width].fill(0.0);
+                continue;
+            }
+            let (c0, m_p) = (geom.col_off[p], geom.col_len[p]);
+            let (eps_p, scale_p) = (geom.eps[p], geom.scale[p]);
+            let yb = &y[c0 * d..(c0 + m_p) * d];
+            let biasb = &bias[c0..c0 + m_p];
+            let vb = &v[c0 * p_width..(c0 + m_p) * p_width];
+            let xi = &x[i * d..(i + 1) * d];
+            let mut mx = NEG_INF;
+            let mut accr = 0.0f64;
+            accv.fill(0.0);
+            let mut j0 = 0usize;
+            while j0 < m_p {
+                let jb = bc.min(m_p - j0);
+                for (t, slot) in sbuf[..jb].iter_mut().enumerate() {
+                    let j = j0 + t;
+                    *slot = scale_p * dot(xi, &yb[j * d..(j + 1) * d]) + biasb[j];
+                }
+                for (t, &s) in sbuf[..jb].iter().enumerate() {
+                    let j = j0 + t;
+                    let w = if s <= mx {
+                        f64::from(s - mx).exp()
+                    } else {
+                        let rescale = f64::from(mx - s).exp();
+                        accr *= rescale;
+                        for av in accv.iter_mut() {
+                            *av *= rescale;
+                        }
+                        mx = s;
+                        1.0
+                    };
+                    accr += w;
+                    if p_width > 0 {
+                        let vj = &vb[j * p_width..(j + 1) * p_width];
+                        for (av, &vv) in accv.iter_mut().zip(vj) {
+                            *av += w * f64::from(vv);
+                        }
+                    }
+                }
+                j0 += jb;
+            }
+            let base = (f64::from(fhat[i] / eps_p + safe_ln(a[i])) + f64::from(mx)).exp();
+            r_chunk[i - r0] = (base * accr) as f32;
+            for (o, &av) in
+                pv_chunk[(i - r0) * p_width..(i - r0 + 1) * p_width].iter_mut().zip(&accv)
+            {
+                *o = (base * av) as f32;
+            }
         }
     });
 }
@@ -658,6 +887,42 @@ pub fn apply_rows_io(n: usize, m: usize, d: usize, p: usize, cfg: &TileCfg) -> I
     }
 }
 
+/// Geometry of one active problem's share of a [`lse_update_batch`] call:
+/// exactly [`lse_update_io`] of that problem alone.  The batched call
+/// charges the sum over active problems, so batched IO is conservative by
+/// construction — B problems fused cost precisely what B sequential calls
+/// cost (`tests/batched_parity.rs` pins the conservation).
+pub fn lse_update_batch_io(geom: &BatchGeom<'_>, d: usize, cfg: &TileCfg) -> Vec<IoStats> {
+    (0..geom.active.len())
+        .map(|p| {
+            if geom.active[p] {
+                lse_update_io(geom.row_len[p], geom.col_len[p], d, cfg)
+            } else {
+                IoStats::default()
+            }
+        })
+        .collect()
+}
+
+/// Per-problem geometry of one [`apply_rows_batch`] call (see
+/// [`lse_update_batch_io`] for the conservation contract).
+pub fn apply_rows_batch_io(
+    geom: &BatchGeom<'_>,
+    d: usize,
+    p_width: usize,
+    cfg: &TileCfg,
+) -> Vec<IoStats> {
+    (0..geom.active.len())
+        .map(|p| {
+            if geom.active[p] {
+                apply_rows_io(geom.row_len[p], geom.col_len[p], d, p_width, cfg)
+            } else {
+                IoStats::default()
+            }
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -838,6 +1103,147 @@ mod tests {
         let old = [0.75f32, f32::NEG_INFINITY, 0.0, 2.0];
         let w = [1.0f32, 0.0, 0.0, 1.0];
         assert_eq!(masked_delta(&new, &old, &w), 0.25);
+    }
+
+    #[test]
+    fn batched_lse_update_is_bitwise_sequential_and_thread_invariant() {
+        use crate::ot::problem::{BatchedProblem, OtProblem};
+        // ragged shapes, d % 8 != 0
+        let shapes = [(5usize, 9usize), (12, 7), (3, 14)];
+        let d = 3usize;
+        let probs: Vec<OtProblem> = shapes
+            .iter()
+            .enumerate()
+            .map(|(k, &(n, m))| {
+                let x: Vec<f32> = (0..n * d).map(|i| ((i * 7 + k) % 13) as f32 * 0.1 - 0.5).collect();
+                let y: Vec<f32> = (0..m * d).map(|i| ((i * 5 + k) % 11) as f32 * 0.1 - 0.4).collect();
+                OtProblem::uniform(x, y, n, m, d, 0.2 + 0.1 * k as f32).unwrap()
+            })
+            .collect();
+        let refs: Vec<&OtProblem> = probs.iter().collect();
+        let batch = BatchedProblem::pack(&refs).unwrap();
+        // packed column bias (ghat = 0 -> bias = ln b), walls NEG_INF
+        let mut bias = vec![NEG_INF; batch.cols()];
+        for (j, &bw) in batch.b.iter().enumerate() {
+            if bw > 0.0 {
+                bias[j] = safe_ln(bw);
+            }
+        }
+        let scale: Vec<f32> = batch.eps.iter().map(|&e| 2.0 / e).collect();
+        let active = vec![true; batch.len()];
+        let row_prob = batch.row_prob_map();
+        let geom = BatchGeom {
+            row_prob: &row_prob,
+            row_off: &batch.row_off,
+            row_len: &batch.n,
+            col_off: &batch.col_off,
+            col_len: &batch.m,
+            eps: &batch.eps,
+            scale: &scale,
+            active: &active,
+        };
+        let pool = WorkerPool::new(4);
+        let run = |cfg: &TileCfg| {
+            let mut out = vec![f32::NAN; batch.rows()];
+            lse_update_batch(&pool, &batch.x, &batch.y, &bias, &geom, d, cfg, &mut out);
+            out
+        };
+        let base = run(&TileCfg { block_rows: 1, block_cols: 1, threads: 1, par_threshold: 0 });
+        for cfg in [
+            TileCfg { block_rows: 7, block_cols: 8, threads: 1, par_threshold: 0 },
+            TileCfg { block_rows: 64, block_cols: 512, threads: 4, par_threshold: 0 },
+        ] {
+            let got = run(&cfg);
+            for p in 0..batch.len() {
+                let rr = batch.row_range(p);
+                assert_eq!(got[rr.clone()], base[rr.clone()], "problem {p}");
+            }
+        }
+        // bitwise vs a sequential lse_update per problem
+        let cfg = TileCfg { threads: 1, ..TileCfg::default() };
+        for p in 0..batch.len() {
+            let prob = batch.problem(p);
+            let pbias: Vec<f32> = prob.b.iter().map(|&bw| safe_ln(bw)).collect();
+            let mut want = vec![0.0f32; prob.n];
+            lse_update(
+                &pool1(), &prob.x, &prob.y, &pbias, prob.n, prob.m, d, prob.eps,
+                2.0 / prob.eps, |_, _| 0.0, &cfg, &mut want,
+            );
+            let got = &base[batch.row_range(p)];
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(g.to_bits(), w.to_bits(), "problem {p}");
+            }
+        }
+    }
+
+    #[test]
+    fn batched_lse_update_skips_frozen_problems_and_walls() {
+        use crate::ot::problem::{BatchedProblem, OtProblem};
+        let p0 = OtProblem::uniform(vec![0.5; 2 * 2], vec![0.25; 3 * 2], 2, 3, 2, 0.1).unwrap();
+        let p1 = OtProblem::uniform(vec![-0.5; 3 * 2], vec![0.75; 2 * 2], 3, 2, 2, 0.2).unwrap();
+        let batch = BatchedProblem::pack(&[&p0, &p1]).unwrap();
+        let mut bias = vec![NEG_INF; batch.cols()];
+        for (j, &bw) in batch.b.iter().enumerate() {
+            if bw > 0.0 {
+                bias[j] = safe_ln(bw);
+            }
+        }
+        let scale: Vec<f32> = batch.eps.iter().map(|&e| 2.0 / e).collect();
+        let active = vec![true, false];
+        let row_prob = batch.row_prob_map();
+        let geom = BatchGeom {
+            row_prob: &row_prob,
+            row_off: &batch.row_off,
+            row_len: &batch.n,
+            col_off: &batch.col_off,
+            col_len: &batch.m,
+            eps: &batch.eps,
+            scale: &scale,
+            active: &active,
+        };
+        let sentinel = -7.25f32;
+        let mut out = vec![sentinel; batch.rows()];
+        lse_update_batch(
+            &pool1(), &batch.x, &batch.y, &bias, &geom, 2, &TileCfg::default(), &mut out,
+        );
+        // frozen problem 1 and the wall row keep their sentinels
+        assert!(out[batch.row_range(0)].iter().all(|&v| v != sentinel));
+        assert_eq!(out[2], sentinel); // wall
+        assert!(out[batch.row_range(1)].iter().all(|&v| v == sentinel));
+    }
+
+    #[test]
+    fn batched_io_geometry_is_the_per_problem_sum() {
+        let (row_off, row_len) = (vec![0usize, 3], vec![2usize, 33]);
+        let (col_off, col_len) = (vec![0usize, 5], vec![4usize, 257]);
+        let eps = vec![0.1f32, 0.2];
+        let scale = vec![20.0f32, 10.0];
+        let active = vec![true, true];
+        let row_prob = vec![0u32, 0, crate::ot::problem::BATCH_WALL, 1, 1];
+        let geom = BatchGeom {
+            row_prob: &row_prob,
+            row_off: &row_off,
+            row_len: &row_len,
+            col_off: &col_off,
+            col_len: &col_len,
+            eps: &eps,
+            scale: &scale,
+            active: &active,
+        };
+        let cfg = TileCfg::default();
+        let per = lse_update_batch_io(&geom, 8, &cfg);
+        assert_eq!(per.len(), 2);
+        for (p, io) in per.iter().enumerate() {
+            let want = lse_update_io(row_len[p], col_len[p], 8, &cfg);
+            assert_eq!(io.lse_evals, want.lse_evals);
+            assert_eq!(io.y_bytes, want.y_bytes);
+            assert_eq!(io.tiles, want.tiles);
+        }
+        let frozen = BatchGeom { active: &[true, false], ..geom };
+        let per = lse_update_batch_io(&frozen, 8, &cfg);
+        assert!(per[1].is_zero());
+        let apply = apply_rows_batch_io(&geom, 8, 2, &cfg);
+        assert_eq!(apply[0].y_bytes, apply_rows_io(2, 4, 8, 2, &cfg).y_bytes);
     }
 
     #[test]

@@ -36,9 +36,13 @@ use crate::obs::{AtomicIoStats, IoStats};
 use crate::runtime::backend::{op_of_key, ComputeBackend};
 use crate::runtime::Tensor;
 
+use crate::ot::problem::{BatchedProblem, BATCH_WALL};
+use crate::runtime::backend::{check_batch_state, BatchStepOut};
+
 use kernels::{
-    apply_rows, apply_rows_io, lse_update, lse_update_dense, lse_update_dense_io, lse_update_io,
-    lse_update_twopass, lse_update_twopass_io, masked_delta, safe_ln, TileCfg, NEG_INF,
+    apply_rows, apply_rows_batch, apply_rows_batch_io, apply_rows_io, lse_update,
+    lse_update_batch, lse_update_batch_io, lse_update_dense, lse_update_dense_io, lse_update_io,
+    lse_update_twopass, lse_update_twopass_io, masked_delta, safe_ln, BatchGeom, TileCfg, NEG_INF,
 };
 use pool::WorkerPool;
 
@@ -356,6 +360,31 @@ impl NativeBackend {
         (pv, r)
     }
 
+    /// Packed column bias for one orientation of a batch: walls and frozen
+    /// problems are masked to [`NEG_INF`] outright (never read by the
+    /// segment-restricted kernels — the belt-and-braces wall contract),
+    /// live columns get the usual `dual / eps_p + ln w` with explicit
+    /// zero-weight masking.
+    fn batch_bias(
+        dual: &[f32],
+        w: &[f32],
+        col_prob: &[u32],
+        eps: &[f32],
+        active: &[bool],
+    ) -> Vec<f32> {
+        dual.iter()
+            .zip(w)
+            .zip(col_prob)
+            .map(|((&g, &wj), &owner)| {
+                if owner == BATCH_WALL || !active[owner as usize] || wj <= 0.0 {
+                    NEG_INF
+                } else {
+                    g / eps[owner as usize] + safe_ln(wj)
+                }
+            })
+            .collect()
+    }
+
     /// (P^T U, c) with U of width p: same kernel with roles swapped.
     fn ptu(&self, c: &Core<'_>, u: &[f32], p: usize, eps: f32) -> (Vec<f32>, Vec<f32>) {
         let mut ptu = vec![0.0f32; c.m * p];
@@ -398,6 +427,172 @@ impl ComputeBackend for NativeBackend {
         s.pool_busy_nanos = self.pool.busy_nanos();
         s.pool_idle_nanos = self.pool.idle_nanos();
         s
+    }
+
+    /// The fused batched step: one pool fan-out over the packed row range
+    /// per update direction instead of one per problem.  Each packed row's
+    /// column loop is restricted to its own problem's segment with that
+    /// problem's bias/eps, so the summation order — and hence every f32
+    /// bit — matches `k` sequential `{alternating,symmetric}_step` calls
+    /// per problem (`tests/batched_parity.rs`).  IO is charged per problem
+    /// from the same analytic geometry a sequential call would use, so the
+    /// batched total is exactly the sum of the sequential charges.
+    fn lse_step_batch(
+        &self,
+        batch: &BatchedProblem,
+        fhat: &mut [f32],
+        ghat: &mut [f32],
+        active: &[bool],
+        k: usize,
+        alternating: bool,
+    ) -> Result<Vec<BatchStepOut>> {
+        check_batch_state(batch, fhat, ghat, active)?;
+        let bsz = batch.len();
+        let row_prob = batch.row_prob_map();
+        let col_prob = batch.col_prob_map();
+        let scale: Vec<f32> = batch.eps.iter().map(|&e| 2.0 / e).collect();
+        let fgeom = BatchGeom {
+            row_prob: &row_prob,
+            row_off: &batch.row_off,
+            row_len: &batch.n,
+            col_off: &batch.col_off,
+            col_len: &batch.m,
+            eps: &batch.eps,
+            scale: &scale,
+            active,
+        };
+        let ggeom = BatchGeom {
+            row_prob: &col_prob,
+            row_off: &batch.col_off,
+            row_len: &batch.m,
+            col_off: &batch.row_off,
+            col_len: &batch.n,
+            eps: &batch.eps,
+            scale: &scale,
+            active,
+        };
+        let f_io = lse_update_batch_io(&fgeom, batch.d, &self.tile);
+        let g_io = lse_update_batch_io(&ggeom, batch.d, &self.tile);
+        let mut out = vec![BatchStepOut::default(); bsz];
+        let mut charged = IoStats::default();
+        let mut fcur = fhat.to_vec();
+        let mut gcur = ghat.to_vec();
+        let mut fnew = fcur.clone();
+        let mut gnew = gcur.clone();
+        for _ in 0..k.max(1) {
+            if alternating {
+                let gbias = Self::batch_bias(&gcur, &batch.b, &col_prob, &batch.eps, active);
+                lse_update_batch(
+                    &self.pool, &batch.x, &batch.y, &gbias, &fgeom, batch.d, &self.tile,
+                    &mut fnew,
+                );
+                // g from the *new* f (Gauss-Seidel), exactly like `step`
+                let fbias = Self::batch_bias(&fnew, &batch.a, &row_prob, &batch.eps, active);
+                lse_update_batch(
+                    &self.pool, &batch.y, &batch.x, &fbias, &ggeom, batch.d, &self.tile,
+                    &mut gnew,
+                );
+            } else {
+                let gbias = Self::batch_bias(&gcur, &batch.b, &col_prob, &batch.eps, active);
+                let fbias = Self::batch_bias(&fcur, &batch.a, &row_prob, &batch.eps, active);
+                lse_update_batch(
+                    &self.pool, &batch.x, &batch.y, &gbias, &fgeom, batch.d, &self.tile,
+                    &mut fnew,
+                );
+                lse_update_batch(
+                    &self.pool, &batch.y, &batch.x, &fbias, &ggeom, batch.d, &self.tile,
+                    &mut gnew,
+                );
+                for p in 0..bsz {
+                    if !active[p] {
+                        continue;
+                    }
+                    let (rr, cr) = (batch.row_range(p), batch.col_range(p));
+                    for (o, &f) in fnew[rr].iter_mut().zip(&fcur[batch.row_range(p)]) {
+                        *o = 0.5 * (*o + f);
+                    }
+                    for (o, &g) in gnew[cr].iter_mut().zip(&gcur[batch.col_range(p)]) {
+                        *o = 0.5 * (*o + g);
+                    }
+                }
+            }
+            for p in 0..bsz {
+                if !active[p] {
+                    continue;
+                }
+                let (rr, cr) = (batch.row_range(p), batch.col_range(p));
+                out[p].df = masked_delta(&fnew[rr.clone()], &fcur[rr.clone()], &batch.a[rr]);
+                out[p].dg = masked_delta(&gnew[cr.clone()], &gcur[cr.clone()], &batch.b[cr]);
+                // per-job accounting honours the same counter gate as the
+                // sequential path's io_stats delta
+                if self.counters {
+                    out[p].io.add(&f_io[p]);
+                    out[p].io.add(&g_io[p]);
+                    charged.add(&f_io[p]);
+                    charged.add(&g_io[p]);
+                }
+            }
+            std::mem::swap(&mut fcur, &mut fnew);
+            std::mem::swap(&mut gcur, &mut gnew);
+        }
+        self.charge(charged);
+        for p in 0..bsz {
+            if !active[p] {
+                continue;
+            }
+            let (rr, cr) = (batch.row_range(p), batch.col_range(p));
+            fhat[rr.clone()].copy_from_slice(&fcur[rr]);
+            ghat[cr.clone()].copy_from_slice(&gcur[cr]);
+        }
+        Ok(out)
+    }
+
+    /// Fused batched forward transport application: one fan-out over the
+    /// packed rows, bitwise identical to per-problem `apply_pv_*` calls.
+    fn apply_batch(
+        &self,
+        batch: &BatchedProblem,
+        fhat: &[f32],
+        ghat: &[f32],
+        active: &[bool],
+        v: &[f32],
+        p_width: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        if p_width != 1 && p_width != batch.d {
+            bail!("apply_batch: panel width {p_width} is neither 1 nor d={}", batch.d);
+        }
+        if fhat.len() != batch.rows() || ghat.len() != batch.cols() {
+            bail!("apply_batch: packed dual lengths do not match the batch");
+        }
+        if v.len() != batch.cols() * p_width || active.len() != batch.len() {
+            bail!("apply_batch: panel/active lengths do not match the batch");
+        }
+        let row_prob = batch.row_prob_map();
+        let col_prob = batch.col_prob_map();
+        let scale: Vec<f32> = batch.eps.iter().map(|&e| 2.0 / e).collect();
+        let geom = BatchGeom {
+            row_prob: &row_prob,
+            row_off: &batch.row_off,
+            row_len: &batch.n,
+            col_off: &batch.col_off,
+            col_len: &batch.m,
+            eps: &batch.eps,
+            scale: &scale,
+            active,
+        };
+        let bias = Self::batch_bias(ghat, &batch.b, &col_prob, &batch.eps, active);
+        let mut pv = vec![0.0f32; batch.rows() * p_width];
+        let mut r = vec![0.0f32; batch.rows()];
+        apply_rows_batch(
+            &self.pool, &batch.x, &batch.y, fhat, &batch.a, &bias, v, p_width, &geom, batch.d,
+            &self.tile, &mut pv, &mut r,
+        );
+        let mut charged = IoStats::default();
+        for io in apply_rows_batch_io(&geom, batch.d, p_width, &self.tile) {
+            charged.add(&io);
+        }
+        self.charge(charged);
+        Ok((pv, r))
     }
 
     fn call(&self, key: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {

@@ -90,6 +90,18 @@ impl IoStats {
     pub fn is_zero(&self) -> bool {
         *self == IoStats::default()
     }
+
+    /// Counter-wise sum of per-problem deltas.  The batched backend path
+    /// charges one fused total that must equal the per-problem sum
+    /// exactly — integer counters make this an identity, not an
+    /// approximation.
+    pub fn sum<'a, I: IntoIterator<Item = &'a IoStats>>(parts: I) -> IoStats {
+        let mut total = IoStats::default();
+        for part in parts {
+            total.add(part);
+        }
+        total
+    }
 }
 
 /// Shared-state accumulator for [`IoStats`]: relaxed atomic adds on the

@@ -120,6 +120,170 @@ pub fn cosine_cost(sq_dual_cost: f64) -> f64 {
     sq_dual_cost / 2.0
 }
 
+/// Sentinel in a packed row→problem map marking a wall row that belongs to
+/// no problem (see [`BatchedProblem`]).
+pub const BATCH_WALL: u32 = u32::MAX;
+
+/// B small EOT instances packed into one contiguous buffer set, so a
+/// backend can solve all of them in a single fused pass (one pool fan-out
+/// over the packed row range instead of B).
+///
+/// ## Packing layout
+///
+/// Problem `p`'s source points occupy packed rows
+/// `[row_off[p], row_off[p] + n[p])` of `x` (and the matching entries of
+/// `a`); its target points occupy packed columns
+/// `[col_off[p], col_off[p] + m[p])` of `y` / `b`.  Between consecutive
+/// problems sits exactly one **wall** row/column: zero points with weight
+/// `0.0`.  Zero weight means the wall's column bias is `NEG_INF` under the
+/// kernels' masking contract (`exp(NEG_INF - max) == 0.0` exactly), so even
+/// if a tile or a misrouted loop ever touched a wall it would contribute
+/// bitwise-nothing to any reduction.  The primary isolation mechanism is
+/// stronger still: batched kernels restrict every packed row's column loop
+/// to its own problem's segment, so no tile ever mixes neighbors; the walls
+/// are the belt-and-braces backstop that turns a hypothetical indexing bug
+/// into a no-op instead of silent cross-problem contamination.
+///
+/// `eps` is carried per problem: the shape-class router coalesces jobs by
+/// (n, m, d) envelope only, so instances in one batch may regularize
+/// differently.
+#[derive(Clone, Debug)]
+pub struct BatchedProblem {
+    /// Packed source points, `rows() x d` row-major (walls zeroed).
+    pub x: Vec<f32>,
+    /// Packed target points, `cols() x d` row-major (walls zeroed).
+    pub y: Vec<f32>,
+    /// Packed source weights, length `rows()` (walls `0.0`).
+    pub a: Vec<f32>,
+    /// Packed target weights, length `cols()` (walls `0.0`).
+    pub b: Vec<f32>,
+    /// Per-problem regularization strengths, length B.
+    pub eps: Vec<f32>,
+    /// Per-problem source sizes, length B.
+    pub n: Vec<usize>,
+    /// Per-problem target sizes, length B.
+    pub m: Vec<usize>,
+    /// Packed start row of each problem, length B (strictly increasing,
+    /// segments disjoint with one wall row between neighbors).
+    pub row_off: Vec<usize>,
+    /// Packed start column of each problem, length B.
+    pub col_off: Vec<usize>,
+    /// Shared point dimension.
+    pub d: usize,
+}
+
+impl BatchedProblem {
+    /// Pack `probs` (all sharing one `d`) into contiguous buffers with one
+    /// wall row/column between consecutive problems.  Point and weight
+    /// slices are copied verbatim, so [`Self::problem`] recovers every
+    /// input bit exactly.
+    pub fn pack(probs: &[&OtProblem]) -> Result<Self> {
+        if probs.is_empty() {
+            bail!("cannot pack an empty batch");
+        }
+        let d = probs[0].d;
+        if probs.iter().any(|p| p.d != d) {
+            bail!("batched problems must share d");
+        }
+        let bsz = probs.len();
+        let total_rows: usize = probs.iter().map(|p| p.n).sum::<usize>() + (bsz - 1);
+        let total_cols: usize = probs.iter().map(|p| p.m).sum::<usize>() + (bsz - 1);
+        let mut out = Self {
+            x: vec![0.0; total_rows * d],
+            y: vec![0.0; total_cols * d],
+            a: vec![0.0; total_rows],
+            b: vec![0.0; total_cols],
+            eps: Vec::with_capacity(bsz),
+            n: Vec::with_capacity(bsz),
+            m: Vec::with_capacity(bsz),
+            row_off: Vec::with_capacity(bsz),
+            col_off: Vec::with_capacity(bsz),
+            d,
+        };
+        let (mut r0, mut c0) = (0usize, 0usize);
+        for p in probs {
+            out.row_off.push(r0);
+            out.col_off.push(c0);
+            out.n.push(p.n);
+            out.m.push(p.m);
+            out.eps.push(p.eps);
+            out.x[r0 * d..(r0 + p.n) * d].copy_from_slice(&p.x);
+            out.y[c0 * d..(c0 + p.m) * d].copy_from_slice(&p.y);
+            out.a[r0..r0 + p.n].copy_from_slice(&p.a);
+            out.b[c0..c0 + p.m].copy_from_slice(&p.b);
+            r0 += p.n + 1; // +1 skips the wall row (stays zeroed)
+            c0 += p.m + 1;
+        }
+        Ok(out)
+    }
+
+    /// Number of packed problems B.
+    pub fn len(&self) -> usize {
+        self.n.len()
+    }
+
+    /// True when the batch holds no problems (never after a successful
+    /// [`Self::pack`]).
+    pub fn is_empty(&self) -> bool {
+        self.n.is_empty()
+    }
+
+    /// Total packed rows including walls.
+    pub fn rows(&self) -> usize {
+        self.a.len()
+    }
+
+    /// Total packed columns including walls.
+    pub fn cols(&self) -> usize {
+        self.b.len()
+    }
+
+    /// Packed row range of problem `p`.
+    pub fn row_range(&self, p: usize) -> std::ops::Range<usize> {
+        self.row_off[p]..self.row_off[p] + self.n[p]
+    }
+
+    /// Packed column range of problem `p`.
+    pub fn col_range(&self, p: usize) -> std::ops::Range<usize> {
+        self.col_off[p]..self.col_off[p] + self.m[p]
+    }
+
+    /// Unpack problem `p` by slicing the packed buffers — bit-exact
+    /// recovery of what [`Self::pack`] copied in (no re-validation, the
+    /// inputs already passed [`OtProblem::new`]).
+    pub fn problem(&self, p: usize) -> OtProblem {
+        let (rr, cr) = (self.row_range(p), self.col_range(p));
+        OtProblem {
+            x: self.x[rr.start * self.d..rr.end * self.d].to_vec(),
+            y: self.y[cr.start * self.d..cr.end * self.d].to_vec(),
+            a: self.a[rr.clone()].to_vec(),
+            b: self.b[cr].to_vec(),
+            n: self.n[p],
+            m: self.m[p],
+            d: self.d,
+            eps: self.eps[p],
+        }
+    }
+
+    /// Packed row → owning problem map ([`BATCH_WALL`] on wall rows).
+    pub fn row_prob_map(&self) -> Vec<u32> {
+        let mut map = vec![BATCH_WALL; self.rows()];
+        for p in 0..self.len() {
+            map[self.row_range(p)].fill(p as u32);
+        }
+        map
+    }
+
+    /// Packed column → owning problem map ([`BATCH_WALL`] on wall columns).
+    pub fn col_prob_map(&self) -> Vec<u32> {
+        let mut map = vec![BATCH_WALL; self.cols()];
+        for p in 0..self.len() {
+            map[self.col_range(p)].fill(p as u32);
+        }
+        map
+    }
+}
+
 pub fn sqnorms(pts: &[f32], n: usize, d: usize) -> Vec<f32> {
     (0..n)
         .map(|i| pts[i * d..(i + 1) * d].iter().map(|v| v * v).sum())
@@ -162,5 +326,53 @@ mod tests {
     #[test]
     fn rejects_bad_eps() {
         assert!(OtProblem::uniform(vec![0.0; 4], vec![0.0; 4], 2, 2, 2, 0.0).is_err());
+    }
+
+    #[test]
+    fn batched_pack_layout_and_bitwise_unpack() {
+        let p0 = OtProblem::uniform(vec![0.5; 2 * 3], vec![0.25; 4 * 3], 2, 4, 3, 0.1).unwrap();
+        let p1 = OtProblem::uniform(vec![-1.0; 3 * 3], vec![2.0; 2 * 3], 3, 2, 3, 0.3).unwrap();
+        let batch = BatchedProblem::pack(&[&p0, &p1]).unwrap();
+        assert_eq!(batch.len(), 2);
+        // one wall row/column between the two problems
+        assert_eq!(batch.rows(), 2 + 3 + 1);
+        assert_eq!(batch.cols(), 4 + 2 + 1);
+        assert_eq!(batch.row_off, vec![0, 3]);
+        assert_eq!(batch.col_off, vec![0, 5]);
+        // the wall carries zero weight and zero points
+        assert_eq!(batch.a[2], 0.0);
+        assert_eq!(batch.b[4], 0.0);
+        assert!(batch.x[2 * 3..3 * 3].iter().all(|&v| v == 0.0));
+        // bit-exact round trip
+        for (p, orig) in [(0, &p0), (1, &p1)] {
+            let got = batch.problem(p);
+            assert_eq!(got.x, orig.x);
+            assert_eq!(got.y, orig.y);
+            assert_eq!(got.a, orig.a);
+            assert_eq!(got.b, orig.b);
+            assert_eq!((got.n, got.m, got.d), (orig.n, orig.m, orig.d));
+            assert_eq!(got.eps.to_bits(), orig.eps.to_bits());
+        }
+        let rmap = batch.row_prob_map();
+        assert_eq!(rmap, vec![0, 0, BATCH_WALL, 1, 1, 1]);
+        let cmap = batch.col_prob_map();
+        assert_eq!(cmap, vec![0, 0, 0, 0, BATCH_WALL, 1, 1]);
+    }
+
+    #[test]
+    fn batched_pack_rejects_empty_and_mixed_d() {
+        assert!(BatchedProblem::pack(&[]).is_err());
+        let p0 = OtProblem::uniform(vec![0.0; 4], vec![0.0; 4], 2, 2, 2, 0.1).unwrap();
+        let p1 = OtProblem::uniform(vec![0.0; 6], vec![0.0; 6], 2, 2, 3, 0.1).unwrap();
+        assert!(BatchedProblem::pack(&[&p0, &p1]).is_err());
+    }
+
+    #[test]
+    fn batched_pack_singleton_has_no_walls() {
+        let p0 = OtProblem::uniform(vec![0.0; 4], vec![0.0; 4], 2, 2, 2, 0.1).unwrap();
+        let batch = BatchedProblem::pack(&[&p0]).unwrap();
+        assert_eq!(batch.rows(), 2);
+        assert_eq!(batch.cols(), 2);
+        assert_eq!(batch.row_prob_map(), vec![0, 0]);
     }
 }

@@ -19,7 +19,7 @@ use crate::coordinator::router::{BucketCtx, Router};
 use crate::runtime::{ComputeBackend, PreparedCall, Tensor};
 
 use super::cost::dual_cost;
-use super::problem::OtProblem;
+use super::problem::{BatchedProblem, OtProblem};
 use super::strategy::{anneal, newton, SolveStrategy};
 
 /// Update schedule (paper eq. 2-3 vs eq. 4-5).
@@ -442,6 +442,148 @@ impl<'e> SinkhornSolver<'e> {
         };
         Ok((pot, report))
     }
+
+    /// Solve `B` small problems in one fused pass over packed tiles.
+    ///
+    /// Packs the problems into a [`BatchedProblem`] (one NEG_INF-walled
+    /// row/column between neighbours) and drives
+    /// [`ComputeBackend::lse_step_batch`] in lockstep: every still-active
+    /// problem runs the identical fused/single step sequence the
+    /// sequential loop would have chosen at the same iteration count, and
+    /// freezes in place once it reaches tolerance or budget.  Because the
+    /// step choice depends only on the shared iteration counter, each
+    /// problem's potentials are **bitwise identical** to a standalone
+    /// [`Self::solve`] with the same warm start.
+    ///
+    /// `warm[p]`, when present with matching lengths, seeds problem `p`'s
+    /// duals (the serving layer's per-tenant cache); otherwise the plain
+    /// zeros init applies.  The config's own `warm_start` field is
+    /// ignored here — it is a single-problem knob.
+    ///
+    /// Restrictions (the caller falls back to sequential solves when they
+    /// do not hold): the strategy must be plain, the legacy anneal ladder
+    /// off, and every problem must resolve to the same schedule.
+    ///
+    /// Per-problem `SolveReport.io` sums the backend's batched per-problem
+    /// deltas, which exclude pool wall nanos (those are pool-wide and
+    /// unattributable to one problem of a fused dispatch).
+    pub fn solve_batch(
+        &self,
+        probs: &[&OtProblem],
+        warm: &[Option<Potentials>],
+    ) -> Result<Vec<(Potentials, SolveReport)>> {
+        anyhow::ensure!(
+            warm.len() == probs.len(),
+            "solve_batch: {} warm entries for {} problems",
+            warm.len(),
+            probs.len()
+        );
+        anyhow::ensure!(
+            self.cfg.strategy.is_plain(),
+            "solve_batch supports only the plain strategy"
+        );
+        anyhow::ensure!(
+            self.cfg.anneal_factor >= 1.0,
+            "solve_batch does not support the legacy anneal ladder"
+        );
+        if probs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let t0 = Instant::now();
+        let schedule = self.cfg.schedule.resolve(probs[0].n, probs[0].m, probs[0].d);
+        for p in probs {
+            anyhow::ensure!(
+                self.cfg.schedule.resolve(p.n, p.m, p.d) == schedule,
+                "solve_batch requires a uniform resolved schedule"
+            );
+        }
+        let alternating = schedule == Schedule::Alternating;
+        let batch = BatchedProblem::pack(probs)?;
+        let b = probs.len();
+
+        // packed dual init: walls stay 0.0 (their weights are 0.0, so the
+        // kernels never read them); each segment gets its warm start when
+        // the lengths match, else the plain zeros init (-alpha, -beta).
+        let mut fhat = vec![0.0f32; batch.rows()];
+        let mut ghat = vec![0.0f32; batch.cols()];
+        for (p, prob) in probs.iter().enumerate() {
+            let rr = batch.row_range(p);
+            let cr = batch.col_range(p);
+            match &warm[p] {
+                Some(w) if w.fhat.len() == prob.n && w.ghat.len() == prob.m => {
+                    fhat[rr].copy_from_slice(&w.fhat);
+                    ghat[cr].copy_from_slice(&w.ghat);
+                }
+                _ => {
+                    let (f0, g0) = self.cfg.strategy.init.shifted_duals(prob);
+                    fhat[rr].copy_from_slice(&f0);
+                    ghat[cr].copy_from_slice(&g0);
+                }
+            }
+        }
+
+        let k_fused = self.backend.k_fused();
+        let have_fused = self.cfg.use_fused && self.backend.has(&schedule.fused_op(k_fused));
+
+        let mut active = vec![true; b];
+        let mut delta = vec![f32::INFINITY; b];
+        let mut final_iters = vec![0usize; b];
+        let mut io = vec![crate::obs::IoStats::default(); b];
+        let mut iters = 0usize;
+        while iters < self.cfg.max_iters && active.iter().any(|&a| a) {
+            // identical step choice to the sequential loop at this count
+            let k = if have_fused && self.cfg.max_iters - iters >= k_fused {
+                k_fused
+            } else {
+                1
+            };
+            let outs =
+                self.backend.lse_step_batch(&batch, &mut fhat, &mut ghat, &active, k, alternating)?;
+            iters += k;
+            for p in 0..b {
+                if !active[p] {
+                    continue;
+                }
+                delta[p] = outs[p].df.max(outs[p].dg);
+                io[p].add(&outs[p].io);
+                if delta[p] <= self.cfg.tol || iters >= self.cfg.max_iters {
+                    active[p] = false;
+                    final_iters[p] = iters;
+                }
+            }
+        }
+
+        let wall = t0.elapsed();
+        let mut results = Vec::with_capacity(b);
+        for (p, prob) in probs.iter().enumerate() {
+            let pot = Potentials {
+                fhat: fhat[batch.row_range(p)].to_vec(),
+                ghat: ghat[batch.col_range(p)].to_vec(),
+            };
+            let cost = dual_cost(prob, &pot);
+            results.push((
+                pot,
+                SolveReport {
+                    iters: final_iters[p],
+                    final_delta: delta[p],
+                    cost,
+                    converged: delta[p] <= self.cfg.tol,
+                    wall,
+                    schedule,
+                    bucket: (prob.n, prob.m, prob.d),
+                    stages: vec![StageTrace {
+                        kind: "sinkhorn",
+                        eps: prob.eps,
+                        iters: final_iters[p],
+                        final_delta: delta[p],
+                        cg_iters: 0,
+                    }],
+                    io: io[p],
+                },
+            ));
+        }
+        Ok(results)
+    }
 }
 
 /// Copy `v` into a zero-padded vector of length `len`.
@@ -539,6 +681,87 @@ mod tests {
             warm.cost,
             cold.cost
         );
+    }
+
+    #[test]
+    fn solve_batch_matches_sequential_bitwise() {
+        let backend = crate::native::NativeBackend::default();
+        let probs: Vec<OtProblem> = (0..3)
+            .map(|i| {
+                let (n, m) = (16 + 4 * i, 12 + 3 * i);
+                OtProblem::uniform(
+                    crate::data::clouds::uniform_cloud(n, 3, 10 + i as u64),
+                    crate::data::clouds::uniform_cloud(m, 3, 20 + i as u64),
+                    n,
+                    m,
+                    3,
+                    0.15,
+                )
+                .unwrap()
+            })
+            .collect();
+        let solver = SinkhornSolver::new(&backend, SolverConfig::default());
+        let refs: Vec<&OtProblem> = probs.iter().collect();
+        let batched = solver.solve_batch(&refs, &[None, None, None]).unwrap();
+        assert_eq!(batched.len(), 3);
+        for (p, prob) in probs.iter().enumerate() {
+            let (pot, rep) = solver.solve(prob).unwrap();
+            let (bpot, brep) = &batched[p];
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&pot.fhat), bits(&bpot.fhat), "problem {p} fhat");
+            assert_eq!(bits(&pot.ghat), bits(&bpot.ghat), "problem {p} ghat");
+            assert_eq!(rep.iters, brep.iters, "problem {p} iters");
+            assert_eq!(rep.cost.to_bits(), brep.cost.to_bits(), "problem {p} cost");
+            assert_eq!(rep.converged, brep.converged);
+            assert_eq!(brep.stages.len(), 1);
+        }
+    }
+
+    #[test]
+    fn solve_batch_warm_start_matches_sequential_warm_start() {
+        let backend = crate::native::NativeBackend::default();
+        let prob = OtProblem::uniform(
+            crate::data::clouds::uniform_cloud(24, 4, 31),
+            crate::data::clouds::uniform_cloud(20, 4, 32),
+            24,
+            20,
+            4,
+            0.1,
+        )
+        .unwrap();
+        let cold = SinkhornSolver::new(&backend, SolverConfig::default());
+        let (pot, _) = cold.solve(&prob).unwrap();
+        let warm_cfg = SolverConfig { warm_start: Some(pot.clone()), ..SolverConfig::default() };
+        let (spot, srep) = SinkhornSolver::new(&backend, warm_cfg).solve(&prob).unwrap();
+        let batched = cold.solve_batch(&[&prob], &[Some(pot)]).unwrap();
+        let (bpot, brep) = &batched[0];
+        assert_eq!(srep.iters, brep.iters);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&spot.fhat), bits(&bpot.fhat));
+        assert_eq!(bits(&spot.ghat), bits(&bpot.ghat));
+    }
+
+    #[test]
+    fn solve_batch_rejects_non_plain_configs() {
+        let backend = crate::native::NativeBackend::default();
+        let prob = OtProblem::uniform(
+            crate::data::clouds::uniform_cloud(8, 2, 1),
+            crate::data::clouds::uniform_cloud(8, 2, 2),
+            8,
+            8,
+            2,
+            0.3,
+        )
+        .unwrap();
+        let anneal = SolverConfig { anneal_factor: 0.9, ..SolverConfig::default() };
+        assert!(SinkhornSolver::new(&backend, anneal)
+            .solve_batch(&[&prob], &[None])
+            .is_err());
+        let solver = SinkhornSolver::new(&backend, SolverConfig::default());
+        // warm-vector length mismatch
+        assert!(solver.solve_batch(&[&prob], &[]).is_err());
+        // empty batch is fine
+        assert!(solver.solve_batch(&[], &[]).unwrap().is_empty());
     }
 
     #[test]

@@ -23,11 +23,26 @@
 //! The dual objective itself stays host-side ([`crate::ot::cost`]): it is
 //! O(n + m) and never worth a backend round trip.
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::router::Router;
+use crate::ot::problem::BatchedProblem;
 
 use super::tensor::Tensor;
+
+/// Per-problem outcome of one batched step block
+/// ([`ComputeBackend::lse_step_batch`]).
+#[derive(Debug, Clone, Default)]
+pub struct BatchStepOut {
+    /// Sup-norm f change of the final inner iteration (0 when frozen).
+    pub df: f32,
+    /// Sup-norm g change of the final inner iteration (0 when frozen).
+    pub dg: f32,
+    /// This problem's share of the batched call's IO/work — exactly what a
+    /// sequential solve of the problem would have charged, so per-job
+    /// `SolveReport::io` stays exact under batching.
+    pub io: crate::obs::IoStats,
+}
 
 /// A backend that evaluates fused streaming OT ops on host tensors.
 pub trait ComputeBackend {
@@ -64,6 +79,141 @@ pub trait ComputeBackend {
     fn io_stats(&self) -> crate::obs::IoStats {
         crate::obs::IoStats::default()
     }
+
+    /// One batched Sinkhorn step block: `k` inner iterations over every
+    /// *active* problem of `batch`, updating the packed shifted duals in
+    /// place (wall entries and frozen problems are left untouched).
+    /// `k > 1` requests the fused `k{k}_*` op semantics; callers pass
+    /// `k == self.k_fused()` only when [`Self::has`] confirmed the fused op.
+    ///
+    /// The default walks the problems one by one through [`Self::call`] —
+    /// one dispatch per problem, bitwise identical to a sequential solve by
+    /// definition, so every backend supports the batched API.  Backends
+    /// with a genuinely fused path (native) override this with one pool
+    /// fan-out over the packed row range.
+    fn lse_step_batch(
+        &self,
+        batch: &BatchedProblem,
+        fhat: &mut [f32],
+        ghat: &mut [f32],
+        active: &[bool],
+        k: usize,
+        alternating: bool,
+    ) -> Result<Vec<BatchStepOut>> {
+        check_batch_state(batch, fhat, ghat, active)?;
+        let sched = if alternating { "alternating" } else { "symmetric" };
+        let op = if k <= 1 { format!("{sched}_step") } else { format!("k{k}_{sched}") };
+        let mut outs = Vec::with_capacity(batch.len());
+        for p in 0..batch.len() {
+            if !active[p] {
+                outs.push(BatchStepOut::default());
+                continue;
+            }
+            let prob = batch.problem(p);
+            let (rr, cr) = (batch.row_range(p), batch.col_range(p));
+            let io0 = self.io_stats();
+            let res = self.call(
+                &op,
+                &[
+                    Tensor::matrix(prob.n, prob.d, prob.x.clone()),
+                    Tensor::matrix(prob.m, prob.d, prob.y.clone()),
+                    Tensor::vector(fhat[rr.clone()].to_vec()),
+                    Tensor::vector(ghat[cr.clone()].to_vec()),
+                    Tensor::vector(prob.a.clone()),
+                    Tensor::vector(prob.b.clone()),
+                    Tensor::scalar(prob.eps),
+                ],
+            )?;
+            if res.len() < 4 {
+                bail!("{op}: step returned {} outputs, expected 4", res.len());
+            }
+            fhat[rr].copy_from_slice(res[0].as_f32()?);
+            ghat[cr].copy_from_slice(res[1].as_f32()?);
+            outs.push(BatchStepOut {
+                df: res[2].item()?,
+                dg: res[3].item()?,
+                io: self.io_stats().delta_since(&io0),
+            });
+        }
+        Ok(outs)
+    }
+
+    /// Batched forward transport application: `(P V, r)` rows for every
+    /// active problem, with `v` a `cols() x p_width` panel packed like the
+    /// target side (wall rows of the outputs stay zero).  `p_width` must be
+    /// 1 or `batch.d` — the op table's `p1`/`pd` variants.  Default: one
+    /// [`Self::call`] per problem; native overrides with one fan-out.
+    fn apply_batch(
+        &self,
+        batch: &BatchedProblem,
+        fhat: &[f32],
+        ghat: &[f32],
+        active: &[bool],
+        v: &[f32],
+        p_width: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let op = match p_width {
+            1 => "apply_pv_p1",
+            w if w == batch.d => "apply_pv_pd",
+            w => bail!("apply_batch: panel width {w} is neither 1 nor d={}", batch.d),
+        };
+        if fhat.len() != batch.rows() || ghat.len() != batch.cols() {
+            bail!("apply_batch: packed dual lengths do not match the batch");
+        }
+        if v.len() != batch.cols() * p_width || active.len() != batch.len() {
+            bail!("apply_batch: panel/active lengths do not match the batch");
+        }
+        let mut pv = vec![0.0f32; batch.rows() * p_width];
+        let mut r = vec![0.0f32; batch.rows()];
+        for p in 0..batch.len() {
+            if !active[p] {
+                continue;
+            }
+            let prob = batch.problem(p);
+            let (rr, cr) = (batch.row_range(p), batch.col_range(p));
+            let res = self.call(
+                op,
+                &[
+                    Tensor::matrix(prob.n, prob.d, prob.x.clone()),
+                    Tensor::matrix(prob.m, prob.d, prob.y.clone()),
+                    Tensor::vector(fhat[rr.clone()].to_vec()),
+                    Tensor::vector(ghat[cr.clone()].to_vec()),
+                    Tensor::vector(prob.a.clone()),
+                    Tensor::vector(prob.b.clone()),
+                    Tensor::matrix(prob.m, p_width, v[cr.start * p_width..cr.end * p_width].to_vec()),
+                    Tensor::scalar(prob.eps),
+                ],
+            )?;
+            if res.len() < 2 {
+                bail!("{op}: apply returned {} outputs, expected 2", res.len());
+            }
+            pv[rr.start * p_width..rr.end * p_width].copy_from_slice(res[0].as_f32()?);
+            r[rr].copy_from_slice(res[1].as_f32()?);
+        }
+        Ok((pv, r))
+    }
+}
+
+/// Shared argument validation for [`ComputeBackend::lse_step_batch`]
+/// implementations.
+pub fn check_batch_state(
+    batch: &BatchedProblem,
+    fhat: &[f32],
+    ghat: &[f32],
+    active: &[bool],
+) -> Result<()> {
+    if fhat.len() != batch.rows() || ghat.len() != batch.cols() || active.len() != batch.len() {
+        bail!(
+            "batched state mismatch: fhat {} vs rows {}, ghat {} vs cols {}, active {} vs B {}",
+            fhat.len(),
+            batch.rows(),
+            ghat.len(),
+            batch.cols(),
+            active.len(),
+            batch.len()
+        );
+    }
+    Ok(())
 }
 
 /// Strip the `__n{n}_m{m}_d{d}` bucket suffix from an artifact key,

@@ -17,7 +17,7 @@ pub mod engine;
 pub mod tensor;
 
 pub use artifacts::{Entry, Manifest};
-pub use backend::{ComputeBackend, PreparedCall};
+pub use backend::{BatchStepOut, ComputeBackend, PreparedCall};
 #[cfg(feature = "pjrt")]
 pub use engine::Engine;
 pub use tensor::Tensor;

@@ -1,0 +1,255 @@
+//! Batched many-small-OT parity wall: `SinkhornSolver::solve_batch` (one
+//! fused pass over packed NEG_INF-walled tiles) against per-problem
+//! `solve`, asserted **bitwise** — same potentials bits, same cost bits,
+//! same iteration counts — across batch sizes, ragged shapes inside a
+//! class envelope, zero-weight rows/columns and a low-eps near-overflow
+//! regime.  The counting mirror (`tests/backend_parity.rs` style) pins
+//! IoStats conservation: the fused dispatch charges per problem exactly
+//! what that problem's standalone solve charges.
+
+use flash_sinkhorn::data::clouds::{random_simplex, uniform_cloud};
+use flash_sinkhorn::native::NativeBackend;
+use flash_sinkhorn::obs::IoStats;
+use flash_sinkhorn::ot::{OtProblem, Potentials, Schedule, SinkhornSolver, SolverConfig};
+
+/// A small ragged problem inside the (16, 16, 5) class envelope.  d = 5
+/// (d % 8 != 0) keeps the SIMD tail path in play; eps varies per seed
+/// because the serving router coalesces by shape only, never by eps.
+fn small_problem(seed: u64) -> OtProblem {
+    let n = 9 + (seed as usize * 3) % 8; // 9..=16, ragged
+    let m = 7 + (seed as usize * 5) % 8; // 7..=14, ragged
+    let d = 5;
+    let eps = [0.2f32, 0.15, 0.3][seed as usize % 3];
+    OtProblem::new(
+        uniform_cloud(n, d, seed),
+        uniform_cloud(m, d, seed + 1000),
+        random_simplex(n, seed + 2000),
+        random_simplex(m, seed + 3000),
+        n,
+        m,
+        d,
+        eps,
+    )
+    .unwrap()
+}
+
+fn cfg_for(schedule: Schedule) -> SolverConfig {
+    SolverConfig { schedule, ..SolverConfig::default() }
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Assert one batched result is bit-for-bit the sequential result.
+fn assert_bitwise(
+    tag: &str,
+    batched: &(Potentials, flash_sinkhorn::ot::SolveReport),
+    seq: &(Potentials, flash_sinkhorn::ot::SolveReport),
+) {
+    assert_eq!(bits(&batched.0.fhat), bits(&seq.0.fhat), "{tag}: fhat bits differ");
+    assert_eq!(bits(&batched.0.ghat), bits(&seq.0.ghat), "{tag}: ghat bits differ");
+    assert_eq!(
+        batched.1.cost.to_bits(),
+        seq.1.cost.to_bits(),
+        "{tag}: cost bits differ ({} vs {})",
+        batched.1.cost,
+        seq.1.cost
+    );
+    assert_eq!(batched.1.iters, seq.1.iters, "{tag}: iteration counts differ");
+    assert_eq!(batched.1.converged, seq.1.converged, "{tag}: convergence differs");
+    assert_eq!(batched.1.schedule, seq.1.schedule, "{tag}: schedule differs");
+    assert_eq!(batched.1.stages.len(), 1, "{tag}: plain batched solve must have one stage");
+}
+
+#[test]
+fn batched_matches_sequential_bitwise_across_batch_sizes() {
+    let backend = NativeBackend::default();
+    for schedule in [Schedule::Alternating, Schedule::Symmetric] {
+        let solver = SinkhornSolver::new(&backend, cfg_for(schedule));
+        for bsz in [1usize, 2, 7, 32] {
+            let probs: Vec<OtProblem> =
+                (0..bsz).map(|i| small_problem(17 * i as u64 + 1)).collect();
+            let refs: Vec<&OtProblem> = probs.iter().collect();
+            let warm: Vec<Option<Potentials>> = vec![None; bsz];
+            let batched = solver.solve_batch(&refs, &warm).unwrap();
+            assert_eq!(batched.len(), bsz);
+            for (p, prob) in probs.iter().enumerate() {
+                let seq = solver.solve(prob).unwrap();
+                assert_bitwise(&format!("{schedule:?} B={bsz} p={p}"), &batched[p], &seq);
+                assert!(seq.1.converged, "{schedule:?} B={bsz} p={p}: expected convergence");
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_warm_started_problems_match_sequential_warm_starts() {
+    let backend = NativeBackend::default();
+    let solver = SinkhornSolver::new(&backend, cfg_for(Schedule::Alternating));
+    let probs: Vec<OtProblem> = (0..5).map(|i| small_problem(91 * i + 3)).collect();
+    let refs: Vec<&OtProblem> = probs.iter().collect();
+
+    // cold pass yields warm duals; perturbing eps makes the rerun do work
+    let cold = solver.solve_batch(&refs, &vec![None; probs.len()]).unwrap();
+    let reruns: Vec<OtProblem> = probs
+        .iter()
+        .map(|p| {
+            let mut q = p.clone();
+            q.eps *= 1.1;
+            q
+        })
+        .collect();
+    let rerun_refs: Vec<&OtProblem> = reruns.iter().collect();
+    // mix warm and cold entries: odd slots go back to the zeros init
+    let warm: Vec<Option<Potentials>> = cold
+        .iter()
+        .enumerate()
+        .map(|(i, (pot, _))| (i % 2 == 0).then(|| pot.clone()))
+        .collect();
+    let batched = solver.solve_batch(&rerun_refs, &warm).unwrap();
+    for (p, prob) in reruns.iter().enumerate() {
+        let seq_cfg = SolverConfig {
+            warm_start: warm[p].clone(),
+            ..cfg_for(Schedule::Alternating)
+        };
+        let seq = SinkhornSolver::new(&backend, seq_cfg).solve(prob).unwrap();
+        assert_bitwise(&format!("warm p={p}"), &batched[p], &seq);
+    }
+}
+
+#[test]
+fn batched_zero_weight_rows_and_columns_stay_bitwise() {
+    let backend = NativeBackend::default();
+    let solver = SinkhornSolver::new(&backend, cfg_for(Schedule::Symmetric));
+    let (n, m, d) = (11usize, 9usize, 5usize);
+    let probs: Vec<OtProblem> = (0..4)
+        .map(|i| {
+            let seed = 400 + i as u64;
+            // shift all of entry 0's (resp. the last entry's) mass onto its
+            // neighbour: sums stay 1, the zeroed row/column must contribute
+            // bitwise-nothing (its bias is NEG_INF under the mask contract)
+            let mut a = random_simplex(n, seed);
+            a[1] += a[0];
+            a[0] = 0.0;
+            let mut b = random_simplex(m, seed + 50);
+            b[m - 2] += b[m - 1];
+            b[m - 1] = 0.0;
+            OtProblem::new(
+                uniform_cloud(n, d, seed + 100),
+                uniform_cloud(m, d, seed + 200),
+                a,
+                b,
+                n,
+                m,
+                d,
+                0.25,
+            )
+            .unwrap()
+        })
+        .collect();
+    let refs: Vec<&OtProblem> = probs.iter().collect();
+    let batched = solver.solve_batch(&refs, &vec![None; probs.len()]).unwrap();
+    for (p, prob) in probs.iter().enumerate() {
+        let seq = solver.solve(prob).unwrap();
+        assert_bitwise(&format!("zero-weight p={p}"), &batched[p], &seq);
+    }
+}
+
+#[test]
+fn batched_low_eps_near_overflow_scores_stay_bitwise() {
+    let backend = NativeBackend::default();
+    let solver = SinkhornSolver::new(&backend, cfg_for(Schedule::Alternating));
+    let (d, eps) = (5usize, 0.01f32);
+    let probs: Vec<OtProblem> = (0..6)
+        .map(|i| {
+            let seed = 700 + i as u64;
+            let (n, m) = (10 + i % 4, 8 + i % 5);
+            // spread the clouds out: |x - y|^2 / eps reaches ~1e3-scale
+            // scores, stressing the streaming max-shift in the LSE kernels
+            let scale = 3.0f32;
+            let x: Vec<f32> = uniform_cloud(n, d, seed).iter().map(|v| v * scale).collect();
+            let y: Vec<f32> =
+                uniform_cloud(m, d, seed + 10).iter().map(|v| v * scale + 1.0).collect();
+            OtProblem::new(
+                x,
+                y,
+                random_simplex(n, seed + 20),
+                random_simplex(m, seed + 30),
+                n,
+                m,
+                d,
+                eps,
+            )
+            .unwrap()
+        })
+        .collect();
+    let refs: Vec<&OtProblem> = probs.iter().collect();
+    let batched = solver.solve_batch(&refs, &vec![None; probs.len()]).unwrap();
+    for (p, prob) in probs.iter().enumerate() {
+        let seq = solver.solve(prob).unwrap();
+        assert_bitwise(&format!("low-eps p={p}"), &batched[p], &seq);
+        assert!(batched[p].1.cost.is_finite(), "low-eps p={p}: cost must stay finite");
+    }
+}
+
+/// IO-accounting conservation, mirroring
+/// `fused_k_step_io_accounting_equals_sum_of_k_single_steps` in
+/// `tests/backend_parity.rs`: the fused batched dispatch must charge each
+/// problem exactly what that problem's standalone solve charges — per
+/// problem, not merely in aggregate — and the batch total must be the sum
+/// of the parts.  Pool nanos are pool-wide wall time (unattributable to
+/// one problem of a fused dispatch, and excluded from the batched
+/// per-problem deltas by contract), so they are zeroed before comparing.
+#[test]
+fn batched_io_accounting_equals_sum_of_sequential_solves() {
+    let zero_pool = |mut s: IoStats| {
+        s.pool_busy_nanos = 0;
+        s.pool_idle_nanos = 0;
+        s.pool_steal_nanos = 0;
+        s
+    };
+    let probs: Vec<OtProblem> = (0..7).map(|i| small_problem(55 * i + 11)).collect();
+    let refs: Vec<&OtProblem> = probs.iter().collect();
+
+    let fused_b = NativeBackend::default().with_counters(true);
+    let fused_solver = SinkhornSolver::new(&fused_b, cfg_for(Schedule::Alternating));
+    let batched = fused_solver.solve_batch(&refs, &vec![None; probs.len()]).unwrap();
+
+    let seq_b = NativeBackend::default().with_counters(true);
+    let seq_solver = SinkhornSolver::new(&seq_b, cfg_for(Schedule::Alternating));
+    let mut seq_ios = Vec::with_capacity(probs.len());
+    for (p, prob) in probs.iter().enumerate() {
+        let (_, report) = seq_solver.solve(prob).unwrap();
+        let seq_io = zero_pool(report.io);
+        let fused_io = zero_pool(batched[p].1.io);
+        assert!(!fused_io.is_zero(), "p={p}: batched counters must move");
+        assert_eq!(
+            fused_io, seq_io,
+            "p={p}: batched per-problem accounting diverged from the standalone solve"
+        );
+        seq_ios.push(seq_io);
+    }
+    // sum conservation: B problems fused cost precisely what B sequential
+    // solves cost
+    let fused_total = zero_pool(IoStats::sum(batched.iter().map(|(_, r)| &r.io)));
+    assert_eq!(fused_total, zero_pool(IoStats::sum(seq_ios.iter())));
+}
+
+/// The counter gate: with counters off (the default), batched per-problem
+/// io must be all-zeros exactly like the sequential `SolveReport.io`, so
+/// flipping batching on cannot perturb metrics when observability is off.
+#[test]
+fn batched_io_is_zero_when_counters_are_off() {
+    let backend = NativeBackend::default().with_counters(false);
+    let solver = SinkhornSolver::new(&backend, cfg_for(Schedule::Alternating));
+    let probs: Vec<OtProblem> = (0..3).map(|i| small_problem(31 * i + 7)).collect();
+    let refs: Vec<&OtProblem> = probs.iter().collect();
+    let batched = solver.solve_batch(&refs, &vec![None; probs.len()]).unwrap();
+    for (p, prob) in probs.iter().enumerate() {
+        assert!(batched[p].1.io.is_zero(), "p={p}: gated-off batched io must stay zero");
+        let seq = solver.solve(prob).unwrap();
+        assert!(seq.1.io.is_zero(), "p={p}: gated-off sequential io must stay zero");
+        assert_bitwise(&format!("gated p={p}"), &batched[p], &seq);
+    }
+}

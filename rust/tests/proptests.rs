@@ -407,6 +407,128 @@ fn prop_json_roundtrip() {
     }
 }
 
+// ---------- batched small-OT packing and routing --------------------------
+
+#[test]
+fn prop_batched_pack_unpack_roundtrip_is_bitwise() {
+    use flash_sinkhorn::ot::problem::{BatchedProblem, BATCH_WALL};
+    let mut rng = Rng::new(21);
+    for case in 0..CASES {
+        let bsz = 1 + rng.below(6);
+        let d = 1 + rng.below(8);
+        let probs: Vec<OtProblem> = (0..bsz)
+            .map(|p| {
+                let n = 1 + rng.below(20);
+                let m = 1 + rng.below(20);
+                let seed = (case * 100 + p) as u64;
+                OtProblem::new(
+                    uniform_cloud(n, d, seed),
+                    uniform_cloud(m, d, seed + 1),
+                    random_simplex(n, seed + 2),
+                    random_simplex(m, seed + 3),
+                    n,
+                    m,
+                    d,
+                    0.05 + rng.f32() * 0.5,
+                )
+                .unwrap()
+            })
+            .collect();
+        let refs: Vec<&OtProblem> = probs.iter().collect();
+        let batch = BatchedProblem::pack(&refs).unwrap();
+
+        // total extents conserved: every input row plus one wall per gap
+        let total_n: usize = probs.iter().map(|p| p.n).sum();
+        let total_m: usize = probs.iter().map(|p| p.m).sum();
+        assert_eq!(batch.rows(), total_n + bsz - 1, "case {case}: row count");
+        assert_eq!(batch.cols(), total_m + bsz - 1, "case {case}: col count");
+
+        // offsets strictly increasing, segments disjoint with exactly one
+        // wall row/column between neighbours
+        for p in 1..bsz {
+            assert_eq!(
+                batch.row_off[p],
+                batch.row_off[p - 1] + probs[p - 1].n + 1,
+                "case {case}: row segments not wall-separated"
+            );
+            assert_eq!(
+                batch.col_off[p],
+                batch.col_off[p - 1] + probs[p - 1].m + 1,
+                "case {case}: col segments not wall-separated"
+            );
+        }
+
+        // the row/col -> problem maps agree with the ranges, and walls sit
+        // exactly on the separators with zero weight and zero points
+        let rmap = batch.row_prob_map();
+        let cmap = batch.col_prob_map();
+        for p in 0..bsz {
+            assert!(rmap[batch.row_range(p)].iter().all(|&v| v == p as u32), "case {case}");
+            assert!(cmap[batch.col_range(p)].iter().all(|&v| v == p as u32), "case {case}");
+        }
+        for (r, &owner) in rmap.iter().enumerate() {
+            if owner == BATCH_WALL {
+                assert_eq!(batch.a[r], 0.0, "case {case}: wall row {r} carries weight");
+                assert!(
+                    batch.x[r * d..(r + 1) * d].iter().all(|&v| v == 0.0),
+                    "case {case}: wall row {r} carries points"
+                );
+            }
+        }
+        assert_eq!(
+            rmap.iter().filter(|&&v| v == BATCH_WALL).count(),
+            bsz - 1,
+            "case {case}: wall count"
+        );
+
+        // bit-exact recovery of every input
+        for (p, orig) in probs.iter().enumerate() {
+            let got = batch.problem(p);
+            let b32 = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(b32(&got.x), b32(&orig.x), "case {case} p={p}: x bits");
+            assert_eq!(b32(&got.y), b32(&orig.y), "case {case} p={p}: y bits");
+            assert_eq!(b32(&got.a), b32(&orig.a), "case {case} p={p}: a bits");
+            assert_eq!(b32(&got.b), b32(&orig.b), "case {case} p={p}: b bits");
+            assert_eq!((got.n, got.m, got.d), (orig.n, orig.m, orig.d), "case {case} p={p}");
+            assert_eq!(got.eps.to_bits(), orig.eps.to_bits(), "case {case} p={p}: eps bits");
+        }
+    }
+}
+
+#[test]
+fn prop_batch_routing_predicate_tracks_the_class_envelope() {
+    use flash_sinkhorn::coordinator::router::{batches_below, class_of};
+    let mut rng = Rng::new(22);
+    for case in 0..500 {
+        let n = 1 + rng.below(4096);
+        let m = 1 + rng.below(4096);
+        let d = 1 + rng.below(4096);
+        let t = rng.below(5000);
+        let class = class_of(n, m, d);
+        let got = batches_below(&class, t);
+        // a class batches iff the threshold is on and BOTH row envelopes
+        // fit under it; d never participates
+        assert_eq!(
+            got,
+            t > 0 && class.0 <= t && class.1 <= t,
+            "case {case}: n={n} m={m} d={d} t={t} class={class:?}"
+        );
+        // threshold 0 is the hard off switch
+        assert!(!batches_below(&class, 0), "case {case}: threshold 0 must never batch");
+        // monotone in the threshold: once batched, a looser bound batches too
+        if got {
+            assert!(batches_below(&class, t + 1 + rng.below(100)), "case {case}: not monotone");
+        }
+        // d-independence: the same (n, m) at any other d routes identically
+        let d2 = 1 + rng.below(4096);
+        assert_eq!(
+            batches_below(&class_of(n, m, d2), t),
+            got,
+            "case {case}: d changed the routing decision"
+        );
+    }
+}
+
 // ---------- backend-backed invariants (fewer cases; each runs solves) -----
 
 #[test]

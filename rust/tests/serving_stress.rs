@@ -628,6 +628,215 @@ fn trace_ring_is_deterministic_under_the_virtual_clock() {
     assert_eq!(plain.trace_dropped(), 0);
 }
 
+// ---------- batched small-OT serving path ---------------------------------
+
+/// One pacer-paced round schedule against a single actor: the long pacer
+/// job pins the actor while `SMALLS` same-class tolerance-driven jobs
+/// queue behind it, so they dispatch as one class batch (fused when
+/// `batch_threshold` covers their class, per-job otherwise).  Returns
+/// (cost bits, iters) in submission order plus the final metrics.
+fn batched_rounds(
+    batch_threshold: usize,
+) -> (Vec<u64>, Vec<usize>, flash_sinkhorn::coordinator::metrics::Snapshot) {
+    const ROUNDS: u64 = 3;
+    const SMALLS: u64 = 4; // == max_batch: one full fused dispatch per round
+    let clock = Arc::new(VirtualClock::new());
+    let mut cfg = config(1, 1);
+    cfg.service.batch_threshold = batch_threshold;
+    let handle = service::spawn_with_clock(cfg, Arc::clone(&clock) as Arc<dyn Clock>).unwrap();
+    let (mut bits, mut iters) = (Vec::new(), Vec::new());
+    for round in 0..ROUNDS {
+        // the pacer pins the only actor (fixed-iters: never fused itself),
+        // so all small submissions are queued together before dispatch
+        let pacer = handle
+            .try_submit(request((256, 256), 20_000 + round, 400, "pacer"))
+            .expect("pacer admitted");
+        let pendings: Vec<_> = (0..SMALLS)
+            .map(|i| {
+                let req = tol_request((24, 24), 21_000 + round * 10 + i, "small");
+                handle.try_submit(req).expect("quotas off: must admit")
+            })
+            .collect();
+        pacer.recv().unwrap();
+        for p in pendings {
+            let resp = p.recv().expect("batched jobs must complete");
+            assert!(resp.cost.is_finite());
+            bits.push(resp.cost.to_bits());
+            iters.push(resp.iters);
+        }
+        clock.advance(Duration::from_millis(100));
+    }
+    (bits, iters, handle.metrics())
+}
+
+/// The batched-path acceptance gate: flipping `batch_threshold` on routes
+/// the small class through the fused packed dispatch — and every per-job
+/// result is **bitwise identical** to the batched-off run of the same
+/// trace (parity by construction, end to end through the service).
+#[test]
+fn batched_on_matches_batched_off_bitwise() {
+    // class_of(24, 24, 4) = (32, 32, 4): a threshold of 32 covers it
+    let (bits_on, iters_on, m_on) = batched_rounds(32);
+    let (bits_off, iters_off, m_off) = batched_rounds(0);
+    assert_eq!(bits_on, bits_off, "fused serving changed result bits");
+    assert_eq!(iters_on, iters_off, "fused serving changed iteration counts");
+    // the on-run actually fused (4 small jobs per round, 3 rounds)...
+    assert_eq!(m_on.fused_batches, 3, "{m_on}");
+    assert_eq!(m_on.fused_jobs, 12, "{m_on}");
+    assert!((m_on.fused_occupancy - 4.0).abs() < 1e-9, "{m_on}");
+    // ...and the off-run never touched the fused path
+    assert_eq!((m_off.fused_batches, m_off.fused_jobs), (0, 0), "{m_off}");
+    assert_eq!(m_off.fused_occupancy, 0.0);
+    // both runs completed everything exactly once
+    assert_eq!(m_on.jobs_ok, m_off.jobs_ok);
+    assert_eq!(m_on.jobs_failed + m_off.jobs_failed, 0);
+}
+
+/// `batch_threshold = 0` (the default) is the hard off switch: serving is
+/// bitwise identical to the direct solver — the batched routing layer must
+/// not perturb the pre-existing path — and no fused series ever move.
+#[test]
+fn batch_threshold_zero_stays_bitwise_identical_to_the_direct_solver() {
+    let clock = Arc::new(VirtualClock::new());
+    let mut cfg = config(1, 1);
+    cfg.solver.max_iters = 50; // keep the debug-mode sweep quick; bitwise either way
+    assert_eq!(cfg.service.batch_threshold, 0, "batching must default to off");
+    let backend = flash_sinkhorn::backend_from_config(&cfg).unwrap();
+    let solver_cfg = SolverConfig::from_section(&cfg.solver).unwrap();
+    let handle = service::spawn_with_clock(cfg, Arc::clone(&clock) as Arc<dyn Clock>).unwrap();
+    for (i, &shape) in SHAPES.iter().enumerate() {
+        let req = tol_request(shape, 70 + i as u64, "t");
+        let prob = req.problem.clone();
+        let served = handle.try_submit(req).unwrap().recv().unwrap();
+        let (_, direct) =
+            SinkhornSolver::new(backend.as_ref(), solver_cfg.clone()).solve(&prob).unwrap();
+        assert_eq!(
+            served.cost.to_bits(),
+            direct.cost.to_bits(),
+            "threshold-0 serving diverged from the direct solver on {shape:?}"
+        );
+        assert_eq!(served.iters, direct.iters);
+    }
+    let m = handle.metrics();
+    assert_eq!((m.fused_batches, m.fused_jobs), (0, 0), "fused series must stay zero");
+    assert_eq!(m.fused_occupancy, 0.0);
+}
+
+/// The fused trace contract: one `Dispatched` covers the whole fused
+/// batch while every job still gets its own `Completed` (and stage
+/// bracket), all correlated by admission seq.
+#[test]
+fn fused_batch_traces_one_dispatch_with_per_job_completions() {
+    let clock = Arc::new(VirtualClock::new());
+    let mut cfg = config(1, 1);
+    cfg.service.obs = "trace:256".into();
+    cfg.service.batch_threshold = 32;
+    let handle = service::spawn_with_clock(cfg, Arc::clone(&clock) as Arc<dyn Clock>).unwrap();
+    // pin the actor so the three small jobs coalesce into one batch
+    let pacer = handle.try_submit(request((256, 256), 1, 400, "pacer")).unwrap();
+    let pendings: Vec<_> = (0..3u64)
+        .map(|i| handle.try_submit(tol_request((24, 24), 30 + i, "small")).unwrap())
+        .collect();
+    pacer.recv().unwrap();
+    for p in pendings {
+        p.recv().unwrap();
+    }
+    assert_eq!(handle.trace_dropped(), 0);
+    let events = handle.drain_trace();
+    // the small jobs hold seqs 1..=3 (the pacer is seq 0)
+    let small = |seq: u64| (1..=3).contains(&seq);
+    let mut dispatched = Vec::new();
+    let mut completed = Vec::new();
+    let mut batched_size = None;
+    for e in events.iter().filter(|e| small(e.seq)) {
+        match &e.kind {
+            TraceKind::Dispatched { .. } => dispatched.push(e.seq),
+            TraceKind::Completed { iters, cost } => {
+                assert!(*iters > 0 && cost.is_finite());
+                completed.push(e.seq);
+            }
+            TraceKind::Batched { size, .. } => batched_size = Some(*size),
+            _ => {}
+        }
+    }
+    assert_eq!(dispatched, vec![1], "exactly one Dispatched, on the batch's first seq");
+    assert_eq!(batched_size, Some(3), "the Batched event carries the fused size");
+    assert_eq!(completed, vec![1, 2, 3], "every fused job gets its own Completed");
+    // each fused job still gets its stage bracket
+    for seq in 1..=3u64 {
+        let names: Vec<&str> =
+            events.iter().filter(|e| e.seq == seq).map(|e| e.kind.name()).collect();
+        assert!(names.contains(&"stage_started"), "seq {seq}: {names:?}");
+        assert!(names.contains(&"stage_finished"), "seq {seq}: {names:?}");
+    }
+}
+
+/// Multi-tenant batched soak: one tenant floods a tiny class (fused under
+/// the threshold) while another tenant runs large solves (over it) — the
+/// small tenant's jobs coalesce into fused dispatches, the large tenant
+/// is never starved, and every served cost is bitwise the direct solver's.
+#[test]
+fn soak_batched_small_tenant_does_not_starve_large_class_tenant() {
+    let clock = Arc::new(VirtualClock::new());
+    let mut cfg = config(1, 1);
+    cfg.service.batch_threshold = 32;
+    let backend = flash_sinkhorn::backend_from_config(&cfg).unwrap();
+    let solver_cfg = SolverConfig::from_section(&cfg.solver).unwrap();
+    let handle = service::spawn_with_clock(cfg, Arc::clone(&clock) as Arc<dyn Clock>).unwrap();
+    const ROUNDS: u64 = 6;
+    let mut small_done = 0usize;
+    let mut large_done = 0usize;
+    for round in 0..ROUNDS {
+        // the pacer pins an actor so the round's smalls arrive together
+        let pacer = handle
+            .try_submit(request((256, 256), 40_000 + round, 200, "pacer"))
+            .unwrap();
+        let smalls: Vec<_> = (0..4u64)
+            .map(|i| {
+                let req = tol_request((24, 24), 41_000 + round * 10 + i, "many-small");
+                let prob = req.problem.clone();
+                (prob, handle.try_submit(req).unwrap())
+            })
+            .collect();
+        // the large-class tenant's job rides the same queue epoch
+        let large = handle.try_submit(tol_request((150, 120), 42_000 + round, "big")).unwrap();
+        pacer.recv().unwrap();
+        for (prob, p) in smalls {
+            let resp = p.recv().expect("small tenant must not be dropped");
+            let (_, direct) =
+                SinkhornSolver::new(backend.as_ref(), solver_cfg.clone()).solve(&prob).unwrap();
+            assert_eq!(
+                resp.cost.to_bits(),
+                direct.cost.to_bits(),
+                "round {round}: fused serving diverged from the direct solver"
+            );
+            small_done += 1;
+        }
+        large.recv().expect("large tenant starved");
+        large_done += 1;
+        clock.advance(Duration::from_millis(200));
+        handle.supervise_once();
+    }
+    let m = handle.metrics();
+    assert!(m.fused_batches >= ROUNDS, "every round's smalls must fuse: {m}");
+    assert!(m.fused_occupancy > 1.0, "fused dispatches must carry multiple jobs: {m}");
+    assert_eq!(m.jobs_failed, 0);
+    for (tenant, done) in [("many-small", small_done), ("big", large_done)] {
+        let t = m
+            .tenants
+            .iter()
+            .find(|t| t.tenant == tenant)
+            .unwrap_or_else(|| panic!("tenant {tenant} series missing"));
+        assert_eq!(t.jobs as usize, done, "tenant {tenant} completion accounting");
+        assert_eq!(
+            t.rejected_queue_full + t.rejected_rate_limited + t.rejected_tenant_cap,
+            0,
+            "quotas are off: tenant {tenant} must see zero rejections"
+        );
+    }
+    assert_eq!(m.queue_depth, 0, "soak must drain");
+}
+
 /// LRU under a byte budget, end to end through the service: a 1 MiB cache
 /// holds ~246 of these entries, so a 300-instance sweep must evict; the
 /// most recent instance still hits, the first (evicted) one misses.
