@@ -18,7 +18,9 @@ use flash_sinkhorn::data::clouds::uniform_cloud;
 use flash_sinkhorn::iomodel::device::A100;
 use flash_sinkhorn::iomodel::plans::{Pass, Workload};
 use flash_sinkhorn::iomodel::profile::io_model_error;
-use flash_sinkhorn::native::kernels::{lse_update, lse_update_scalar, TileCfg};
+use flash_sinkhorn::native::kernels::{
+    lse_update, lse_update_packed, lse_update_scalar, lse_update_single, PackedTile, TileCfg,
+};
 use flash_sinkhorn::native::pool::WorkerPool;
 use flash_sinkhorn::native::NativeBackend;
 use flash_sinkhorn::obs::IoStats;
@@ -40,11 +42,31 @@ fn workspace_path(name: &str) -> std::path::PathBuf {
     std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join(name)
 }
 
+/// LSE-microkernel timings on the fixed perf-trajectory config, all in
+/// seconds and single-threaded in the same process so the derived ratios
+/// are machine-relative.
+struct LseTimes {
+    /// Flash entry path (`lse_update`): pack + multi-accumulator sweep.
+    simd_s: f64,
+    /// Scalar reference path (`lse_update_scalar`) — the ratio denominator.
+    scalar_s: f64,
+    /// Retired single-accumulator tiled kernel (`lse_update_single`) — the
+    /// baseline `lse_multiacc_speedup` is measured against in spirit: the
+    /// pre-multiacc flash kernel, kept for exactly this comparison.
+    single_s: f64,
+    /// Steady-state multi-accumulator sweep (`lse_update_packed` against a
+    /// prebuilt pack) — what iterations 2..k of a solve actually run.
+    multiacc_s: f64,
+    /// One `PackedTile::pack` of the y side (the once-per-solve cost).
+    pack_s: f64,
+}
+
 /// LSE-microkernel measurement on the fixed perf-trajectory config
-/// (n = m = 4096, d = 64): one full row-LSE pass, SIMD flash path vs the
-/// scalar reference path, both single-threaded in the same process so the
-/// derived speedup is machine-relative.  Returns (simd_s, scalar_s).
-fn lse_microbench() -> (f64, f64) {
+/// (n = m = 4096, d = 64): one full row-LSE pass per kernel variant —
+/// flash entry path (pack + sweep), scalar reference, the retired
+/// single-accumulator kernel, the pre-packed steady-state sweep, and the
+/// pack step itself.
+fn lse_microbench() -> LseTimes {
     let (n, m, d) = (LSE_N, LSE_M, LSE_D);
     let x = uniform_cloud(n, d, 11);
     let y = uniform_cloud(m, d, 12);
@@ -72,7 +94,17 @@ fn lse_microbench() -> (f64, f64) {
     let scalar_s = time_best(&mut || {
         lse_update_scalar(&x, &y, &bias, n, m, d, eps, scale, |_, _| 0.0, &mut out);
     });
-    (simd_s, scalar_s)
+    let single_s = time_best(&mut || {
+        lse_update_single(&x, &y, &bias, n, m, d, eps, scale, |_, _| 0.0, &cfg, &mut out);
+    });
+    let ypack = PackedTile::pack(&y, m, d);
+    let multiacc_s = time_best(&mut || {
+        lse_update_packed(&pool, &x, &ypack, &bias, n, eps, scale, |_, _| 0.0, &cfg, &mut out);
+    });
+    let pack_s = time_best(&mut || {
+        std::hint::black_box(PackedTile::pack(&y, m, d));
+    });
+    LseTimes { simd_s, scalar_s, single_s, multiacc_s, pack_s }
 }
 
 /// Sharded-service throughput smoke: a mixed small-solve workload through
@@ -295,7 +327,7 @@ fn smoke(backend: &dyn ComputeBackend) {
     let (flash_s, cost) = time_plan(true, Schedule::Alternating);
     let (unfused_s, _) = time_plan(false, Schedule::Alternating);
     let (symmetric_s, _) = time_plan(true, Schedule::Symmetric);
-    let (lse_simd_s, lse_scalar_s) = lse_microbench();
+    let lse = lse_microbench();
     let serve_jobs_per_s = serve_microbench();
     let (warm_cold_iters, warm_hit_iters) = warm_cache_microbench();
     let (obs_overhead_pct, io_model_err) = obs_microbench();
@@ -327,14 +359,24 @@ fn smoke(backend: &dyn ComputeBackend) {
         ("flash_ms_per_iter", num(flash_s * 1e3 / iters as f64)),
         ("unfused_ms", num(unfused_s * 1e3)),
         ("symmetric_ms", num(symmetric_s * 1e3)),
-        // LSE-microkernel pair for the perf trajectory (bench::trajectory):
-        // SIMD flash path vs scalar reference on n = m = 4096, d = 64.
+        // LSE-microkernel family for the perf trajectory
+        // (bench::trajectory) on n = m = 4096, d = 64: the flash entry
+        // path (pack + multi-accumulator sweep), the scalar reference, the
+        // retired single-accumulator kernel, the pre-packed steady-state
+        // sweep, and the pack step.  Gated: lse_simd_speedup and
+        // lse_multiacc_speedup (relative band), pack_overhead_pct
+        // (absolute ceiling).
         ("lse_n", num(LSE_N as f64)),
         ("lse_m", num(LSE_M as f64)),
         ("lse_d", num(LSE_D as f64)),
-        ("lse_simd_ms", num(lse_simd_s * 1e3)),
-        ("lse_scalar_ms", num(lse_scalar_s * 1e3)),
-        ("lse_simd_speedup", num(lse_scalar_s / lse_simd_s)),
+        ("lse_simd_ms", num(lse.simd_s * 1e3)),
+        ("lse_scalar_ms", num(lse.scalar_s * 1e3)),
+        ("lse_simd_speedup", num(lse.scalar_s / lse.simd_s)),
+        ("lse_single_ms", num(lse.single_s * 1e3)),
+        ("lse_multiacc_ms", num(lse.multiacc_s * 1e3)),
+        ("lse_multiacc_speedup", num(lse.scalar_s / lse.multiacc_s)),
+        ("pack_ms", num(lse.pack_s * 1e3)),
+        ("pack_overhead_pct", num(lse.pack_s / lse.multiacc_s * 100.0)),
         // sharded-service throughput (trend only; not gated)
         ("serve_actors", num(SERVE_ACTORS as f64)),
         ("serve_jobs", num(SERVE_JOBS as f64)),

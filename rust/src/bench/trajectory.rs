@@ -42,15 +42,19 @@ pub const DEFAULT_TRAJECTORY: &str = "BENCH_trajectory.jsonl";
 /// Default allowed relative degradation of `lse_simd_speedup` (15%).
 pub const DEFAULT_MAX_REGRESS: f64 = 0.15;
 
-/// Convergence ratio keys the gate watches when the baseline has them
-/// (iterations-to-tolerance ratios, higher = better; this includes the
-/// warm-start cache's hit-vs-cold savings ratio).
+/// Higher-is-better ratio keys the gate watches when the baseline has
+/// them: iterations-to-tolerance ratios (including the warm-start cache's
+/// hit-vs-cold savings), plus the same-process timing ratios where the
+/// machine cancels out (`batched_vs_sequential_speedup`, and the
+/// multi-accumulator LSE kernel's speedup over the scalar reference,
+/// `lse_multiacc_speedup`).
 pub const CONV_GATED_KEYS: &[&str] = &[
     "conv_gauss_speedup",
     "conv_1d_speedup",
     "conv_anneal_speedup",
     "warm_hit_iter_savings",
     "batched_vs_sequential_speedup",
+    "lse_multiacc_speedup",
 ];
 
 /// Overhead keys the gate bounds with an *absolute ceiling* (in percent)
@@ -58,7 +62,12 @@ pub const CONV_GATED_KEYS: &[&str] = &[
 /// sit at noise level around zero — `obs_overhead_pct` is legitimately
 /// negative on a quiet run — so the relative band the speedup ratios use
 /// would be meaningless; the gate only refuses a blow-up past the ceiling.
-pub const OVERHEAD_GATED_KEYS: &[(&str, f64)] = &[("obs_overhead_pct", 10.0)];
+/// `pack_overhead_pct` (one `PackedTile::pack` over one steady-state
+/// multi-accumulator sweep) rides the same mechanism: amortized over a
+/// solve's iterations it must stay a rounding error, and a pack that costs
+/// a sizable fraction of a sweep means the transpose got deoptimized.
+pub const OVERHEAD_GATED_KEYS: &[(&str, f64)] =
+    &[("obs_overhead_pct", 10.0), ("pack_overhead_pct", 15.0)];
 
 /// Outcome of a baseline comparison.
 #[derive(Debug, Clone)]
@@ -298,6 +307,51 @@ mod tests {
         assert!(compare(&base, &record(2.0, 100.0), 0.15).unwrap().regressed);
         // ...but a pre-batching baseline skips it (forward compat)
         assert!(!compare(&record(2.0, 100.0), &with_batched(1.25), 0.15).unwrap().regressed);
+    }
+
+    #[test]
+    fn multiacc_speedup_key_gates_like_the_conv_ratios() {
+        let with_multiacc = |v: f64| {
+            obj(vec![
+                ("lse_simd_speedup", num(2.0)),
+                ("lse_simd_ms", num(100.0)),
+                ("lse_multiacc_speedup", num(v)),
+            ])
+        };
+        let base = with_multiacc(2.6);
+        // inside the 15% band
+        assert!(!compare(&base, &with_multiacc(2.3), 0.15).unwrap().regressed);
+        // the chains collapsing back to single-accumulator speed: regressed
+        let c = compare(&base, &with_multiacc(1.6), 0.15).unwrap();
+        assert!(c.regressed);
+        assert!(c.summary.contains("lse_multiacc_speedup"), "{}", c.summary);
+        // baselined key vanished from current: regressed...
+        assert!(compare(&base, &record(2.0, 100.0), 0.15).unwrap().regressed);
+        // ...but a pre-multiacc baseline skips it (forward compat)
+        assert!(!compare(&record(2.0, 100.0), &with_multiacc(2.6), 0.15).unwrap().regressed);
+    }
+
+    #[test]
+    fn pack_overhead_gates_on_an_absolute_ceiling() {
+        let with_pack = |v: f64| {
+            obj(vec![
+                ("lse_simd_speedup", num(2.0)),
+                ("lse_simd_ms", num(100.0)),
+                ("pack_overhead_pct", num(v)),
+            ])
+        };
+        let base = with_pack(0.2);
+        // anything under the 15% ceiling is fine, even well above baseline
+        assert!(!compare(&base, &with_pack(6.0), 0.15).unwrap().regressed);
+        assert!(!compare(&base, &with_pack(14.9), 0.15).unwrap().regressed);
+        // a pack costing a fifth of a sweep: regressed
+        let c = compare(&base, &with_pack(20.0), 0.15).unwrap();
+        assert!(c.regressed);
+        assert!(c.summary.contains("pack_overhead_pct"), "{}", c.summary);
+        // baselined key vanished from current: regressed...
+        assert!(compare(&base, &record(2.0, 100.0), 0.15).unwrap().regressed);
+        // ...but a pre-packing baseline skips it (forward compat)
+        assert!(!compare(&record(2.0, 100.0), &with_pack(0.2), 0.15).unwrap().regressed);
     }
 
     #[test]

@@ -739,6 +739,7 @@ pub const DOCUMENTED_SERIES: &[&str] = &[
     "flashsinkhorn_io_x_bytes",
     "flashsinkhorn_io_y_bytes",
     "flashsinkhorn_io_dual_bytes",
+    "flashsinkhorn_io_pack_bytes",
     "flashsinkhorn_io_tiles",
     "flashsinkhorn_io_lse_evals",
     "flashsinkhorn_io_flops",
@@ -893,7 +894,7 @@ impl Snapshot {
             }
         }
         // measured IO/work (zeros while counters are gated off)
-        let io: [(&str, &str, u64); 9] = [
+        let io: [(&str, &str, u64); 10] = [
             ("flashsinkhorn_io_x_bytes", "Source-point bytes read by kernels.", self.io.x_bytes),
             (
                 "flashsinkhorn_io_y_bytes",
@@ -901,6 +902,11 @@ impl Snapshot {
                 self.io.y_bytes,
             ),
             ("flashsinkhorn_io_dual_bytes", "Dual-potential bytes read by kernels.", self.io.dual_bytes),
+            (
+                "flashsinkhorn_io_pack_bytes",
+                "Bytes moved by the y-panel transpose/pack (layout transform, not streamed reads).",
+                self.io.pack_bytes,
+            ),
             ("flashsinkhorn_io_tiles", "SRAM tiles visited by kernels.", self.io.tiles),
             ("flashsinkhorn_io_lse_evals", "Streaming LSE cell evaluations.", self.io.lse_evals),
             ("flashsinkhorn_io_flops", "Floating-point operations (tiling-model count).", self.io.flops),
@@ -1129,6 +1135,7 @@ impl Snapshot {
             ("io_x_bytes", json::num(self.io.x_bytes as f64)),
             ("io_y_bytes", json::num(self.io.y_bytes as f64)),
             ("io_dual_bytes", json::num(self.io.dual_bytes as f64)),
+            ("io_pack_bytes", json::num(self.io.pack_bytes as f64)),
             ("io_tiles", json::num(self.io.tiles as f64)),
             ("io_lse_evals", json::num(self.io.lse_evals as f64)),
             ("io_flops", json::num(self.io.flops as f64)),
@@ -1520,6 +1527,7 @@ mod tests {
         assert!(text.contains("\nflashsinkhorn_queue_wait_ms{stat=\"p50\"} 0\n"));
         assert!(text.contains("\nflashsinkhorn_service_ms{stat=\"max\"} 0\n"));
         assert!(text.contains("\nflashsinkhorn_io_y_bytes 0\n"));
+        assert!(text.contains("\nflashsinkhorn_io_pack_bytes 0\n"));
         assert!(text.contains("\nflashsinkhorn_actor_jobs{actor=\"1\"} 0\n"));
         // unseen labels stay out; the per-actor families stay in
         assert!(!text.contains("flashsinkhorn_tenant_jobs{"));

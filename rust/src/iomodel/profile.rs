@@ -115,6 +115,10 @@ pub fn measured_table(wl: &Workload, dev: &DeviceProfile, measured: &IoStats) ->
     ));
     out.push_str(&format!("| SRAM tiles visited | {} | — | — |\n", measured.tiles));
     out.push_str(&format!(
+        "| Pack traffic (layout) | {} | — | — |\n",
+        fmt_bytes(measured.pack_bytes as f64)
+    ));
+    out.push_str(&format!(
         "| Pool busy / idle (ms) | {:.1} / {:.1} | — | — |\n",
         measured.pool_busy_nanos as f64 / 1e6,
         measured.pool_idle_nanos as f64 / 1e6

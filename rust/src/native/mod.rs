@@ -41,8 +41,9 @@ use crate::runtime::backend::{check_batch_state, BatchStepOut};
 
 use kernels::{
     apply_rows, apply_rows_batch, apply_rows_batch_io, apply_rows_io, lse_update,
-    lse_update_batch, lse_update_batch_io, lse_update_dense, lse_update_dense_io, lse_update_io,
-    lse_update_twopass, lse_update_twopass_io, masked_delta, safe_ln, BatchGeom, TileCfg, NEG_INF,
+    lse_update_batch_io, lse_update_batch_packed, lse_update_dense, lse_update_dense_io,
+    lse_update_io, lse_update_packed, lse_update_twopass, lse_update_twopass_io, masked_delta,
+    pack_batch, safe_ln, BatchGeom, PackedTile, TileCfg, NEG_INF,
 };
 use pool::WorkerPool;
 
@@ -229,6 +230,29 @@ impl NativeBackend {
         });
     }
 
+    /// [`Self::update`] against a prebuilt column pack (Flash plan only —
+    /// the other plans take the unpacked path).  `step` packs both
+    /// orientations once per fused solve and reuses them across all `2k`
+    /// half-updates; the analytic charge stays `lse_update_io` per call,
+    /// whose per-call pack term deliberately upper-bounds the hoisted pack
+    /// so fused-vs-k-singles IO conservation stays exact.
+    #[allow(clippy::too_many_arguments)]
+    fn update_packed(
+        &self,
+        x: &[f32],
+        ypack: &PackedTile,
+        ghat: &[f32],
+        b: &[f32],
+        eps: f32,
+        out: &mut [f32],
+    ) {
+        let bias = Self::bias_of(ghat, b, eps);
+        lse_update_packed(
+            &self.pool, x, ypack, &bias, out.len(), eps, 2.0 / eps, |_, _| 0.0, &self.tile, out,
+        );
+        self.charge(lse_update_io(out.len(), ypack.cols(), ypack.dim(), &self.tile));
+    }
+
     fn step(
         &self,
         plan: Plan,
@@ -239,20 +263,37 @@ impl NativeBackend {
     ) -> Result<Vec<Tensor>> {
         let c = unpack_core(inputs, 7, op)?;
         let eps = scalar(&inputs[6], op, "eps")?;
+        // Pack both column orientations once per solve; every Flash
+        // half-update below (2k of them for a fused op) reuses the same two
+        // tiles instead of re-transposing y per call.
+        let packs = (plan == Plan::Flash)
+            .then(|| (PackedTile::pack(c.y, c.m, c.d), PackedTile::pack(c.x, c.n, c.d)));
         let mut fcur = c.fhat.to_vec();
         let mut gcur = c.ghat.to_vec();
         let mut fnew = vec![0.0f32; c.n];
         let mut gnew = vec![0.0f32; c.m];
         let (mut df, mut dg) = (0.0f32, 0.0f32);
+        let half = |ghat: &[f32], w: &[f32], out: &mut [f32], forward: bool| match &packs {
+            Some((ypack, xpack)) => {
+                let pack = if forward { ypack } else { xpack };
+                let x = if forward { c.x } else { c.y };
+                self.update_packed(x, pack, ghat, w, eps, out);
+            }
+            None => {
+                let (x, y, n, m) =
+                    if forward { (c.x, c.y, c.n, c.m) } else { (c.y, c.x, c.m, c.n) };
+                self.update(plan, x, y, ghat, w, n, m, c.d, eps, out);
+            }
+        };
         for _ in 0..k.max(1) {
             match schedule {
                 StepSchedule::Alternating => {
-                    self.update(plan, c.x, c.y, &gcur, c.b, c.n, c.m, c.d, eps, &mut fnew);
-                    self.update(plan, c.y, c.x, &fnew, c.a, c.m, c.n, c.d, eps, &mut gnew);
+                    half(&gcur, c.b, &mut fnew, true);
+                    half(&fnew, c.a, &mut gnew, false);
                 }
                 StepSchedule::Symmetric => {
-                    self.update(plan, c.x, c.y, &gcur, c.b, c.n, c.m, c.d, eps, &mut fnew);
-                    self.update(plan, c.y, c.x, &fcur, c.a, c.m, c.n, c.d, eps, &mut gnew);
+                    half(&gcur, c.b, &mut fnew, true);
+                    half(&fcur, c.a, &mut gnew, false);
                     for (o, &f) in fnew.iter_mut().zip(&fcur) {
                         *o = 0.5 * (*o + f);
                     }
@@ -473,6 +514,12 @@ impl ComputeBackend for NativeBackend {
         };
         let f_io = lse_update_batch_io(&fgeom, batch.d, &self.tile);
         let g_io = lse_update_batch_io(&ggeom, batch.d, &self.tile);
+        // Pack each problem's column segment once per call (both update
+        // orientations); the k fused iterations below reuse the packs.
+        // Panel boundaries are segment-local, so each pack is bitwise the
+        // one a standalone solve of that problem would build.
+        let ypacks = pack_batch(&batch.y, &fgeom, batch.d);
+        let xpacks = pack_batch(&batch.x, &ggeom, batch.d);
         let mut out = vec![BatchStepOut::default(); bsz];
         let mut charged = IoStats::default();
         let mut fcur = fhat.to_vec();
@@ -482,25 +529,25 @@ impl ComputeBackend for NativeBackend {
         for _ in 0..k.max(1) {
             if alternating {
                 let gbias = Self::batch_bias(&gcur, &batch.b, &col_prob, &batch.eps, active);
-                lse_update_batch(
-                    &self.pool, &batch.x, &batch.y, &gbias, &fgeom, batch.d, &self.tile,
+                lse_update_batch_packed(
+                    &self.pool, &batch.x, &ypacks, &gbias, &fgeom, batch.d, &self.tile,
                     &mut fnew,
                 );
                 // g from the *new* f (Gauss-Seidel), exactly like `step`
                 let fbias = Self::batch_bias(&fnew, &batch.a, &row_prob, &batch.eps, active);
-                lse_update_batch(
-                    &self.pool, &batch.y, &batch.x, &fbias, &ggeom, batch.d, &self.tile,
+                lse_update_batch_packed(
+                    &self.pool, &batch.y, &xpacks, &fbias, &ggeom, batch.d, &self.tile,
                     &mut gnew,
                 );
             } else {
                 let gbias = Self::batch_bias(&gcur, &batch.b, &col_prob, &batch.eps, active);
                 let fbias = Self::batch_bias(&fcur, &batch.a, &row_prob, &batch.eps, active);
-                lse_update_batch(
-                    &self.pool, &batch.x, &batch.y, &gbias, &fgeom, batch.d, &self.tile,
+                lse_update_batch_packed(
+                    &self.pool, &batch.x, &ypacks, &gbias, &fgeom, batch.d, &self.tile,
                     &mut fnew,
                 );
-                lse_update_batch(
-                    &self.pool, &batch.y, &batch.x, &fbias, &ggeom, batch.d, &self.tile,
+                lse_update_batch_packed(
+                    &self.pool, &batch.y, &xpacks, &fbias, &ggeom, batch.d, &self.tile,
                     &mut gnew,
                 );
                 for p in 0..bsz {

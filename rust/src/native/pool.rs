@@ -278,6 +278,16 @@ impl Drop for WorkerPool {
     }
 }
 
+/// Round a chunk size up to a multiple of the caller's row-block granule,
+/// so a chunk boundary never splits a `block_rows` block into two partial
+/// accumulator refills.  Work partitioning only: per-row results are
+/// independent of chunking, and the cursor still hands out each row
+/// exactly once (the last chunk is simply clipped to the row count).
+pub fn align_chunk(chunk: usize, granule: usize) -> usize {
+    let granule = granule.max(1);
+    chunk.max(1).div_ceil(granule) * granule
+}
+
 /// Pool width from `FLASH_SINKHORN_THREADS`; unset, unparsable or 0 means
 /// one claimant per available core.
 pub fn configured_threads() -> usize {
@@ -396,6 +406,16 @@ mod tests {
                 });
             }
         });
+    }
+
+    #[test]
+    fn align_chunk_rounds_up_to_block_multiples() {
+        assert_eq!(align_chunk(1, 32), 32);
+        assert_eq!(align_chunk(33, 32), 64);
+        assert_eq!(align_chunk(64, 32), 64);
+        assert_eq!(align_chunk(5, 1), 5);
+        assert_eq!(align_chunk(0, 7), 7); // chunk floor of 1, then rounded
+        assert_eq!(align_chunk(10, 0), 10); // granule floor of 1
     }
 
     #[test]

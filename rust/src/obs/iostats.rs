@@ -33,6 +33,12 @@ pub struct IoStats {
     pub y_bytes: u64,
     /// Bytes of dual-potential / column-bias vectors read.
     pub dual_bytes: u64,
+    /// Bytes moved by the y-panel transpose/pack (`PackedTile`): source
+    /// rows read plus zero-padded panels written.  A one-time layout
+    /// transform, deliberately *not* part of [`IoStats::read_bytes`] — the
+    /// streamed-traffic total the IO-model ratio compares keeps its
+    /// meaning.
+    pub pack_bytes: u64,
     /// Column tiles visited across all row blocks.
     pub tiles: u64,
     /// Online-LSE score evaluations (one per `(i, j)` pass).
@@ -63,6 +69,7 @@ impl IoStats {
             x_bytes: self.x_bytes.saturating_sub(base.x_bytes),
             y_bytes: self.y_bytes.saturating_sub(base.y_bytes),
             dual_bytes: self.dual_bytes.saturating_sub(base.dual_bytes),
+            pack_bytes: self.pack_bytes.saturating_sub(base.pack_bytes),
             tiles: self.tiles.saturating_sub(base.tiles),
             lse_evals: self.lse_evals.saturating_sub(base.lse_evals),
             flops: self.flops.saturating_sub(base.flops),
@@ -77,6 +84,7 @@ impl IoStats {
         self.x_bytes += other.x_bytes;
         self.y_bytes += other.y_bytes;
         self.dual_bytes += other.dual_bytes;
+        self.pack_bytes += other.pack_bytes;
         self.tiles += other.tiles;
         self.lse_evals += other.lse_evals;
         self.flops += other.flops;
@@ -112,6 +120,7 @@ pub struct AtomicIoStats {
     x_bytes: AtomicU64,
     y_bytes: AtomicU64,
     dual_bytes: AtomicU64,
+    pack_bytes: AtomicU64,
     tiles: AtomicU64,
     lse_evals: AtomicU64,
     flops: AtomicU64,
@@ -128,6 +137,7 @@ impl AtomicIoStats {
             (&self.x_bytes, s.x_bytes),
             (&self.y_bytes, s.y_bytes),
             (&self.dual_bytes, s.dual_bytes),
+            (&self.pack_bytes, s.pack_bytes),
             (&self.tiles, s.tiles),
             (&self.lse_evals, s.lse_evals),
             (&self.flops, s.flops),
@@ -147,6 +157,7 @@ impl AtomicIoStats {
             x_bytes: self.x_bytes.load(Ordering::Relaxed),
             y_bytes: self.y_bytes.load(Ordering::Relaxed),
             dual_bytes: self.dual_bytes.load(Ordering::Relaxed),
+            pack_bytes: self.pack_bytes.load(Ordering::Relaxed),
             tiles: self.tiles.load(Ordering::Relaxed),
             lse_evals: self.lse_evals.load(Ordering::Relaxed),
             flops: self.flops.load(Ordering::Relaxed),
@@ -166,6 +177,7 @@ mod tests {
             x_bytes: k,
             y_bytes: 2 * k,
             dual_bytes: 3 * k,
+            pack_bytes: 10 * k,
             tiles: 4 * k,
             lse_evals: 5 * k,
             flops: 6 * k,
@@ -186,7 +198,8 @@ mod tests {
     }
 
     #[test]
-    fn read_bytes_sums_the_three_streams() {
+    fn read_bytes_sums_the_three_streams_and_excludes_pack() {
+        // pack_bytes is a layout transform, not streamed read traffic
         assert_eq!(sample(2).read_bytes(), 2 + 4 + 6);
     }
 

@@ -8,6 +8,7 @@
 //! what that problem's standalone solve charges.
 
 use flash_sinkhorn::data::clouds::{random_simplex, uniform_cloud};
+use flash_sinkhorn::native::kernels::{pack_batch, BatchGeom, PackedTile};
 use flash_sinkhorn::native::NativeBackend;
 use flash_sinkhorn::obs::IoStats;
 use flash_sinkhorn::ot::{OtProblem, Potentials, Schedule, SinkhornSolver, SolverConfig};
@@ -190,6 +191,86 @@ fn batched_low_eps_near_overflow_scores_stay_bitwise() {
         let seq = solver.solve(prob).unwrap();
         assert_bitwise(&format!("low-eps p={p}"), &batched[p], &seq);
         assert!(batched[p].1.cost.is_finite(), "low-eps p={p}: cost must stay finite");
+    }
+}
+
+/// Packed-tile round 2: the batched path now packs each problem's column
+/// segment into its own `PackedTile` once per fused call.  Shapes here are
+/// chosen so segments span one, two and three 8-lane panels with ragged
+/// final panels, and d = 11 keeps the dot microkernel's remainder chains
+/// in play — the fused solve must still be bit-for-bit B standalone
+/// solves, which each build their own pack.
+#[test]
+fn batched_panel_crossing_shapes_stay_bitwise() {
+    let backend = NativeBackend::default();
+    for schedule in [Schedule::Alternating, Schedule::Symmetric] {
+        let solver = SinkhornSolver::new(&backend, cfg_for(schedule));
+        let d = 11usize;
+        let probs: Vec<OtProblem> = (0..6)
+            .map(|i| {
+                let seed = 900 + i as u64;
+                let n = [6usize, 8, 9, 15, 16, 20][i]; // 1-3 panels, ragged tails
+                let m = [20usize, 9, 16, 8, 6, 15][i];
+                let eps = [0.2f32, 0.15, 0.3][i % 3];
+                OtProblem::new(
+                    uniform_cloud(n, d, seed),
+                    uniform_cloud(m, d, seed + 10),
+                    random_simplex(n, seed + 20),
+                    random_simplex(m, seed + 30),
+                    n,
+                    m,
+                    d,
+                    eps,
+                )
+                .unwrap()
+            })
+            .collect();
+        let refs: Vec<&OtProblem> = probs.iter().collect();
+        let batched = solver.solve_batch(&refs, &vec![None; probs.len()]).unwrap();
+        for (p, prob) in probs.iter().enumerate() {
+            let seq = solver.solve(prob).unwrap();
+            assert_bitwise(&format!("{schedule:?} panel-crossing p={p}"), &batched[p], &seq);
+        }
+    }
+}
+
+/// The structural half of the same guarantee: `pack_batch` builds each
+/// active problem's segment pack with panel boundaries relative to the
+/// segment start, so its bytes are exactly the standalone pack's bytes.
+/// Frozen problems pack empty and their panels are never consumed.
+#[test]
+fn pack_batch_segments_equal_standalone_packs() {
+    let d = 11usize;
+    let (m0, m1, m2) = (9usize, 16usize, 6usize);
+    let y0 = uniform_cloud(m0, d, 77);
+    let y1 = uniform_cloud(m1, d, 78);
+    let y2 = uniform_cloud(m2, d, 79);
+    let mut packed = y0.clone();
+    packed.extend_from_slice(&y1);
+    packed.extend_from_slice(&y2);
+    let geom = BatchGeom {
+        row_prob: &[],
+        row_off: &[0, 0, 0],
+        row_len: &[1, 1, 1],
+        col_off: &[0, m0, m0 + m1],
+        col_len: &[m0, m1, m2],
+        eps: &[0.1, 0.1, 0.1],
+        scale: &[20.0, 20.0, 20.0],
+        active: &[true, false, true],
+    };
+    let packs = pack_batch(&packed, &geom, d);
+    assert_eq!(packs.len(), 3);
+    for (p, (y, m)) in [(&y0, m0), (&y1, m1), (&y2, m2)].iter().enumerate() {
+        if !geom.active[p] {
+            assert_eq!(packs[p].cols(), 0, "frozen problem must pack empty");
+            continue;
+        }
+        let standalone = PackedTile::pack(y, *m, d);
+        assert_eq!(packs[p].cols(), standalone.cols(), "p={p}: packed column counts differ");
+        assert_eq!(packs[p].panels(), standalone.panels(), "p={p}: panel counts differ");
+        for g in 0..standalone.panels() {
+            assert_eq!(packs[p].panel(g), standalone.panel(g), "p={p} panel {g}: bytes differ");
+        }
     }
 }
 

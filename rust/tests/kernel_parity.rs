@@ -13,7 +13,8 @@ use flash_sinkhorn::data::clouds::{random_simplex, uniform_cloud};
 use flash_sinkhorn::data::rng::Rng;
 use flash_sinkhorn::native::kernels::{
     apply_rows, apply_rows_scalar, dot_scalar, dot_simd, lse_update, lse_update_dense,
-    lse_update_scalar, lse_update_twopass, TileCfg, DOT_LANES, NEG_INF,
+    lse_update_packed, lse_update_scalar, lse_update_single, lse_update_twopass, PackedTile,
+    TileCfg, DOT_LANES, NEG_INF,
 };
 use flash_sinkhorn::native::pool::WorkerPool;
 use flash_sinkhorn::native::NativeBackend;
@@ -287,6 +288,170 @@ fn pooled_lse_is_bitwise_identical_across_pool_widths() {
     let base = run(1);
     for threads in [2usize, 8] {
         assert_eq!(run(threads), base, "{threads}-wide pool changed bits");
+    }
+}
+
+// ---------- multi-accumulator / packed-tile speed-round wall --------------
+
+/// The multi-accumulator packed kernel against the retired
+/// single-accumulator tiled kernel at ragged dimensions (`d % 8 != 0`):
+/// these exercise both the dot microkernel's scalar remainder chains and
+/// the pack's zero-padded final panel.  The single-accumulator kernel is
+/// the semantic yardstick the speed round must not drift from.
+#[test]
+fn prop_multiacc_tracks_the_single_accumulator_kernel_at_ragged_tails() {
+    let mut rng = Rng::new(18);
+    let pool = WorkerPool::new(2);
+    for (case, &d) in [1usize, 3, 5, 7, 9, 11, 13, 15, 17, 33, 63, 65].iter().enumerate() {
+        let n = 1 + rng.below(24);
+        let m = 1 + rng.below(48);
+        let eps = 0.05 + rng.f32() * 0.4;
+        let scale = 2.0 / eps;
+        let x = uniform_cloud(n, d, 11_000 + case as u64);
+        let y = uniform_cloud(m, d, 12_000 + case as u64);
+        let bias: Vec<f32> = (0..m).map(|_| rng.f32() - 0.5).collect();
+        let cfg = TileCfg {
+            block_rows: 1 + rng.below(16),
+            block_cols: 1 + rng.below(64),
+            threads: 2,
+            par_threshold: 0,
+        };
+        let mut want = vec![0.0f32; n];
+        lse_update_single(&x, &y, &bias, n, m, d, eps, scale, |_, _| 0.0, &cfg, &mut want);
+        let mut got = vec![0.0f32; n];
+        lse_update(&pool, &x, &y, &bias, n, m, d, eps, scale, |_, _| 0.0, &cfg, &mut got);
+        for i in 0..n {
+            assert!(
+                close(got[i], want[i], 1e-5),
+                "d={d} (n={n} m={m}): multiacc[{i}] = {} vs single-accumulator {}",
+                got[i],
+                want[i]
+            );
+        }
+    }
+}
+
+/// A `NEG_INF`-walled zero-weight column tail must be *bitwise* invisible:
+/// masked scores merge as exact `0.0` contributions in every chain, so the
+/// packed kernel must produce bit-identical rows whether the masked tail
+/// is present or physically trimmed — including tails that land inside the
+/// zero-padded final panel.
+#[test]
+fn prop_neg_inf_walled_tail_is_bitwise_invisible_to_the_packed_kernel() {
+    let mut rng = Rng::new(19);
+    let pool = WorkerPool::new(2);
+    for case in 0..20u64 {
+        let n = 1 + rng.below(16);
+        let m_live = 1 + rng.below(40);
+        let pad = 1 + rng.below(19);
+        let m_full = m_live + pad;
+        let d = random_d(&mut rng);
+        let eps = 0.1f32;
+        let scale = 2.0 / eps;
+        let x = uniform_cloud(n, d, 13_000 + case);
+        let y_full = uniform_cloud(m_full, d, 14_000 + case);
+        let mut bias: Vec<f32> = (0..m_full).map(|_| rng.f32() - 0.5).collect();
+        for b in bias.iter_mut().skip(m_live) {
+            *b = NEG_INF;
+        }
+        let cfg = TileCfg {
+            block_cols: 1 + rng.below(24),
+            threads: 2,
+            par_threshold: 0,
+            ..TileCfg::default()
+        };
+        let mut full = vec![0.0f32; n];
+        lse_update(
+            &pool, &x, &y_full, &bias, n, m_full, d, eps, scale, |_, _| 0.0, &cfg, &mut full,
+        );
+        let mut trimmed = vec![0.0f32; n];
+        lse_update(
+            &pool,
+            &x,
+            &y_full[..m_live * d],
+            &bias[..m_live],
+            n,
+            m_live,
+            d,
+            eps,
+            scale,
+            |_, _| 0.0,
+            &cfg,
+            &mut trimmed,
+        );
+        assert_eq!(
+            full, trimmed,
+            "case {case} (m_live={m_live} pad={pad} d={d}): walled tail changed bits"
+        );
+    }
+}
+
+/// eps = 0.01 drives `scale = 2/eps = 200` and converged-scale biases into
+/// near-overflow f32 territory; the multi-accumulator merge must stay
+/// finite and track both reference kernels through it.
+#[test]
+fn multiacc_survives_near_overflow_scores_at_eps_001() {
+    let mut rng = Rng::new(20);
+    let pool = WorkerPool::new(2);
+    let eps = 0.01f32;
+    let scale = 2.0 / eps;
+    for case in 0..10u64 {
+        let n = 1 + rng.below(24);
+        let m = 1 + rng.below(32);
+        let d = random_d(&mut rng);
+        let x = uniform_cloud(n, d, 15_000 + case);
+        let y = uniform_cloud(m, d, 16_000 + case);
+        let bias: Vec<f32> = (0..m).map(|_| (rng.f32() - 0.5) / eps).collect();
+        let mut want = vec![0.0f32; n];
+        lse_update_scalar(&x, &y, &bias, n, m, d, eps, scale, |_, _| 0.0, &mut want);
+        let cfg = TileCfg { threads: 2, par_threshold: 0, ..TileCfg::default() };
+        let mut single = vec![0.0f32; n];
+        lse_update_single(&x, &y, &bias, n, m, d, eps, scale, |_, _| 0.0, &cfg, &mut single);
+        let mut got = vec![0.0f32; n];
+        lse_update(&pool, &x, &y, &bias, n, m, d, eps, scale, |_, _| 0.0, &cfg, &mut got);
+        for i in 0..n {
+            assert!(want[i].is_finite(), "scalar reference blew up at eps={eps}");
+            assert!(got[i].is_finite(), "multiacc blew up: out[{i}] = {}", got[i]);
+            assert!(
+                close(got[i], want[i], 1e-5),
+                "case {case} (n={n} m={m} d={d}): out[{i}] = {} vs scalar {}",
+                got[i],
+                want[i]
+            );
+            assert!(
+                close(got[i], single[i], 1e-5),
+                "case {case}: out[{i}] = {} vs single-accumulator {}",
+                got[i],
+                single[i]
+            );
+        }
+    }
+}
+
+/// One prebuilt pack driven through 1/2/8-wide pools *and* different tile
+/// shapes: chain assignment is a pure function of the column index and the
+/// merge tree is fixed, so neither the pool width nor the block geometry
+/// may change a single bit.
+#[test]
+fn packed_lse_is_bitwise_invariant_across_pool_widths_and_tile_shapes() {
+    let (n, m, d) = (97, 133, 21);
+    let x = uniform_cloud(n, d, 44);
+    let y = uniform_cloud(m, d, 45);
+    let bias: Vec<f32> = (0..m).map(|j| ((j * 7 % 31) as f32) * 0.03 - 0.4).collect();
+    let ypack = PackedTile::pack(&y, m, d);
+    let run = |threads: usize, block_rows: usize, block_cols: usize| {
+        let pool = WorkerPool::new(threads);
+        let cfg = TileCfg { block_rows, block_cols, threads, par_threshold: 0 };
+        let mut out = vec![0.0f32; n];
+        lse_update_packed(&pool, &x, &ypack, &bias, n, 0.1, 20.0, |_, _| 0.0, &cfg, &mut out);
+        out
+    };
+    let base = run(1, 32, 256);
+    for threads in [2usize, 8] {
+        assert_eq!(run(threads, 32, 256), base, "{threads}-wide pool changed bits");
+    }
+    for (br, bc) in [(1usize, 1usize), (5, 7), (64, 8), (13, 512)] {
+        assert_eq!(run(4, br, bc), base, "tile {br}x{bc} changed bits");
     }
 }
 
